@@ -1,0 +1,35 @@
+//! Profiling harness: 3M LEA rounds of the Fig.-3 scenario-1 simulation in
+//! one tight loop — the target for `perf record` in the §Perf pass.
+//!
+//!     cargo build --release --example profbench
+//!     perf record -g ./target/release/examples/profbench
+//!     perf script | <fold by symbol>
+//!
+//! See EXPERIMENTS.md §Perf for the measured iteration log.
+
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::runner::{run, RunConfig};
+use timely_coded::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scenarios, fig3_scheme};
+
+fn main() {
+    let rounds: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3_000_000);
+    let params = fig3_load_params();
+    let scheme = fig3_scheme();
+    let s = fig3_scenarios()[0];
+    let mut lea = Lea::new(params);
+    let mut cluster = fig3_cluster(&s, 1);
+    let cfg = RunConfig::simple(rounds, 1.0);
+    let t0 = std::time::Instant::now();
+    let r = run(&mut lea, &mut cluster, &scheme, &cfg, 2);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "throughput {:.4} over {} rounds in {:.2}s = {:.2}M rounds/s",
+        r.throughput,
+        rounds,
+        dt,
+        rounds as f64 / dt / 1e6
+    );
+}

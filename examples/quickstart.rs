@@ -1,0 +1,94 @@
+//! Quickstart: the library's public API in ~60 lines.
+//!
+//! Builds the paper's Fig.-3 scenario-1 system — 15 workers, Lagrange-coded
+//! quadratic workload (K* = 99), two-state Markov speeds — and compares the
+//! LEA strategy against the static baseline and the genie oracle.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use timely_coded::coding::scheme::CodingScheme;
+use timely_coded::coding::threshold::Geometry;
+use timely_coded::markov::chain::TwoState;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::oracle::Oracle;
+use timely_coded::scheduler::static_strategy::StaticStrategy;
+use timely_coded::scheduler::success::LoadParams;
+use timely_coded::sim::cluster::{SimCluster, Speeds};
+use timely_coded::sim::runner::{run, RunConfig};
+
+fn main() {
+    // 1. Problem geometry: n workers × r stored chunks, k data chunks,
+    //    quadratic function ⇒ Lagrange coding with K* = (k−1)·2 + 1 = 99.
+    let geometry = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    };
+    let scheme = CodingScheme::for_geometry(geometry);
+    println!("design = {:?}, K* = {}", scheme.design(), scheme.kstar());
+
+    // 2. Speeds and deadline give the two candidate loads of Lemma 4.4:
+    //    ℓ_g = min(⌊μ_g·d⌋, r) = 10, ℓ_b = ⌊μ_b·d⌋ = 3.
+    let speeds = Speeds {
+        mu_g: 10.0,
+        mu_b: 3.0,
+    };
+    let deadline = 1.0;
+    let params = LoadParams::from_rates(
+        geometry.n,
+        geometry.r,
+        scheme.kstar(),
+        speeds.mu_g,
+        speeds.mu_b,
+        deadline,
+    );
+    println!("loads: ℓ_g = {}, ℓ_b = {}", params.lg, params.lb);
+
+    // 3. Hidden worker dynamics: a two-state Markov chain per worker.
+    let chain = TwoState::new(0.8, 0.8); // π_g = 0.5 (scenario 1)
+    let rounds = 20_000;
+    let cfg = RunConfig::simple(rounds, deadline);
+    let seed = 42;
+
+    // 4. Run three strategies on IDENTICAL state sequences.
+    let mut lea = Lea::new(params);
+    let r_lea = run(
+        &mut lea,
+        &mut SimCluster::markov(geometry.n, chain, speeds, seed),
+        &scheme,
+        &cfg,
+        1,
+    );
+
+    let mut st = StaticStrategy::stationary(params, vec![chain.stationary_good(); geometry.n]);
+    let r_static = run(
+        &mut st,
+        &mut SimCluster::markov(geometry.n, chain, speeds, seed),
+        &scheme,
+        &cfg,
+        1,
+    );
+
+    let mut oracle = Oracle::new(params, vec![chain; geometry.n]);
+    let r_oracle = run(
+        &mut oracle,
+        &mut SimCluster::markov(geometry.n, chain, speeds, seed),
+        &scheme,
+        &cfg,
+        1,
+    );
+
+    // 5. Timely computation throughput (Definition 2.1).
+    println!("\ntimely computation throughput over {rounds} rounds:");
+    println!("  LEA     : {:.4}", r_lea.throughput);
+    println!("  static  : {:.4}", r_static.throughput);
+    println!("  oracle  : {:.4}  (R*, Theorem 4.6)", r_oracle.throughput);
+    println!(
+        "  LEA/static = {:.2}x, LEA/oracle = {:.1}%",
+        r_lea.throughput / r_static.throughput,
+        100.0 * r_lea.throughput / r_oracle.throughput
+    );
+
+    assert!(r_lea.throughput > r_static.throughput);
+}

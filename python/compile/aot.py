@@ -1,0 +1,203 @@
+"""AOT bridge: lower the L2 JAX model to HLO *text* artifacts for Rust/PJRT.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` — the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Outputs (under --outdir, default ../artifacts relative to this package):
+  gradient.hlo.txt   f(X~, y~, w) = X~^T (X~ w - y~)        (Fig. 3 workload)
+  linear.hlo.txt     f(X~)        = X~ @ B                  (Fig. 4 workload)
+  encode.hlo.txt     X~_stack     = G @ X_stack             (Lagrange encode)
+  decode.hlo.txt     f(X)_stack   = W @ R_stack             (Lagrange decode)
+  manifest.json      shapes, parameters and a cross-language Lagrange fixture
+                     the Rust test-suite checks its own math against.
+
+Run once via `make artifacts`; python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import lagrange, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_artifacts(
+    *,
+    k: int,
+    n: int,
+    r: int,
+    deg_f: int,
+    chunk_rows: int,
+    features: int,
+    lin_cols: int,
+):
+    """Lower every model entry point for the given problem geometry.
+
+    Returns {name: (hlo_text, manifest_entry)}.
+    """
+    nr = n * r
+    kstar_quad = (k - 1) * 2 + 1
+    kstar_lin = (k - 1) * 1 + 1
+    d = chunk_rows * features  # flattened chunk length for encode/decode
+
+    arts = {}
+
+    lowered = jax.jit(model.gradient_eval).lower(
+        _spec(chunk_rows, features), _spec(features, 1), _spec(chunk_rows, 1)
+    )
+    arts["gradient"] = (
+        to_hlo_text(lowered),
+        {
+            "name": "gradient",
+            "file": "gradient.hlo.txt",
+            "inputs": [[chunk_rows, features], [features, 1], [chunk_rows, 1]],
+            "output": [features, 1],
+            "deg_f": 2,
+        },
+    )
+
+    lowered = jax.jit(model.linear_eval).lower(
+        _spec(chunk_rows, features), _spec(features, lin_cols)
+    )
+    arts["linear"] = (
+        to_hlo_text(lowered),
+        {
+            "name": "linear",
+            "file": "linear.hlo.txt",
+            "inputs": [[chunk_rows, features], [features, lin_cols]],
+            "output": [chunk_rows, lin_cols],
+            "deg_f": 1,
+        },
+    )
+
+    # encode: X~ (nr x D) = G (nr x k) @ X (k x D); the gradient workload also
+    # encodes the y-chunk, so D covers the widest flattened payload.
+    d_enc = chunk_rows * (features + 1)
+    lowered = jax.jit(model.encode).lower(_spec(nr, k), _spec(k, d_enc))
+    arts["encode"] = (
+        to_hlo_text(lowered),
+        {
+            "name": "encode",
+            "file": "encode.hlo.txt",
+            "inputs": [[nr, k], [k, d_enc]],
+            "output": [nr, d_enc],
+        },
+    )
+
+    # decode: result rows are f-evaluations (length features for the gradient
+    # workload); K* for the quadratic case is the larger, compile for it.
+    lowered = jax.jit(model.decode).lower(
+        _spec(k, kstar_quad), _spec(kstar_quad, features)
+    )
+    arts["decode"] = (
+        to_hlo_text(lowered),
+        {
+            "name": "decode",
+            "file": "decode.hlo.txt",
+            "inputs": [[k, kstar_quad], [kstar_quad, features]],
+            "output": [k, features],
+        },
+    )
+
+    params = {
+        "k": k,
+        "n": n,
+        "r": r,
+        "nr": nr,
+        "deg_f": deg_f,
+        "chunk_rows": chunk_rows,
+        "features": features,
+        "lin_cols": lin_cols,
+        "kstar_quadratic": kstar_quad,
+        "kstar_linear": kstar_lin,
+        "flat_chunk": d,
+    }
+    return arts, params
+
+
+def cross_check_fixture(k: int = 4, nr: int = 8) -> dict:
+    """Small Lagrange fixture the Rust tests verify bit-for-bit-ish (1e-12)."""
+    g = lagrange.generator_matrix(k, nr)
+    received = list(range((k - 1) * 2 + 1))  # first K* (quadratic) indices
+    w = lagrange.decode_matrix(k, nr, received, deg_f=2)
+    return {
+        "k": k,
+        "nr": nr,
+        "betas": lagrange.betas(k).tolist(),
+        "alphas": lagrange.alphas(k, nr).tolist(),
+        "generator": g.tolist(),
+        "decode_received": received,
+        "decode_weights": w.tolist(),
+    }
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.path.join(here, "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="legacy: ignored (single-file path)")
+    ap.add_argument("--k", type=int, default=8, help="number of data chunks")
+    ap.add_argument("--n", type=int, default=15, help="number of workers")
+    ap.add_argument("--r", type=int, default=2, help="encoded chunks per worker")
+    ap.add_argument("--deg-f", type=int, default=2)
+    ap.add_argument("--chunk-rows", type=int, default=32)
+    ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--lin-cols", type=int, default=64)
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.outdir)
+    os.makedirs(outdir, exist_ok=True)
+
+    arts, params = lower_artifacts(
+        k=args.k,
+        n=args.n,
+        r=args.r,
+        deg_f=args.deg_f,
+        chunk_rows=args.chunk_rows,
+        features=args.features,
+        lin_cols=args.lin_cols,
+    )
+
+    entries = []
+    for name, (text, entry) in arts.items():
+        path = os.path.join(outdir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(entry)
+        print(f"wrote {entry['file']:18s} {len(text):>9d} chars")
+
+    manifest = {
+        "version": 1,
+        "params": params,
+        "artifacts": entries,
+        "cross_check": cross_check_fixture(),
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json (k={params['k']} n={params['n']} r={params['r']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: blocked matrix multiply.
+
+This is the compute hot-spot of the whole system. Every heavy operation in the
+paper's pipeline is a GEMM:
+
+  * worker evaluation of the linear workload  f(X~) = X~ @ B      (Fig. 4),
+  * the two halves of the quadratic gradient  X~^T (X~ w - y)     (Fig. 3),
+  * Lagrange *encoding*  X~ = G @ X_stack  (generator matrix GEMM),
+  * Lagrange *decoding*  f(X) = W @ R      (barycentric-weight GEMM).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper ran on CPU
+instances where caches hide data movement. On TPU we express the HBM<->VMEM
+schedule explicitly with a 3-D grid (m-blocks, n-blocks, k-blocks) and
+`BlockSpec` index maps; the k axis is the innermost (minor) grid dimension so
+the output block stays resident in VMEM while partial products accumulate —
+the canonical MXU-friendly schedule. Block sizes default to 128 (MXU systolic
+array edge) and are clamped to the problem size.
+
+`interpret=True` is mandatory in this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["matmul", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One (i, j, kk) grid step: o[i,j] += x[i,kk] @ y[kk,j].
+
+    The output BlockSpec maps every kk to the same (i, j) block, so `o_ref`
+    is VMEM-resident across the k loop; we zero it on the first k step.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    out_dtype=jnp.float32,
+):
+    """Blocked Pallas GEMM: ``x @ y``.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded up
+    to the block grid and the result is sliced back. Accumulation is always in
+    ``out_dtype`` (f32 by default) regardless of input dtype, mirroring MXU
+    behaviour for bf16 inputs.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    bm, bn, bk = max(bm, 1), max(bn, 1), max(bk, 1)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int, block_n: int, block_k: int, bytes_per_elem: int = 4
+) -> int:
+    """Estimated VMEM working set of one grid step (x, y and o blocks).
+
+    Used by DESIGN/EXPERIMENTS to justify block choices against the ~16 MiB
+    per-core VMEM budget of a TPU (interpret mode cannot measure this).
+    """
+    return bytes_per_elem * (
+        block_m * block_k + block_k * block_n + block_m * block_n
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest + hypothesis assert
+allclose across a sweep of shapes and dtypes (python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, out_dtype=jnp.float32):
+    """Oracle for kernels.matmul: plain jnp GEMM with f32 accumulation."""
+    return jnp.dot(
+        x.astype(out_dtype), y.astype(out_dtype), preferred_element_type=out_dtype
+    )
+
+
+def gradient_ref(x, w, y):
+    """Oracle for kernels.gradient_eval_fused: X^T (X w - y)."""
+    x = x.astype(jnp.float32)
+    return x.T @ (x @ w.astype(jnp.float32) - y.astype(jnp.float32))
+
+
+def linear_ref(x, b):
+    """Oracle for the Fig.-4 linear workload: X @ B."""
+    return jnp.dot(x.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def encode_ref(g, xs):
+    """Oracle for Lagrange encoding: generator GEMM G @ X_stack."""
+    return jnp.dot(g.astype(jnp.float32), xs.astype(jnp.float32))

@@ -1,0 +1,99 @@
+"""Lagrange-code point conventions and generator matrices (python mirror).
+
+The Rust coordinator (rust/src/coding/lagrange.rs) and this module must agree
+bit-for-bit on the interpolation conventions, because the generator/decoding
+matrices computed in Rust are fed to the AOT-compiled encode/decode GEMM
+executables whose reference numerics are checked here:
+
+  * data points        beta_j  = j                      (j = 0..k-1)
+  * evaluation points  alpha_v = (k-1)/2 * (1 - cos(pi*(2v+1)/(2*nr)))
+                       (Chebyshev nodes of [0, k-1], v = 0..nr-1)
+
+Chebyshev alphas keep the encode matrix well-conditioned over f64 (the paper
+works over an abstract field; see DESIGN.md §4 substitutions). `aot.py` embeds
+a small fixture from this module into artifacts/manifest.json so the Rust test
+suite can cross-check its own implementation against python's.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def betas(k: int) -> np.ndarray:
+    """Interpolation nodes carrying the k data chunks: 0, 1, ..., k-1."""
+    return np.arange(k, dtype=np.float64)
+
+
+def golden_coprime(nr: int) -> int:
+    """Smallest s >= round(nr*0.618) coprime to nr (1 for nr <= 2).
+
+    Mirrored in rust/src/coding/field.rs `golden_coprime` — keep in lockstep.
+    """
+    if nr <= 2:
+        return 1
+    s = int(round(nr * 0.618))
+    s = max(1, min(s, nr - 1))
+    while math.gcd(s, nr) != 1:
+        s += 1
+    return s
+
+
+def alphas(k: int, nr: int) -> np.ndarray:
+    """nr Chebyshev evaluation points on [0, k-1] (encoded-chunk nodes).
+
+    Returned in golden-ratio-strided order (chunk v gets node (v*s) mod nr)
+    so any run of chunk indices maps to nodes spread across the interval —
+    this keeps decoding well-conditioned for arbitrary worker subsets. Must
+    match rust/src/coding/field.rs `alphas` bit-for-bit.
+    """
+    v = np.arange(nr, dtype=np.int64)
+    j = (v * golden_coprime(nr)) % nr
+    return (k - 1) / 2.0 * (1.0 - np.cos(math.pi * (2.0 * j.astype(np.float64) + 1.0) / (2.0 * nr)))
+
+
+def lagrange_basis_matrix(nodes: np.ndarray, targets: np.ndarray) -> np.ndarray:
+    """M[t, v] = L_v(targets[t]) for the Lagrange basis over `nodes`.
+
+    Computed in barycentric form for numerical stability; exact hit on a node
+    returns the corresponding unit row.
+    """
+    nodes = np.asarray(nodes, dtype=np.float64)
+    targets = np.asarray(targets, dtype=np.float64)
+    n = len(nodes)
+    # Barycentric weights w_v = 1 / prod_{l != v} (x_v - x_l)
+    diff = nodes[:, None] - nodes[None, :]
+    np.fill_diagonal(diff, 1.0)
+    w = 1.0 / diff.prod(axis=1)
+
+    out = np.zeros((len(targets), n), dtype=np.float64)
+    for t, x in enumerate(targets):
+        d = x - nodes
+        hit = np.nonzero(d == 0.0)[0]
+        if hit.size:
+            out[t, hit[0]] = 1.0
+            continue
+        terms = w / d
+        out[t] = terms / terms.sum()
+    return out
+
+
+def generator_matrix(k: int, nr: int) -> np.ndarray:
+    """G (nr x k): X~ = G @ X_stack encodes the dataset (eq. 6 of the paper)."""
+    return lagrange_basis_matrix(betas(k), alphas(k, nr))
+
+
+def decode_matrix(k: int, nr: int, received: list[int], deg_f: int) -> np.ndarray:
+    """W (k x K*): f(X_j) = W @ R recovers evaluations from received results.
+
+    `received` are the indices v of the K* = (k-1)*deg_f + 1 encoded chunks
+    whose evaluations arrived; f∘u has degree (k-1)*deg_f, so K* samples pin it
+    down and evaluating the interpolant at the betas recovers f(X_j).
+    """
+    kstar = (k - 1) * deg_f + 1
+    if len(received) != kstar:
+        raise ValueError(f"need exactly K*={kstar} results, got {len(received)}")
+    pts = alphas(k, nr)[np.asarray(received, dtype=np.int64)]
+    return lagrange_basis_matrix(pts, betas(k))

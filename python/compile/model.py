@@ -1,0 +1,56 @@
+"""L2: the paper's compute graphs in JAX, built on the L1 Pallas kernels.
+
+Four build-time-lowered functions cover everything a worker or the master
+executes on the request path (Rust calls the AOT artifacts; python never runs
+at serve time):
+
+  * ``gradient_eval``  — the Fig.-3 quadratic workload f(X_j) = X_j^T(X_j w - y_j),
+                         deg f = 2 in the coded pair (X_j, y_j).
+  * ``linear_eval``    — the Fig.-4 EC2 workload f(X_j) = X_j @ B, deg f = 1.
+  * ``encode``         — Lagrange encoding as the generator GEMM  X~ = G @ X.
+  * ``decode``         — Lagrange decoding as the weight GEMM     Y  = W @ R.
+
+All of them bottom out in the Pallas `matmul` / fused-gradient kernels so the
+whole request path exercises the L1 code.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.gradient import gradient_eval_fused
+from .kernels.matmul import matmul
+
+
+def gradient_eval(xt: jnp.ndarray, w: jnp.ndarray, y: jnp.ndarray):
+    """Per-chunk quadratic evaluation ``xt.T @ (xt @ w - y)``.
+
+    ``xt (c, p)`` is one (possibly encoded) chunk, ``w (p, 1)`` the round's
+    weight vector, ``y (c, 1)`` the chunk's (encoded) targets. Returns (p, 1).
+    Fused L1 kernel keeps the residual in VMEM (kernels/gradient.py).
+    """
+    return (gradient_eval_fused(xt, w, y),)
+
+
+def linear_eval(xt: jnp.ndarray, b: jnp.ndarray):
+    """Per-chunk linear evaluation ``xt @ b`` (the paper's EC2 workload)."""
+    return (matmul(xt, b),)
+
+
+def encode(g: jnp.ndarray, xs: jnp.ndarray):
+    """Lagrange encode: ``g (nr, k) @ xs (k, D)`` -> all encoded chunks.
+
+    ``xs`` stacks the k data chunks row-wise (each flattened to D floats);
+    row v of the result is the flattened encoded chunk X~_v = u(alpha_v).
+    """
+    return (matmul(g, xs),)
+
+
+def decode(wmat: jnp.ndarray, r: jnp.ndarray):
+    """Lagrange decode: ``wmat (k, K*) @ r (K*, D)`` -> f(X_1..X_k).
+
+    ``r`` stacks the K* received evaluations; the barycentric weight matrix
+    ``wmat`` is computed by the Rust coordinator per round (it depends on
+    *which* results arrived).
+    """
+    return (matmul(wmat, r),)

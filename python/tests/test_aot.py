@@ -1,0 +1,84 @@
+"""AOT lowering sanity: every artifact is valid HLO text + manifest fixture."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, lagrange
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    arts, params = aot.lower_artifacts(
+        k=3, n=2, r=2, deg_f=2, chunk_rows=4, features=6, lin_cols=5
+    )
+    return arts, params
+
+
+def test_all_artifacts_are_hlo_text(lowered):
+    arts, _ = lowered
+    assert set(arts) == {"gradient", "linear", "encode", "decode"}
+    for name, (text, entry) in arts.items():
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        assert entry["file"].endswith(".hlo.txt")
+
+
+def test_params_thresholds(lowered):
+    _, params = lowered
+    # eq. (15): K* = (k-1) deg f + 1
+    assert params["kstar_quadratic"] == (params["k"] - 1) * 2 + 1
+    assert params["kstar_linear"] == params["k"]
+    assert params["nr"] == params["n"] * params["r"]
+
+
+def test_cross_check_fixture_consistency():
+    fx = aot.cross_check_fixture(k=4, nr=8)
+    g = np.asarray(fx["generator"])
+    assert g.shape == (8, 4)
+    np.testing.assert_allclose(g.sum(axis=1), 1.0, atol=1e-10)
+    np.testing.assert_allclose(
+        g, lagrange.generator_matrix(4, 8), atol=1e-13
+    )
+    w = np.asarray(fx["decode_weights"])
+    assert w.shape == (4, 7)
+
+
+def test_cli_writes_artifacts(tmp_path):
+    """Run the module exactly as `make artifacts` does, into a tmp dir."""
+    env = dict(os.environ)
+    pkg_root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--outdir",
+            str(tmp_path),
+            "--k",
+            "3",
+            "--n",
+            "2",
+            "--r",
+            "2",
+            "--chunk-rows",
+            "4",
+            "--features",
+            "6",
+        ],
+        cwd=pkg_root,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    for entry in manifest["artifacts"]:
+        text = (tmp_path / entry["file"]).read_text()
+        assert text.startswith("HloModule")

@@ -1,0 +1,130 @@
+"""Kernel vs reference — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/block sizes of the Pallas kernels and asserts
+allclose against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gradient import gradient_eval_fused
+from compile.kernels.matmul import matmul, vmem_footprint_bytes
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype) * scale)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    got = matmul(x, y, block_m=32, block_n=32, block_k=32)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 33, 128]),
+    bn=st.sampled_from([8, 16, 33, 128]),
+    bk=st.sampled_from([8, 16, 33, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_size_invariant(bm, bn, bk, seed):
+    """Output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, 45, 37), _rand(rng, 37, 29)
+    got = matmul(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_inputs_f32_accum(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((32, 48)), dtype=jnp.bfloat16)
+    y = jnp.asarray(rng.standard_normal((48, 16)), dtype=jnp.bfloat16)
+    got = matmul(x, y, block_m=16, block_n=16, block_k=16)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(24, dtype=jnp.float32)
+    x = jnp.arange(24 * 24, dtype=jnp.float32).reshape(24, 24)
+    np.testing.assert_allclose(matmul(eye, x, block_m=8, block_n=8, block_k=8), x)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((3, 4))
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((5, 2)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3,)), jnp.zeros((3, 2)))
+
+
+def test_vmem_footprint_within_budget():
+    """The default 128^3 tiling must fit comfortably in ~16 MiB of VMEM."""
+    assert vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20 // 8
+
+
+# -------------------------------------------------------- fused gradient ---
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.integers(1, 80),
+    p=st.integers(1, 64),
+    bm=st.sampled_from([4, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gradient_fused_matches_ref(c, p, bm, seed):
+    rng = np.random.default_rng(seed)
+    x, w, y = _rand(rng, c, p), _rand(rng, p, 1), _rand(rng, c, 1)
+    got = gradient_eval_fused(x, w, y, block_m=bm)
+    np.testing.assert_allclose(got, ref.gradient_ref(x, w, y), rtol=1e-4, atol=1e-4)
+
+
+def test_gradient_zero_residual_gives_zero():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 16, 8), _rand(rng, 8, 1)
+    y = ref.matmul_ref(x, w)  # residual is exactly 0
+    got = gradient_eval_fused(x, w, jnp.asarray(y), block_m=8)
+    np.testing.assert_allclose(got, np.zeros((8, 1)), atol=1e-5)
+
+
+def test_gradient_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        gradient_eval_fused(jnp.zeros((4, 3)), jnp.zeros((2, 1)), jnp.zeros((4, 1)))
+    with pytest.raises(ValueError):
+        gradient_eval_fused(jnp.zeros((4, 3)), jnp.zeros((3, 1)), jnp.zeros((5, 1)))
+
+
+def test_gradient_is_actual_gradient():
+    """f = 0.5 ||Xw - y||^2  =>  grad_w f = X^T (Xw - y); check vs jax.grad."""
+    rng = np.random.default_rng(7)
+    x, w, y = _rand(rng, 20, 6), _rand(rng, 6, 1), _rand(rng, 20, 1)
+
+    def loss(w_):
+        r = x @ w_ - y
+        return 0.5 * jnp.sum(r * r)
+
+    expected = jax.grad(loss)(w)
+    got = gradient_eval_fused(x, w, y, block_m=8)
+    np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,143 @@
+"""L2 model + Lagrange-scheme end-to-end math checks (build-time oracle).
+
+The decisive test is `test_coded_gradient_round_trip`: encode the dataset with
+the generator GEMM, evaluate the *quadratic* gradient workload on encoded
+chunks only (as workers would), decode from exactly K* = (k-1)*deg f + 1
+results — any K* of them — and recover every per-chunk gradient f(X_j).
+This is Theorem/eq. (15) of the paper executed over f64.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import lagrange, model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def test_generator_interpolates_data_nodes():
+    """u(beta_j) = X_j: rows of G at target=beta are unit vectors."""
+    g = lagrange.lagrange_basis_matrix(lagrange.betas(5), lagrange.betas(5))
+    np.testing.assert_allclose(g, np.eye(5), atol=1e-12)
+
+
+def test_alphas_are_distinct_and_in_range():
+    for k, nr in [(4, 6), (8, 16), (50, 150)]:
+        a = lagrange.alphas(k, nr)
+        assert len(np.unique(a)) == nr
+        assert a.min() >= 0.0 and a.max() <= k - 1
+
+
+def test_generator_rows_sum_to_one():
+    """Lagrange bases form a partition of unity: sum_j L_j(x) = 1."""
+    g = lagrange.generator_matrix(6, 14)
+    np.testing.assert_allclose(g.sum(axis=1), np.ones(14), atol=1e-10)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(2, 6),
+    extra=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coded_gradient_round_trip(k, extra, seed):
+    """encode -> evaluate f on coded chunks -> decode == direct f(X_j)."""
+    deg_f = 2
+    kstar = (k - 1) * deg_f + 1
+    nr = kstar + extra  # storage must satisfy nr >= k*deg_f - 1
+    c, p = 8, 5
+    rng = np.random.default_rng(seed)
+
+    xs = rng.standard_normal((k, c, p))
+    ys = rng.standard_normal((k, c, 1))
+    w = rng.standard_normal((p, 1)).astype(np.float32)
+
+    # Encode (X_j, y_j) jointly — both enter f linearly in the coded data.
+    g = lagrange.generator_matrix(k, nr)
+    flat = np.concatenate([xs.reshape(k, -1), ys.reshape(k, -1)], axis=1)
+    enc = np.asarray(
+        model.encode(jnp.asarray(g, jnp.float32), jnp.asarray(flat, jnp.float32))[0]
+    )
+    xt = enc[:, : c * p].reshape(nr, c, p)
+    yt = enc[:, c * p :].reshape(nr, c, 1)
+
+    # Workers evaluate the quadratic f on encoded chunks; pick an arbitrary
+    # K*-subset as "the fastest responders".
+    received = sorted(rng.choice(nr, size=kstar, replace=False).tolist())
+    evals = np.stack(
+        [
+            np.asarray(
+                model.gradient_eval(
+                    jnp.asarray(xt[v], jnp.float32),
+                    jnp.asarray(w),
+                    jnp.asarray(yt[v], jnp.float32),
+                )[0]
+            ).ravel()
+            for v in received
+        ]
+    )
+
+    wmat = lagrange.decode_matrix(k, nr, received, deg_f)
+    dec = np.asarray(
+        model.decode(jnp.asarray(wmat, jnp.float32), jnp.asarray(evals, jnp.float32))[0]
+    )
+
+    direct = np.stack(
+        [(xs[j].T @ (xs[j] @ w - ys[j])).ravel() for j in range(k)]
+    )
+    np.testing.assert_allclose(dec, direct, rtol=2e-2, atol=2e-2)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_coded_linear_round_trip(k, seed):
+    """deg f = 1: K* = k results of X~ @ B decode to every X_j @ B.
+
+    Tolerance note: only k of nr = 2k results are used here, so an unlucky
+    random subset can be poorly spread and the interpolation Lebesgue
+    constant amplifies f32 noise by up to ~1e3; the exact-field property
+    tests (rust, GF(2^61-1)) cover bit-exactness for every subset, and the
+    e2e driver measures ~2e-4 relative error for the realistic worker
+    subsets (EXPERIMENTS.md §decode-precision).
+    """
+    deg_f = 1
+    nr = 2 * k
+    c, p, q = 4, 6, 3
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((k, c, p))
+    b = rng.standard_normal((p, q)).astype(np.float32)
+
+    g = lagrange.generator_matrix(k, nr)
+    xt = (g @ xs.reshape(k, -1)).reshape(nr, c, p)
+
+    received = sorted(rng.choice(nr, size=k, replace=False).tolist())
+    evals = np.stack(
+        [
+            np.asarray(
+                model.linear_eval(jnp.asarray(xt[v], jnp.float32), jnp.asarray(b))[0]
+            ).ravel()
+            for v in received
+        ]
+    )
+    wmat = lagrange.decode_matrix(k, nr, received, deg_f)
+    dec = wmat @ evals
+    direct = np.stack([(xs[j] @ b).ravel() for j in range(k)])
+    scale = np.abs(direct).max() + 1e-9
+    np.testing.assert_allclose(dec / scale, direct / scale, rtol=0, atol=5e-2)
+
+
+def test_decode_matrix_requires_exactly_kstar():
+    with pytest.raises(ValueError):
+        lagrange.decode_matrix(4, 8, [0, 1, 2], deg_f=2)  # needs 7
+
+
+def test_model_encode_matches_ref():
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal((6, 4)), jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((4, 10)), jnp.float32)
+    np.testing.assert_allclose(
+        model.encode(g, xs)[0], ref.encode_ref(g, xs), rtol=1e-5, atol=1e-5
+    )

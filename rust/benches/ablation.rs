@@ -1,0 +1,119 @@
+//! Design-choice ablations (DESIGN.md §3): what each piece of LEA buys.
+//!
+//!  (a) coding scheme — Lagrange K*=99 vs repetition (threshold + coverage);
+//!  (b) estimation — continuous vs frozen estimator vs static;
+//!  (c) return model — the paper's all-or-nothing vs streaming partial
+//!      results (our extension);
+//!  (d) K* sensitivity — success under suboptimal thresholds (Lemma 4.3).
+
+use timely_coded::coding::scheme::CodingScheme;
+use timely_coded::experiments::{heterogeneous, sweep};
+use timely_coded::scheduler::baselines::{GreedyLastState, RoundRobinStatic};
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::static_strategy::StaticStrategy;
+use timely_coded::sim::runner::{run, ReturnModel, RunConfig};
+use timely_coded::sim::scenarios::{
+    fig3_cluster, fig3_geometry, fig3_load_params, fig3_scenarios, fig3_scheme,
+};
+use timely_coded::util::bench_kit::table;
+
+const ROUNDS: u64 = 20_000;
+const SEED: u64 = 77;
+
+fn main() {
+    let scenarios = fig3_scenarios();
+
+    // ---- (a) coding-scheme ablation ----
+    let mut rows = Vec::new();
+    for s in &scenarios {
+        let (lagrange, rep_thresh, rep_cov) = sweep::coding_ablation(s, ROUNDS, SEED);
+        rows.push((
+            format!("scenario {} (π_g={})", s.id, s.pi_g),
+            vec![lagrange, rep_thresh, rep_cov],
+        ));
+    }
+    table(
+        "Ablation (a): coding scheme under oracle allocation",
+        &["Lagrange K*=99", "rep. threshold", "rep. coverage"],
+        &rows,
+    );
+
+    // ---- (b) estimation ablation: full strategy ladder ----
+    let mut rows = Vec::new();
+    for s in &scenarios {
+        let (full, frozen) = sweep::estimator_ablation(s, ROUNDS, SEED);
+        let params = fig3_load_params();
+        let cfg = RunConfig::simple(ROUNDS, 1.0);
+        let mut st = StaticStrategy::stationary(params, vec![s.pi_g; params.n]);
+        let static_ = run(&mut st, &mut fig3_cluster(s, SEED), &fig3_scheme(), &cfg, SEED)
+            .throughput;
+        let mut gr = GreedyLastState::new(params);
+        let greedy = run(&mut gr, &mut fig3_cluster(s, SEED), &fig3_scheme(), &cfg, SEED)
+            .throughput;
+        let mut rr = RoundRobinStatic::new(params);
+        let round_robin =
+            run(&mut rr, &mut fig3_cluster(s, SEED), &fig3_scheme(), &cfg, SEED).throughput;
+        rows.push((
+            format!("scenario {} (π_g={})", s.id, s.pi_g),
+            vec![full, frozen, greedy, static_, round_robin],
+        ));
+    }
+    table(
+        "Ablation (b): adaptivity ladder (probability-aware -> blind)",
+        &["LEA", "LEA frozen@16", "greedy", "static", "round-robin"],
+        &rows,
+    );
+
+    // ---- (b') heterogeneous workers ----
+    let hetero = heterogeneous::run_study(ROUNDS, SEED);
+    heterogeneous::print(&hetero);
+
+    // ---- (c) return-model ablation ----
+    let mut rows = Vec::new();
+    for s in &scenarios {
+        let params = fig3_load_params();
+        let scheme = fig3_scheme();
+        let mut cfg = RunConfig::simple(ROUNDS, 1.0);
+
+        let mut lea = Lea::new(params);
+        let all_or_nothing = run(&mut lea, &mut fig3_cluster(s, SEED), &scheme, &cfg, SEED);
+
+        cfg.returns = ReturnModel::Streaming;
+        let mut lea2 = Lea::new(params);
+        let streaming = run(&mut lea2, &mut fig3_cluster(s, SEED), &scheme, &cfg, SEED);
+        rows.push((
+            format!("scenario {} (π_g={})", s.id, s.pi_g),
+            vec![all_or_nothing.throughput, streaming.throughput],
+        ));
+    }
+    table(
+        "Ablation (c): all-or-nothing (paper) vs streaming returns (extension)",
+        &["all-or-nothing", "streaming"],
+        &rows,
+    );
+
+    // ---- (d) K* sensitivity ----
+    let s = &scenarios[2];
+    let geo = fig3_geometry();
+    let mut rows = Vec::new();
+    for kstar in [99usize, 110, 125, 140, 150] {
+        let scheme = CodingScheme::counting(geo, kstar);
+        let params = timely_coded::scheduler::success::LoadParams::from_rates(
+            geo.n, geo.r, kstar, 10.0, 3.0, 1.0,
+        );
+        let mut lea = Lea::new(params);
+        let r = run(
+            &mut lea,
+            &mut fig3_cluster(s, SEED),
+            &scheme,
+            &RunConfig::simple(ROUNDS, 1.0),
+            SEED,
+        );
+        rows.push((format!("K = {kstar}"), vec![r.throughput]));
+    }
+    table(
+        "Ablation (d): threshold sensitivity, scenario 3 (optimal K*=99, Lemma 4.3)",
+        &["LEA throughput"],
+        &rows,
+    );
+}

@@ -1,0 +1,60 @@
+//! Microbenchmarks of the EA allocator — the paper's efficiency claim:
+//! Lemma 4.5 turns the 2^n subset search into a linear prefix scan.
+//!
+//! Benches the O(n²) incremental-DP prefix search against the literal 2^n
+//! brute force across n, and the Poisson-binomial tail DP.
+
+use timely_coded::scheduler::allocation::{allocate, brute_force};
+use timely_coded::scheduler::success::{best_prefix, poisson_binomial_tail, LoadParams};
+use timely_coded::util::bench_kit::{bench, black_box, table};
+use timely_coded::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let mut rows = Vec::new();
+
+    for n in [8usize, 12, 16, 20] {
+        // Scaled Fig.-3-like geometry: K* ≈ 0.66·n·ℓ_g.
+        let kstar = (n as f64 * 10.0 * 0.66) as usize;
+        let params = LoadParams::from_rates(n, 10, kstar, 10.0, 3.0, 1.0);
+        let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+
+        let r_fast = bench(&format!("prefix_search n={n}"), 5, 20_000, || {
+            let mut ps = p_good.clone();
+            ps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            black_box(best_prefix(&params, &ps));
+        });
+
+        let r_brute = bench(&format!("brute_force  n={n}"), 5, 3, || {
+            black_box(brute_force(&params, &p_good));
+        });
+
+        // They must agree (Lemma 4.5) — asserted every run.
+        let a = allocate(&params, &p_good);
+        let (_, bf) = brute_force(&params, &p_good);
+        assert!((a.est_success - bf).abs() < 1e-10, "n={n}");
+
+        rows.push((
+            format!("n = {n}"),
+            vec![
+                r_fast.mean_ns / 1e3,
+                r_brute.mean_ns / 1e3,
+                r_brute.mean_ns / r_fast.mean_ns,
+            ],
+        ));
+    }
+
+    table(
+        "EA allocation: Lemma-4.5 prefix search vs exhaustive 2^n",
+        &["prefix µs", "brute µs", "speedup"],
+        &rows,
+    );
+
+    // Tail DP scaling.
+    for n in [15usize, 50, 200] {
+        let ps: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        bench(&format!("poisson_binomial_tail n={n}"), 5, 20_000, || {
+            black_box(poisson_binomial_tail(&ps, (n / 2) as i64));
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! Microbenchmarks of the coding substrate: Lagrange encode / decode over
+//! f64 and GF(2^61−1), and the master's per-round decode-weight computation
+//! (the only coding work on the request path — encode happens once).
+
+use timely_coded::coding::field::Fp;
+use timely_coded::coding::lagrange::LagrangeCode;
+use timely_coded::util::bench_kit::{bench, black_box, table};
+use timely_coded::util::rng::Rng;
+
+fn payload_f64(rng: &mut Rng, dim: usize) -> Vec<f64> {
+    (0..dim).map(|_| rng.f64() * 2.0 - 1.0).collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut rows = Vec::new();
+
+    // Geometries: the e2e default and the paper's Fig.-3 scale.
+    for (k, nr, deg_f, dim) in [(8, 30, 2, 2080), (50, 150, 2, 1024)] {
+        let kstar = (k - 1) * deg_f + 1;
+
+        // ---- f64 ----
+        let code = LagrangeCode::<f64>::new(k, nr);
+        let data: Vec<Vec<f64>> = (0..k).map(|_| payload_f64(&mut rng, dim)).collect();
+        let r_enc = bench(
+            &format!("encode_f64 k={k} nr={nr} dim={dim}"),
+            5,
+            10,
+            || {
+                black_box(code.encode(&data));
+            },
+        );
+
+        let enc = code.encode(&data);
+        let idx: Vec<usize> = (0..kstar).map(|i| i * nr / kstar).collect();
+        let received: Vec<(usize, Vec<f64>)> =
+            idx.iter().map(|&v| (v, enc[v].clone())).collect();
+        let r_dec = bench(
+            &format!("decode_f64 k={k} K*={kstar} dim={dim}"),
+            5,
+            10,
+            || {
+                black_box(code.decode(&received, deg_f).unwrap());
+            },
+        );
+
+        let r_w = bench(
+            &format!("decode_weights_f64 k={k} K*={kstar}"),
+            5,
+            200,
+            || {
+                black_box(code.decode_weights(&idx, deg_f).unwrap());
+            },
+        );
+
+        rows.push((
+            format!("k={k} nr={nr} dim={dim}"),
+            vec![
+                r_enc.mean_ns / 1e6,
+                r_dec.mean_ns / 1e6,
+                r_w.mean_ns / 1e3,
+            ],
+        ));
+
+        // ---- exact field ----
+        let code_fp = LagrangeCode::<Fp>::new(k, nr);
+        let data_fp: Vec<Vec<Fp>> = (0..k)
+            .map(|_| (0..dim).map(|_| Fp::new(rng.next_u64())).collect())
+            .collect();
+        bench(&format!("encode_fp  k={k} nr={nr} dim={dim}"), 5, 10, || {
+            black_box(code_fp.encode(&data_fp));
+        });
+    }
+
+    table(
+        "Lagrange coding costs (per op)",
+        &["encode ms", "decode ms", "weights µs"],
+        &rows,
+    );
+
+    // Field arithmetic baseline.
+    let a = Fp::new(0x1234_5678_9abc_def0);
+    let b = Fp::new(0x0fed_cba9_8765_4321);
+    use timely_coded::coding::field::CodeField;
+    bench("fp::mul", 10, 10_000_000, || {
+        black_box(black_box(a).mul(black_box(b)));
+    });
+    bench("fp::inv", 10, 100_000, || {
+        black_box(black_box(a).inv());
+    });
+}

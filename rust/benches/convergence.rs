@@ -1,0 +1,44 @@
+//! Bench + regeneration harness for the Theorem-5.1 convergence study.
+//!
+//! Regenerates the R_LEA(m) → R*(m) series at paper scale and benches the
+//! per-round cost of the two strategies' decision paths (allocation +
+//! estimator update), which is the master's scheduling overhead.
+
+use timely_coded::experiments::convergence;
+use timely_coded::markov::WState;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::strategy::Strategy;
+use timely_coded::sim::scenarios::{fig3_load_params, fig3_scenarios};
+use timely_coded::util::bench_kit::{bench, black_box};
+use timely_coded::util::rng::Rng;
+
+fn main() {
+    // ---- regenerate the study ----
+    for s in &fig3_scenarios()[..2] {
+        println!(
+            "\nscenario {} (p_gg={}, p_bb={}):",
+            s.id, s.p_gg, s.p_bb
+        );
+        let res = convergence::run(s, 100_000, 2024, 10_000);
+        convergence::print(&res);
+    }
+
+    // ---- bench: LEA decision path (allocate + observe) ----
+    let params = fig3_load_params();
+    let mut lea = Lea::new(params);
+    let mut rng = Rng::new(3);
+    let states: Vec<Option<WState>> = (0..params.n)
+        .map(|i| {
+            Some(if i % 3 == 0 {
+                WState::Bad
+            } else {
+                WState::Good
+            })
+        })
+        .collect();
+    bench("lea::allocate+observe (n=15, K*=99)", 10, 20_000, || {
+        let a = lea.allocate(&mut rng);
+        black_box(&a);
+        lea.observe(&states);
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench + regeneration harness for Fig. 1 (credit-instance speed trace).
+//!
+//! Regenerates the paper's measurement (two-state behaviour with temporal
+//! correlation) and benches the credit-model step — the innermost loop of
+//! every Fig.-4 simulation.
+
+use timely_coded::experiments::fig1;
+use timely_coded::markov::credit::CreditCpu;
+use timely_coded::markov::StateProcess;
+use timely_coded::util::bench_kit::{bench, black_box};
+use timely_coded::util::rng::Rng;
+
+fn main() {
+    // ---- regenerate the figure ----
+    let res = fig1::run(50_000, 5.0, 42);
+    fig1::print(&res);
+
+    // ---- microbench: credit-model steps/s ----
+    let mut cpu = CreditCpu::t2_micro(5.0);
+    let mut rng = Rng::new(7);
+    bench("credit_cpu::next_state", 10, 1_000_000, || {
+        black_box(cpu.next_state(&mut rng, 5.0));
+    });
+
+    // Markov chain step for comparison.
+    use timely_coded::markov::chain::{MarkovWorker, TwoState};
+    let mut w = MarkovWorker::new(TwoState::new(0.8, 0.8));
+    bench("markov_chain::next_state", 10, 1_000_000, || {
+        black_box(w.next_state(&mut rng, 0.0));
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench + regeneration harness for Fig. 3 (§6.1 numerical study).
+//!
+//! Prints the four-scenario LEA/static/oracle table at paper scale
+//! (50k rounds) and benches the end-to-end simulated round rate for each
+//! strategy — the number that determines how fast the whole study runs.
+
+use timely_coded::experiments::fig3;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::oracle::Oracle;
+use timely_coded::scheduler::static_strategy::StaticStrategy;
+use timely_coded::scheduler::strategy::Strategy;
+use timely_coded::sim::runner::{run, RunConfig};
+use timely_coded::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scenarios, fig3_scheme};
+use timely_coded::util::bench_kit::{bench, black_box};
+
+fn main() {
+    // ---- regenerate the figure ----
+    let rows = fig3::run_all(50_000, 2024);
+    fig3::print(&rows);
+
+    // ---- bench: simulated rounds/s per strategy ----
+    let params = fig3_load_params();
+    let scheme = fig3_scheme();
+    let s = fig3_scenarios()[0];
+    const BATCH: u64 = 2000;
+
+    let mk = |strategy: &mut dyn Strategy, label: &str| {
+        let mut cluster = fig3_cluster(&s, 1);
+        let cfg = RunConfig::simple(BATCH, 1.0);
+        let r = bench(label, 10, 1, || {
+            black_box(run(strategy, &mut cluster, &scheme, &cfg, 2));
+        });
+        println!(
+            "  -> {:.2}M simulated rounds/s",
+            BATCH as f64 * r.per_sec() / 1e6
+        );
+    };
+
+    let mut lea = Lea::new(params);
+    mk(&mut lea, "fig3_sim_2000_rounds/LEA");
+    let mut st = StaticStrategy::stationary(params, vec![0.5; params.n]);
+    mk(&mut st, "fig3_sim_2000_rounds/static");
+    let mut or = Oracle::new(
+        params,
+        vec![timely_coded::markov::chain::TwoState::new(0.8, 0.8); params.n],
+    );
+    mk(&mut or, "fig3_sim_2000_rounds/oracle");
+}

@@ -1,0 +1,44 @@
+//! Bench + regeneration harness for Fig. 4 (§6.2 EC2 analog).
+//!
+//! Part 1 regenerates the six-scenario table at paper scale on the round
+//! simulator with credit-model workers. Part 2 runs the REAL threaded
+//! master/worker cluster (PJRT artifacts when available) at artifact
+//! geometry with the scenario-5 credit dynamics, reporting round latency —
+//! the end-to-end number a deployment would care about.
+
+use std::time::Instant;
+
+use timely_coded::exec::master::Engine;
+use timely_coded::experiments::fig4;
+use timely_coded::sim::scenarios::fig4_scenarios;
+
+fn main() {
+    // ---- regenerate the figure (simulation tier) ----
+    let rows = fig4::run_all(20_000, 2024);
+    fig4::print(&rows);
+
+    // ---- real-exec tier ----
+    println!("\n=== real master/worker cluster (artifact geometry, scenario-5 dynamics) ===");
+    let s = fig4_scenarios()[4];
+    for (label, engine) in [("pjrt(auto)", Engine::auto()), ("native", Engine::Native)] {
+        let rounds = 150u64;
+        let t0 = Instant::now();
+        match fig4::run_e2e_scenario(&s, rounds, 11, engine) {
+            Ok((lea, st)) => {
+                let wall = t0.elapsed().as_secs_f64();
+                println!(
+                    "{label:>10}: LEA {:.3} vs static {:.3} (ratio {:.2}x) | {:.1} rounds/s wall, \
+                     worker compute {:.2}s, max rel decode err {:.2e} [{} engine]",
+                    lea.throughput,
+                    st.throughput,
+                    lea.throughput / st.throughput.max(1e-9),
+                    2.0 * rounds as f64 / wall, // two runs
+                    lea.compute_secs,
+                    lea.max_decode_error,
+                    lea.engine,
+                );
+            }
+            Err(e) => println!("{label:>10}: failed: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Field elements for Lagrange coding.
+//!
+//! The paper's theory lives over an abstract field 𝔽. We provide two
+//! instances behind one trait:
+//!
+//! * [`Fp`] — the Mersenne prime field `GF(2^61 − 1)`: exact, used by the
+//!   property tests (decode∘encode ≡ id bit-for-bit) and available to users
+//!   who need exactness (e.g. integer datasets).
+//! * `f64` — the floating instance used on the PJRT request path. Evaluation
+//!   points are Chebyshev nodes so the encode matrix stays well-conditioned
+//!   (DESIGN.md §4); conventions match `python/compile/lagrange.py` exactly
+//!   and are cross-checked against the manifest fixture in the test suite.
+
+/// The 61-bit Mersenne prime 2^61 − 1.
+pub const P: u64 = (1u64 << 61) - 1;
+
+/// Element of a field usable by the Lagrange scheme.
+pub trait CodeField: Copy + PartialEq + std::fmt::Debug {
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    /// Multiplicative inverse; panics on zero.
+    fn inv(self) -> Self;
+    fn from_i64(v: i64) -> Self;
+
+    /// The k interpolation nodes carrying the data chunks (β in the paper).
+    fn betas(k: usize) -> Vec<Self>;
+    /// The nr evaluation nodes carrying encoded chunks (α in the paper);
+    /// must be pairwise distinct, and for exact fields distinct from β too.
+    fn alphas(k: usize, nr: usize) -> Vec<Self>;
+
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        self.mul(o.inv())
+    }
+}
+
+/// `GF(2^61 − 1)` element. Representation invariant: value in `[0, P)`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Fp(pub u64);
+
+impl Fp {
+    #[inline]
+    pub fn new(v: u64) -> Fp {
+        Fp(v % P)
+    }
+
+    /// Modular exponentiation by squaring.
+    pub fn pow(self, mut e: u64) -> Fp {
+        let mut base = self;
+        let mut acc = Fp(1);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+}
+
+impl CodeField for Fp {
+    #[inline]
+    fn zero() -> Self {
+        Fp(0)
+    }
+
+    #[inline]
+    fn one() -> Self {
+        Fp(1)
+    }
+
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        let s = self.0 + o.0; // < 2^62, no overflow
+        Fp(if s >= P { s - P } else { s })
+    }
+
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Fp(if self.0 >= o.0 {
+            self.0 - o.0
+        } else {
+            self.0 + P - o.0
+        })
+    }
+
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        // 128-bit product reduced mod the Mersenne prime 2^61 - 1:
+        // split into low 61 bits + high part, add (2^61 ≡ 1 mod P).
+        let prod = self.0 as u128 * o.0 as u128;
+        let lo = (prod & ((1u128 << 61) - 1)) as u64;
+        let hi = (prod >> 61) as u64;
+        let mut s = lo + hi; // ≤ 2^61-1 + 2^61 ≈ 2^62: one more fold needed
+        if s >= P {
+            s -= P;
+        }
+        if s >= P {
+            s -= P;
+        }
+        Fp(s)
+    }
+
+    fn inv(self) -> Self {
+        assert!(self.0 != 0, "inverse of zero in GF(2^61-1)");
+        self.pow(P - 2) // Fermat
+    }
+
+    #[inline]
+    fn from_i64(v: i64) -> Self {
+        let m = v.rem_euclid(P as i64) as u64;
+        Fp(m)
+    }
+
+    fn betas(k: usize) -> Vec<Self> {
+        (0..k as i64).map(Fp::from_i64).collect()
+    }
+
+    fn alphas(k: usize, nr: usize) -> Vec<Self> {
+        // Integers k..k+nr-1: distinct from each other and from the betas
+        // (requires k + nr < P, always true here).
+        assert!((k + nr) as u64 <= P, "too many points");
+        (k as i64..(k + nr) as i64).map(Fp::from_i64).collect()
+    }
+}
+
+impl CodeField for f64 {
+    fn zero() -> Self {
+        0.0
+    }
+
+    fn one() -> Self {
+        1.0
+    }
+
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+
+    fn inv(self) -> Self {
+        assert!(self != 0.0, "inverse of 0.0");
+        1.0 / self
+    }
+
+    fn from_i64(v: i64) -> Self {
+        v as f64
+    }
+
+    /// β_j = j — matches python/compile/lagrange.py `betas`.
+    fn betas(k: usize) -> Vec<Self> {
+        (0..k).map(|j| j as f64).collect()
+    }
+
+    /// Chebyshev nodes of [0, k−1] in GOLDEN-RATIO-STRIDED order — matches
+    /// python `alphas` bit-for-bit (same formula, both evaluated in f64).
+    ///
+    /// The stride permutation (`v ↦ node (v·s) mod nr`, s coprime to nr near
+    /// nr/φ) makes any *run* of chunk indices — and hence the union of any
+    /// subset of workers' strided chunks — map to nodes spread across the
+    /// whole interval, keeping the decode interpolation well-conditioned no
+    /// matter which K* results arrive (see coding::scheme placement notes).
+    fn alphas(k: usize, nr: usize) -> Vec<Self> {
+        let s = golden_coprime(nr);
+        (0..nr)
+            .map(|v| {
+                let j = (v * s) % nr;
+                (k as f64 - 1.0) / 2.0
+                    * (1.0 - (std::f64::consts::PI * (2.0 * j as f64 + 1.0) / (2.0 * nr as f64)).cos())
+            })
+            .collect()
+    }
+}
+
+/// Smallest s ≥ round(nr·0.618) coprime to nr (1 for nr ≤ 2). Mirrored in
+/// python/compile/lagrange.py — keep the two implementations in lockstep.
+pub fn golden_coprime(nr: usize) -> usize {
+    if nr <= 2 {
+        return 1;
+    }
+    fn gcd(a: usize, b: usize) -> usize {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+    let mut s = ((nr as f64) * 0.618).round() as usize;
+    s = s.clamp(1, nr - 1);
+    while gcd(s, nr) != 1 {
+        s += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_fp(rng: &mut Rng) -> Fp {
+        Fp::new(rng.next_u64())
+    }
+
+    #[test]
+    fn field_axioms_randomized() {
+        let mut rng = Rng::new(101);
+        for _ in 0..500 {
+            let (a, b, c) = (rand_fp(&mut rng), rand_fp(&mut rng), rand_fp(&mut rng));
+            assert_eq!(a.add(b), b.add(a));
+            assert_eq!(a.mul(b), b.mul(a));
+            assert_eq!(a.add(b).add(c), a.add(b.add(c)));
+            assert_eq!(a.mul(b).mul(c), a.mul(b.mul(c)));
+            assert_eq!(a.mul(b.add(c)), a.mul(b).add(a.mul(c)));
+            assert_eq!(a.add(Fp::zero()), a);
+            assert_eq!(a.mul(Fp::one()), a);
+            assert_eq!(a.sub(a), Fp::zero());
+        }
+    }
+
+    #[test]
+    fn inverse_randomized() {
+        let mut rng = Rng::new(102);
+        for _ in 0..200 {
+            let a = rand_fp(&mut rng);
+            if a == Fp::zero() {
+                continue;
+            }
+            assert_eq!(a.mul(a.inv()), Fp::one());
+        }
+    }
+
+    #[test]
+    fn mul_reduction_edge_cases() {
+        let big = Fp(P - 1);
+        assert_eq!(big.mul(big), Fp(1)); // (-1)^2 = 1
+        assert_eq!(big.add(Fp(1)), Fp(0));
+        assert_eq!(Fp::new(P), Fp(0));
+        assert_eq!(Fp::from_i64(-1), Fp(P - 1));
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let a = Fp::new(123456789);
+        let mut acc = Fp::one();
+        for e in 0..20u64 {
+            assert_eq!(a.pow(e), acc);
+            acc = acc.mul(a);
+        }
+    }
+
+    #[test]
+    fn point_sets_distinct() {
+        let b = Fp::betas(10);
+        let a = Fp::alphas(10, 30);
+        let mut all: Vec<u64> = b.iter().chain(&a).map(|x| x.0).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 40);
+
+        let af = <f64 as CodeField>::alphas(10, 30);
+        let mut sorted = af.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(af.iter().all(|&x| (0.0..=9.0).contains(&x)));
+    }
+
+    #[test]
+    fn f64_alphas_match_python_convention() {
+        // First Chebyshev node for k=4, nr=8 from python/compile/lagrange.py.
+        let a = <f64 as CodeField>::alphas(4, 8);
+        let expect0 = 1.5 * (1.0 - (std::f64::consts::PI / 16.0).cos());
+        assert!((a[0] - expect0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,312 @@
+//! The Lagrange coding scheme (paper §3.1, eqs. 5–6), generic over the field.
+//!
+//! Encoding: pick β_1..β_k carrying the data and α_1..α_nr carrying encoded
+//! chunks; `X̃_v = u(α_v)` where `u` interpolates `u(β_j) = X_j`. As a matrix:
+//! `X̃ = G · X` with `G[v][j] = L_j(α_v)` — the generator GEMM that the AOT
+//! `encode.hlo.txt` artifact executes on the PJRT path.
+//!
+//! Decoding: for a degree-`deg f` polynomial `f`, `f∘u` has degree
+//! `(k−1)·deg f`, so ANY `K* = (k−1)·deg f + 1` worker results
+//! `{(v, f(X̃_v))}` determine it; evaluating the interpolant at the β's
+//! recovers every `f(X_j)`. Also expressible as a GEMM with the per-round
+//! weight matrix `W[j][v] = L̂_v(β_j)` (the `decode.hlo.txt` artifact).
+
+use super::field::CodeField;
+use super::poly;
+
+/// A Lagrange code instance for k data chunks and nr encoded chunks.
+#[derive(Clone, Debug)]
+pub struct LagrangeCode<F: CodeField> {
+    pub k: usize,
+    pub nr: usize,
+    betas: Vec<F>,
+    alphas: Vec<F>,
+}
+
+impl<F: CodeField> LagrangeCode<F> {
+    pub fn new(k: usize, nr: usize) -> Self {
+        assert!(k >= 1, "k must be positive");
+        assert!(nr >= 1, "nr must be positive");
+        LagrangeCode {
+            k,
+            nr,
+            betas: F::betas(k),
+            alphas: F::alphas(k, nr),
+        }
+    }
+
+    pub fn betas(&self) -> &[F] {
+        &self.betas
+    }
+
+    pub fn alphas(&self) -> &[F] {
+        &self.alphas
+    }
+
+    /// Recovery threshold for a degree-`deg_f` function (eq. 15).
+    pub fn kstar(&self, deg_f: usize) -> usize {
+        (self.k - 1) * deg_f + 1
+    }
+
+    /// Generator matrix `G (nr × k)`: `X̃ = G · X_stack`.
+    pub fn generator_matrix(&self) -> Vec<Vec<F>> {
+        poly::basis_matrix(&self.betas, &self.alphas)
+    }
+
+    /// Encode `k` data chunks (equal-length payload vectors) into `nr`.
+    pub fn encode(&self, data: &[Vec<F>]) -> Vec<Vec<F>> {
+        assert_eq!(data.len(), self.k, "expected k={} chunks", self.k);
+        let dim = data[0].len();
+        assert!(
+            data.iter().all(|d| d.len() == dim),
+            "all chunks must have equal payload length"
+        );
+        let g = self.generator_matrix();
+        g.iter()
+            .map(|row| {
+                let mut out = vec![F::zero(); dim];
+                for (coef, chunk) in row.iter().zip(data) {
+                    if *coef == F::zero() {
+                        continue;
+                    }
+                    for (o, &x) in out.iter_mut().zip(chunk) {
+                        *o = o.add(coef.mul(x));
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Per-round decode weight matrix `W (k × K*)` for the received encoded
+    /// indices. Errors unless exactly K* distinct in-range indices are given.
+    pub fn decode_weights(&self, received: &[usize], deg_f: usize) -> Result<Vec<Vec<F>>, String> {
+        let kstar = self.kstar(deg_f);
+        if received.len() != kstar {
+            return Err(format!(
+                "decode needs exactly K*={kstar} results, got {}",
+                received.len()
+            ));
+        }
+        let mut sorted = received.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != kstar {
+            return Err("received indices must be distinct".into());
+        }
+        if *sorted.last().unwrap() >= self.nr {
+            return Err(format!("index out of range (nr={})", self.nr));
+        }
+        let nodes: Vec<F> = received.iter().map(|&v| self.alphas[v]).collect();
+        Ok(poly::basis_matrix(&nodes, &self.betas))
+    }
+
+    /// Recover `f(X_1)..f(X_k)` from any ≥ K* results `(encoded index, f(X̃_v))`.
+    /// Extra results beyond K* are ignored (the K* fastest are used).
+    pub fn decode(
+        &self,
+        received: &[(usize, Vec<F>)],
+        deg_f: usize,
+    ) -> Result<Vec<Vec<F>>, String> {
+        let kstar = self.kstar(deg_f);
+        if received.len() < kstar {
+            return Err(format!(
+                "need K*={kstar} results, got {}",
+                received.len()
+            ));
+        }
+        let use_set = &received[..kstar];
+        let idx: Vec<usize> = use_set.iter().map(|(v, _)| *v).collect();
+        let w = self.decode_weights(&idx, deg_f)?;
+        let dim = use_set[0].1.len();
+        if use_set.iter().any(|(_, p)| p.len() != dim) {
+            return Err("received payloads must have equal length".into());
+        }
+        Ok(w
+            .iter()
+            .map(|row| {
+                let mut out = vec![F::zero(); dim];
+                for (coef, (_, payload)) in row.iter().zip(use_set) {
+                    if *coef == F::zero() {
+                        continue;
+                    }
+                    for (o, &x) in out.iter_mut().zip(payload) {
+                        *o = o.add(coef.mul(x));
+                    }
+                }
+                out
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::field::Fp;
+    use crate::util::rng::Rng;
+
+    fn rand_chunks_fp(rng: &mut Rng, k: usize, dim: usize) -> Vec<Vec<Fp>> {
+        (0..k)
+            .map(|_| (0..dim).map(|_| Fp::new(rng.next_u64())).collect())
+            .collect()
+    }
+
+    /// Quadratic "computation" applied elementwise-ish: f(X) = X⊙X (deg 2 in X).
+    fn square_fp(chunk: &[Fp]) -> Vec<Fp> {
+        chunk.iter().map(|&x| x.mul(x)).collect()
+    }
+
+    #[test]
+    fn exact_round_trip_identity_function_fp() {
+        // deg f = 1 with f = id: decode(encode(X)) == X from any k results.
+        let mut rng = Rng::new(1);
+        let code = LagrangeCode::<Fp>::new(5, 12);
+        let data = rand_chunks_fp(&mut rng, 5, 7);
+        let enc = code.encode(&data);
+        for _ in 0..20 {
+            let pick = rng.sample_indices(12, 5);
+            let received: Vec<(usize, Vec<Fp>)> =
+                pick.iter().map(|&v| (v, enc[v].clone())).collect();
+            let dec = code.decode(&received, 1).unwrap();
+            assert_eq!(dec, data);
+        }
+    }
+
+    #[test]
+    fn exact_round_trip_quadratic_fp() {
+        // Workers compute f(X̃)=X̃⊙X̃; any K*=(k−1)2+1 results recover f(X_j).
+        let mut rng = Rng::new(2);
+        let (k, nr) = (4, 10);
+        let code = LagrangeCode::<Fp>::new(k, nr);
+        let data = rand_chunks_fp(&mut rng, k, 6);
+        let enc = code.encode(&data);
+        let kstar = code.kstar(2);
+        assert_eq!(kstar, 7);
+        for _ in 0..20 {
+            let pick = rng.sample_indices(nr, kstar);
+            let received: Vec<(usize, Vec<Fp>)> =
+                pick.iter().map(|&v| (v, square_fp(&enc[v]))).collect();
+            let dec = code.decode(&received, 2).unwrap();
+            let want: Vec<Vec<Fp>> = data.iter().map(|c| square_fp(c)).collect();
+            assert_eq!(dec, want);
+        }
+    }
+
+    #[test]
+    fn f64_round_trip_quadratic() {
+        let mut rng = Rng::new(3);
+        let (k, nr) = (8, 20);
+        let code = LagrangeCode::<f64>::new(k, nr);
+        let data: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..5).map(|_| rng.f64() * 2.0 - 1.0).collect())
+            .collect();
+        let enc = code.encode(&data);
+        let kstar = code.kstar(2); // 15
+        let pick = rng.sample_indices(nr, kstar);
+        let received: Vec<(usize, Vec<f64>)> = pick
+            .iter()
+            .map(|&v| (v, enc[v].iter().map(|x| x * x).collect()))
+            .collect();
+        let dec = code.decode(&received, 2).unwrap();
+        for (dj, xj) in dec.iter().zip(&data) {
+            for (d, x) in dj.iter().zip(xj) {
+                assert!((d - x * x).abs() < 1e-6, "{d} vs {}", x * x);
+            }
+        }
+    }
+
+    #[test]
+    fn first_k_encoded_chunks_are_not_systematic_but_decode_anyway() {
+        // With Chebyshev alphas the code is non-systematic; decoding from the
+        // FIRST K* chunks (the typical fast-worker prefix) must still work.
+        let mut rng = Rng::new(4);
+        let code = LagrangeCode::<f64>::new(6, 14);
+        let data: Vec<Vec<f64>> = (0..6).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let enc = code.encode(&data);
+        let received: Vec<(usize, Vec<f64>)> =
+            (0..6).map(|v| (v, enc[v].clone())).collect();
+        let dec = code.decode(&received, 1).unwrap();
+        for (dj, xj) in dec.iter().zip(&data) {
+            for (d, x) in dj.iter().zip(xj) {
+                assert!((d - x).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_errors() {
+        let code = LagrangeCode::<Fp>::new(3, 8);
+        let payload = vec![Fp::new(1)];
+        // too few
+        assert!(code
+            .decode(&[(0, payload.clone()), (1, payload.clone())], 1)
+            .is_err());
+        // duplicate indices
+        assert!(code
+            .decode_weights(&[0, 0, 1], 1)
+            .is_err());
+        // out of range
+        assert!(code.decode_weights(&[0, 1, 99], 1).is_err());
+        // ragged payloads
+        assert!(code
+            .decode(
+                &[
+                    (0, vec![Fp::new(1)]),
+                    (1, vec![Fp::new(2), Fp::new(3)]),
+                    (2, vec![Fp::new(4)])
+                ],
+                1
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn extra_results_are_ignored() {
+        let mut rng = Rng::new(6);
+        let code = LagrangeCode::<Fp>::new(3, 9);
+        let data = rand_chunks_fp(&mut rng, 3, 4);
+        let enc = code.encode(&data);
+        let received: Vec<(usize, Vec<Fp>)> =
+            (0..9).map(|v| (v, enc[v].clone())).collect();
+        assert_eq!(code.decode(&received, 1).unwrap(), data);
+    }
+
+    #[test]
+    fn generator_matches_python_partition_of_unity() {
+        let code = LagrangeCode::<f64>::new(4, 8);
+        let g = code.generator_matrix();
+        for row in &g {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn encode_is_linear_fp() {
+        // encode(aX + Y) = a·encode(X) + encode(Y) — linearity of the scheme.
+        let mut rng = Rng::new(7);
+        let code = LagrangeCode::<Fp>::new(4, 9);
+        let a = Fp::new(rng.next_u64());
+        let x = rand_chunks_fp(&mut rng, 4, 3);
+        let y = rand_chunks_fp(&mut rng, 4, 3);
+        let combo: Vec<Vec<Fp>> = x
+            .iter()
+            .zip(&y)
+            .map(|(xc, yc)| {
+                xc.iter()
+                    .zip(yc)
+                    .map(|(&xv, &yv)| a.mul(xv).add(yv))
+                    .collect()
+            })
+            .collect();
+        let ex = code.encode(&x);
+        let ey = code.encode(&y);
+        let ec = code.encode(&combo);
+        for v in 0..9 {
+            for t in 0..3 {
+                assert_eq!(ec[v][t], a.mul(ex[v][t]).add(ey[v][t]));
+            }
+        }
+    }
+}

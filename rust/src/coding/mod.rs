@@ -1,0 +1,18 @@
+//! Lagrange Coded Computing — the paper's data-encoding substrate [29].
+//!
+//! - [`field`] — the element trait plus `GF(2^61 - 1)` exact arithmetic and
+//!   the `f64` instance with Chebyshev evaluation points.
+//! - [`poly`] — barycentric Lagrange basis matrices (generic over the field).
+//! - [`lagrange`] — the Lagrange coding scheme: generator matrix, encode,
+//!   decode from any K* results (eq. 6 and Definition 4.2).
+//! - [`repetition`] — the repetition design used when `nr < k·deg f − 1`.
+//! - [`threshold`] — optimal recovery thresholds K* (eqs. 15–16 / eq. 9).
+//! - [`scheme`] — unified [`scheme::CodingScheme`] used by scheduler/sim/exec:
+//!   per-worker chunk placement and decodability checks.
+
+pub mod field;
+pub mod lagrange;
+pub mod poly;
+pub mod repetition;
+pub mod scheme;
+pub mod threshold;

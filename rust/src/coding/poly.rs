@@ -1,0 +1,159 @@
+//! Lagrange basis matrices in barycentric form, generic over [`CodeField`].
+//!
+//! `basis_matrix(nodes, targets)[t][v] = L_v(targets[t])` where `L_v` is the
+//! Lagrange basis over `nodes`. The normalized barycentric form
+//!
+//! ```text
+//! L_v(x) = (w_v / (x − x_v)) / Σ_u (w_u / (x − x_u)),  w_v = 1/Π_{l≠v}(x_v − x_l)
+//! ```
+//!
+//! is an algebraic identity, so one implementation serves both the exact
+//! field (bit-exact) and f64 (numerically stable — this is the standard
+//! second-form barycentric interpolation).
+
+use super::field::CodeField;
+
+/// Barycentric weights w_v = 1 / Π_{l≠v} (x_v − x_l). O(n²).
+pub fn barycentric_weights<F: CodeField>(nodes: &[F]) -> Vec<F> {
+    let n = nodes.len();
+    let mut w = Vec::with_capacity(n);
+    for v in 0..n {
+        let mut prod = F::one();
+        for l in 0..n {
+            if l != v {
+                let d = nodes[v].sub(nodes[l]);
+                assert!(d != F::zero(), "interpolation nodes must be distinct");
+                prod = prod.mul(d);
+            }
+        }
+        w.push(prod.inv());
+    }
+    w
+}
+
+/// Evaluate every Lagrange basis polynomial over `nodes` at one `target`.
+pub fn basis_row<F: CodeField>(nodes: &[F], weights: &[F], target: F) -> Vec<F> {
+    debug_assert_eq!(nodes.len(), weights.len());
+    // Exact node hit → unit row (also required for exactness over f64).
+    if let Some(hit) = nodes.iter().position(|&x| x == target) {
+        let mut row = vec![F::zero(); nodes.len()];
+        row[hit] = F::one();
+        return row;
+    }
+    let terms: Vec<F> = nodes
+        .iter()
+        .zip(weights)
+        .map(|(&x, &w)| w.div(target.sub(x)))
+        .collect();
+    let mut denom = F::zero();
+    for &t in &terms {
+        denom = denom.add(t);
+    }
+    let inv = denom.inv();
+    terms.into_iter().map(|t| t.mul(inv)).collect()
+}
+
+/// M[t][v] = L_v(targets[t]); rows sum to one (partition of unity).
+pub fn basis_matrix<F: CodeField>(nodes: &[F], targets: &[F]) -> Vec<Vec<F>> {
+    let w = barycentric_weights(nodes);
+    targets
+        .iter()
+        .map(|&t| basis_row(nodes, &w, t))
+        .collect()
+}
+
+/// Evaluate the interpolating polynomial through (nodes, values) at `target`,
+/// where each value is a vector (chunk payload): Σ_v L_v(target) · values[v].
+pub fn interpolate_at<F: CodeField>(
+    nodes: &[F],
+    values: &[Vec<F>],
+    weights: &[F],
+    target: F,
+) -> Vec<F> {
+    debug_assert_eq!(nodes.len(), values.len());
+    let row = basis_row(nodes, weights, target);
+    let dim = values.first().map(|v| v.len()).unwrap_or(0);
+    let mut out = vec![F::zero(); dim];
+    for (coef, val) in row.iter().zip(values) {
+        if *coef == F::zero() {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(val) {
+            *o = o.add(coef.mul(x));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::field::Fp;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basis_is_identity_on_nodes_f64() {
+        let nodes: Vec<f64> = vec![0.0, 1.0, 2.5, 4.0];
+        let m = basis_matrix(&nodes, &nodes);
+        for (i, row) in m.iter().enumerate() {
+            for (j, &x) in row.iter().enumerate() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((x - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_sum_to_one_f64() {
+        let nodes: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let targets: Vec<f64> = vec![0.3, 2.7, 6.99, -1.0, 9.5];
+        for row in basis_matrix(&nodes, &targets) {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+        }
+    }
+
+    #[test]
+    fn reproduces_polynomial_f64() {
+        // p(x) = 3x^3 - 2x + 1, degree 3, 4 nodes suffice.
+        let p = |x: f64| 3.0 * x * x * x - 2.0 * x + 1.0;
+        let nodes: Vec<f64> = vec![0.0, 1.0, 2.0, 3.0];
+        let vals: Vec<Vec<f64>> = nodes.iter().map(|&x| vec![p(x)]).collect();
+        let w = barycentric_weights(&nodes);
+        for &t in &[0.5, 1.7, 2.9, 5.0, -2.0] {
+            let got = interpolate_at(&nodes, &vals, &w, t)[0];
+            assert!((got - p(t)).abs() < 1e-8, "t={t}: {got} vs {}", p(t));
+        }
+    }
+
+    #[test]
+    fn reproduces_polynomial_fp_exactly() {
+        use crate::coding::field::CodeField;
+        // p(x) = x^2 + 7x + 3 over GF(2^61-1).
+        let p = |x: Fp| x.mul(x).add(Fp::from_i64(7).mul(x)).add(Fp::from_i64(3));
+        let nodes: Vec<Fp> = (0..3).map(Fp::from_i64).collect();
+        let vals: Vec<Vec<Fp>> = nodes.iter().map(|&x| vec![p(x)]).collect();
+        let w = barycentric_weights(&nodes);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let t = Fp::new(rng.next_u64());
+            let got = interpolate_at(&nodes, &vals, &w, t)[0];
+            assert_eq!(got, p(t));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn duplicate_nodes_panic() {
+        let nodes: Vec<f64> = vec![1.0, 1.0, 2.0];
+        let _ = barycentric_weights(&nodes);
+    }
+
+    #[test]
+    fn node_hit_returns_unit_row() {
+        let nodes: Vec<f64> = vec![0.0, 2.0, 5.0];
+        let w = barycentric_weights(&nodes);
+        let row = basis_row(&nodes, &w, 2.0);
+        assert_eq!(row, vec![0.0, 1.0, 0.0]);
+    }
+}

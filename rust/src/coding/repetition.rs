@@ -1,0 +1,131 @@
+//! Repetition coding design (paper §3.1, case `nr < k·deg f − 1`).
+//!
+//! Each data chunk `X_j` is replicated ⌊nr/k⌋ or ⌈nr/k⌉ times so the total is
+//! exactly `nr` (the first `nr mod k` chunks get the extra copy). Matches the
+//! paper's example: k=4, nr=6 → X̃ = (X1, X2, X3, X4, X1, X2).
+//!
+//! Decodability is *coverage*: the received encoded indices must include at
+//! least one copy of every data chunk. The worst case needs
+//! `K* = nr − ⌊nr/k⌋ + 1` results (eq. 16).
+
+/// Repetition scheme: placement map + decodability.
+#[derive(Clone, Debug)]
+pub struct RepetitionCode {
+    pub k: usize,
+    pub nr: usize,
+}
+
+impl RepetitionCode {
+    pub fn new(k: usize, nr: usize) -> Self {
+        assert!(k >= 1 && nr >= k, "repetition needs nr >= k >= 1");
+        RepetitionCode { k, nr }
+    }
+
+    /// Which data chunk encoded slot `v` stores (v mod k ⇒ floor/ceil copies).
+    pub fn data_index(&self, v: usize) -> usize {
+        assert!(v < self.nr);
+        v % self.k
+    }
+
+    /// Number of copies of data chunk `j` across all nr slots.
+    pub fn copies(&self, j: usize) -> usize {
+        assert!(j < self.k);
+        self.nr / self.k + usize::from(j < self.nr % self.k)
+    }
+
+    /// Recovery threshold (eq. 16): worst case over adversarial result sets.
+    pub fn kstar(&self) -> usize {
+        self.nr - self.nr / self.k + 1
+    }
+
+    /// True iff the received encoded indices cover every data chunk.
+    pub fn is_decodable(&self, received: &[usize]) -> bool {
+        let mut seen = vec![false; self.k];
+        let mut count = 0;
+        for &v in received {
+            let j = self.data_index(v);
+            if !seen[j] {
+                seen[j] = true;
+                count += 1;
+                if count == self.k {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Recover data evaluations from results: any copy of each chunk works
+    /// (all copies are identical). Errors if coverage is incomplete.
+    pub fn decode<T: Clone>(&self, received: &[(usize, T)]) -> Result<Vec<T>, String> {
+        let mut out: Vec<Option<T>> = vec![None; self.k];
+        for (v, payload) in received {
+            let j = self.data_index(*v);
+            if out[j].is_none() {
+                out[j] = Some(payload.clone());
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(j, o)| o.ok_or_else(|| format!("no copy of chunk {j} received")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example_layout() {
+        // k=4, nr=6 → slots store X1 X2 X3 X4 X1 X2 (0-indexed 0 1 2 3 0 1).
+        let c = RepetitionCode::new(4, 6);
+        let layout: Vec<usize> = (0..6).map(|v| c.data_index(v)).collect();
+        assert_eq!(layout, vec![0, 1, 2, 3, 0, 1]);
+        assert_eq!(c.copies(0), 2);
+        assert_eq!(c.copies(3), 1);
+        assert_eq!(c.kstar(), 6);
+    }
+
+    #[test]
+    fn copies_sum_to_nr() {
+        for (k, nr) in [(4, 6), (3, 10), (7, 7), (5, 23)] {
+            let c = RepetitionCode::new(k, nr);
+            let total: usize = (0..k).map(|j| c.copies(j)).sum();
+            assert_eq!(total, nr, "k={k} nr={nr}");
+        }
+    }
+
+    #[test]
+    fn kstar_is_tight() {
+        // There exists a set of size K*−1 that is NOT decodable (drop every
+        // copy of the most-replicated chunk)...
+        let c = RepetitionCode::new(4, 10);
+        let worst: Vec<usize> = (0..10).filter(|&v| c.data_index(v) != 0).collect();
+        assert_eq!(worst.len(), 10 - c.copies(0));
+        assert!(worst.len() >= c.kstar() - 1 - 1 || !c.is_decodable(&worst));
+        assert!(!c.is_decodable(&worst));
+        // ...and EVERY set of size K* is decodable (randomized check).
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let pick = rng.sample_indices(10, c.kstar());
+            assert!(c.is_decodable(&pick));
+        }
+    }
+
+    #[test]
+    fn decode_recovers_payloads() {
+        let c = RepetitionCode::new(3, 7);
+        let received: Vec<(usize, u32)> = vec![(6, 100), (1, 11), (2, 22)];
+        // slot 6 stores chunk 0 (6 % 3).
+        assert_eq!(c.decode(&received).unwrap(), vec![100, 11, 22]);
+        assert!(c.decode(&received[..2].to_vec()).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn nr_below_k_rejected() {
+        let _ = RepetitionCode::new(5, 4);
+    }
+}

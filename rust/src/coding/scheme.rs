@@ -1,0 +1,196 @@
+//! Unified coding-scheme facade used by the scheduler, simulator and exec
+//! layers: chunk placement on workers, decodability of a result set, and the
+//! recovery threshold — independent of the payload field.
+//!
+//! Worker `i` stores the r encoded chunks `{i, i+n, i+2n, …}` (STRIDED
+//! placement — the paper's §2.1 uses the contiguous `i·r..(i+1)·r`, but the
+//! labelling of encoded chunks is arbitrary and striding matters numerically
+//! over f64: the α's are Chebyshev nodes ordered along [0, k−1], and decoding
+//! interpolates from whichever K* results arrived. With contiguous placement
+//! a subset of workers yields *clustered* nodes and the Lagrange basis blows
+//! up; with striding any subset of workers is spread across the interval.
+//! Over an exact field the choice is immaterial). In a round where worker `i`
+//! is assigned load `ℓ_i`, it evaluates its first `ℓ_i` stored chunks and
+//! returns all results on completion (all-or-nothing, §2.1); the master
+//! checks decodability of the union.
+
+use super::repetition::RepetitionCode;
+use super::threshold::{Design, Geometry};
+
+/// Placement + decodability logic for either design of eq. (9).
+#[derive(Clone, Debug)]
+pub struct CodingScheme {
+    pub geometry: Geometry,
+    repetition: Option<RepetitionCode>,
+    kstar_override: Option<usize>,
+}
+
+impl CodingScheme {
+    /// Build the scheme eq. (9) prescribes for this geometry.
+    pub fn for_geometry(geometry: Geometry) -> Self {
+        let repetition = match geometry.design() {
+            Design::Lagrange => None,
+            Design::Repetition => Some(RepetitionCode::new(geometry.k, geometry.nr())),
+        };
+        CodingScheme {
+            geometry,
+            repetition,
+            kstar_override: None,
+        }
+    }
+
+    /// Counting semantics with an explicit threshold — models an arbitrary
+    /// linear code of recovery threshold `kstar` under the paper's
+    /// Y(d) ≥ K(g) success rule (Lemma 4.3 ablations).
+    pub fn counting(geometry: Geometry, kstar: usize) -> Self {
+        CodingScheme {
+            geometry,
+            repetition: None,
+            kstar_override: Some(kstar),
+        }
+    }
+
+    pub fn design(&self) -> Design {
+        self.geometry.design()
+    }
+
+    /// Recovery threshold in force (K* of eq. 9, or the explicit override).
+    pub fn kstar(&self) -> usize {
+        self.kstar_override.unwrap_or_else(|| self.geometry.kstar())
+    }
+
+    /// The encoded chunk indices stored by worker `i` (strided: {i, i+n, …}).
+    pub fn worker_chunks(&self, i: usize) -> Vec<usize> {
+        assert!(i < self.geometry.n);
+        (0..self.geometry.r)
+            .map(|j| i + j * self.geometry.n)
+            .collect()
+    }
+
+    /// Chunk indices worker `i` evaluates under load `ℓ` (its first ℓ chunks).
+    pub fn assigned_chunks(&self, i: usize, load: usize) -> Vec<usize> {
+        assert!(
+            load <= self.geometry.r,
+            "load {load} exceeds storage r={}",
+            self.geometry.r
+        );
+        (0..load).map(|j| i + j * self.geometry.n).collect()
+    }
+
+    /// Is the union of received encoded-chunk indices decodable?
+    pub fn is_decodable(&self, received: &[usize]) -> bool {
+        match &self.repetition {
+            None => {
+                // Lagrange: any K* distinct chunk evaluations suffice.
+                let mut v = received.to_vec();
+                v.sort_unstable();
+                v.dedup();
+                v.len() >= self.kstar()
+            }
+            Some(rep) => rep.is_decodable(received),
+        }
+    }
+
+    /// Decodability when each worker either returns all `loads[i]` results or
+    /// nothing: `completed[i]` says whether worker i finished by the deadline.
+    pub fn round_success(&self, loads: &[usize], completed: &[bool]) -> bool {
+        debug_assert_eq!(loads.len(), self.geometry.n);
+        debug_assert_eq!(completed.len(), self.geometry.n);
+        match &self.repetition {
+            None => {
+                // Fast path: distinct chunks ⇒ just count.
+                let total: usize = loads
+                    .iter()
+                    .zip(completed)
+                    .filter(|(_, &c)| c)
+                    .map(|(&l, _)| l)
+                    .sum();
+                total >= self.kstar()
+            }
+            Some(_) => {
+                let mut received = Vec::new();
+                for i in 0..self.geometry.n {
+                    if completed[i] {
+                        received.extend(self.assigned_chunks(i, loads[i]));
+                    }
+                }
+                self.is_decodable(&received)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo(n: usize, r: usize, k: usize, deg_f: usize) -> Geometry {
+        Geometry { n, r, k, deg_f }
+    }
+
+    #[test]
+    fn placement_partitions_storage() {
+        let s = CodingScheme::for_geometry(geo(15, 10, 50, 2));
+        let mut all = Vec::new();
+        for i in 0..15 {
+            all.extend(s.worker_chunks(i));
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..150).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn placement_is_strided_for_conditioning() {
+        // Any subset of workers must cover the alpha interval roughly
+        // uniformly: consecutive stored chunks of one worker are n apart.
+        let s = CodingScheme::for_geometry(geo(15, 10, 50, 2));
+        let c = s.worker_chunks(3);
+        assert_eq!(c[0], 3);
+        assert!(c.windows(2).all(|w| w[1] - w[0] == 15));
+    }
+
+    #[test]
+    fn lagrange_round_success_counts_loads() {
+        let s = CodingScheme::for_geometry(geo(3, 4, 4, 2)); // K* = 7, nr = 12
+        assert_eq!(s.kstar(), 7);
+        assert!(s.round_success(&[4, 4, 4], &[true, true, false])); // 8 ≥ 7
+        assert!(!s.round_success(&[4, 4, 4], &[true, false, false])); // 4 < 7
+        assert!(s.round_success(&[4, 3, 4], &[true, true, false])); // 7 ≥ 7
+    }
+
+    #[test]
+    fn repetition_round_success_checks_coverage() {
+        // nr=6 < k·deg−1=7 ⇒ repetition; strided slots per worker:
+        // w0 {0,3}→data{0,3}, w1 {1,4}→{1,0}, w2 {2,5}→{2,1}.
+        let s = CodingScheme::for_geometry(geo(3, 2, 4, 2));
+        assert_eq!(s.design(), Design::Repetition);
+        // workers 0 and 2 complete: data {0,3,2,1} — covered.
+        assert!(s.round_success(&[2, 2, 2], &[true, false, true]));
+        // workers 0 and 1 complete: data {0,3,1,0} — chunk 2 missing,
+        // even though the count (4) is the same: coverage is what matters.
+        assert!(!s.round_success(&[2, 2, 2], &[true, true, false]));
+    }
+
+    #[test]
+    fn assigned_chunks_prefix() {
+        let s = CodingScheme::for_geometry(geo(4, 5, 10, 2));
+        assert_eq!(s.assigned_chunks(2, 3), vec![2, 6, 10]);
+        assert!(s.assigned_chunks(0, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds storage")]
+    fn overload_panics() {
+        let s = CodingScheme::for_geometry(geo(4, 5, 10, 2));
+        let _ = s.assigned_chunks(1, 6);
+    }
+
+    #[test]
+    fn is_decodable_dedups() {
+        let s = CodingScheme::for_geometry(geo(3, 4, 4, 2)); // Lagrange K*=7
+        let dup = vec![0, 0, 0, 1, 2, 3, 4, 5, 6];
+        assert!(s.is_decodable(&dup)); // 7 distinct
+        let few = vec![0, 0, 1, 1, 2, 2, 3, 3];
+        assert!(!s.is_decodable(&few)); // only 4 distinct
+    }
+}

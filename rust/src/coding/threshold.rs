@@ -1,0 +1,156 @@
+//! Optimal recovery thresholds K* (Definition 4.2, eqs. 9/15/16).
+//!
+//! Lagrange coding achieves K* = (k−1)·deg f + 1 whenever storage allows
+//! (`nr ≥ k·deg f − 1`); below that the repetition design's threshold
+//! `nr − ⌊nr/k⌋ + 1` is optimal.
+
+/// Which coding design eq. (9) selects for the given geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    Lagrange,
+    Repetition,
+}
+
+/// Problem geometry: n workers × r chunks each, k data chunks, deg f.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    pub n: usize,
+    pub r: usize,
+    pub k: usize,
+    pub deg_f: usize,
+}
+
+impl Geometry {
+    pub fn nr(&self) -> usize {
+        self.n * self.r
+    }
+
+    /// True iff Lagrange coding is storage-feasible (`nr ≥ k·deg f − 1`).
+    pub fn lagrange_feasible(&self) -> bool {
+        self.nr() >= self.k * self.deg_f - 1
+    }
+
+    pub fn design(&self) -> Design {
+        if self.lagrange_feasible() {
+            Design::Lagrange
+        } else {
+            Design::Repetition
+        }
+    }
+
+    /// The optimal recovery threshold K* (eq. 9).
+    pub fn kstar(&self) -> usize {
+        match self.design() {
+            Design::Lagrange => (self.k - 1) * self.deg_f + 1,
+            Design::Repetition => self.nr() - self.nr() / self.k + 1,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.r == 0 || self.k == 0 || self.deg_f == 0 {
+            return Err(format!("geometry fields must be positive: {self:?}"));
+        }
+        if self.design() == Design::Lagrange && self.kstar() > self.nr() {
+            return Err(format!(
+                "K*={} exceeds total storage nr={}; no allocation can succeed",
+                self.kstar(),
+                self.nr()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig3_parameters() {
+        // §6.1: n=15, r=10, k=50, quadratic f ⇒ K* = 99.
+        let g = Geometry {
+            n: 15,
+            r: 10,
+            k: 50,
+            deg_f: 2,
+        };
+        assert_eq!(g.design(), Design::Lagrange);
+        assert_eq!(g.kstar(), 99);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn paper_section3_repetition_example() {
+        // §3.1: n=3, r=2, k=4, deg=2 ⇒ nr=6 < 7, repetition, K* = 6 − 1 + 1 = 6.
+        let g = Geometry {
+            n: 3,
+            r: 2,
+            k: 4,
+            deg_f: 2,
+        };
+        assert_eq!(g.design(), Design::Repetition);
+        assert_eq!(g.kstar(), 6 - 6 / 4 + 1);
+        assert_eq!(g.kstar(), 6);
+    }
+
+    #[test]
+    fn linear_function_threshold_is_k() {
+        let g = Geometry {
+            n: 15,
+            r: 10,
+            k: 50,
+            deg_f: 1,
+        };
+        assert_eq!(g.kstar(), 50); // matches the paper's Fig.-4 K* = 50
+    }
+
+    #[test]
+    fn boundary_nr_equals_kdeg_minus_1() {
+        let g = Geometry {
+            n: 5,
+            r: 3,
+            k: 8,
+            deg_f: 2,
+        }; // nr = 15 = k·deg−1 exactly
+        assert_eq!(g.design(), Design::Lagrange);
+        assert_eq!(g.kstar(), 15);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // Lagrange feasible but K* = nr ⇒ fine; push one over:
+        let g = Geometry {
+            n: 2,
+            r: 4,
+            k: 5,
+            deg_f: 2,
+        }; // nr=8 < 9 ⇒ repetition; K* = 8 − 1 + 1 = 8 ≤ nr: valid
+        assert_eq!(g.design(), Design::Repetition);
+        assert!(g.validate().is_ok());
+        let bad = Geometry {
+            n: 0,
+            r: 1,
+            k: 1,
+            deg_f: 1,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn repetition_threshold_monotone_in_storage() {
+        // More storage never raises K*/nr ratio benefit ordering: sanity sweep.
+        let mut prev = usize::MAX;
+        for r in 1..6 {
+            let g = Geometry {
+                n: 3,
+                r,
+                k: 10,
+                deg_f: 3,
+            };
+            let slack = g.nr() + 1 - g.kstar(); // = ⌊nr/k⌋ copies tolerated
+            assert!(slack <= g.nr());
+            let _ = prev;
+            prev = g.kstar();
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Experiment configuration: JSON config files + CLI overrides.
+//!
+//! A config selects a workload geometry, worker model, strategy set and run
+//! length; the CLI (`lea run --config cfg.json --rounds 1000`) merges file
+//! values with flag overrides. Keeps the launcher declarative, like the
+//! paper's scenario tables.
+
+use crate::coding::threshold::Geometry;
+use crate::sim::arrivals::Arrivals;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Worker state model selection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkerModel {
+    /// Homogeneous two-state Markov chain.
+    Markov { p_gg: f64, p_bb: f64 },
+    /// EC2 credit-bucket model with a target burst duty cycle.
+    Credit { duty: f64 },
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub geometry: Geometry,
+    pub mu_g: f64,
+    pub mu_b: f64,
+    pub deadline: f64,
+    pub rounds: u64,
+    pub seed: u64,
+    pub model: WorkerModel,
+    pub arrivals: Arrivals,
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's Fig.-3 scenario-1 setting.
+    fn default() -> Self {
+        ExperimentConfig {
+            geometry: Geometry {
+                n: 15,
+                r: 10,
+                k: 50,
+                deg_f: 2,
+            },
+            mu_g: 10.0,
+            mu_b: 3.0,
+            deadline: 1.0,
+            rounds: 100_000,
+            seed: 1,
+            model: WorkerModel::Markov {
+                p_gg: 0.8,
+                p_bb: 0.8,
+            },
+            arrivals: Arrivals::Fixed(0.0),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; unknown keys are rejected to catch typos.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        let obj = match j {
+            Json::Obj(m) => m,
+            _ => return Err("config root must be an object".into()),
+        };
+        for (key, val) in obj {
+            match key.as_str() {
+                "n" => cfg.geometry.n = val.as_usize().ok_or("n: int")?,
+                "r" => cfg.geometry.r = val.as_usize().ok_or("r: int")?,
+                "k" => cfg.geometry.k = val.as_usize().ok_or("k: int")?,
+                "deg_f" => cfg.geometry.deg_f = val.as_usize().ok_or("deg_f: int")?,
+                "mu_g" => cfg.mu_g = val.as_f64().ok_or("mu_g: num")?,
+                "mu_b" => cfg.mu_b = val.as_f64().ok_or("mu_b: num")?,
+                "deadline" => cfg.deadline = val.as_f64().ok_or("deadline: num")?,
+                "rounds" => cfg.rounds = val.as_f64().ok_or("rounds: num")? as u64,
+                "seed" => cfg.seed = val.as_f64().ok_or("seed: num")? as u64,
+                "p_gg" | "p_bb" => {
+                    let (mut pgg, mut pbb) = match cfg.model {
+                        WorkerModel::Markov { p_gg, p_bb } => (p_gg, p_bb),
+                        _ => (0.8, 0.8),
+                    };
+                    let v = val.as_f64().ok_or("p_*: num")?;
+                    if key == "p_gg" {
+                        pgg = v;
+                    } else {
+                        pbb = v;
+                    }
+                    cfg.model = WorkerModel::Markov {
+                        p_gg: pgg,
+                        p_bb: pbb,
+                    };
+                }
+                "credit_duty" => {
+                    cfg.model = WorkerModel::Credit {
+                        duty: val.as_f64().ok_or("credit_duty: num")?,
+                    }
+                }
+                "arrival_shift" | "arrival_mean" => {
+                    let (mut shift, mut mean) = match cfg.arrivals {
+                        Arrivals::ShiftExponential { shift, mean } => (shift, mean),
+                        _ => (0.0, 0.0),
+                    };
+                    let v = val.as_f64().ok_or("arrival_*: num")?;
+                    if key == "arrival_shift" {
+                        shift = v;
+                    } else {
+                        mean = v;
+                    }
+                    cfg.arrivals = Arrivals::shift_exp(shift, mean);
+                }
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Apply CLI overrides (only the common sweep knobs).
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        self.rounds = args.u64("rounds", self.rounds)?;
+        self.seed = args.u64("seed", self.seed)?;
+        self.deadline = args.f64("deadline", self.deadline)?;
+        self.geometry.n = args.usize("n", self.geometry.n)?;
+        self.geometry.k = args.usize("k", self.geometry.k)?;
+        self.geometry.r = args.usize("r", self.geometry.r)?;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.geometry.validate()?;
+        if self.mu_g < self.mu_b {
+            return Err("mu_g must be ≥ mu_b".into());
+        }
+        if self.deadline <= 0.0 {
+            return Err("deadline must be positive".into());
+        }
+        if let WorkerModel::Markov { p_gg, p_bb } = self.model {
+            if !(0.0..=1.0).contains(&p_gg) || !(0.0..=1.0).contains(&p_bb) {
+                return Err("transition probabilities must lie in [0,1]".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fig3_scenario_1() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.geometry.kstar(), 99);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip_overrides() {
+        let j = Json::parse(
+            r#"{"n": 10, "k": 20, "r": 5, "deg_f": 2, "p_gg": 0.9, "p_bb": 0.6,
+                "rounds": 500, "deadline": 2.0, "mu_g": 5, "mu_b": 1}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.geometry.n, 10);
+        assert_eq!(c.rounds, 500);
+        assert_eq!(
+            c.model,
+            WorkerModel::Markov {
+                p_gg: 0.9,
+                p_bb: 0.6
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"nn": 10}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let j = Json::parse(r#"{"p_gg": 1.5}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"deadline": -1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        let args = Args::parse(["x".into(), "--rounds".into(), "77".into()]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.rounds, 77);
+    }
+}

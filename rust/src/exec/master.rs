@@ -1,0 +1,392 @@
+//! The coded-computing master: encodes the dataset, drives workers round by
+//! round, gathers decodable sets, decodes, and feeds the strategy.
+//!
+//! This is the real (non-simulated) counterpart of `sim::runner`: workers run
+//! actual PJRT executables compiled from the JAX/Pallas model; deadlines are
+//! enforced in virtual time derived from the two-state speed model
+//! (DESIGN.md §4 substitution table).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::protocol::{RoundReply, RoundTask, ToWorker};
+use super::worker::{infer_state, Worker};
+use crate::coding::lagrange::LagrangeCode;
+use crate::coding::scheme::CodingScheme;
+use crate::markov::WState;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::{Executable, Runtime};
+use crate::scheduler::strategy::Strategy;
+use crate::sim::cluster::{Speeds, WorkerProcess};
+use crate::util::matrix::MatF32;
+use crate::util::rng::Rng;
+
+/// A compiled executable that can hop threads.
+///
+/// SAFETY: PJRT CPU clients and loaded executables are thread-safe (the C API
+/// is documented thread-compatible and the CPU client serializes internally);
+/// the `xla` crate just doesn't mark them Send. All executions here are
+/// additionally serialized behind a Mutex.
+struct SendExe(Executable);
+unsafe impl Send for SendExe {}
+unsafe impl Sync for SendExe {}
+
+/// Same justification as [`SendExe`] for the client that owns them.
+struct SendRuntime(#[allow(dead_code)] Runtime);
+unsafe impl Send for SendRuntime {}
+unsafe impl Sync for SendRuntime {}
+
+/// Compute engine shared by master and workers: PJRT artifacts or the native
+/// (pure-Rust GEMM) fallback. The fallback keeps everything runnable when
+/// `make artifacts` has not been executed; tests assert both give the same
+/// numbers.
+pub struct Engine(EngineImpl);
+
+enum EngineImpl {
+    Pjrt {
+        gradient: Mutex<SendExe>,
+        encode: Mutex<SendExe>,
+        decode: Mutex<SendExe>,
+        /// Keep the runtime alive as long as its executables.
+        _runtime: SendRuntime,
+    },
+    Native,
+}
+
+impl Engine {
+    /// The pure-Rust GEMM engine (no artifacts needed).
+    #[allow(non_upper_case_globals)]
+    pub const Native: Engine = Engine(EngineImpl::Native);
+
+    /// Load the PJRT engine from the artifact manifest.
+    pub fn pjrt(manifest: &Manifest) -> Result<Engine> {
+        let rt = Runtime::cpu()?;
+        let load = |name: &str| -> Result<Mutex<SendExe>> {
+            let e = manifest.entry(name).map_err(|e| anyhow!(e))?;
+            Ok(Mutex::new(SendExe(rt.load(&e.file)?)))
+        };
+        Ok(Engine(EngineImpl::Pjrt {
+            gradient: load("gradient")?,
+            encode: load("encode")?,
+            decode: load("decode")?,
+            _runtime: SendRuntime(rt),
+        }))
+    }
+
+    /// PJRT if artifacts are present, native otherwise (with a notice).
+    pub fn auto() -> Engine {
+        match Manifest::load_default() {
+            Ok(m) => match Engine::pjrt(&m) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("[engine] PJRT unavailable ({err:#}); using native GEMM fallback");
+                    Engine::Native
+                }
+            },
+            Err(err) => {
+                eprintln!("[engine] {err}; using native GEMM fallback");
+                Engine::Native
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match &self.0 {
+            EngineImpl::Pjrt { .. } => "pjrt",
+            EngineImpl::Native => "native",
+        }
+    }
+
+    /// f(X̃, ỹ, w) = X̃ᵀ(X̃w − ỹ), flattened (features).
+    pub fn gradient(&self, xt: &MatF32, w: &MatF32, yt: &MatF32) -> Vec<f32> {
+        match &self.0 {
+            EngineImpl::Pjrt { gradient, .. } => {
+                let exe = gradient.lock().unwrap();
+                exe.0.run(&[xt, w, yt]).expect("gradient artifact failed")
+            }
+            EngineImpl::Native => {
+                let r = MatF32::from_vec(
+                    xt.rows,
+                    1,
+                    xt.matvec(&w.data)
+                        .iter()
+                        .zip(&yt.data)
+                        .map(|(a, b)| a - b)
+                        .collect(),
+                );
+                xt.transpose().matmul(&r).data
+            }
+        }
+    }
+
+    /// Generator GEMM: G (nr×k) @ Xs (k×D).
+    pub fn encode(&self, g: &MatF32, xs: &MatF32) -> MatF32 {
+        match &self.0 {
+            EngineImpl::Pjrt { encode, .. } => {
+                let exe = encode.lock().unwrap();
+                exe.0
+                    .run_mat(&[g, xs], g.rows, xs.cols)
+                    .expect("encode artifact failed")
+            }
+            EngineImpl::Native => g.matmul(xs),
+        }
+    }
+
+    /// Decode GEMM: W (k×K*) @ R (K*×D).
+    pub fn decode(&self, wmat: &MatF32, r: &MatF32) -> MatF32 {
+        match &self.0 {
+            EngineImpl::Pjrt { decode, .. } => {
+                let exe = decode.lock().unwrap();
+                exe.0
+                    .run_mat(&[wmat, r], wmat.rows, r.cols)
+                    .expect("decode artifact failed")
+            }
+            EngineImpl::Native => wmat.matmul(r),
+        }
+    }
+}
+
+/// Per-round result reported by the master.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub m: u64,
+    pub success: bool,
+    /// Decoded per-chunk gradients f(X_j) (k × features), if successful.
+    pub decoded: Option<MatF32>,
+    pub states: Vec<WState>,
+    /// (max |decoded − direct|, max |direct|) if ground truth was checked
+    /// this round. Callers normalize by a stable scale (e.g. the initial
+    /// gradient magnitude) — dividing by the *current* truth is misleading
+    /// near convergence where the true gradient approaches zero.
+    pub decode_error: Option<(f64, f64)>,
+    /// Total PJRT compute seconds across workers this round.
+    pub compute_secs: f64,
+}
+
+/// The coded master plus its worker pool.
+pub struct CodedMaster {
+    pub scheme: CodingScheme,
+    pub code: LagrangeCode<f64>,
+    pub deadline: f64,
+    pub speeds: Speeds,
+    engine: Arc<Engine>,
+    senders: Vec<Sender<ToWorker>>,
+    replies: Receiver<RoundReply>,
+    handles: Vec<JoinHandle<()>>,
+    features: usize,
+    round: u64,
+}
+
+/// Everything needed to start a cluster.
+pub struct ClusterSpec {
+    pub scheme: CodingScheme,
+    pub deadline: f64,
+    pub speeds: Speeds,
+    /// One state process per worker.
+    pub processes: Vec<WorkerProcess>,
+    /// The k data chunks as (X_j, y_j).
+    pub data: Vec<(MatF32, MatF32)>,
+    pub seed: u64,
+    pub wallclock_scale: f64,
+}
+
+impl CodedMaster {
+    /// Encode the dataset with the engine's encode GEMM and spawn workers.
+    pub fn start(spec: ClusterSpec, engine: Engine) -> Result<CodedMaster> {
+        let n = spec.scheme.geometry.n;
+        let r = spec.scheme.geometry.r;
+        let k = spec.scheme.geometry.k;
+        let nr = spec.scheme.geometry.nr();
+        assert_eq!(spec.processes.len(), n);
+        assert_eq!(spec.data.len(), k);
+        let (rows, feats) = (spec.data[0].0.rows, spec.data[0].0.cols);
+
+        // ---- encode: stack (X_j | y_j) rows, multiply by the generator ----
+        let code = LagrangeCode::<f64>::new(k, nr);
+        let g64 = code.generator_matrix();
+        let g = MatF32::from_fn(nr, k, |i, j| g64[i][j] as f32);
+        let mut xs = MatF32::zeros(k, rows * (feats + 1));
+        for (j, (x, y)) in spec.data.iter().enumerate() {
+            let row = &mut xs.data[j * (rows * (feats + 1))..(j + 1) * (rows * (feats + 1))];
+            row[..rows * feats].copy_from_slice(&x.data);
+            row[rows * feats..].copy_from_slice(&y.data);
+        }
+        let engine = Arc::new(engine);
+        let encoded = engine.encode(&g, &xs);
+
+        // ---- distribute chunks + spawn workers ----
+        let (reply_tx, replies) = channel::<RoundReply>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        let mut seed_rng = Rng::new(spec.seed);
+        let mut processes = spec.processes;
+        for (i, process) in processes.drain(..).enumerate() {
+            let mut chunks = Vec::with_capacity(r);
+            let mut chunk_indices = Vec::with_capacity(r);
+            for v in spec.scheme.worker_chunks(i) {
+                let row = &encoded.data[v * rows * (feats + 1)..(v + 1) * rows * (feats + 1)];
+                let xt = MatF32::from_vec(rows, feats, row[..rows * feats].to_vec());
+                let yt = MatF32::from_vec(rows, 1, row[rows * feats..].to_vec());
+                chunks.push((xt, yt));
+                chunk_indices.push(v);
+            }
+            let worker = Worker {
+                id: i,
+                chunks,
+                chunk_indices,
+                speeds: spec.speeds,
+                process,
+                rng: seed_rng.fork(i as u64),
+                wallclock_scale: spec.wallclock_scale,
+            };
+            let (tx, rx) = channel::<ToWorker>();
+            senders.push(tx);
+            let engine_cl = Arc::clone(&engine);
+            let reply_cl = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker.run(engine_cl, rx, reply_cl)
+            }));
+        }
+
+        Ok(CodedMaster {
+            scheme: spec.scheme,
+            code,
+            deadline: spec.deadline,
+            speeds: spec.speeds,
+            engine,
+            senders,
+            replies,
+            handles,
+            features: feats,
+            round: 0,
+        })
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Run one round: allocate via `strategy`, dispatch, gather, decode.
+    ///
+    /// `input` is the round's w_m (features). `gap_secs` is the idle time
+    /// since the last request (arrival process). Ground truth is checked
+    /// against `direct` when provided (k×features matrix of true f(X_j)).
+    pub fn round(
+        &mut self,
+        strategy: &mut dyn Strategy,
+        rng: &mut Rng,
+        input: &[f32],
+        gap_secs: f64,
+        direct: Option<&MatF32>,
+    ) -> Result<RoundReport> {
+        assert_eq!(input.len(), self.features);
+        self.round += 1;
+        let m = self.round;
+        let alloc = strategy.allocate(rng);
+        let n = self.scheme.geometry.n;
+
+        for (i, tx) in self.senders.iter().enumerate() {
+            tx.send(ToWorker::Round(RoundTask {
+                m,
+                load: alloc.loads[i],
+                gap_secs,
+                input: input.to_vec(),
+            }))
+            .map_err(|_| anyhow!("worker {i} died"))?;
+        }
+
+        // Gather all n replies for this round (workers reply exactly once).
+        let mut replies: Vec<Option<RoundReply>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let rep = self
+                .replies
+                .recv()
+                .map_err(|_| anyhow!("worker channel closed"))?;
+            debug_assert_eq!(rep.m, m);
+            let w = rep.worker;
+            replies[w] = Some(rep);
+        }
+        let replies: Vec<RoundReply> = replies.into_iter().map(Option::unwrap).collect();
+
+        // Deadline check in virtual time; collect payloads of on-time workers.
+        let mut completed = vec![false; n];
+        let mut received: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut compute_secs = 0.0;
+        for rep in &replies {
+            compute_secs += rep.compute_secs;
+            if rep.finish_virtual <= self.deadline * (1.0 + 1e-9) {
+                completed[rep.worker] = true;
+                received.extend(rep.payloads.iter().cloned());
+            }
+        }
+        let success = self.scheme.round_success(&alloc.loads, &completed);
+
+        // Decode if decodable: take the K* fastest results.
+        let mut decoded = None;
+        let mut decode_error = None;
+        if success {
+            let kstar = self.scheme.kstar();
+            received.truncate(kstar);
+            let idx: Vec<usize> = received.iter().map(|(v, _)| *v).collect();
+            let w64 = self
+                .code
+                .decode_weights(&idx, self.scheme.geometry.deg_f)
+                .map_err(|e| anyhow!(e))?;
+            let wmat = MatF32::from_fn(self.scheme.geometry.k, kstar, |i, j| w64[i][j] as f32);
+            let mut rmat = MatF32::zeros(kstar, self.features);
+            for (row, (_, payload)) in received.iter().enumerate() {
+                rmat.data[row * self.features..(row + 1) * self.features]
+                    .copy_from_slice(payload);
+            }
+            let out = self.engine.decode(&wmat, &rmat);
+            if let Some(truth) = direct {
+                let scale = truth
+                    .data
+                    .iter()
+                    .map(|x| x.abs() as f64)
+                    .fold(0.0, f64::max);
+                decode_error = Some((out.max_abs_diff(truth), scale));
+            }
+            decoded = Some(out);
+        }
+
+        // Observation phase: infer states from completion times (workers
+        // with ℓ=0 reveal nothing — censored for the estimator).
+        let states: Vec<WState> = replies.iter().map(|r| r.state).collect();
+        let observed: Vec<Option<WState>> = replies
+            .iter()
+            .map(|r| {
+                if alloc.loads[r.worker] == 0 {
+                    None
+                } else {
+                    let inferred = infer_state(alloc.loads[r.worker], r.finish_virtual, &self.speeds);
+                    debug_assert_eq!(inferred, r.state, "timing must reveal the true state");
+                    Some(inferred)
+                }
+            })
+            .collect();
+        strategy.observe(&observed);
+
+        Ok(RoundReport {
+            m,
+            success,
+            decoded,
+            states,
+            decode_error,
+            compute_secs,
+        })
+    }
+
+    /// Stop all workers and join their threads.
+    pub fn shutdown(mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(ToWorker::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The real (threaded) coded-computing cluster: master + workers executing
+//! AOT-compiled PJRT computations under the two-state speed model.
+//!
+//! - [`protocol`] — master↔worker messages (the MPI4py stand-in).
+//! - [`worker`] — worker threads: stored encoded chunks, state process,
+//!   per-round evaluation via the shared engine.
+//! - [`master`] — encode, dispatch, deadline-gather, decode; the [`master::Engine`]
+//!   abstraction selects PJRT artifacts or the native GEMM fallback.
+//! - [`driver`] — end-to-end coded gradient descent (linear regression).
+
+pub mod driver;
+pub mod master;
+pub mod protocol;
+pub mod worker;

@@ -1,0 +1,44 @@
+//! Master↔worker messages for the threaded cluster (MPI4py stand-in).
+//!
+//! The paper's protocol per round m: master sends (f_m, ℓ_{m,i}); worker
+//! computes ℓ_{m,i} evaluations over its stored encoded chunks and returns
+//! all results on completion. Channels replace MPI Isend/Recv; semantics
+//! (asynchronous completion, master gathers until decodable) are identical.
+
+use crate::markov::WState;
+
+/// Master → worker.
+pub enum ToWorker {
+    Round(RoundTask),
+    Shutdown,
+}
+
+/// One round's assignment for one worker.
+pub struct RoundTask {
+    /// Round index m.
+    pub m: u64,
+    /// Number of evaluations to compute (ℓ_{m,i} ≤ r).
+    pub load: usize,
+    /// Idle gap since the previous request arrived (credit accrual).
+    pub gap_secs: f64,
+    /// The round's input: the weight vector w_m (gradient workload),
+    /// flattened (features × 1).
+    pub input: Vec<f32>,
+}
+
+/// Worker → master: all results of a round, reported on completion.
+pub struct RoundReply {
+    pub worker: usize,
+    pub m: u64,
+    /// (encoded chunk index, f(X̃_v) payload) for each computed evaluation.
+    pub payloads: Vec<(usize, Vec<f32>)>,
+    /// Completion time in *virtual* seconds (load / μ_state). The master
+    /// compares this to the deadline — see DESIGN.md §4 on the wall-clock
+    /// substitution.
+    pub finish_virtual: f64,
+    /// Wall-clock seconds actually spent in PJRT execution (perf metric).
+    pub compute_secs: f64,
+    /// The worker's true state this round (the master could equally infer it
+    /// from finish_virtual; carried explicitly for assertions/metrics).
+    pub state: WState,
+}

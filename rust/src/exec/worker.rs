@@ -1,0 +1,144 @@
+//! Worker thread: stores encoded chunks, evaluates the round's function via
+//! the shared compute engine, models its own speed state.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::master::Engine;
+use super::protocol::{RoundReply, RoundTask, ToWorker};
+use crate::markov::{StateProcess, WState};
+use crate::sim::cluster::{Speeds, WorkerProcess};
+use crate::util::matrix::MatF32;
+use crate::util::rng::Rng;
+
+/// A worker's static context + dynamic state.
+pub struct Worker {
+    pub id: usize,
+    /// Stored encoded chunks (X̃_v, ỹ_v), v = id·r .. id·r + r − 1.
+    pub chunks: Vec<(MatF32, MatF32)>,
+    /// Global indices of the stored chunks.
+    pub chunk_indices: Vec<usize>,
+    pub speeds: Speeds,
+    pub process: WorkerProcess,
+    pub rng: Rng,
+    /// Optional wall-clock throttling: sleep so real time ≈ virtual time
+    /// (scaled by this factor; 0 = fully virtual, fastest).
+    pub wallclock_scale: f64,
+}
+
+impl Worker {
+    /// Blocking worker loop: run until `Shutdown`.
+    pub fn run(mut self, engine: Arc<Engine>, rx: Receiver<ToWorker>, tx: Sender<RoundReply>) {
+        while let Ok(msg) = rx.recv() {
+            let task = match msg {
+                ToWorker::Shutdown => break,
+                ToWorker::Round(t) => t,
+            };
+            let reply = self.execute_round(&engine, &task);
+            if tx.send(reply).is_err() {
+                break; // master gone
+            }
+        }
+    }
+
+    /// Compute one round: ℓ evaluations over the first ℓ stored chunks.
+    pub fn execute_round(&mut self, engine: &Engine, task: &RoundTask) -> RoundReply {
+        let state = self.process.next_state(&mut self.rng, task.gap_secs);
+        let w = MatF32::from_vec(task.input.len(), 1, task.input.clone());
+
+        let t0 = Instant::now();
+        let mut payloads = Vec::with_capacity(task.load);
+        for slot in 0..task.load.min(self.chunks.len()) {
+            let (xt, yt) = &self.chunks[slot];
+            let out = engine.gradient(xt, &w, yt);
+            payloads.push((self.chunk_indices[slot], out));
+        }
+        let compute_secs = t0.elapsed().as_secs_f64();
+
+        // Virtual completion time: deterministic per state (paper §2.2).
+        let rate = self.speeds.rate(state);
+        let finish_virtual = if task.load == 0 {
+            0.0
+        } else if rate <= 0.0 {
+            f64::INFINITY
+        } else {
+            task.load as f64 / rate
+        };
+
+        if self.wallclock_scale > 0.0 && finish_virtual.is_finite() {
+            let target = finish_virtual * self.wallclock_scale;
+            if target > compute_secs {
+                std::thread::sleep(std::time::Duration::from_secs_f64(target - compute_secs));
+            }
+        }
+
+        RoundReply {
+            worker: self.id,
+            m: task.m,
+            payloads,
+            finish_virtual,
+            compute_secs,
+            state,
+        }
+    }
+}
+
+/// Infer a worker's state from its completion time — what the paper's master
+/// actually does (§3.2 phase 3): speeds are deterministic per state, so
+/// `finish == load/μ_g` ⇔ good. Exposed for the master and for tests.
+pub fn infer_state(load: usize, finish_virtual: f64, speeds: &Speeds) -> WState {
+    if load == 0 {
+        // No information; convention: report good (the master skips these —
+        // see CodedMaster round handling).
+        return WState::Good;
+    }
+    let t_good = load as f64 / speeds.mu_g;
+    if !finish_virtual.is_finite() {
+        return WState::Bad;
+    }
+    let t_bad = if speeds.mu_b > 0.0 {
+        load as f64 / speeds.mu_b
+    } else {
+        f64::INFINITY
+    };
+    if !t_bad.is_finite() {
+        return if (finish_virtual - t_good).abs() < 1e-9 {
+            WState::Good
+        } else {
+            WState::Bad
+        };
+    }
+    if (finish_virtual - t_good).abs() <= (finish_virtual - t_bad).abs() {
+        WState::Good
+    } else {
+        WState::Bad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_state_from_timing() {
+        let s = Speeds {
+            mu_g: 10.0,
+            mu_b: 3.0,
+        };
+        assert_eq!(infer_state(10, 1.0, &s), WState::Good);
+        assert_eq!(infer_state(10, 10.0 / 3.0, &s), WState::Bad);
+        assert_eq!(infer_state(3, 0.3, &s), WState::Good);
+        assert_eq!(infer_state(3, 1.0, &s), WState::Bad);
+    }
+
+    #[test]
+    fn infer_state_infinite_bad_rate() {
+        let s = Speeds {
+            mu_g: 2.0,
+            mu_b: 0.0,
+        };
+        assert_eq!(infer_state(2, 1.0, &s), WState::Good);
+        assert_eq!(infer_state(2, f64::INFINITY, &s), WState::Bad);
+    }
+}

@@ -1,0 +1,139 @@
+//! Theorem 5.1 empirically: R_LEA(m) converges to the oracle's R*(m).
+//!
+//! Runs LEA and the genie oracle on identical state sequences and reports the
+//! cumulative-throughput series plus the estimator's parameter error over
+//! time (Lemma 5.2's p̂ → p).
+
+use crate::scheduler::lea::Lea;
+use crate::scheduler::oracle::Oracle;
+use crate::scheduler::strategy::Strategy;
+use crate::sim::metrics::ThroughputMeter;
+use crate::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scheme, Fig3Scenario, FIG3_DEADLINE};
+use crate::util::rng::Rng;
+
+/// Convergence study output.
+#[derive(Clone, Debug)]
+pub struct ConvergenceResult {
+    /// (round, cumulative R) for LEA.
+    pub lea_series: Vec<(u64, f64)>,
+    /// (round, cumulative R) for the oracle.
+    pub oracle_series: Vec<(u64, f64)>,
+    /// (round, mean |p̂_gg − p_gg| over workers).
+    pub estimator_error: Vec<(u64, f64)>,
+    pub lea_final: f64,
+    pub oracle_final: f64,
+}
+
+pub fn run(s: &Fig3Scenario, rounds: u64, seed: u64, sample_every: u64) -> ConvergenceResult {
+    let params = fig3_load_params();
+    let scheme = fig3_scheme();
+    let mut lea = Lea::new(params);
+    let mut oracle = Oracle::new(params, vec![s.chain(); params.n]);
+
+    let mut cl_lea = fig3_cluster(s, seed);
+    let mut cl_or = fig3_cluster(s, seed); // identical state sequence
+    let mut rng_lea = Rng::new(seed ^ 3);
+    let mut rng_or = Rng::new(seed ^ 3);
+
+    let mut m_lea = ThroughputMeter::new(sample_every);
+    let mut m_or = ThroughputMeter::new(sample_every);
+    let mut estimator_error = Vec::new();
+
+    for m in 1..=rounds {
+        // LEA run.
+        let states = cl_lea.advance(0.0);
+        let alloc = lea.allocate(&mut rng_lea);
+        let out = cl_lea.outcome(&states, &alloc.loads, FIG3_DEADLINE);
+        m_lea.push(scheme.round_success(&alloc.loads, &out.completed));
+        crate::scheduler::strategy::observe_all(&mut lea, &states);
+
+        // Oracle run (same underlying state sequence via same seed).
+        let states_o = cl_or.advance(0.0);
+        let alloc_o = oracle.allocate(&mut rng_or);
+        let out_o = cl_or.outcome(&states_o, &alloc_o.loads, FIG3_DEADLINE);
+        m_or.push(scheme.round_success(&alloc_o.loads, &out_o.completed));
+        crate::scheduler::strategy::observe_all(&mut oracle, &states_o);
+
+        if m % sample_every == 0 {
+            let err: f64 = (0..params.n)
+                .map(|i| (lea.estimator(i).p_gg_hat() - s.p_gg).abs())
+                .sum::<f64>()
+                / params.n as f64;
+            estimator_error.push((m, err));
+        }
+    }
+
+    ConvergenceResult {
+        lea_series: m_lea.series.clone(),
+        oracle_series: m_or.series.clone(),
+        estimator_error,
+        lea_final: m_lea.throughput(),
+        oracle_final: m_or.throughput(),
+    }
+}
+
+pub fn print(res: &ConvergenceResult) {
+    println!("=== Convergence (Theorem 5.1): R_LEA -> R* ===");
+    let to_f = |v: &[(u64, f64)]| -> Vec<(f64, f64)> {
+        v.iter().map(|&(m, y)| (m as f64, y)).collect()
+    };
+    let (lea_pts, or_pts) = (to_f(&res.lea_series), to_f(&res.oracle_series));
+    if lea_pts.len() >= 3 {
+        print!(
+            "{}",
+            crate::util::plot::chart(
+                &[
+                    crate::util::plot::Series {
+                        name: "R_LEA",
+                        points: &lea_pts,
+                        glyph: '#',
+                    },
+                    crate::util::plot::Series {
+                        name: "R_oracle",
+                        points: &or_pts,
+                        glyph: 'o',
+                    },
+                ],
+                64,
+                10,
+            )
+        );
+    }
+    println!("{:>10} {:>12} {:>12} {:>16}", "round", "R_LEA", "R_oracle", "est err |p̂-p|");
+    let mut err_iter = res.estimator_error.iter();
+    for ((m, lea), (_, or)) in res.lea_series.iter().zip(&res.oracle_series) {
+        let err = err_iter.next().map(|(_, e)| *e).unwrap_or(f64::NAN);
+        println!("{m:>10} {lea:>12.4} {or:>12.4} {err:>16.4}");
+    }
+    println!(
+        "final: LEA {:.4} vs oracle {:.4} (gap {:+.4})",
+        res.lea_final,
+        res.oracle_final,
+        res.oracle_final - res.lea_final
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenarios::fig3_scenarios;
+
+    #[test]
+    fn lea_converges_to_oracle() {
+        let s = fig3_scenarios()[1];
+        let res = run(&s, 30_000, 5, 3000);
+        assert!(
+            (res.oracle_final - res.lea_final).abs() < 0.03,
+            "gap too large: LEA {} vs oracle {}",
+            res.lea_final,
+            res.oracle_final
+        );
+        // Estimator error must shrink substantially from its first sample.
+        let first = res.estimator_error.first().unwrap().1;
+        let last = res.estimator_error.last().unwrap().1;
+        assert!(
+            last < first * 0.5 || last < 0.01,
+            "estimator error did not shrink: {first} -> {last}"
+        );
+    }
+}

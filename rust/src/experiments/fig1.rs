@@ -1,0 +1,94 @@
+//! Fig. 1 reproduction: speed variation of a credit-based instance.
+//!
+//! The paper measures a t2.micro under a steady stream of matrix
+//! multiplications and observes two-state behaviour with strong temporal
+//! correlation. We regenerate the trace from the credit token-bucket model
+//! and report the quantities the paper reads off the plot: the speed ratio,
+//! the dwell-time distribution, and the fitted Markov transition matrix.
+
+use crate::markov::credit::{CreditCpu, TraceStats};
+use crate::markov::{StateProcess, WState};
+use crate::util::rng::Rng;
+
+/// Fig.-1 experiment output.
+#[derive(Clone, Debug)]
+pub struct Fig1Result {
+    pub rounds: usize,
+    pub states: Vec<WState>,
+    pub duty_cycle: f64,
+    pub mean_good_run: f64,
+    pub mean_bad_run: f64,
+    pub fitted_p_gg: f64,
+    pub fitted_p_bb: f64,
+}
+
+/// Simulate `rounds` back-to-back computations with gap `gap_secs` between
+/// them, as the paper's measurement loop does.
+pub fn run(rounds: usize, gap_secs: f64, seed: u64) -> Fig1Result {
+    let mut cpu = CreditCpu::t2_micro(5.0);
+    let mut rng = Rng::new(seed);
+    let states: Vec<WState> = (0..rounds)
+        .map(|_| cpu.next_state(&mut rng, gap_secs))
+        .collect();
+    summarize(states)
+}
+
+pub fn summarize(states: Vec<WState>) -> Fig1Result {
+    let stats = TraceStats::from_states(&states);
+    let (pgg, pbb) = TraceStats::empirical_transitions(&states);
+    Fig1Result {
+        rounds: states.len(),
+        duty_cycle: stats.good_rounds as f64 / states.len().max(1) as f64,
+        mean_good_run: TraceStats::mean_run(&stats.good_runs),
+        mean_bad_run: TraceStats::mean_run(&stats.bad_runs),
+        fitted_p_gg: pgg,
+        fitted_p_bb: pbb,
+        states,
+    }
+}
+
+/// Render an ASCII version of the Fig.-1 trace (first `width` rounds):
+/// '▀' fast rounds, '.' slow rounds.
+pub fn ascii_trace(states: &[WState], width: usize) -> String {
+    states
+        .iter()
+        .take(width)
+        .map(|s| if s.is_good() { '▀' } else { '.' })
+        .collect()
+}
+
+pub fn print(res: &Fig1Result) {
+    println!("=== Fig. 1: credit-based instance speed trace ===");
+    println!("trace ({} rounds shown): ", 100.min(res.rounds));
+    println!("  {}", ascii_trace(&res.states, 100));
+    println!("rounds                 {:>10}", res.rounds);
+    println!("fast (burst) fraction  {:>10.3}", res.duty_cycle);
+    println!("mean fast-run length   {:>10.2} rounds", res.mean_good_run);
+    println!("mean slow-run length   {:>10.2} rounds", res.mean_bad_run);
+    println!(
+        "fitted Markov model    p_gg = {:.3}, p_bb = {:.3}  (i.i.d. would be p_gg ≈ duty)",
+        res.fitted_p_gg, res.fitted_p_bb
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shows_two_state_markov_structure() {
+        let res = run(20_000, 5.0, 42);
+        // The paper's qualitative claims: bimodal speeds with persistence.
+        assert!(res.duty_cycle > 0.1 && res.duty_cycle < 0.9);
+        assert!(res.mean_good_run > 2.0);
+        assert!(res.mean_bad_run > 2.0);
+        assert!(res.fitted_p_gg > res.duty_cycle, "persistence beyond i.i.d.");
+        assert!(res.fitted_p_bb > 1.0 - res.duty_cycle);
+    }
+
+    #[test]
+    fn ascii_trace_width() {
+        let res = run(500, 5.0, 1);
+        assert_eq!(ascii_trace(&res.states, 50).chars().count(), 50);
+    }
+}

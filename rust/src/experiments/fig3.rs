@@ -1,0 +1,126 @@
+//! Fig. 3 (§6.1): LEA vs the static stationary-distribution strategy across
+//! the four numerical scenarios, plus the oracle upper bound R*(d).
+
+use crate::scheduler::lea::Lea;
+use crate::scheduler::oracle::Oracle;
+use crate::scheduler::static_strategy::StaticStrategy;
+use crate::sim::runner::{run, RunConfig};
+use crate::sim::scenarios::{
+    fig3_cluster, fig3_load_params, fig3_scenarios, fig3_scheme, Fig3Scenario, FIG3_DEADLINE,
+};
+use crate::util::bench_kit;
+
+/// One scenario's measured row.
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    pub scenario: Fig3Scenario,
+    pub lea: f64,
+    pub static_: f64,
+    pub oracle: f64,
+    /// LEA / static improvement ratio (the paper's headline number).
+    pub ratio: f64,
+}
+
+/// Run one scenario with a common state sequence for all strategies.
+pub fn run_scenario(s: &Fig3Scenario, rounds: u64, seed: u64) -> Fig3Row {
+    let params = fig3_load_params();
+    let scheme = fig3_scheme();
+    let cfg = RunConfig::simple(rounds, FIG3_DEADLINE);
+
+    let mut lea = Lea::new(params);
+    let r_lea = run(&mut lea, &mut fig3_cluster(s, seed), &scheme, &cfg, seed ^ 1);
+
+    let pi = vec![s.chain().stationary_good(); params.n];
+    let mut st = StaticStrategy::stationary(params, pi);
+    let r_st = run(&mut st, &mut fig3_cluster(s, seed), &scheme, &cfg, seed ^ 1);
+
+    let mut oracle = Oracle::new(params, vec![s.chain(); params.n]);
+    let r_or = run(&mut oracle, &mut fig3_cluster(s, seed), &scheme, &cfg, seed ^ 1);
+
+    Fig3Row {
+        scenario: *s,
+        lea: r_lea.throughput,
+        static_: r_st.throughput,
+        oracle: r_or.throughput,
+        ratio: if r_st.throughput > 0.0 {
+            r_lea.throughput / r_st.throughput
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+/// Run all four scenarios.
+pub fn run_all(rounds: u64, seed: u64) -> Vec<Fig3Row> {
+    fig3_scenarios()
+        .iter()
+        .map(|s| run_scenario(s, rounds, seed))
+        .collect()
+}
+
+pub fn print(rows: &[Fig3Row]) {
+    bench_kit::table(
+        "Fig. 3 — timely computation throughput (n=15, k=50, r=10, K*=99, d=1)",
+        &["pi_g", "LEA", "static", "oracle R*", "LEA/static"],
+        &rows
+            .iter()
+            .map(|r| {
+                (
+                    format!(
+                        "scenario {} (p_gg={}, p_bb={})",
+                        r.scenario.id, r.scenario.p_gg, r.scenario.p_bb
+                    ),
+                    vec![r.scenario.pi_g, r.lea, r.static_, r.oracle, r.ratio],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let (lo, hi) = ratio_range(rows);
+    println!("LEA/static improvement range: {lo:.2}x – {hi:.2}x  (paper: 1.38x – 17.5x)");
+}
+
+pub fn ratio_range(rows: &[Fig3Row]) -> (f64, f64) {
+    let ratios: Vec<f64> = rows.iter().map(|r| r.ratio).collect();
+    (
+        ratios.iter().cloned().fold(f64::INFINITY, f64::min),
+        ratios.iter().cloned().fold(0.0, f64::max),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape_holds_at_reduced_scale() {
+        // 4k rounds is enough for the qualitative shape on every scenario:
+        // LEA > static, oracle ≥ LEA, ratio grows as pi_g falls.
+        let rows = run_all(4000, 99);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.lea > r.static_,
+                "scenario {}: LEA {} ≤ static {}",
+                r.scenario.id,
+                r.lea,
+                r.static_
+            );
+            assert!(
+                r.oracle >= r.lea - 0.03,
+                "scenario {}: oracle {} < LEA {}",
+                r.scenario.id,
+                r.oracle,
+                r.lea
+            );
+        }
+        // The paper's observation: the improvement is larger for smaller π_g.
+        assert!(
+            rows[0].ratio > rows[3].ratio,
+            "ratio must fall with pi_g: {:?}",
+            rows.iter().map(|r| r.ratio).collect::<Vec<_>>()
+        );
+        let (lo, hi) = ratio_range(&rows);
+        assert!(lo > 1.2, "min ratio {lo}");
+        assert!(hi > 3.0, "max ratio {hi}");
+    }
+}

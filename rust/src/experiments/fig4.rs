@@ -1,0 +1,168 @@
+//! Fig. 4 (§6.2): the EC2 experiment analog — LEA vs the equal-probability
+//! static strategy over six scenarios with credit-model workers and
+//! shift-exponential request arrivals.
+//!
+//! Two tiers (DESIGN.md §4 substitutions):
+//!  * `run_all` — paper-scale scheduling study (n=15, k up to 120) on the
+//!    round simulator with credit-bucket state processes;
+//!  * `run_e2e_scenario` — reduced-scale (artifact geometry) run on the REAL
+//!    threaded master/worker cluster executing PJRT computations, with the
+//!    same credit dynamics and arrivals — proving the full stack composes.
+
+use crate::exec::driver::{run_e2e, E2eConfig, E2eResult};
+use crate::exec::master::Engine;
+use crate::scheduler::lea::Lea;
+use crate::scheduler::static_strategy::StaticStrategy;
+use crate::sim::runner::{run, RunConfig};
+use crate::sim::scenarios::{fig4_scenarios, Fig4Scenario};
+use crate::util::bench_kit;
+
+/// One scenario's measured row.
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub scenario: Fig4Scenario,
+    pub lea: f64,
+    pub static_: f64,
+    pub ratio: f64,
+}
+
+/// Paper-scale scheduling study for one scenario.
+pub fn run_scenario(s: &Fig4Scenario, rounds: u64, seed: u64) -> Fig4Row {
+    let params = s.load_params();
+    let scheme = s.scheme();
+    let cfg = RunConfig {
+        arrivals: s.arrivals(),
+        ..RunConfig::simple(rounds, s.d)
+    };
+
+    let mut lea = Lea::new(params);
+    let r_lea = run(&mut lea, &mut s.cluster(seed), &scheme, &cfg, seed ^ 2);
+
+    let mut st = StaticStrategy::equal_prob(params);
+    let r_st = run(&mut st, &mut s.cluster(seed), &scheme, &cfg, seed ^ 2);
+
+    Fig4Row {
+        scenario: *s,
+        lea: r_lea.throughput,
+        static_: r_st.throughput,
+        ratio: if r_st.throughput > 0.0 {
+            r_lea.throughput / r_st.throughput
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+pub fn run_all(rounds: u64, seed: u64) -> Vec<Fig4Row> {
+    fig4_scenarios()
+        .iter()
+        .map(|s| run_scenario(s, rounds, seed))
+        .collect()
+}
+
+pub fn print(rows: &[Fig4Row]) {
+    bench_kit::table(
+        "Fig. 4 — EC2 analog (n=15, r=10, linear f, credit-model workers)",
+        &["k", "lambda", "d", "LEA", "static", "LEA/static"],
+        &rows
+            .iter()
+            .map(|r| {
+                (
+                    format!("scenario {} (rows={})", r.scenario.id, r.scenario.rows),
+                    vec![
+                        r.scenario.k as f64,
+                        r.scenario.lambda,
+                        r.scenario.d,
+                        r.lea,
+                        r.static_,
+                        r.ratio,
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let ratios: Vec<f64> = rows.iter().map(|r| r.ratio).collect();
+    let lo = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = ratios.iter().cloned().fold(0.0, f64::max);
+    println!("LEA/static improvement range: {lo:.2}x – {hi:.2}x  (paper: 1.27x – 6.5x)");
+}
+
+/// Reduced-scale REAL run: the e2e driver with this scenario's credit
+/// dynamics and arrivals at the artifact geometry. `engine` selects PJRT vs
+/// the native fallback.
+pub fn run_e2e_scenario(
+    s: &Fig4Scenario,
+    rounds: u64,
+    seed: u64,
+    engine: Engine,
+) -> anyhow::Result<(E2eResult, E2eResult)> {
+    let base = E2eConfig {
+        rounds,
+        deadline: 1.0,
+        // Keep the artifact geometry but borrow the scenario's credit
+        // dynamics rescaled to busy_secs = deadline.
+        credit_template: Some({
+            let mut t = s.credit_template();
+            t.earn_rate *= 1.0 / s.d; // busy time shrinks from d to 1s
+            t.cap /= s.d;
+            t.busy_secs = 1.0;
+            t
+        }),
+        arrivals: s.arrivals(),
+        seed,
+        ..E2eConfig::default()
+    };
+    let params = crate::scheduler::success::LoadParams::from_rates(
+        base.geometry.n,
+        base.geometry.r,
+        base.geometry.kstar(),
+        base.speeds.mu_g,
+        base.speeds.mu_b,
+        base.deadline,
+    );
+    let mut lea = Lea::new(params);
+    let r_lea = run_e2e(&base, &mut lea, engine)?;
+    let mut st = StaticStrategy::equal_prob(params);
+    let r_st = run_e2e(&base, &mut st, Engine::Native)?;
+    Ok((r_lea, r_st))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_holds_at_reduced_scale() {
+        let rows = run_all(2500, 7);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(
+                r.lea >= r.static_,
+                "scenario {}: LEA {} < static {}",
+                r.scenario.id,
+                r.lea,
+                r.static_
+            );
+        }
+        // LEA must show a clear win on at least half the scenarios.
+        let wins = rows.iter().filter(|r| r.ratio > 1.15).count();
+        assert!(wins >= 3, "only {wins} scenarios show a clear LEA win");
+        // λ=30 (sparser arrivals ⇒ more credits) must beat λ=10 per pair.
+        for pair in rows.chunks(2) {
+            assert!(
+                pair[1].lea >= pair[0].lea - 0.05,
+                "λ=30 should not be clearly worse: {:?}",
+                (pair[0].lea, pair[1].lea)
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_e2e_native_runs() {
+        let s = fig4_scenarios()[4]; // k=50 scenario
+        let (lea, st) = run_e2e_scenario(&s, 80, 11, Engine::Native).unwrap();
+        assert_eq!(lea.rounds, 80);
+        assert!(lea.throughput > 0.0);
+        assert!(lea.throughput >= st.throughput * 0.8); // noisy at 80 rounds
+    }
+}

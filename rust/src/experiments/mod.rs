@@ -1,0 +1,19 @@
+//! One harness per paper table/figure (DESIGN.md §3 experiment index).
+//!
+//! - [`fig1`] — the t2.micro speed-variation trace (credit model).
+//! - [`fig3`] — §6.1 numerical study: LEA vs static over 4 scenarios.
+//! - [`fig4`] — §6.2 EC2 analog: LEA vs static-equal over 6 scenarios
+//!   (credit-model workers, shift-exponential arrivals), plus the
+//!   reduced-scale real-PJRT e2e variant.
+//! - [`convergence`] — Theorem 5.1: R_LEA(m) → R*(m) against the oracle.
+//! - [`sweep`] — deadline sweeps + design ablations (coding scheme,
+//!   estimator, search strategy).
+//! - [`report`] — headline-claim aggregation and JSON report output.
+
+pub mod convergence;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod heterogeneous;
+pub mod report;
+pub mod sweep;

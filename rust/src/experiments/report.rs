@@ -1,0 +1,129 @@
+//! Headline-claim aggregation: runs every figure's harness, prints the
+//! paper-vs-measured comparison and writes a JSON report.
+
+use std::collections::BTreeMap;
+
+use super::{convergence, fig1, fig3, fig4};
+use crate::sim::scenarios::fig3_scenarios;
+use crate::util::json::Json;
+
+/// Full-report configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ReportConfig {
+    pub fig3_rounds: u64,
+    pub fig4_rounds: u64,
+    pub convergence_rounds: u64,
+    pub seed: u64,
+}
+
+impl Default for ReportConfig {
+    fn default() -> Self {
+        ReportConfig {
+            fig3_rounds: 50_000,
+            fig4_rounds: 20_000,
+            convergence_rounds: 50_000,
+            seed: 2024,
+        }
+    }
+}
+
+/// Run everything and return the report as JSON (also printed).
+pub fn run(cfg: &ReportConfig) -> Json {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+
+    // Fig. 1.
+    let f1 = fig1::run(20_000, 5.0, cfg.seed);
+    fig1::print(&f1);
+    root.insert(
+        "fig1".into(),
+        Json::obj(vec![
+            ("duty_cycle", Json::num(f1.duty_cycle)),
+            ("mean_good_run", Json::num(f1.mean_good_run)),
+            ("mean_bad_run", Json::num(f1.mean_bad_run)),
+            ("fitted_p_gg", Json::num(f1.fitted_p_gg)),
+            ("fitted_p_bb", Json::num(f1.fitted_p_bb)),
+        ]),
+    );
+
+    // Fig. 3.
+    let rows3 = fig3::run_all(cfg.fig3_rounds, cfg.seed);
+    fig3::print(&rows3);
+    let (lo3, hi3) = fig3::ratio_range(&rows3);
+    root.insert(
+        "fig3".into(),
+        Json::Arr(
+            rows3
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("scenario", Json::num(r.scenario.id as f64)),
+                        ("pi_g", Json::num(r.scenario.pi_g)),
+                        ("lea", Json::num(r.lea)),
+                        ("static", Json::num(r.static_)),
+                        ("oracle", Json::num(r.oracle)),
+                        ("ratio", Json::num(r.ratio)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+
+    // Fig. 4.
+    let rows4 = fig4::run_all(cfg.fig4_rounds, cfg.seed);
+    fig4::print(&rows4);
+    root.insert(
+        "fig4".into(),
+        Json::Arr(
+            rows4
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("scenario", Json::num(r.scenario.id as f64)),
+                        ("k", Json::num(r.scenario.k as f64)),
+                        ("lambda", Json::num(r.scenario.lambda)),
+                        ("d", Json::num(r.scenario.d)),
+                        ("lea", Json::num(r.lea)),
+                        ("static", Json::num(r.static_)),
+                        ("ratio", Json::num(r.ratio)),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+
+    // Convergence.
+    let conv = convergence::run(&fig3_scenarios()[0], cfg.convergence_rounds, cfg.seed, 5000);
+    convergence::print(&conv);
+    root.insert(
+        "convergence".into(),
+        Json::obj(vec![
+            ("lea_final", Json::num(conv.lea_final)),
+            ("oracle_final", Json::num(conv.oracle_final)),
+            ("gap", Json::num(conv.oracle_final - conv.lea_final)),
+        ]),
+    );
+
+    // Headline.
+    let ratios4: Vec<f64> = rows4.iter().map(|r| r.ratio).collect();
+    let lo4 = ratios4.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi4 = ratios4.iter().cloned().fold(0.0, f64::max);
+    println!("\n=== Headline (paper vs measured) ===");
+    println!("simulation gain : paper 1.38x–17.5x | measured {lo3:.2}x–{hi3:.2}x");
+    println!("EC2-analog gain : paper 1.27x–6.5x  | measured {lo4:.2}x–{hi4:.2}x");
+    root.insert(
+        "headline".into(),
+        Json::obj(vec![
+            ("sim_gain_min", Json::num(lo3)),
+            ("sim_gain_max", Json::num(hi3)),
+            ("ec2_gain_min", Json::num(lo4)),
+            ("ec2_gain_max", Json::num(hi4)),
+        ]),
+    );
+
+    Json::Obj(root)
+}
+
+/// Write the report JSON next to the repo root.
+pub fn write(json: &Json, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string())
+}

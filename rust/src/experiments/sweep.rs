@@ -1,0 +1,227 @@
+//! Deadline sweeps and design ablations (DESIGN.md §3 ablation list).
+
+use crate::coding::scheme::CodingScheme;
+use crate::coding::threshold::Geometry;
+use crate::markov::WState;
+use crate::scheduler::lea::Lea;
+use crate::scheduler::oracle::Oracle;
+use crate::scheduler::static_strategy::StaticStrategy;
+use crate::scheduler::strategy::Strategy;
+use crate::scheduler::success::LoadParams;
+use crate::sim::runner::{run, RunConfig};
+use crate::sim::scenarios::{fig3_cluster, fig3_geometry, fig3_speeds, Fig3Scenario};
+#[cfg(test)]
+use crate::sim::scenarios::fig3_scenarios;
+use crate::util::bench_kit;
+use crate::util::rng::Rng;
+
+/// One deadline point of the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub d: f64,
+    pub lg: usize,
+    pub lb: usize,
+    pub lea: f64,
+    pub static_: f64,
+    pub oracle: f64,
+}
+
+/// Sweep the deadline for a Fig.-3 scenario: shows the crossover from
+/// "nothing helps" (d too small) through the LEA-wins band to "everything
+/// succeeds" (d ≥ K*/(n·μ_b)).
+pub fn deadline_sweep(s: &Fig3Scenario, deadlines: &[f64], rounds: u64, seed: u64) -> Vec<SweepPoint> {
+    let geo = fig3_geometry();
+    let scheme = CodingScheme::for_geometry(geo);
+    let speeds = fig3_speeds();
+    deadlines
+        .iter()
+        .map(|&d| {
+            let params =
+                LoadParams::from_rates(geo.n, geo.r, scheme.kstar(), speeds.mu_g, speeds.mu_b, d);
+            let cfg = RunConfig::simple(rounds, d);
+
+            let mut lea = Lea::new(params);
+            let r_lea = run(&mut lea, &mut fig3_cluster(s, seed), &scheme, &cfg, seed);
+
+            let pi = vec![s.chain().stationary_good(); geo.n];
+            let mut st = StaticStrategy::stationary(params, pi);
+            let r_st = run(&mut st, &mut fig3_cluster(s, seed), &scheme, &cfg, seed);
+
+            let mut or = Oracle::new(params, vec![s.chain(); geo.n]);
+            let r_or = run(&mut or, &mut fig3_cluster(s, seed), &scheme, &cfg, seed);
+
+            SweepPoint {
+                d,
+                lg: params.lg,
+                lb: params.lb,
+                lea: r_lea.throughput,
+                static_: r_st.throughput,
+                oracle: r_or.throughput,
+            }
+        })
+        .collect()
+}
+
+pub fn print_sweep(points: &[SweepPoint]) {
+    bench_kit::table(
+        "Deadline sweep (Fig.-3 geometry, scenario as configured)",
+        &["ℓg", "ℓb", "LEA", "static", "oracle"],
+        &points
+            .iter()
+            .map(|p| {
+                (
+                    format!("d = {:.2}", p.d),
+                    vec![p.lg as f64, p.lb as f64, p.lea, p.static_, p.oracle],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+/// Coding ablation (Lemma 4.3 in action): Lagrange's optimal K* = 99 vs a
+/// worse code's threshold at the SAME storage (n, r), both under the paper's
+/// counting success rule and the oracle allocator.
+///
+/// The comparison threshold is the repetition design's
+/// `K = nr − ⌊nr/k⌋ + 1 = 148` (eq. 16): any K−1 results may miss a chunk in
+/// the worst case. Returns (lagrange, repetition_threshold, repetition_coverage)
+/// — the last entry runs repetition under its *typical-case* coverage
+/// semantics, which is more generous than its worst-case threshold (reported
+/// in the ablation bench for honesty).
+pub fn coding_ablation(s: &Fig3Scenario, rounds: u64, seed: u64) -> (f64, f64, f64) {
+    let geo = fig3_geometry();
+    let speeds = fig3_speeds();
+
+    let run_with = |scheme: CodingScheme| -> f64 {
+        let params = LoadParams::from_rates(
+            geo.n,
+            geo.r,
+            scheme.kstar(),
+            speeds.mu_g,
+            speeds.mu_b,
+            1.0,
+        );
+        let mut or = Oracle::new(params, vec![s.chain(); geo.n]);
+        run(
+            &mut or,
+            &mut fig3_cluster(s, seed),
+            &scheme,
+            &RunConfig::simple(rounds, 1.0),
+            seed,
+        )
+        .throughput
+    };
+
+    // Lagrange: K* = 99 (counting).
+    let lagrange = run_with(CodingScheme::for_geometry(geo));
+
+    // Repetition, worst-case threshold semantics (Lemma 4.3's comparison).
+    let rep_geo = Geometry {
+        deg_f: 100, // forces nr < k·deg−1 ⇒ repetition design in eq. (9)
+        ..geo
+    };
+    let rep_kstar = rep_geo.kstar(); // 150 − 3 + 1 = 148
+    let rep_threshold = run_with(CodingScheme::counting(geo, rep_kstar));
+
+    // Repetition, typical-case coverage semantics.
+    let rep_coverage = run_with(CodingScheme::for_geometry(rep_geo));
+
+    (lagrange, rep_threshold, rep_coverage)
+}
+
+/// Estimator ablation: LEA vs a "stale" LEA whose estimator is frozen after
+/// `freeze_after` rounds — quantifies the value of continuous learning.
+pub struct FrozenLea {
+    inner: Lea,
+    rounds_seen: u64,
+    freeze_after: u64,
+}
+
+impl FrozenLea {
+    pub fn new(params: LoadParams, freeze_after: u64) -> Self {
+        FrozenLea {
+            inner: Lea::new(params),
+            rounds_seen: 0,
+            freeze_after,
+        }
+    }
+}
+
+impl Strategy for FrozenLea {
+    fn name(&self) -> &'static str {
+        "LEA-frozen"
+    }
+
+    fn allocate(&mut self, rng: &mut Rng) -> crate::scheduler::allocation::Allocation {
+        self.inner.allocate(rng)
+    }
+
+    fn observe(&mut self, states: &[Option<WState>]) {
+        self.rounds_seen += 1;
+        if self.rounds_seen <= self.freeze_after {
+            self.inner.observe(states);
+        }
+        // After the freeze the estimator goes stale: in particular the
+        // last-state tracking stops, so allocations no longer adapt.
+    }
+}
+
+/// Run the estimator ablation; returns (lea, frozen@16) throughputs.
+pub fn estimator_ablation(s: &Fig3Scenario, rounds: u64, seed: u64) -> (f64, f64) {
+    let geo = fig3_geometry();
+    let scheme = CodingScheme::for_geometry(geo);
+    let speeds = fig3_speeds();
+    let params = LoadParams::from_rates(geo.n, geo.r, scheme.kstar(), speeds.mu_g, speeds.mu_b, 1.0);
+    let cfg = RunConfig::simple(rounds, 1.0);
+
+    let mut lea = Lea::new(params);
+    let full = run(&mut lea, &mut fig3_cluster(s, seed), &scheme, &cfg, seed).throughput;
+
+    let mut frozen = FrozenLea::new(params, 16);
+    let froze = run(&mut frozen, &mut fig3_cluster(s, seed), &scheme, &cfg, seed).throughput;
+    (full, froze)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_monotone_in_deadline() {
+        let s = fig3_scenarios()[0];
+        let pts = deadline_sweep(&s, &[0.6, 1.0, 2.0, 3.4], 2000, 3);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].oracle >= w[0].oracle - 0.02,
+                "oracle throughput must grow with d: {:?}",
+                pts.iter().map(|p| p.oracle).collect::<Vec<_>>()
+            );
+        }
+        // d = 3.4 ⇒ ℓ_b = 10 = r: trivial success.
+        assert!(pts.last().unwrap().oracle > 0.999);
+    }
+
+    #[test]
+    fn lagrange_beats_repetition_threshold_at_same_storage() {
+        // Lemma 4.3: lower recovery threshold ⇒ higher success probability
+        // for any load vector; K* = 99 (Lagrange) vs 148 (repetition).
+        let s = fig3_scenarios()[3];
+        let (lagrange, rep_threshold, rep_coverage) = coding_ablation(&s, 3000, 9);
+        assert!(
+            lagrange > rep_threshold + 0.1,
+            "Lagrange {lagrange} vs repetition-threshold {rep_threshold}"
+        );
+        // Coverage semantics are more generous than the worst case.
+        assert!(rep_coverage >= rep_threshold);
+    }
+
+    #[test]
+    fn learning_matters() {
+        let s = fig3_scenarios()[0];
+        let (full, frozen) = estimator_ablation(&s, 8000, 13);
+        assert!(
+            full > frozen,
+            "continuous estimation must help: full {full} vs frozen {frozen}"
+        );
+    }
+}

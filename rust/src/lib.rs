@@ -1,0 +1,30 @@
+//! Timely-Throughput Optimal Coded Computing over Cloud Networks — LEA.
+//!
+//! Reproduction of Yang, Pedarsani, Avestimehr (2019). The crate implements:
+//!
+//! - [`coding`] — Lagrange coded computing (encode/decode/recovery thresholds)
+//!   over `f64` and the prime field `GF(2^61 - 1)`.
+//! - [`markov`] — the two-state worker-speed model: ground-truth Markov chains,
+//!   the EC2 credit-bucket simulator behind Fig. 1, and the transition
+//!   estimator LEA learns with.
+//! - [`scheduler`] — the paper's contribution: success-probability computation
+//!   (eq. 8), the Estimate-and-Allocate load allocator (eqs. 7–10, Lemma 4.5),
+//!   and the LEA / static / oracle strategies.
+//! - [`sim`] — a deterministic round simulator + scenario registry reproducing
+//!   Fig. 3 and the convergence study.
+//! - [`runtime`] — PJRT (xla crate) loader for the AOT-compiled JAX/Pallas
+//!   artifacts produced by `python/compile/aot.py`.
+//! - [`exec`] — the threaded master/worker cluster that runs real PJRT
+//!   computations under simulated worker states (Fig. 4 analog).
+//! - [`experiments`] — one harness per paper table/figure.
+
+pub mod util;
+pub mod config;
+pub mod coding;
+pub mod markov;
+pub mod scheduler;
+pub mod sim;
+pub mod runtime;
+pub mod exec;
+pub mod experiments;
+pub mod testkit;

@@ -1,0 +1,207 @@
+//! `lea` — launcher CLI for the Timely-Throughput Coded Computing repo.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! ```text
+//! lea fig1        [--rounds N] [--gap S] [--seed S]        Fig.-1 trace
+//! lea fig3        [--rounds N] [--seed S]                  §6.1 numerical study
+//! lea fig4        [--rounds N] [--seed S]                  §6.2 EC2 analog
+//! lea convergence [--rounds N] [--seed S]                  Theorem 5.1 study
+//! lea sweep       [--rounds N] [--scenario I]              deadline sweep
+//! lea e2e         [--rounds N] [--native] [--strategy lea] real PJRT cluster run
+//! lea report      [--out report.json] [--fast]             everything + JSON
+//! ```
+
+use timely_coded::exec::driver::{run_e2e, E2eConfig};
+use timely_coded::exec::master::Engine;
+use timely_coded::experiments::{convergence, fig1, fig3, fig4, heterogeneous, report, sweep};
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::static_strategy::StaticStrategy;
+use timely_coded::scheduler::success::LoadParams;
+use timely_coded::sim::scenarios::fig3_scenarios;
+use timely_coded::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    if let Err(e) = dispatch(&sub, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
+    match sub {
+        "fig1" => {
+            let res = fig1::run(
+                args.usize("rounds", 20_000)?,
+                args.f64("gap", 5.0)?,
+                args.u64("seed", 42)?,
+            );
+            fig1::print(&res);
+        }
+        "fig3" => {
+            let rows = fig3::run_all(args.u64("rounds", 50_000)?, args.u64("seed", 2024)?);
+            fig3::print(&rows);
+            if let Some(path) = args.get("dump") {
+                use timely_coded::util::json::Json;
+                let j = Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("scenario", Json::num(r.scenario.id as f64)),
+                                ("pi_g", Json::num(r.scenario.pi_g)),
+                                ("lea", Json::num(r.lea)),
+                                ("static", Json::num(r.static_)),
+                                ("oracle", Json::num(r.oracle)),
+                                ("ratio", Json::num(r.ratio)),
+                            ])
+                        })
+                        .collect(),
+                );
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
+        "fig4" => {
+            let rows = fig4::run_all(args.u64("rounds", 20_000)?, args.u64("seed", 2024)?);
+            fig4::print(&rows);
+            if let Some(path) = args.get("dump") {
+                use timely_coded::util::json::Json;
+                let j = Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("scenario", Json::num(r.scenario.id as f64)),
+                                ("k", Json::num(r.scenario.k as f64)),
+                                ("lambda", Json::num(r.scenario.lambda)),
+                                ("lea", Json::num(r.lea)),
+                                ("static", Json::num(r.static_)),
+                                ("ratio", Json::num(r.ratio)),
+                            ])
+                        })
+                        .collect(),
+                );
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
+        "convergence" => {
+            let s = fig3_scenarios()[args.usize("scenario", 1)?.saturating_sub(1).min(3)];
+            let res = convergence::run(
+                &s,
+                args.u64("rounds", 50_000)?,
+                args.u64("seed", 2024)?,
+                args.u64("sample-every", 5000)?,
+            );
+            convergence::print(&res);
+        }
+        "sweep" => {
+            let s = fig3_scenarios()[args.usize("scenario", 1)?.saturating_sub(1).min(3)];
+            let deadlines: Vec<f64> = (1..=17).map(|i| 0.2 * i as f64).collect();
+            let pts = sweep::deadline_sweep(
+                &s,
+                &deadlines,
+                args.u64("rounds", 5000)?,
+                args.u64("seed", 3)?,
+            );
+            sweep::print_sweep(&pts);
+        }
+        "e2e" => {
+            let cfg = E2eConfig {
+                rounds: args.u64("rounds", 300)?,
+                seed: args.u64("seed", 7)?,
+                ..E2eConfig::default()
+            };
+            let engine = if args.flag("native") {
+                Engine::Native
+            } else {
+                Engine::auto()
+            };
+            let params = LoadParams::from_rates(
+                cfg.geometry.n,
+                cfg.geometry.r,
+                cfg.geometry.kstar(),
+                cfg.speeds.mu_g,
+                cfg.speeds.mu_b,
+                cfg.deadline,
+            );
+            let res = if args.get_or("strategy", "lea") == "static" {
+                let mut st = StaticStrategy::equal_prob(params);
+                run_e2e(&cfg, &mut st, engine)
+            } else {
+                let mut lea = Lea::new(params);
+                run_e2e(&cfg, &mut lea, engine)
+            }
+            .map_err(|e| format!("{e:#}"))?;
+            println!(
+                "e2e [{} | {}]: throughput {:.3} ({}/{} rounds), loss {:.5} -> {:.5}, \
+                 max decode err {:.2e}, compute {:.2}s",
+                res.strategy,
+                res.engine,
+                res.throughput,
+                res.successes,
+                res.rounds,
+                res.initial_loss,
+                res.final_loss,
+                res.max_decode_error,
+                res.compute_secs
+            );
+            println!("loss curve:");
+            for (m, l) in &res.loss_curve {
+                println!("  round {m:>6}  loss {l:.6}");
+            }
+        }
+        "hetero" => {
+            let res = heterogeneous::run_study(
+                args.u64("rounds", 30_000)?,
+                args.u64("seed", 2024)?,
+            );
+            heterogeneous::print(&res);
+        }
+        "report" => {
+            let cfg = if args.flag("fast") {
+                report::ReportConfig {
+                    fig3_rounds: 5000,
+                    fig4_rounds: 4000,
+                    convergence_rounds: 10_000,
+                    seed: 2024,
+                }
+            } else {
+                report::ReportConfig::default()
+            };
+            let json = report::run(&cfg);
+            let out = args.get_or("out", "report.json");
+            report::write(&json, out).map_err(|e| e.to_string())?;
+            println!("\nwrote {out}");
+        }
+        _ => {
+            println!("{HELP}");
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+lea — Timely-Throughput Optimal Coded Computing (LEA) reproduction
+
+USAGE: lea <subcommand> [--key value]...
+
+SUBCOMMANDS
+  fig1         Fig.-1 credit-instance speed trace (two-state behaviour)
+  fig3         §6.1 numerical study: LEA vs static vs oracle, 4 scenarios
+  fig4         §6.2 EC2 analog: LEA vs static-equal, 6 scenarios
+  convergence  Theorem 5.1: R_LEA -> R* series + estimator error
+  sweep        deadline sweep (crossovers; --scenario 1..4)
+  hetero       heterogeneous-worker study (π_g,i spectrum; LEA vs all)
+  e2e          real PJRT master/worker coded gradient descent
+               (--rounds N, --native, --strategy lea|static)
+  report       run everything, print paper-vs-measured, write JSON (--fast)
+
+Common flags: --rounds N, --seed S. `make artifacts` first for PJRT e2e.";

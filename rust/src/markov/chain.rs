@@ -1,0 +1,181 @@
+//! The paper's two-state Markov model (eq. 1).
+//!
+//! `P = [[p_gg, 1−p_gg], [1−p_bb, p_bb]]`; the stationary distribution is
+//! `π_g = (1−p_bb) / (2 − p_gg − p_bb)`. Workers start from the stationary
+//! distribution (paper §2.2).
+
+use super::{StateProcess, WState};
+use crate::util::rng::Rng;
+
+/// Transition parameters of one worker's chain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TwoState {
+    pub p_gg: f64,
+    pub p_bb: f64,
+}
+
+impl TwoState {
+    pub fn new(p_gg: f64, p_bb: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&p_gg) && (0.0..=1.0).contains(&p_bb),
+            "transition probabilities must lie in [0,1]"
+        );
+        TwoState { p_gg, p_bb }
+    }
+
+    /// Stationary probability of the good state.
+    pub fn stationary_good(&self) -> f64 {
+        let denom = 2.0 - self.p_gg - self.p_bb;
+        if denom <= 0.0 {
+            // p_gg = p_bb = 1: chain frozen; convention: split evenly.
+            0.5
+        } else {
+            (1.0 - self.p_bb) / denom
+        }
+    }
+
+    /// One-step next-state distribution: P(good | prev).
+    pub fn p_good_given(&self, prev: WState) -> f64 {
+        match prev {
+            WState::Good => self.p_gg,
+            WState::Bad => 1.0 - self.p_bb,
+        }
+    }
+
+    pub fn step(&self, prev: WState, rng: &mut Rng) -> WState {
+        if rng.bernoulli(self.p_good_given(prev)) {
+            WState::Good
+        } else {
+            WState::Bad
+        }
+    }
+
+    pub fn sample_stationary(&self, rng: &mut Rng) -> WState {
+        if rng.bernoulli(self.stationary_good()) {
+            WState::Good
+        } else {
+            WState::Bad
+        }
+    }
+}
+
+/// A running chain for one worker (state + parameters).
+#[derive(Clone, Debug)]
+pub struct MarkovWorker {
+    pub params: TwoState,
+    state: WState,
+    started: bool,
+}
+
+impl MarkovWorker {
+    /// The initial state is drawn from the stationary distribution on the
+    /// first `next_state` call (paper §2.2).
+    pub fn new(params: TwoState) -> Self {
+        MarkovWorker {
+            params,
+            state: WState::Good,
+            started: false,
+        }
+    }
+
+    pub fn with_initial(params: TwoState, state: WState) -> Self {
+        MarkovWorker {
+            params,
+            state,
+            started: true,
+        }
+    }
+
+    pub fn current(&self) -> WState {
+        self.state
+    }
+}
+
+impl StateProcess for MarkovWorker {
+    fn next_state(&mut self, rng: &mut Rng, _gap_secs: f64) -> WState {
+        self.state = if self.started {
+            self.params.step(self.state, rng)
+        } else {
+            self.started = true;
+            self.params.sample_stationary(rng)
+        };
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scenario_stationaries() {
+        // §6.1 scenarios: (p_gg, p_bb) → π_g.
+        for ((pgg, pbb), want) in [
+            ((0.8, 0.8), 0.5),
+            ((0.8, 0.7), 0.6),
+            ((0.8, 0.533), 0.7),
+            ((0.9, 0.6), 0.8),
+        ] {
+            let c = TwoState::new(pgg, pbb);
+            assert!(
+                (c.stationary_good() - want).abs() < 2e-3,
+                "({pgg},{pbb}): {} vs {want}",
+                c.stationary_good()
+            );
+        }
+    }
+
+    #[test]
+    fn empirical_frequency_matches_stationary() {
+        let params = TwoState::new(0.9, 0.6);
+        let mut w = MarkovWorker::new(params);
+        let mut rng = Rng::new(42);
+        let n = 200_000;
+        let good = (0..n)
+            .filter(|_| w.next_state(&mut rng, 0.0).is_good())
+            .count();
+        let f = good as f64 / n as f64;
+        assert!((f - 0.8).abs() < 0.01, "f={f}");
+    }
+
+    #[test]
+    fn empirical_transitions_match_params() {
+        let params = TwoState::new(0.8, 0.533);
+        let mut w = MarkovWorker::new(params);
+        let mut rng = Rng::new(7);
+        let (mut gg, mut g_total, mut bb, mut b_total) = (0u64, 0u64, 0u64, 0u64);
+        let mut prev = w.next_state(&mut rng, 0.0);
+        for _ in 0..300_000 {
+            let cur = w.next_state(&mut rng, 0.0);
+            match prev {
+                WState::Good => {
+                    g_total += 1;
+                    gg += u64::from(cur.is_good());
+                }
+                WState::Bad => {
+                    b_total += 1;
+                    bb += u64::from(!cur.is_good());
+                }
+            }
+            prev = cur;
+        }
+        assert!((gg as f64 / g_total as f64 - 0.8).abs() < 0.01);
+        assert!((bb as f64 / b_total as f64 - 0.533).abs() < 0.01);
+    }
+
+    #[test]
+    fn frozen_chain_stays_put() {
+        let params = TwoState::new(1.0, 1.0);
+        let mut rng = Rng::new(1);
+        let mut w = MarkovWorker::with_initial(params, WState::Bad);
+        for _ in 0..100 {
+            assert_eq!(w.next_state(&mut rng, 0.0), WState::Bad);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_probability_rejected() {
+        let _ = TwoState::new(1.2, 0.5);
+    }
+}

@@ -1,0 +1,253 @@
+//! CPU-credit model of a burstable EC2 instance (t2.micro) — the mechanism
+//! behind Fig. 1.
+//!
+//! AWS burstable instances earn CPU credits at a fixed rate while below
+//! baseline and spend them while bursting; with credits available the
+//! instance runs ~10× its baseline speed. A t2.micro earns 6 credits/hour
+//! (1 credit = 1 vCPU-minute at 100%) with a 144-credit cap. Under a steady
+//! computation stream this produces exactly the long good runs / long bad
+//! runs of Fig. 1 — i.e. an *approximately* two-state process with strong
+//! temporal correlation, which the paper abstracts into the Markov model.
+//!
+//! The Fig.-4 analog drives workers with this model (credits accrue during
+//! the idle gap between requests, so the arrival parameter λ matters, as in
+//! the paper's EC2 scenarios), while LEA still fits a Markov chain — testing
+//! the strategy under model mismatch just like the real experiments did.
+
+use super::{StateProcess, WState};
+use crate::util::rng::Rng;
+
+/// Token-bucket credit model for one worker.
+#[derive(Clone, Debug)]
+pub struct CreditCpu {
+    /// Credits earned per second of wall time.
+    pub earn_rate: f64,
+    /// Credits spent per second while bursting (1 vCPU at 100%).
+    pub burn_rate: f64,
+    /// Maximum accrued credits.
+    pub cap: f64,
+    /// Seconds of bursting one round costs (≈ busy time per round).
+    pub busy_secs: f64,
+    /// Random per-round jitter fraction on earn (co-location noise etc.).
+    pub jitter: f64,
+    /// Current credit balance (use `with_credits` to set; kept ≤ cap).
+    pub credits: f64,
+    /// Hysteresis: after depleting, bursting resumes only once credits reach
+    /// `resume_frac · cap`. Models the governor behaviour that produces the
+    /// multi-round dwell times of Fig. 1 (without it the instance would
+    /// flap good/bad every round at the depletion boundary).
+    pub resume_frac: f64,
+    /// Whether the instance is currently in its bursting regime.
+    pub bursting: bool,
+}
+
+impl CreditCpu {
+    /// t2.micro-like defaults, time-compressed so that state dwell times are
+    /// a few rounds (the paper's Fig.-1 trace shows dwell times of 5–30
+    /// computation rounds).
+    pub fn t2_micro(initial_credits: f64) -> Self {
+        CreditCpu {
+            earn_rate: 6.0 / 3600.0 * 60.0, // 6 credits/hr, 1 credit = 60 s of burst
+            burn_rate: 1.0,
+            cap: 144.0 * 60.0 / 600.0, // scaled-down cap
+            busy_secs: 1.0,
+            jitter: 0.05,
+            credits: initial_credits,
+            resume_frac: 0.3,
+            bursting: initial_credits > 0.0,
+        }
+    }
+
+    pub fn credits(&self) -> f64 {
+        self.credits
+    }
+
+    /// Builder: replace the current credit balance (clamped to the cap).
+    pub fn with_credits(mut self, credits: f64) -> Self {
+        self.credits = credits.min(self.cap);
+        self.bursting = self.credits >= self.resume_frac * self.cap;
+        self
+    }
+
+    /// Whether the instance can burst for a full round right now.
+    pub fn can_burst(&self) -> bool {
+        self.credits >= self.busy_secs * self.burn_rate
+    }
+}
+
+impl StateProcess for CreditCpu {
+    fn next_state(&mut self, rng: &mut Rng, gap_secs: f64) -> WState {
+        // Accrue during the idle gap (and while computing, per AWS docs).
+        let jitter = 1.0 + self.jitter * (2.0 * rng.f64() - 1.0);
+        self.credits =
+            (self.credits + self.earn_rate * jitter * (gap_secs + self.busy_secs)).min(self.cap);
+        // Hysteresis: deplete → stay slow until resume_frac·cap re-accrued.
+        if self.bursting {
+            if !self.can_burst() {
+                self.bursting = false;
+            }
+        } else if self.credits >= self.resume_frac * self.cap {
+            self.bursting = true;
+        }
+        if self.bursting {
+            self.credits -= self.busy_secs * self.burn_rate;
+            WState::Good
+        } else {
+            WState::Bad
+        }
+    }
+}
+
+/// Summary of a simulated speed trace (Fig.-1 reproduction).
+#[derive(Clone, Debug, Default)]
+pub struct TraceStats {
+    pub rounds: usize,
+    pub good_rounds: usize,
+    pub good_runs: Vec<usize>,
+    pub bad_runs: Vec<usize>,
+}
+
+impl TraceStats {
+    pub fn from_states(states: &[WState]) -> TraceStats {
+        let mut s = TraceStats {
+            rounds: states.len(),
+            ..Default::default()
+        };
+        let mut run = 0usize;
+        let mut cur: Option<WState> = None;
+        for &st in states {
+            s.good_rounds += usize::from(st.is_good());
+            match cur {
+                Some(c) if c == st => run += 1,
+                Some(c) => {
+                    if c.is_good() {
+                        s.good_runs.push(run);
+                    } else {
+                        s.bad_runs.push(run);
+                    }
+                    cur = Some(st);
+                    run = 1;
+                }
+                None => {
+                    cur = Some(st);
+                    run = 1;
+                }
+            }
+        }
+        if let Some(c) = cur {
+            if c.is_good() {
+                s.good_runs.push(run);
+            } else {
+                s.bad_runs.push(run);
+            }
+        }
+        s
+    }
+
+    pub fn mean_run(runs: &[usize]) -> f64 {
+        if runs.is_empty() {
+            0.0
+        } else {
+            runs.iter().sum::<usize>() as f64 / runs.len() as f64
+        }
+    }
+
+    /// Empirical (p̂_gg, p̂_bb) of the trace — the "measured Markov model"
+    /// the paper extracts from Fig. 1.
+    pub fn empirical_transitions(states: &[WState]) -> (f64, f64) {
+        let (mut gg, mut g, mut bb, mut b) = (0u64, 0u64, 0u64, 0u64);
+        for w in states.windows(2) {
+            match w[0] {
+                WState::Good => {
+                    g += 1;
+                    gg += u64::from(w[1].is_good());
+                }
+                WState::Bad => {
+                    b += 1;
+                    bb += u64::from(!w[1].is_good());
+                }
+            }
+        }
+        (
+            if g == 0 { 0.0 } else { gg as f64 / g as f64 },
+            if b == 0 { 0.0 } else { bb as f64 / b as f64 },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(gap: f64, rounds: usize, seed: u64) -> Vec<WState> {
+        let mut cpu = CreditCpu::t2_micro(5.0);
+        let mut rng = Rng::new(seed);
+        (0..rounds).map(|_| cpu.next_state(&mut rng, gap)).collect()
+    }
+
+    #[test]
+    fn produces_two_state_runs_not_noise() {
+        // The whole point of Fig. 1: states are temporally correlated —
+        // mean run length must be well above 1 (i.i.d. would give ~2).
+        let t = trace(5.0, 5_000, 3);
+        let st = TraceStats::from_states(&t);
+        assert!(st.good_rounds > 0 && st.good_rounds < st.rounds);
+        assert!(
+            TraceStats::mean_run(&st.good_runs) > 3.0,
+            "good runs too short: {}",
+            TraceStats::mean_run(&st.good_runs)
+        );
+        assert!(TraceStats::mean_run(&st.bad_runs) > 3.0);
+    }
+
+    #[test]
+    fn empirical_transitions_show_persistence() {
+        let t = trace(5.0, 20_000, 4);
+        let (pgg, pbb) = TraceStats::empirical_transitions(&t);
+        assert!(pgg > 0.7, "p_gg={pgg}");
+        assert!(pbb > 0.7, "p_bb={pbb}");
+    }
+
+    #[test]
+    fn longer_gaps_give_more_good_rounds() {
+        let short = TraceStats::from_states(&trace(1.0, 10_000, 5));
+        let long = TraceStats::from_states(&trace(30.0, 10_000, 5));
+        assert!(
+            long.good_rounds > short.good_rounds,
+            "idle accrual must help: {} vs {}",
+            long.good_rounds,
+            short.good_rounds
+        );
+    }
+
+    #[test]
+    fn credits_bounded_by_cap() {
+        let mut cpu = CreditCpu::t2_micro(0.0);
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let _ = cpu.next_state(&mut rng, 1e6);
+            assert!(cpu.credits() <= cpu.cap + 1e-9);
+        }
+    }
+
+    #[test]
+    fn burst_consumes_credits() {
+        let mut cpu = CreditCpu::t2_micro(2.0);
+        cpu.earn_rate = 0.0;
+        cpu.jitter = 0.0;
+        let mut rng = Rng::new(7);
+        assert_eq!(cpu.next_state(&mut rng, 0.0), WState::Good);
+        assert_eq!(cpu.next_state(&mut rng, 0.0), WState::Good);
+        assert_eq!(cpu.next_state(&mut rng, 0.0), WState::Bad);
+    }
+
+    #[test]
+    fn run_stats_from_states_exact() {
+        use WState::{Bad as B, Good as G};
+        let st = TraceStats::from_states(&[G, G, B, B, B, G]);
+        assert_eq!(st.rounds, 6);
+        assert_eq!(st.good_rounds, 3);
+        assert_eq!(st.good_runs, vec![2, 1]);
+        assert_eq!(st.bad_runs, vec![3]);
+    }
+}

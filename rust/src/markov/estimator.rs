@@ -1,0 +1,237 @@
+//! LEA's transition-probability estimator (paper §3.2, Update Phase).
+//!
+//! Counts the four events (g→g, g→b, b→g, b→b) observed from per-worker
+//! completion times, and maintains the next-round good-state probability
+//! p̂_{g,i}(m+1): p̂_gg if the worker was last seen good, 1 − p̂_bb otherwise.
+//!
+//! Before any transition of a kind has been observed, the corresponding
+//! estimate is 1/2 (uninformative prior — equivalently Laplace smoothing with
+//! zero evidence); the paper leaves the cold-start value unspecified and the
+//! SLLN argument is insensitive to it.
+
+use super::WState;
+
+/// Per-worker transition-count estimator.
+///
+/// Handles *censored* rounds (worker assigned ℓ = 0 reveals nothing — only
+/// possible when ℓ_b = 0): the age τ of the last observation is tracked and
+/// the prediction is the τ-step Markov transition
+/// `P(good | s, τ) = π̂ + λ̂^τ (1{s=good} − π̂)`, λ̂ = p̂_gg + p̂_bb − 1.
+/// With full observability τ = 1 and this reduces exactly to the paper's
+/// one-step rule; with censoring, stale predictions decay toward the
+/// estimated stationary distribution so unloaded workers are re-explored
+/// instead of being written off forever.
+#[derive(Clone, Debug, Default)]
+pub struct TransitionEstimator {
+    pub c_gg: u64,
+    pub c_gb: u64,
+    pub c_bg: u64,
+    pub c_bb: u64,
+    last: Option<WState>,
+    /// Rounds elapsed since `last` was observed (1 = observed last round).
+    age: u64,
+}
+
+impl TransitionEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the state observed for the round that just completed.
+    pub fn observe(&mut self, state: WState) {
+        if let Some(prev) = self.last {
+            match (prev, state) {
+                (WState::Good, WState::Good) => self.c_gg += 1,
+                (WState::Good, WState::Bad) => self.c_gb += 1,
+                (WState::Bad, WState::Good) => self.c_bg += 1,
+                (WState::Bad, WState::Bad) => self.c_bb += 1,
+            }
+        }
+        self.last = Some(state);
+        self.age = 1;
+    }
+
+    /// Record a censored round (no observation for this worker).
+    pub fn tick_unobserved(&mut self) {
+        if self.last.is_some() {
+            self.age += 1;
+        }
+    }
+
+    /// p̂_{g→g}: empirical fraction, 1/2 with no evidence.
+    pub fn p_gg_hat(&self) -> f64 {
+        let total = self.c_gg + self.c_gb;
+        if total == 0 {
+            0.5
+        } else {
+            self.c_gg as f64 / total as f64
+        }
+    }
+
+    /// p̂_{b→b}: empirical fraction, 1/2 with no evidence.
+    pub fn p_bb_hat(&self) -> f64 {
+        let total = self.c_bb + self.c_bg;
+        if total == 0 {
+            0.5
+        } else {
+            self.c_bb as f64 / total as f64
+        }
+    }
+
+    pub fn last_state(&self) -> Option<WState> {
+        self.last
+    }
+
+    /// Laplace-smoothed p̂_gg used on the PREDICTION path only: `(c+1)/(n+2)`.
+    /// The raw ratios (`p_gg_hat`) are the paper's estimator and converge to
+    /// the same limit; smoothing keeps early extreme counts (e.g. p̂_bb = 1
+    /// after a few b→b events) from predicting an absorbing chain, which
+    /// would freeze a worker out of the allocation forever.
+    pub fn p_gg_smoothed(&self) -> f64 {
+        (self.c_gg as f64 + 1.0) / ((self.c_gg + self.c_gb) as f64 + 2.0)
+    }
+
+    /// Laplace-smoothed p̂_bb (see `p_gg_smoothed`).
+    pub fn p_bb_smoothed(&self) -> f64 {
+        (self.c_bb as f64 + 1.0) / ((self.c_bb + self.c_bg) as f64 + 2.0)
+    }
+
+    /// Estimated stationary good-state probability (smoothed path).
+    pub fn stationary_hat(&self) -> f64 {
+        let (pgg, pbb) = (self.p_gg_smoothed(), self.p_bb_smoothed());
+        let denom = 2.0 - pgg - pbb;
+        if denom <= 0.0 {
+            0.5
+        } else {
+            (1.0 - pbb) / denom
+        }
+    }
+
+    /// p̂_{g,i}(m+1): probability the worker is good next round (§3.2 phase 4),
+    /// aged by the τ-step transition when observations were censored.
+    /// With no observation yet: estimated stationary probability (= 1/2 under
+    /// the uninformative prior).
+    pub fn p_good_next(&self) -> f64 {
+        let Some(last) = self.last else {
+            return self.stationary_hat();
+        };
+        // Fast path for the common fully-observed case (τ = 1): the τ-step
+        // formula reduces algebraically to the one-step rule; skip the
+        // stationary + powi work (hot path — see EXPERIMENTS.md §Perf).
+        if self.age == 1 {
+            return match last {
+                WState::Good => self.p_gg_smoothed(),
+                WState::Bad => 1.0 - self.p_bb_smoothed(),
+            };
+        }
+        let pi = self.stationary_hat();
+        let lambda = self.p_gg_smoothed() + self.p_bb_smoothed() - 1.0;
+        let s = if last.is_good() { 1.0 } else { 0.0 };
+        // τ-step: π + λ^τ (s − π); τ = 1 reduces to the paper's one-step rule.
+        pi + lambda.powi(self.age.min(i32::MAX as u64) as i32) * (s - pi)
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.c_gg + self.c_gb + self.c_bg + self.c_bb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::{MarkovWorker, TwoState};
+    use crate::markov::StateProcess;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cold_start_is_half() {
+        let e = TransitionEstimator::new();
+        assert_eq!(e.p_gg_hat(), 0.5);
+        assert_eq!(e.p_bb_hat(), 0.5);
+        assert_eq!(e.p_good_next(), 0.5);
+        assert_eq!(e.observations(), 0);
+    }
+
+    #[test]
+    fn counts_are_exact() {
+        use WState::{Bad as B, Good as G};
+        let mut e = TransitionEstimator::new();
+        for s in [G, G, B, B, B, G, G] {
+            e.observe(s);
+        }
+        assert_eq!((e.c_gg, e.c_gb, e.c_bg, e.c_bb), (2, 1, 1, 2));
+        assert_eq!(e.observations(), 6);
+        assert!((e.p_gg_hat() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((e.p_bb_hat() - 2.0 / 3.0).abs() < 1e-12);
+        // Last state good ⇒ p_good_next = smoothed p̂_gg.
+        assert!((e.p_good_next() - e.p_gg_smoothed()).abs() < 1e-12);
+        assert!((e.p_gg_smoothed() - 3.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn converges_to_truth_slln() {
+        // Lemma 5.2's engine: p̂ → p almost surely. Empirical check at m=2e5.
+        let truth = TwoState::new(0.8, 0.533);
+        let mut w = MarkovWorker::new(truth);
+        let mut rng = Rng::new(11);
+        let mut e = TransitionEstimator::new();
+        for _ in 0..200_000 {
+            e.observe(w.next_state(&mut rng, 0.0));
+        }
+        assert!((e.p_gg_hat() - 0.8).abs() < 0.01, "{}", e.p_gg_hat());
+        assert!((e.p_bb_hat() - 0.533).abs() < 0.01, "{}", e.p_bb_hat());
+    }
+
+    #[test]
+    fn p_good_next_tracks_last_state() {
+        use WState::{Bad as B, Good as G};
+        let mut e = TransitionEstimator::new();
+        for s in [G, B, G, G, B, B, G, B] {
+            e.observe(s);
+        }
+        // Last observed state is Bad ⇒ p_good_next = 1 − smoothed p̂_bb.
+        assert!((e.p_good_next() - (1.0 - e.p_bb_smoothed())).abs() < 1e-12);
+        e.observe(G);
+        assert!((e.p_good_next() - e.p_gg_smoothed()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_prediction_decays_to_stationary() {
+        use WState::{Bad as B, Good as G};
+        let mut e = TransitionEstimator::new();
+        // Build up p̂_gg ≈ p̂_bb ≈ 0.8 (π̂ = 0.5), end on Bad.
+        for s in [G, G, G, G, G, B, B, B, B, B] {
+            e.observe(s);
+        }
+        let fresh = e.p_good_next();
+        assert!(fresh < 0.4, "bad-last should predict bad: {fresh}");
+        for _ in 0..50 {
+            e.tick_unobserved();
+        }
+        let stale = e.p_good_next();
+        assert!(
+            (stale - e.stationary_hat()).abs() < 0.01,
+            "stale prediction must approach π̂: {stale} vs {}",
+            e.stationary_hat()
+        );
+        assert!(stale > fresh, "staleness must decay toward the mean");
+    }
+
+    #[test]
+    fn one_step_prediction_unchanged_by_aging_code() {
+        // τ = 1 must reduce exactly to the (smoothed) one-step rule, i.e.
+        // π + λ(1 − π) = p̂_gg algebraically.
+        use WState::{Bad as B, Good as G};
+        let mut e = TransitionEstimator::new();
+        for s in [G, G, B, G, B, B, G, G] {
+            e.observe(s);
+        }
+        assert!((e.p_good_next() - e.p_gg_smoothed()).abs() < 1e-12);
+        // Smoothing vanishes asymptotically: with many observations the
+        // smoothed and raw ratios agree.
+        for _ in 0..5000 {
+            e.observe(G);
+        }
+        assert!((e.p_gg_smoothed() - e.p_gg_hat()).abs() < 1e-3);
+    }
+}

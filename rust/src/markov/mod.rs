@@ -1,0 +1,33 @@
+//! Worker-speed variability models (paper §2.2) and the estimator LEA uses.
+//!
+//! - [`chain`] — the two-state (good/bad) Markov chain of eq. (1) with its
+//!   stationary distribution; the analytical ground truth of Fig. 3.
+//! - [`credit`] — a CPU-credit token-bucket model of an EC2 t2.micro: the
+//!   *mechanism* that produces Fig. 1's two-state behaviour. Used by the
+//!   Fig. 4 analog, where (as on EC2) the true process is NOT a Markov chain
+//!   and LEA must still learn it.
+//! - [`estimator`] — LEA's empirical transition-count estimator (§3.2 phase 4).
+
+pub mod chain;
+pub mod credit;
+pub mod estimator;
+
+/// A worker's speed state in some round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WState {
+    Good,
+    Bad,
+}
+
+impl WState {
+    pub fn is_good(self) -> bool {
+        matches!(self, WState::Good)
+    }
+}
+
+/// Anything that produces a per-round state sequence for one worker.
+pub trait StateProcess {
+    /// Advance one round. `gap_secs` is the idle time since the previous
+    /// round began (credit models accrue during it; Markov chains ignore it).
+    fn next_state(&mut self, rng: &mut crate::util::rng::Rng, gap_secs: f64) -> WState;
+}

@@ -1,0 +1,215 @@
+//! Artifact discovery: parse `artifacts/manifest.json` written by
+//! `python/compile/aot.py` and locate the HLO text files.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+}
+
+/// Problem geometry the artifacts were compiled for.
+#[derive(Clone, Debug)]
+pub struct ArtifactParams {
+    pub k: usize,
+    pub n: usize,
+    pub r: usize,
+    pub nr: usize,
+    pub chunk_rows: usize,
+    pub features: usize,
+    pub lin_cols: usize,
+    pub kstar_quadratic: usize,
+    pub kstar_linear: usize,
+}
+
+/// Cross-language Lagrange fixture (rust math vs python math).
+#[derive(Clone, Debug)]
+pub struct CrossCheck {
+    pub k: usize,
+    pub nr: usize,
+    pub alphas: Vec<f64>,
+    pub betas: Vec<f64>,
+    pub generator: Vec<Vec<f64>>,
+    pub decode_received: Vec<usize>,
+    pub decode_weights: Vec<Vec<f64>>,
+}
+
+/// The parsed manifest + base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub params: ArtifactParams,
+    pub entries: Vec<ArtifactEntry>,
+    pub cross_check: CrossCheck,
+}
+
+/// Default artifact directory: `$ARTIFACTS_DIR` or `<repo>/artifacts`.
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ARTIFACTS_DIR") {
+        return PathBuf::from(d);
+    }
+    // Relative to the crate root (works for cargo run/test from the repo).
+    let manifest_dir = env!("CARGO_MANIFEST_DIR");
+    Path::new(manifest_dir).join("artifacts")
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| format!("{key}: expected integer"))
+}
+
+impl Manifest {
+    pub fn load_default() -> Result<Manifest, String> {
+        Self::load(&default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text)?;
+
+        let p = j.req("params")?;
+        let params = ArtifactParams {
+            k: usize_field(p, "k")?,
+            n: usize_field(p, "n")?,
+            r: usize_field(p, "r")?,
+            nr: usize_field(p, "nr")?,
+            chunk_rows: usize_field(p, "chunk_rows")?,
+            features: usize_field(p, "features")?,
+            lin_cols: usize_field(p, "lin_cols")?,
+            kstar_quadratic: usize_field(p, "kstar_quadratic")?,
+            kstar_linear: usize_field(p, "kstar_linear")?,
+        };
+
+        let mut entries = Vec::new();
+        for e in j.req("artifacts")?.as_arr().ok_or("artifacts: array")? {
+            let name = e.req("name")?.as_str().ok_or("name: str")?.to_string();
+            let file = dir.join(e.req("file")?.as_str().ok_or("file: str")?);
+            let inputs = e
+                .req("inputs")?
+                .as_matrix()
+                .ok_or("inputs: matrix")?
+                .into_iter()
+                .map(|row| row.into_iter().map(|x| x as usize).collect())
+                .collect();
+            let output = e
+                .req("output")?
+                .as_f64_vec()
+                .ok_or("output: vec")?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect();
+            entries.push(ArtifactEntry {
+                name,
+                file,
+                inputs,
+                output,
+            });
+        }
+
+        let cc = j.req("cross_check")?;
+        let cross_check = CrossCheck {
+            k: usize_field(cc, "k")?,
+            nr: usize_field(cc, "nr")?,
+            alphas: cc.req("alphas")?.as_f64_vec().ok_or("alphas")?,
+            betas: cc.req("betas")?.as_f64_vec().ok_or("betas")?,
+            generator: cc.req("generator")?.as_matrix().ok_or("generator")?,
+            decode_received: cc
+                .req("decode_received")?
+                .as_f64_vec()
+                .ok_or("decode_received")?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            decode_weights: cc
+                .req("decode_weights")?
+                .as_matrix()
+                .ok_or("decode_weights")?,
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            params,
+            entries,
+            cross_check,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry, String> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts` (the Makefile test target runs it
+    // first); they are skipped gracefully when artifacts are absent.
+    fn manifest() -> Option<Manifest> {
+        Manifest::load_default().ok()
+    }
+
+    #[test]
+    fn manifest_parses_and_entries_exist() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        for name in ["gradient", "linear", "encode", "decode"] {
+            let e = m.entry(name).unwrap();
+            assert!(e.file.exists(), "{} missing", e.file.display());
+        }
+        assert_eq!(m.params.nr, m.params.n * m.params.r);
+        assert_eq!(m.params.kstar_quadratic, (m.params.k - 1) * 2 + 1);
+    }
+
+    #[test]
+    fn cross_check_generator_matches_rust_lagrange() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        use crate::coding::field::CodeField;
+        use crate::coding::lagrange::LagrangeCode;
+        let cc = &m.cross_check;
+        // Point conventions must match python's bit-for-bit-ish.
+        let alphas = <f64 as CodeField>::alphas(cc.k, cc.nr);
+        for (a, b) in alphas.iter().zip(&cc.alphas) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        let code = LagrangeCode::<f64>::new(cc.k, cc.nr);
+        let g = code.generator_matrix();
+        for (grow, prow) in g.iter().zip(&cc.generator) {
+            for (a, b) in grow.iter().zip(prow) {
+                assert!((a - b).abs() < 1e-10, "generator mismatch: {a} vs {b}");
+            }
+        }
+        let w = code.decode_weights(&cc.decode_received, 2).unwrap();
+        for (wrow, prow) in w.iter().zip(&cc.decode_weights) {
+            for (a, b) in wrow.iter().zip(prow) {
+                assert!((a - b).abs() < 1e-9, "decode weights mismatch: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn missing_artifact_name_errors() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        assert!(m.entry("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT client wrapper: HLO text → compiled executable → f32 execution.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, with outputs
+//! unwrapped from the 1-tuple that `aot.py` lowers (return_tuple=True).
+//! HLO *text* is the interchange format — serialized jax≥0.5 protos are
+//! rejected by xla_extension 0.5.1.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::matrix::MatF32;
+
+/// A live PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-UTF8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// One compiled model entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with row-major f32 matrices; returns the flat f32 output.
+    ///
+    /// The AOT pipeline lowers every entry point with `return_tuple=True`
+    /// and a single logical result, so the output is unwrapped via
+    /// `to_tuple1`.
+    pub fn run(&self, inputs: &[&MatF32]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(&m.data)
+                    .reshape(&[m.rows as i64, m.cols as i64])
+                    .map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute and reshape into a matrix of the given dimensions.
+    pub fn run_mat(&self, inputs: &[&MatF32], rows: usize, cols: usize) -> Result<MatF32> {
+        let flat = self.run(inputs)?;
+        if flat.len() != rows * cols {
+            return Err(anyhow!(
+                "{}: output length {} != {rows}x{cols}",
+                self.name,
+                flat.len()
+            ));
+        }
+        Ok(MatF32::from_vec(rows, cols, flat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+
+    // PJRT tests are skipped when artifacts are absent (run `make artifacts`).
+    fn setup() -> Option<(Runtime, Manifest)> {
+        let m = Manifest::load_default().ok()?;
+        let rt = Runtime::cpu().ok()?;
+        Some((rt, m))
+    }
+
+    #[test]
+    fn linear_artifact_matches_cpu_gemm() {
+        let Some((rt, m)) = setup() else {
+            eprintln!("skipping: no artifacts/PJRT");
+            return;
+        };
+        let e = m.entry("linear").unwrap();
+        let exe = rt.load(&e.file).unwrap();
+        let (c, p) = (e.inputs[0][0], e.inputs[0][1]);
+        let q = e.inputs[1][1];
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x = MatF32::from_fn(c, p, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let b = MatF32::from_fn(p, q, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let got = exe.run_mat(&[&x, &b], c, q).unwrap();
+        let want = x.matmul(&b);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn gradient_artifact_matches_cpu_reference() {
+        let Some((rt, m)) = setup() else {
+            eprintln!("skipping: no artifacts/PJRT");
+            return;
+        };
+        let e = m.entry("gradient").unwrap();
+        let exe = rt.load(&e.file).unwrap();
+        let (c, p) = (e.inputs[0][0], e.inputs[0][1]);
+        let mut rng = crate::util::rng::Rng::new(2);
+        let x = MatF32::from_fn(c, p, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let w = MatF32::from_fn(p, 1, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let y = MatF32::from_fn(c, 1, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let got = exe.run_mat(&[&x, &w, &y], p, 1).unwrap();
+        // reference: x^T (x w - y)
+        let r = MatF32::from_vec(
+            c,
+            1,
+            x.matvec(&w.data)
+                .iter()
+                .zip(&y.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        );
+        let want = x.transpose().matmul(&r);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "diff={}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn encode_artifact_matches_rust_lagrange_generator() {
+        let Some((rt, m)) = setup() else {
+            eprintln!("skipping: no artifacts/PJRT");
+            return;
+        };
+        use crate::coding::lagrange::LagrangeCode;
+        let e = m.entry("encode").unwrap();
+        let exe = rt.load(&e.file).unwrap();
+        let (nr, k) = (e.inputs[0][0], e.inputs[0][1]);
+        let d = e.inputs[1][1];
+        let code = LagrangeCode::<f64>::new(k, nr);
+        let g64 = code.generator_matrix();
+        let g = MatF32::from_fn(nr, k, |i, j| g64[i][j] as f32);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let xs = MatF32::from_fn(k, d, |_, _| (rng.f64() * 2.0 - 1.0) as f32);
+        let got = exe.run_mat(&[&g, &xs], nr, d).unwrap();
+        let want = g.matmul(&xs);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! - [`artifacts`] — manifest parsing + artifact discovery.
+//! - [`client`] — `xla` crate wrapper: HLO text → compiled executable → typed
+//!   f32 execution. One compiled executable per model entry point; python is
+//!   never on this path.
+
+pub mod artifacts;
+pub mod client;

@@ -1,0 +1,217 @@
+//! Load allocation (paper §3.2 Load Assignment Phase, eq. 10) plus the
+//! exhaustive reference the optimality tests compare against.
+//!
+//! Given per-worker good-state probabilities, sort descending (Lemma 4.5),
+//! pick i* by the linear prefix search, assign ℓ_g to the top-i* workers and
+//! ℓ_b to the rest.
+
+use super::success::{best_prefix_scratch, poisson_binomial_tail, LoadParams, PrefixScratch};
+
+/// A concrete per-worker load assignment for one round.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// loads[i] = evaluations assigned to worker i (original indexing).
+    pub loads: Vec<usize>,
+    /// Number of ℓ_g-loaded workers.
+    pub i_star: usize,
+    /// Estimated success probability under the input probabilities.
+    pub est_success: f64,
+}
+
+impl Allocation {
+    pub fn total_load(&self) -> usize {
+        self.loads.iter().sum()
+    }
+}
+
+/// Reusable buffers for [`allocate_with_scratch`] — one per strategy
+/// instance, recycled every round (the allocator is on the master's hot
+/// path; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct AllocScratch {
+    order: Vec<usize>,
+    ps_desc: Vec<f64>,
+    prefix: PrefixScratch,
+}
+
+/// EA load assignment: maximize estimated success probability (eqs. 7–10).
+///
+/// `p_good[i]` is worker i's (estimated) probability of being good this
+/// round. Returns loads in the ORIGINAL worker order.
+pub fn allocate(params: &LoadParams, p_good: &[f64]) -> Allocation {
+    allocate_with_scratch(params, p_good, &mut AllocScratch::default())
+}
+
+/// [`allocate`] with caller-owned scratch (no per-round allocations beyond
+/// the returned load vector itself).
+pub fn allocate_with_scratch(
+    params: &LoadParams,
+    p_good: &[f64],
+    scratch: &mut AllocScratch,
+) -> Allocation {
+    assert_eq!(p_good.len(), params.n);
+    // Keep last round's order as the starting permutation: estimates drift
+    // slowly, so the slice is nearly sorted and the small-slice insertion
+    // sort runs in ~O(n) (EXPERIMENTS.md §Perf).
+    if scratch.order.len() != params.n {
+        scratch.order.clear();
+        scratch.order.extend(0..params.n);
+    }
+    // Sort by probability descending; stable tie-break on index keeps the
+    // allocation deterministic.
+    scratch
+        .order
+        .sort_by(|&a, &b| p_good[b].partial_cmp(&p_good[a]).unwrap().then(a.cmp(&b)));
+    scratch.ps_desc.clear();
+    scratch.ps_desc.extend(scratch.order.iter().map(|&i| p_good[i]));
+
+    let (i_star, prob) = best_prefix_scratch(params, &scratch.ps_desc, &mut scratch.prefix);
+    let mut loads = vec![params.lb; params.n];
+    for &w in scratch.order.iter().take(i_star) {
+        loads[w] = params.lg;
+    }
+    Allocation {
+        loads,
+        i_star,
+        est_success: prob,
+    }
+}
+
+/// Success probability of an ARBITRARY ℓ_g-set `gset` (bitmask) — the
+/// paper's eq. (21) evaluated directly. Used by the brute-force reference.
+pub fn subset_success(params: &LoadParams, p_good: &[f64], gset: u32) -> f64 {
+    let size = gset.count_ones() as usize;
+    if !params.feasible(size) {
+        return 0.0;
+    }
+    let need = params.needed_good(size);
+    if need == i64::MAX {
+        return 0.0;
+    }
+    let ps: Vec<f64> = (0..params.n)
+        .filter(|i| gset >> i & 1 == 1)
+        .map(|i| p_good[i])
+        .collect();
+    poisson_binomial_tail(&ps, need)
+}
+
+/// Exhaustive 2^n search over all ℓ_g-sets — the optimization problem of
+/// §4.2 solved literally. Only for tests/benches (n ≤ ~20).
+pub fn brute_force(params: &LoadParams, p_good: &[f64]) -> (u32, f64) {
+    assert!(params.n <= 20, "brute force is exponential");
+    let mut best = (0u32, subset_success(params, p_good, 0));
+    for gset in 1u32..(1 << params.n) {
+        let p = subset_success(params, p_good, gset);
+        if p > best.1 + 1e-15 {
+            best = (gset, p);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn params_small() -> LoadParams {
+        // n=8, r=5, K*=25, μ=(5,2), d=1 ⇒ ℓ_g=5, ℓ_b=2.
+        LoadParams::from_rates(8, 5, 25, 5.0, 2.0, 1.0)
+    }
+
+    #[test]
+    fn allocate_assigns_lg_to_highest_probability_workers() {
+        let params = params_small();
+        let p_good = vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.7, 0.4, 0.6];
+        let alloc = allocate(&params, &p_good);
+        // Workers sorted desc: 1(.9), 3(.8), 5(.7), 7(.6), 6(.4), 2(.3)...
+        // whatever i* is, the ℓ_g set must be the top-i* by probability.
+        let mut got: Vec<usize> = (0..8).filter(|&i| alloc.loads[i] == params.lg).collect();
+        let mut order: Vec<usize> = (0..8).collect();
+        order.sort_by(|&a, &b| p_good[b].partial_cmp(&p_good[a]).unwrap());
+        let mut want: Vec<usize> = order[..alloc.i_star].to_vec();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn linear_search_matches_bruteforce_lemma_4_5() {
+        // The heart of the efficiency claim: prefix search == 2^n search.
+        let params = params_small();
+        let mut rng = Rng::new(31);
+        for trial in 0..200 {
+            let p_good: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+            let alloc = allocate(&params, &p_good);
+            let (_, bf_prob) = brute_force(&params, &p_good);
+            assert!(
+                (alloc.est_success - bf_prob).abs() < 1e-10,
+                "trial {trial}: prefix {} vs brute {}",
+                alloc.est_success,
+                bf_prob
+            );
+        }
+    }
+
+    #[test]
+    fn bruteforce_match_across_geometries() {
+        let mut rng = Rng::new(32);
+        for (n, r, kstar, mu_g, mu_b, d) in [
+            (6, 4, 15, 4.0, 1.0, 1.0),
+            (7, 3, 12, 3.0, 1.0, 1.0),
+            (9, 6, 30, 6.0, 2.0, 1.0),
+            (5, 10, 28, 8.0, 3.0, 1.0),
+            (10, 2, 14, 2.0, 0.0, 1.0),
+        ] {
+            let params = LoadParams::from_rates(n, r, kstar, mu_g, mu_b, d);
+            for _ in 0..40 {
+                let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+                let alloc = allocate(&params, &p_good);
+                let (_, bf) = brute_force(&params, &p_good);
+                assert!(
+                    (alloc.est_success - bf).abs() < 1e-10,
+                    "n={n} K*={kstar}: {} vs {bf}",
+                    alloc.est_success
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loads_are_only_lg_or_lb() {
+        // Lemma 4.4: optimal loads take only the two values.
+        let params = params_small();
+        let alloc = allocate(&params, &[0.5; 8]);
+        assert!(alloc
+            .loads
+            .iter()
+            .all(|&l| l == params.lg || l == params.lb));
+    }
+
+    #[test]
+    fn est_success_in_unit_interval_and_consistent() {
+        let params = params_small();
+        let mut rng = Rng::new(33);
+        for _ in 0..100 {
+            let p_good: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+            let a = allocate(&params, &p_good);
+            assert!((0.0..=1.0 + 1e-12).contains(&a.est_success));
+            assert_eq!(a.loads.iter().filter(|&&l| l == params.lg).count(), {
+                // i_star counts ℓ_g workers unless lg == lb (degenerate).
+                if params.lg == params.lb {
+                    8
+                } else {
+                    a.i_star
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn equal_probabilities_any_prefix_ok() {
+        let params = params_small();
+        let alloc = allocate(&params, &[0.6; 8]);
+        let (_, bf) = brute_force(&params, &[0.6; 8]);
+        assert!((alloc.est_success - bf).abs() < 1e-12);
+    }
+}

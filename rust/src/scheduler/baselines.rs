@@ -1,0 +1,213 @@
+//! Additional baseline strategies beyond the paper's static baseline —
+//! used by the ablation benches to locate LEA between "no adaptivity" and
+//! "full Bayesian adaptivity".
+//!
+//! * [`GreedyLastState`] — the obvious heuristic: give ℓ_g to every worker
+//!   last seen good (padding with the best of the rest until feasible).
+//!   Adaptive but probability-blind: no transition estimates, no success-
+//!   probability maximization.
+//! * [`RoundRobinStatic`] — deterministic static: a fixed rotating set of
+//!   ⌈(K*−n·ℓ_b)/(ℓ_g−ℓ_b)⌉ workers gets ℓ_g each round.
+
+use super::allocation::Allocation;
+use super::strategy::Strategy;
+use super::success::LoadParams;
+use crate::markov::WState;
+use crate::util::rng::Rng;
+
+/// Heuristic: load the workers that were good last round.
+#[derive(Clone, Debug)]
+pub struct GreedyLastState {
+    pub params: LoadParams,
+    last: Vec<WState>,
+    /// Rounds since each worker was last seen good (exploration tiebreak).
+    staleness: Vec<u64>,
+}
+
+impl GreedyLastState {
+    pub fn new(params: LoadParams) -> Self {
+        GreedyLastState {
+            last: vec![WState::Good; params.n],
+            staleness: vec![0; params.n],
+            params,
+        }
+    }
+
+    /// Minimum ℓ_g-set size for feasibility (total load ≥ K*).
+    fn min_lg_workers(&self) -> usize {
+        let p = &self.params;
+        if p.n * p.lb >= p.kstar {
+            return 0;
+        }
+        if p.lg == p.lb {
+            return p.n;
+        }
+        let deficit = p.kstar - p.n * p.lb;
+        let per = p.lg - p.lb;
+        deficit.div_ceil(per).min(p.n)
+    }
+}
+
+impl Strategy for GreedyLastState {
+    fn name(&self) -> &'static str {
+        "greedy-last-state"
+    }
+
+    fn allocate(&mut self, _rng: &mut Rng) -> Allocation {
+        let n = self.params.n;
+        // Rank: last-good first (freshest first), then stale ones.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| (!self.last[i].is_good(), self.staleness[i]));
+        let want = self
+            .min_lg_workers()
+            .max(self.last.iter().filter(|s| s.is_good()).count())
+            .min(n);
+        let mut loads = vec![self.params.lb; n];
+        for &w in order.iter().take(want) {
+            loads[w] = self.params.lg;
+        }
+        Allocation {
+            loads,
+            i_star: want,
+            est_success: f64::NAN,
+        }
+    }
+
+    fn observe(&mut self, states: &[Option<WState>]) {
+        for (i, s) in states.iter().enumerate() {
+            match s {
+                Some(s) => {
+                    self.last[i] = *s;
+                    self.staleness[i] = 0;
+                }
+                None => self.staleness[i] += 1,
+            }
+        }
+    }
+}
+
+/// Deterministic static baseline: rotate a fixed-size ℓ_g window.
+#[derive(Clone, Debug)]
+pub struct RoundRobinStatic {
+    pub params: LoadParams,
+    window: usize,
+    offset: usize,
+}
+
+impl RoundRobinStatic {
+    pub fn new(params: LoadParams) -> Self {
+        let window = if params.n * params.lb >= params.kstar {
+            0
+        } else if params.lg == params.lb {
+            params.n
+        } else {
+            (params.kstar - params.n * params.lb)
+                .div_ceil(params.lg - params.lb)
+                .min(params.n)
+        };
+        RoundRobinStatic {
+            params,
+            window,
+            offset: 0,
+        }
+    }
+}
+
+impl Strategy for RoundRobinStatic {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn allocate(&mut self, _rng: &mut Rng) -> Allocation {
+        let n = self.params.n;
+        let mut loads = vec![self.params.lb; n];
+        for j in 0..self.window {
+            loads[(self.offset + j) % n] = self.params.lg;
+        }
+        self.offset = (self.offset + 1) % n;
+        Allocation {
+            loads,
+            i_star: self.window,
+            est_success: f64::NAN,
+        }
+    }
+
+    fn observe(&mut self, _states: &[Option<WState>]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::scheme::CodingScheme;
+    use crate::scheduler::lea::Lea;
+    use crate::scheduler::static_strategy::StaticStrategy;
+    use crate::sim::runner::{run, RunConfig};
+    use crate::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scenarios, fig3_scheme};
+
+    fn throughput(strategy: &mut dyn Strategy, scheme: &CodingScheme, seed: u64) -> f64 {
+        let s = fig3_scenarios()[0];
+        run(
+            strategy,
+            &mut fig3_cluster(&s, seed),
+            scheme,
+            &RunConfig::simple(8000, 1.0),
+            seed,
+        )
+        .throughput
+    }
+
+    #[test]
+    fn feasibility_window_sizes() {
+        let params = fig3_load_params(); // K*=99, lg=10, lb=3
+        let g = GreedyLastState::new(params);
+        // deficit 99−45 = 54, per-worker gain 7 ⇒ 8 workers.
+        assert_eq!(g.min_lg_workers(), 8);
+        let rr = RoundRobinStatic::new(params);
+        assert_eq!(rr.window, 8);
+    }
+
+    #[test]
+    fn allocations_are_feasible() {
+        let params = fig3_load_params();
+        let mut rng = Rng::new(1);
+        let mut g = GreedyLastState::new(params);
+        let mut rr = RoundRobinStatic::new(params);
+        for _ in 0..50 {
+            assert!(g.allocate(&mut rng).total_load() >= params.kstar);
+            assert!(rr.allocate(&mut rng).total_load() >= params.kstar);
+            g.observe(&vec![Some(WState::Bad); 15]);
+        }
+    }
+
+    #[test]
+    fn strategy_ordering_lea_ge_greedy_ge_static() {
+        // The hierarchy the ablation bench reports: LEA ≥ greedy ≥ static
+        // (greedy exploits persistence but ignores probabilities/i* choice).
+        let params = fig3_load_params();
+        let scheme = fig3_scheme();
+        let seed = 5;
+        let mut lea = Lea::new(params);
+        let t_lea = throughput(&mut lea, &scheme, seed);
+        let mut greedy = GreedyLastState::new(params);
+        let t_greedy = throughput(&mut greedy, &scheme, seed);
+        let mut st = StaticStrategy::stationary(params, vec![0.5; 15]);
+        let t_static = throughput(&mut st, &scheme, seed);
+        let mut rr = RoundRobinStatic::new(params);
+        let t_rr = throughput(&mut rr, &scheme, seed);
+
+        assert!(t_lea >= t_greedy - 0.02, "LEA {t_lea} vs greedy {t_greedy}");
+        assert!(t_greedy > t_static, "greedy {t_greedy} vs static {t_static}");
+        assert!(t_greedy > t_rr, "greedy {t_greedy} vs round-robin {t_rr}");
+    }
+
+    #[test]
+    fn round_robin_is_deterministic_and_rotates() {
+        let params = fig3_load_params();
+        let mut rr = RoundRobinStatic::new(params);
+        let mut rng = Rng::new(2);
+        let a = rr.allocate(&mut rng);
+        let b = rr.allocate(&mut rng);
+        assert_ne!(a.loads, b.loads); // rotated
+        assert_eq!(a.i_star, b.i_star);
+    }
+}

@@ -1,0 +1,142 @@
+//! Lagrange Estimate-and-Allocate — the paper's algorithm (§3).
+//!
+//! Data encoding is the Lagrange scheme (coding::lagrange); this module is
+//! the EA half: per-worker transition estimators feed p̂_{g,i}(m) into the
+//! eq.-(7)/(8) maximization, solved by the Lemma-4.5 linear prefix search.
+
+use super::allocation::{allocate_with_scratch, AllocScratch, Allocation};
+use super::strategy::Strategy;
+use super::success::LoadParams;
+use crate::markov::estimator::TransitionEstimator;
+use crate::markov::WState;
+use crate::util::rng::Rng;
+
+/// The LEA strategy state: one estimator per worker.
+#[derive(Clone, Debug)]
+pub struct Lea {
+    pub params: LoadParams,
+    estimators: Vec<TransitionEstimator>,
+    // Hot-path buffers, recycled every round (EXPERIMENTS.md §Perf).
+    scratch: AllocScratch,
+    p_buf: Vec<f64>,
+}
+
+impl Lea {
+    pub fn new(params: LoadParams) -> Self {
+        Lea {
+            estimators: vec![TransitionEstimator::new(); params.n],
+            scratch: AllocScratch::default(),
+            p_buf: Vec::with_capacity(params.n),
+            params,
+        }
+    }
+
+    /// Current p̂_{g,i}(m) vector (diagnostics + convergence experiment).
+    pub fn p_good_estimates(&self) -> Vec<f64> {
+        self.estimators.iter().map(|e| e.p_good_next()).collect()
+    }
+
+    pub fn estimator(&self, i: usize) -> &TransitionEstimator {
+        &self.estimators[i]
+    }
+}
+
+impl Strategy for Lea {
+    fn name(&self) -> &'static str {
+        "LEA"
+    }
+
+    fn allocate(&mut self, _rng: &mut Rng) -> Allocation {
+        self.p_buf.clear();
+        self.p_buf
+            .extend(self.estimators.iter().map(|e| e.p_good_next()));
+        allocate_with_scratch(&self.params, &self.p_buf, &mut self.scratch)
+    }
+
+    fn observe(&mut self, states: &[Option<WState>]) {
+        debug_assert_eq!(states.len(), self.estimators.len());
+        for (e, s) in self.estimators.iter_mut().zip(states) {
+            match s {
+                Some(s) => e.observe(*s),
+                None => e.tick_unobserved(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::TwoState;
+    use crate::scheduler::strategy::observe_all;
+
+    fn fig3_params() -> LoadParams {
+        LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0)
+    }
+
+    #[test]
+    fn cold_start_allocates_something_feasible() {
+        let mut lea = Lea::new(fig3_params());
+        let mut rng = Rng::new(1);
+        let a = lea.allocate(&mut rng);
+        assert_eq!(a.loads.len(), 15);
+        assert!(a.total_load() >= 99, "total={}", a.total_load());
+    }
+
+    #[test]
+    fn estimates_converge_and_allocation_stabilizes() {
+        // Feed LEA a deterministic alternating pattern for worker 0 and
+        // always-good for the rest; its estimate must reflect that.
+        let mut lea = Lea::new(fig3_params());
+        let mut prev = WState::Good;
+        for _ in 0..1000 {
+            let mut states = vec![WState::Good; 15];
+            prev = if prev.is_good() {
+                WState::Bad
+            } else {
+                WState::Good
+            };
+            states[0] = prev;
+            observe_all(&mut lea, &states);
+        }
+        let ps = lea.p_good_estimates();
+        // Worker 0 alternates: p̂_gg ≈ 0, p̂_bb ≈ 0 ⇒ p_good_next ≈ 1 − p̂_bb or p̂_gg
+        assert!(ps[0] < 0.05 || ps[0] > 0.95);
+        for &p in &ps[1..] {
+            assert!(p > 0.99, "always-good workers should estimate ≈1: {p}");
+        }
+    }
+
+    #[test]
+    fn lea_learns_true_chain_statistics() {
+        let truth = TwoState::new(0.9, 0.6);
+        let mut lea = Lea::new(fig3_params());
+        let mut rng = Rng::new(5);
+        let mut workers: Vec<crate::markov::chain::MarkovWorker> = (0..15)
+            .map(|_| crate::markov::chain::MarkovWorker::new(truth))
+            .collect();
+        use crate::markov::StateProcess;
+        for _ in 0..30_000 {
+            let states: Vec<WState> = workers
+                .iter_mut()
+                .map(|w| w.next_state(&mut rng, 0.0))
+                .collect();
+            observe_all(&mut lea, &states);
+        }
+        for e in (0..15).map(|i| lea.estimator(i)) {
+            assert!((e.p_gg_hat() - 0.9).abs() < 0.03, "{}", e.p_gg_hat());
+            assert!((e.p_bb_hat() - 0.6).abs() < 0.05, "{}", e.p_bb_hat());
+        }
+    }
+
+    #[test]
+    fn censored_observations_are_skipped() {
+        let mut lea = Lea::new(fig3_params());
+        let mut states = vec![Some(WState::Good); 15];
+        states[3] = None;
+        lea.observe(&states);
+        lea.observe(&states);
+        assert_eq!(lea.estimator(0).observations(), 1);
+        assert_eq!(lea.estimator(3).observations(), 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's contribution: computation-load allocation (§3.2, §4.2).
+//!
+//! - [`success`] — success-probability machinery: the Poisson-binomial tail
+//!   of eq. (8), computed with an O(n²) DP instead of the paper's
+//!   subset-sum, plus the ĩ-prefix linear search of Lemma 4.5.
+//! - [`allocation`] — load parameters (ℓ_g, ℓ_b of Lemma 4.4), the EA load
+//!   assignment (eq. 10) and a brute-force 2^n reference used by tests.
+//! - [`strategy`] — the `Strategy` trait shared by the simulator and the
+//!   real exec layer.
+//! - [`lea`] — Lagrange Estimate-and-Allocate (the paper's algorithm).
+//! - [`static_strategy`] — the static baselines of §6 (stationary-distribution
+//!   and equal-probability variants).
+//! - [`oracle`] — the genie-aided optimal strategy η* of Theorem 4.6
+//!   (known Markov model + observed previous states): the upper bound
+//!   LEA must converge to.
+
+pub mod allocation;
+pub mod baselines;
+pub mod lea;
+pub mod oracle;
+pub mod static_strategy;
+pub mod strategy;
+pub mod success;

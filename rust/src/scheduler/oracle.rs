@@ -1,0 +1,125 @@
+//! The genie-aided optimal strategy η* (paper §4, Theorem 4.6).
+//!
+//! Knows the TRUE transition matrices and observes the previous round's true
+//! states, so its p_{g,i}(m) are exact; the allocation is then the exact
+//! solution of the Load Allocation Problem (§4.2). Its long-run throughput is
+//! the upper bound R*(d) that LEA provably converges to (Theorem 5.1) — the
+//! convergence experiment measures both.
+
+use super::allocation::{allocate_with_scratch, AllocScratch, Allocation};
+use super::strategy::Strategy;
+use super::success::LoadParams;
+use crate::markov::chain::TwoState;
+use crate::markov::WState;
+use crate::util::rng::Rng;
+
+/// Optimal strategy with a known Markov model.
+#[derive(Clone, Debug)]
+pub struct Oracle {
+    pub params: LoadParams,
+    chains: Vec<TwoState>,
+    last_states: Option<Vec<WState>>,
+    scratch: AllocScratch,
+}
+
+impl Oracle {
+    pub fn new(params: LoadParams, chains: Vec<TwoState>) -> Self {
+        assert_eq!(chains.len(), params.n);
+        Oracle {
+            params,
+            chains,
+            last_states: None,
+            scratch: AllocScratch::default(),
+        }
+    }
+
+    /// Exact p_{g,i}(m): one-step prediction from the last true state, or the
+    /// stationary distribution in round 1 (§2.2: initial state is stationary).
+    pub fn p_good(&self) -> Vec<f64> {
+        match &self.last_states {
+            None => self.chains.iter().map(|c| c.stationary_good()).collect(),
+            Some(states) => self
+                .chains
+                .iter()
+                .zip(states)
+                .map(|(c, &s)| c.p_good_given(s))
+                .collect(),
+        }
+    }
+}
+
+impl Strategy for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn allocate(&mut self, _rng: &mut Rng) -> Allocation {
+        let p = self.p_good();
+        allocate_with_scratch(&self.params, &p, &mut self.scratch)
+    }
+
+    fn observe(&mut self, states: &[Option<WState>]) {
+        // The genie sees everything; censored entries keep their old value.
+        let mut last = self
+            .last_states
+            .clone()
+            .unwrap_or_else(|| vec![WState::Good; self.params.n]);
+        for (slot, s) in last.iter_mut().zip(states) {
+            if let Some(s) = s {
+                *slot = *s;
+            }
+        }
+        self.last_states = Some(last);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::strategy::observe_all;
+
+    fn params() -> LoadParams {
+        LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0)
+    }
+
+    #[test]
+    fn first_round_uses_stationary() {
+        let chains = vec![TwoState::new(0.9, 0.6); 15];
+        let o = Oracle::new(params(), chains);
+        for p in o.p_good() {
+            assert!((p - 0.8).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn after_observation_uses_one_step_prediction() {
+        let chains = vec![TwoState::new(0.9, 0.6); 15];
+        let mut o = Oracle::new(params(), chains);
+        let mut states = vec![WState::Good; 15];
+        states[0] = WState::Bad;
+        observe_all(&mut o, &states);
+        let p = o.p_good();
+        assert!((p[0] - 0.4).abs() < 1e-12); // 1 − p_bb
+        assert!((p[1] - 0.9).abs() < 1e-12); // p_gg
+    }
+
+    #[test]
+    fn oracle_allocation_prefers_predicted_good_workers() {
+        let chains = vec![TwoState::new(0.9, 0.9); 15];
+        let mut o = Oracle::new(params(), chains);
+        let mut states = vec![WState::Bad; 15];
+        for s in states.iter_mut().take(9) {
+            *s = WState::Good;
+        }
+        observe_all(&mut o, &states);
+        let mut rng = Rng::new(1);
+        let a = o.allocate(&mut rng);
+        // The ℓ_g set must be a subset of the previously-good workers
+        // whenever i* ≤ 9 (their p = .9 vs .1).
+        if a.i_star <= 9 {
+            for i in 9..15 {
+                assert_eq!(a.loads[i], 3, "bad-state worker {i} got ℓ_g");
+            }
+        }
+    }
+}

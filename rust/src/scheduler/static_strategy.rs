@@ -1,0 +1,167 @@
+//! Static baselines (paper §6).
+//!
+//! *StaticStationary* (§6.1, eq. 35): knows the true stationary distribution
+//! π_{g,i} of every worker and assigns ℓ_g with that probability each round,
+//! redrawing until the total load reaches K*. The paper argues this is the
+//! best static strategy in general.
+//!
+//! *StaticEqualProb* (§6.2): the EC2 baseline — the underlying process is
+//! unknown, so ℓ_g/ℓ_b are assigned with probability 1/2 each.
+
+use super::allocation::Allocation;
+use super::strategy::Strategy;
+use super::success::LoadParams;
+use crate::markov::WState;
+use crate::util::rng::Rng;
+
+/// Static strategy drawing loads from fixed per-worker probabilities.
+#[derive(Clone, Debug)]
+pub struct StaticStrategy {
+    pub params: LoadParams,
+    /// Probability of assigning ℓ_g to each worker.
+    pub pi_g: Vec<f64>,
+    name: &'static str,
+}
+
+impl StaticStrategy {
+    /// §6.1 baseline: uses the true stationary distribution.
+    pub fn stationary(params: LoadParams, pi_g: Vec<f64>) -> Self {
+        assert_eq!(pi_g.len(), params.n);
+        StaticStrategy {
+            params,
+            pi_g,
+            name: "static-stationary",
+        }
+    }
+
+    /// §6.2 baseline: equal probability (no knowledge at all).
+    pub fn equal_prob(params: LoadParams) -> Self {
+        let n = params.n;
+        StaticStrategy {
+            params,
+            pi_g: vec![0.5; n],
+            name: "static-equal",
+        }
+    }
+}
+
+impl Strategy for StaticStrategy {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn allocate(&mut self, rng: &mut Rng) -> Allocation {
+        // Redraw until total ≥ K* (eq. 35 note). Bounded: if even all-ℓ_g
+        // cannot reach K*, give the all-ℓ_g vector (success prob 0 anyway).
+        let all_lg = self.params.n * self.params.lg;
+        for _ in 0..10_000 {
+            let loads: Vec<usize> = self
+                .pi_g
+                .iter()
+                .map(|&p| {
+                    if rng.bernoulli(p) {
+                        self.params.lg
+                    } else {
+                        self.params.lb
+                    }
+                })
+                .collect();
+            let total: usize = loads.iter().sum();
+            if total >= self.params.kstar || all_lg < self.params.kstar {
+                let i_star = loads.iter().filter(|&&l| l == self.params.lg).count();
+                return Allocation {
+                    loads,
+                    i_star,
+                    est_success: f64::NAN, // static strategies don't estimate
+                };
+            }
+        }
+        // Degenerate π (all ≈ 0) with reachable K*: fall back to all-ℓ_g.
+        Allocation {
+            loads: vec![self.params.lg; self.params.n],
+            i_star: self.params.n,
+            est_success: f64::NAN,
+        }
+    }
+
+    fn observe(&mut self, _states: &[Option<WState>]) {
+        // Static: ignores history by definition.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> LoadParams {
+        LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0)
+    }
+
+    #[test]
+    fn total_load_always_reaches_kstar() {
+        let mut s = StaticStrategy::stationary(params(), vec![0.5; 15]);
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let a = s.allocate(&mut rng);
+            assert!(a.total_load() >= 99);
+        }
+    }
+
+    #[test]
+    fn frequencies_match_pi() {
+        let pi: Vec<f64> = (0..15).map(|i| 0.3 + 0.04 * i as f64).collect();
+        let mut s = StaticStrategy::stationary(params(), pi.clone());
+        let mut rng = Rng::new(4);
+        let rounds = 20_000;
+        let mut counts = vec![0usize; 15];
+        for _ in 0..rounds {
+            let a = s.allocate(&mut rng);
+            for i in 0..15 {
+                counts[i] += usize::from(a.loads[i] == 10);
+            }
+        }
+        // Conditioning on total ≥ K* biases frequencies up, but order and
+        // rough magnitude must hold.
+        for i in 0..15 {
+            let f = counts[i] as f64 / rounds as f64;
+            assert!((f - pi[i]).abs() < 0.12, "worker {i}: {f} vs {}", pi[i]);
+        }
+    }
+
+    #[test]
+    fn equal_prob_is_half() {
+        let mut s = StaticStrategy::equal_prob(params());
+        let mut rng = Rng::new(5);
+        let mut lg_count = 0usize;
+        let rounds = 10_000;
+        for _ in 0..rounds {
+            lg_count += s.allocate(&mut rng).i_star;
+        }
+        // Redrawing until Σℓ ≥ K* = 99 (needs ≥ 9 of 15 ℓ_g draws) biases
+        // the ℓ_g frequency well above the unconditional 1/2.
+        let f = lg_count as f64 / (rounds * 15) as f64;
+        assert!((0.5..0.8).contains(&f), "f={f}");
+    }
+
+    #[test]
+    fn unreachable_kstar_does_not_spin() {
+        // K* > n·ℓ_g: impossible geometry; allocate must return, not loop.
+        let p = LoadParams::new(4, 100, 5, 1);
+        let mut s = StaticStrategy::equal_prob(p);
+        let mut rng = Rng::new(6);
+        let a = s.allocate(&mut rng);
+        assert_eq!(a.loads.len(), 4);
+    }
+
+    #[test]
+    fn observe_is_noop() {
+        let mut s = StaticStrategy::equal_prob(params());
+        let mut rng = Rng::new(7);
+        let before: Vec<usize> = (0..50).map(|_| s.allocate(&mut rng).i_star).collect();
+        s.observe(&vec![Some(WState::Bad); 15]);
+        let mut rng = Rng::new(7);
+        let mut s2 = StaticStrategy::equal_prob(params());
+        let after: Vec<usize> = (0..50).map(|_| s2.allocate(&mut rng).i_star).collect();
+        assert_eq!(before, after);
+    }
+}

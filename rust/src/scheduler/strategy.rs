@@ -1,0 +1,30 @@
+//! The `Strategy` interface shared by the round simulator (`sim`) and the
+//! real master/worker cluster (`exec`).
+//!
+//! Per round m: the master calls `allocate` to get the load vector, runs the
+//! round, then calls `observe` with the per-worker states inferred from
+//! completion times (§3.2 Aggregation and Observation Phase — speeds are
+//! deterministic per state, so finish times reveal states exactly).
+
+use super::allocation::Allocation;
+use crate::markov::WState;
+use crate::util::rng::Rng;
+
+/// A dynamic computation strategy η = (coding fixed, {ℓ_m}).
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Produce the load vector for the next round.
+    fn allocate(&mut self, rng: &mut Rng) -> Allocation;
+
+    /// Feed back the per-worker states of the round that just ran.
+    /// `states[i] = None` models censored observations (extension: a result
+    /// that never came back within the observation window).
+    fn observe(&mut self, states: &[Option<WState>]);
+}
+
+/// Convenience: full observability (the paper's setting).
+pub fn observe_all(strategy: &mut dyn Strategy, states: &[WState]) {
+    let wrapped: Vec<Option<WState>> = states.iter().map(|&s| Some(s)).collect();
+    strategy.observe(&wrapped);
+}

@@ -1,0 +1,334 @@
+//! Success probability of one round (paper §4.2, eqs. 7–8 and 21).
+//!
+//! With loads ℓ_i ∈ {ℓ_g, ℓ_b} (Lemma 4.4), a round succeeds iff the number
+//! of *good* workers among the ℓ_g-loaded set `G_g` reaches
+//! `a(G_g) = ⌈(K* − (n−|G_g|)·ℓ_b) / ℓ_g⌉`. The count of good workers is a
+//! heterogeneous Bernoulli (Poisson-binomial) sum; the paper writes its tail
+//! as a sum over subsets (exponential in |G_g|), we compute it with the
+//! standard O(|G|²) convolution DP — and the prefix structure of Lemma 4.5
+//! lets a single incremental DP serve every candidate ĩ = 0..n in O(n²)
+//! total per round.
+
+/// P(Σ Bernoulli(ps_i) ≥ a). Exact convolution DP, O(len(ps)²).
+pub fn poisson_binomial_tail(ps: &[f64], a: i64) -> f64 {
+    if a <= 0 {
+        return 1.0;
+    }
+    let a = a as usize;
+    if a > ps.len() {
+        return 0.0;
+    }
+    let mut dist = vec![0.0f64; ps.len() + 1];
+    dist[0] = 1.0;
+    for (i, &p) in ps.iter().enumerate() {
+        debug_assert!((0.0..=1.0).contains(&p), "probability out of range: {p}");
+        for c in (0..=i).rev() {
+            let d = dist[c];
+            dist[c + 1] += d * p;
+            dist[c] = d * (1.0 - p);
+        }
+    }
+    dist[a..].iter().sum()
+}
+
+/// Load-allocation geometry for one round (all in "evaluations").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadParams {
+    /// Number of workers.
+    pub n: usize,
+    /// Recovery threshold K* (eq. 9).
+    pub kstar: usize,
+    /// ℓ_g = min(⌊μ_g·d⌋, r): evaluations a good worker completes by d.
+    pub lg: usize,
+    /// ℓ_b = ⌊μ_b·d⌋: evaluations a bad worker completes by d.
+    pub lb: usize,
+}
+
+impl LoadParams {
+    pub fn new(n: usize, kstar: usize, lg: usize, lb: usize) -> Self {
+        assert!(lg >= lb, "ℓ_g < ℓ_b is impossible (μ_g > μ_b and ℓ_g ≤ r)");
+        LoadParams { n, kstar, lg, lb }
+    }
+
+    /// Derive from speeds and deadline: ℓ_b = ⌊μ_b·d⌋, ℓ_g = min(⌊μ_g·d⌋, r).
+    /// Floors keep loads integral (a partially-finished evaluation is useless).
+    pub fn from_rates(n: usize, r: usize, kstar: usize, mu_g: f64, mu_b: f64, d: f64) -> Self {
+        assert!(mu_g >= mu_b && mu_b >= 0.0 && d > 0.0);
+        let lb = ((mu_b * d).floor() as usize).min(r);
+        let lg = ((mu_g * d).floor() as usize).min(r);
+        LoadParams::new(n, kstar, lg, lb)
+    }
+
+    /// Footnote 2: if n·ℓ_b ≥ K* every round succeeds regardless of states.
+    pub fn is_trivial(&self) -> bool {
+        self.n * self.lb >= self.kstar
+    }
+
+    /// `w(ĩ)` of eq. (7)/(8): minimum number of good workers needed among the
+    /// first ĩ when the remaining n−ĩ carry ℓ_b each.
+    pub fn needed_good(&self, i_tilde: usize) -> i64 {
+        debug_assert!(i_tilde <= self.n);
+        let rest = (self.n - i_tilde) * self.lb;
+        if rest >= self.kstar {
+            return 0;
+        }
+        let deficit = self.kstar - rest;
+        if self.lg == self.lb {
+            // Assigning ℓ_g = ℓ_b: nobody adds anything beyond ℓ_b — the
+            // round succeeds iff deficit ≤ 0, encoded as "infinitely many".
+            return if deficit == 0 { 0 } else { i64::MAX };
+        }
+        // A good worker contributes ℓ_g instead of ℓ_b... no: in the paper's
+        // accounting a ℓ_g-loaded worker contributes ℓ_g iff good and 0
+        // otherwise (all-or-nothing returns, §2.1), while ℓ_b-loaded workers
+        // always finish. So the first ĩ workers contribute ℓ_g per good one.
+        if self.lg == 0 {
+            return i64::MAX;
+        }
+        ((deficit + self.lg - 1) / self.lg) as i64
+    }
+
+    /// Feasibility of eq. (7): total assigned load must reach K*.
+    pub fn feasible(&self, i_tilde: usize) -> bool {
+        i_tilde * self.lg + (self.n - i_tilde) * self.lb >= self.kstar
+    }
+}
+
+/// Success probability when the workers with probabilities `ps` are assigned
+/// ℓ_g and the other n−|ps| workers ℓ_b (eq. 8 / eq. 21).
+pub fn success_probability(params: &LoadParams, ps_gg_loaded: &[f64]) -> f64 {
+    let i_tilde = ps_gg_loaded.len();
+    assert!(i_tilde <= params.n);
+    if !params.feasible(i_tilde) {
+        return 0.0;
+    }
+    let need = params.needed_good(i_tilde);
+    if need == i64::MAX {
+        return 0.0;
+    }
+    poisson_binomial_tail(ps_gg_loaded, need)
+}
+
+/// Result of the ĩ-search.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BestPrefix {
+    /// Optimal number of ℓ_g-loaded workers (i*_m in §3.2).
+    pub i_star: usize,
+    /// Estimated success probability P̂(i*).
+    pub prob: f64,
+    /// P̂(ĩ) for every ĩ (index = ĩ), for diagnostics/benches.
+    pub all: Vec<f64>,
+}
+
+/// Reusable scratch for the prefix search — the allocator runs every round
+/// on the master's hot path, so the DP/argmax buffers are recycled instead
+/// of reallocated (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct PrefixScratch {
+    dist: Vec<f64>,
+    all: Vec<f64>,
+}
+
+/// Linear search over ĩ = 0..n with ONE incremental DP (Lemma 4.5 + §3.2).
+///
+/// `ps_desc` must be sorted descending (largest p_{g,i} first); the optimal
+/// cardinality-ĩ set is then the prefix, so the DP extends worker by worker
+/// and each step only recomputes the O(n) tail sum.
+pub fn best_prefix(params: &LoadParams, ps_desc: &[f64]) -> BestPrefix {
+    let mut scratch = PrefixScratch::default();
+    let (i_star, prob) = best_prefix_scratch(params, ps_desc, &mut scratch);
+    BestPrefix {
+        i_star,
+        prob,
+        all: scratch.all,
+    }
+}
+
+/// Allocation-free core of [`best_prefix`]: returns (i*, P̂(i*)), leaving the
+/// full P̂(ĩ) series in `scratch.all`.
+pub fn best_prefix_scratch(
+    params: &LoadParams,
+    ps_desc: &[f64],
+    scratch: &mut PrefixScratch,
+) -> (usize, f64) {
+    assert_eq!(ps_desc.len(), params.n);
+    debug_assert!(
+        ps_desc.windows(2).all(|w| w[0] >= w[1]),
+        "probabilities must be sorted descending"
+    );
+    let n = params.n;
+    // NOTE (EXPERIMENTS.md §Perf): a cap-censored DP (absorbing sink above
+    // the maximal needed_good) was tried and REVERTED — at n = 15 the extra
+    // sink bookkeeping and dynamic loop bound cost more than the saved
+    // flops (0.88M vs 1.03M sim rounds/s). The exact triangle DP below is
+    // the fastest variant measured.
+    scratch.dist.clear();
+    scratch.dist.resize(n + 1, 0.0);
+    scratch.all.clear();
+    let dist = &mut scratch.dist;
+    let all = &mut scratch.all;
+    dist[0] = 1.0;
+
+    // ĩ = 0: everyone ℓ_b.
+    all.push(if params.feasible(0) { 1.0 } else { 0.0 });
+
+    for (i, &p) in ps_desc.iter().enumerate() {
+        // Extend DP with worker i (prefix size i+1).
+        for c in (0..=i).rev() {
+            let d = dist[c];
+            dist[c + 1] += d * p;
+            dist[c] = d * (1.0 - p);
+        }
+        let i_tilde = i + 1;
+        let prob = if !params.feasible(i_tilde) {
+            0.0
+        } else {
+            match params.needed_good(i_tilde) {
+                i64::MAX => 0.0,
+                need if need <= 0 => 1.0,
+                need => dist[need as usize..=i_tilde].iter().sum(),
+            }
+        };
+        all.push(prob);
+    }
+
+    // argmax over ĩ; ties resolved toward the smallest ĩ (less load moved).
+    let (mut i_star, mut best) = (0usize, all[0]);
+    for (i, &p) in all.iter().enumerate() {
+        if p > best + 1e-15 {
+            best = p;
+            i_star = i;
+        }
+    }
+    (i_star, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force tail by enumerating all 2^n outcomes.
+    fn tail_brute(ps: &[f64], a: i64) -> f64 {
+        let n = ps.len();
+        let mut total = 0.0;
+        for mask in 0..(1u32 << n) {
+            let mut prob = 1.0;
+            let mut count = 0i64;
+            for (i, &p) in ps.iter().enumerate() {
+                if mask >> i & 1 == 1 {
+                    prob *= p;
+                    count += 1;
+                } else {
+                    prob *= 1.0 - p;
+                }
+            }
+            if count >= a {
+                total += prob;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn tail_matches_bruteforce() {
+        let ps = [0.9, 0.5, 0.3, 0.8, 0.1, 0.65];
+        for a in -1..=7 {
+            let dp = poisson_binomial_tail(&ps, a);
+            let bf = tail_brute(&ps, a);
+            assert!((dp - bf).abs() < 1e-12, "a={a}: {dp} vs {bf}");
+        }
+    }
+
+    #[test]
+    fn tail_edges() {
+        assert_eq!(poisson_binomial_tail(&[], 0), 1.0);
+        assert_eq!(poisson_binomial_tail(&[], 1), 0.0);
+        assert_eq!(poisson_binomial_tail(&[0.5; 4], 0), 1.0);
+        assert_eq!(poisson_binomial_tail(&[1.0; 4], 4), 1.0);
+        assert_eq!(poisson_binomial_tail(&[0.0; 4], 1), 0.0);
+    }
+
+    #[test]
+    fn paper_fig3_load_params() {
+        // §6.1: μ_g=10, μ_b=3, d=1, r=10, K*=99, n=15.
+        let p = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+        assert_eq!((p.lg, p.lb), (10, 3));
+        assert!(!p.is_trivial()); // 45 < 99
+        // w(ĩ) = ⌈(99 − (15−ĩ)·3)/10⌉
+        assert_eq!(p.needed_good(8), ((99 - 7 * 3) + 9) / 10); // ⌈78/10⌉ = 8
+        assert_eq!(p.needed_good(8), 8);
+        assert!(p.feasible(8)); // 80 + 21 = 101 ≥ 99
+        assert!(!p.feasible(7)); // 70 + 24 = 94 < 99
+    }
+
+    #[test]
+    fn success_prob_zero_when_infeasible() {
+        let p = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+        assert_eq!(success_probability(&p, &[0.9; 7]), 0.0);
+        assert!(success_probability(&p, &[0.9; 8]) > 0.0);
+    }
+
+    #[test]
+    fn best_prefix_matches_direct_scan() {
+        let p = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+        let mut ps: Vec<f64> = (0..15).map(|i| 0.95 - 0.05 * i as f64).collect();
+        ps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let bp = best_prefix(&p, &ps);
+        // Direct recomputation of every P̂(ĩ) through success_probability.
+        for i in 0..=15 {
+            let direct = success_probability(&p, &ps[..i]);
+            assert!(
+                (bp.all[i] - direct).abs() < 1e-12,
+                "ĩ={i}: {} vs {direct}",
+                bp.all[i]
+            );
+        }
+        assert!(bp.prob > 0.0);
+        assert_eq!(
+            bp.i_star,
+            (0..=15)
+                .max_by(|&a, &b| bp.all[a].partial_cmp(&bp.all[b]).unwrap())
+                .unwrap()
+        );
+    }
+
+    #[test]
+    fn trivial_case_prefers_zero() {
+        // K* ≤ n·ℓ_b (footnote 2): all-ℓ_b succeeds with probability 1.
+        let p = LoadParams::from_rates(10, 10, 20, 10.0, 3.0, 1.0);
+        assert!(p.is_trivial());
+        let bp = best_prefix(&p, &[0.5; 10]);
+        assert_eq!(bp.i_star, 0);
+        assert_eq!(bp.prob, 1.0);
+    }
+
+    #[test]
+    fn lg_equals_lb_degenerate() {
+        // r ≤ ⌊μ_b d⌋ ⇒ ℓ_g = ℓ_b = r: loading "more" is impossible.
+        let p = LoadParams::from_rates(5, 3, 14, 10.0, 4.0, 1.0);
+        assert_eq!((p.lg, p.lb), (3, 3));
+        let bp = best_prefix(&p, &[0.9, 0.8, 0.7, 0.6, 0.5]);
+        assert_eq!(bp.prob, 1.0); // 5·3 = 15 ≥ 14: trivially fine
+    }
+
+    #[test]
+    fn more_good_workers_never_hurts() {
+        // P̂ restricted to feasible ĩ is monotone in each p: spot-check by
+        // raising one probability.
+        let p = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+        let lo = vec![0.5; 15];
+        let mut hi = lo.clone();
+        hi[0] = 0.9;
+        let b_lo = best_prefix(&p, &lo);
+        let b_hi = best_prefix(&p, &hi);
+        assert!(b_hi.prob >= b_lo.prob - 1e-12);
+    }
+
+    #[test]
+    fn needed_good_zero_load_guard() {
+        let p = LoadParams::new(4, 10, 0, 0);
+        assert_eq!(p.needed_good(2), i64::MAX);
+        let bp = best_prefix(&p, &[0.9, 0.8, 0.7, 0.6]);
+        assert_eq!(bp.prob, 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Request arrival process (paper §6.2): inter-arrival time is
+//! shift-exponential — a constant T_c plus an exponential with mean λ.
+//!
+//! On burstable instances the gap matters: CPU credits accrue while idle, so
+//! larger λ (sparser requests) pushes workers toward the good state — exactly
+//! the λ ∈ {10, 30} contrast in the paper's six EC2 scenarios.
+
+use crate::util::rng::Rng;
+
+/// Inter-arrival process for computation requests.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Back-to-back rounds (the Fig.-3 numerical study).
+    Fixed(f64),
+    /// T_c + Exp(λ) (the Fig.-4 EC2 scenarios, T_c = 30).
+    ShiftExponential { shift: f64, mean: f64 },
+}
+
+impl Arrivals {
+    pub fn shift_exp(shift: f64, mean: f64) -> Self {
+        assert!(shift >= 0.0 && mean >= 0.0);
+        Arrivals::ShiftExponential { shift, mean }
+    }
+
+    /// Sample the idle gap before the next request.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Arrivals::Fixed(gap) => gap,
+            Arrivals::ShiftExponential { shift, mean } => shift + rng.exp(mean),
+        }
+    }
+
+    /// Expected gap.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Arrivals::Fixed(gap) => gap,
+            Arrivals::ShiftExponential { shift, mean } => shift + mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let a = Arrivals::Fixed(2.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(a.sample(&mut rng), 2.0);
+        }
+        assert_eq!(a.mean(), 2.0);
+    }
+
+    #[test]
+    fn shift_exp_mean_and_support() {
+        let a = Arrivals::shift_exp(30.0, 10.0);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = a.sample(&mut rng);
+            assert!(x >= 30.0);
+            sum += x;
+        }
+        assert!((sum / n as f64 - 40.0).abs() < 0.2);
+        assert_eq!(a.mean(), 40.0);
+    }
+}

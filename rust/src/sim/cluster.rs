@@ -1,0 +1,230 @@
+//! Simulated worker pool: per-worker state processes + round outcomes.
+
+use crate::markov::chain::{MarkovWorker, TwoState};
+use crate::markov::credit::CreditCpu;
+use crate::markov::{StateProcess, WState};
+use crate::util::rng::Rng;
+
+/// Worker speed model shared by all workers of a cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Speeds {
+    /// Evaluations per second in the good state.
+    pub mu_g: f64,
+    /// Evaluations per second in the bad state.
+    pub mu_b: f64,
+}
+
+impl Speeds {
+    pub fn rate(&self, s: WState) -> f64 {
+        match s {
+            WState::Good => self.mu_g,
+            WState::Bad => self.mu_b,
+        }
+    }
+}
+
+/// One worker's backing state process.
+pub enum WorkerProcess {
+    Markov(MarkovWorker),
+    Credit(CreditCpu),
+}
+
+impl StateProcess for WorkerProcess {
+    fn next_state(&mut self, rng: &mut Rng, gap_secs: f64) -> WState {
+        match self {
+            WorkerProcess::Markov(m) => m.next_state(rng, gap_secs),
+            WorkerProcess::Credit(c) => c.next_state(rng, gap_secs),
+        }
+    }
+}
+
+/// Outcome of one simulated round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// True state of each worker during the round.
+    pub states: Vec<WState>,
+    /// Whether each worker returned all its results by the deadline.
+    pub completed: Vec<bool>,
+    /// Each worker's completion time for its full load (may exceed d).
+    pub finish_times: Vec<f64>,
+}
+
+/// The simulated cluster: n workers with state processes + speeds.
+pub struct SimCluster {
+    workers: Vec<WorkerProcess>,
+    pub speeds: Speeds,
+    rng: Rng,
+}
+
+impl SimCluster {
+    /// Homogeneous Markov cluster (the Fig.-3 setting).
+    pub fn markov(n: usize, chain: TwoState, speeds: Speeds, seed: u64) -> Self {
+        SimCluster {
+            workers: (0..n)
+                .map(|_| WorkerProcess::Markov(MarkovWorker::new(chain)))
+                .collect(),
+            speeds,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Heterogeneous Markov cluster.
+    pub fn markov_heterogeneous(chains: &[TwoState], speeds: Speeds, seed: u64) -> Self {
+        SimCluster {
+            workers: chains
+                .iter()
+                .map(|&c| WorkerProcess::Markov(MarkovWorker::new(c)))
+                .collect(),
+            speeds,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Credit-model cluster (the Fig.-4 / EC2 analog). Initial credits are
+    /// drawn uniformly in [0, cap] so workers start desynchronized.
+    pub fn credit(n: usize, template: CreditCpu, speeds: Speeds, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let workers = (0..n)
+            .map(|_| {
+                let init = rng.f64() * template.cap;
+                WorkerProcess::Credit(template.clone().with_credits(init))
+            })
+            .collect();
+        SimCluster {
+            workers,
+            speeds,
+            rng,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Advance all workers by one round after an idle gap of `gap_secs`.
+    pub fn advance(&mut self, gap_secs: f64) -> Vec<WState> {
+        let mut states = Vec::with_capacity(self.workers.len());
+        self.advance_into(gap_secs, &mut states);
+        states
+    }
+
+    /// Allocation-free [`Self::advance`]: refills `states` in place.
+    pub fn advance_into(&mut self, gap_secs: f64, states: &mut Vec<WState>) {
+        let rng = &mut self.rng;
+        states.clear();
+        states.extend(self.workers.iter_mut().map(|w| w.next_state(rng, gap_secs)));
+    }
+
+    /// Allocation-free completion check: `completed[i]` ⇔ worker i returns
+    /// all `loads[i]` evaluations by the deadline (same epsilon convention
+    /// as [`Self::outcome`]).
+    pub fn completed_into(
+        &self,
+        states: &[WState],
+        loads: &[usize],
+        d: f64,
+        completed: &mut Vec<bool>,
+    ) {
+        completed.clear();
+        completed.extend(states.iter().zip(loads).map(|(&s, &l)| {
+            let rate = self.speeds.rate(s);
+            l == 0 || (rate > 0.0 && l as f64 <= rate * d * (1.0 + 1e-9))
+        }));
+    }
+
+    /// Compute the round outcome for the given loads/states/deadline.
+    /// Completion uses a tiny epsilon so ℓ_b = μ_b·d finishes exactly at d
+    /// (the paper's convention — ℓ_b-loaded workers always make it).
+    pub fn outcome(&self, states: &[WState], loads: &[usize], d: f64) -> RoundOutcome {
+        assert_eq!(states.len(), loads.len());
+        let finish_times: Vec<f64> = states
+            .iter()
+            .zip(loads)
+            .map(|(&s, &l)| {
+                let rate = self.speeds.rate(s);
+                if l == 0 {
+                    0.0
+                } else if rate <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    l as f64 / rate
+                }
+            })
+            .collect();
+        let completed = finish_times.iter().map(|&t| t <= d * (1.0 + 1e-9)).collect();
+        RoundOutcome {
+            states: states.to_vec(),
+            completed,
+            finish_times,
+        }
+    }
+
+    /// Evaluations each worker completes BY the deadline (streaming-results
+    /// extension; paper semantics use `outcome` instead).
+    pub fn partial_progress(&self, states: &[WState], loads: &[usize], d: f64) -> Vec<usize> {
+        states
+            .iter()
+            .zip(loads)
+            .map(|(&s, &l)| ((self.speeds.rate(s) * d) as usize).min(l))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn speeds() -> Speeds {
+        Speeds {
+            mu_g: 10.0,
+            mu_b: 3.0,
+        }
+    }
+
+    #[test]
+    fn outcome_matches_paper_load_semantics() {
+        let cl = SimCluster::markov(3, TwoState::new(0.8, 0.8), speeds(), 1);
+        use WState::{Bad as B, Good as G};
+        // d=1: ℓ=10 finishes iff good; ℓ=3 always finishes (3/3 = 1 ≤ 1).
+        let out = cl.outcome(&[G, B, B], &[10, 10, 3], 1.0);
+        assert_eq!(out.completed, vec![true, false, true]);
+        assert!((out.finish_times[0] - 1.0).abs() < 1e-12);
+        assert!((out.finish_times[1] - 10.0 / 3.0).abs() < 1e-12);
+        assert!((out.finish_times[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_load_finishes_instantly() {
+        let cl = SimCluster::markov(1, TwoState::new(0.5, 0.5), speeds(), 2);
+        let out = cl.outcome(&[WState::Bad], &[0], 1.0);
+        assert!(out.completed[0]);
+        assert_eq!(out.finish_times[0], 0.0);
+    }
+
+    #[test]
+    fn advance_gives_n_states_and_is_deterministic_per_seed() {
+        let mut a = SimCluster::markov(5, TwoState::new(0.7, 0.4), speeds(), 42);
+        let mut b = SimCluster::markov(5, TwoState::new(0.7, 0.4), speeds(), 42);
+        for _ in 0..50 {
+            assert_eq!(a.advance(0.0), b.advance(0.0));
+        }
+    }
+
+    #[test]
+    fn partial_progress_caps_at_load_and_speed() {
+        let cl = SimCluster::markov(2, TwoState::new(0.5, 0.5), speeds(), 3);
+        use WState::{Bad as B, Good as G};
+        let p = cl.partial_progress(&[G, B], &[7, 10], 1.0);
+        assert_eq!(p, vec![7, 3]); // good: capped by load; bad: 3 evals max
+    }
+
+    #[test]
+    fn credit_cluster_desynchronized_start() {
+        let template = CreditCpu::t2_micro(0.0);
+        let mut cl = SimCluster::credit(10, template, speeds(), 7);
+        let states = cl.advance(0.0);
+        // Not all identical with high probability (uniform credits).
+        let goods = states.iter().filter(|s| s.is_good()).count();
+        assert!(goods > 0 && goods < 10, "goods={goods}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Timely computation throughput (Definition 2.1) and run diagnostics.
+
+/// Accumulates per-round success indicators N_m(d) and derived series.
+#[derive(Clone, Debug, Default)]
+pub struct ThroughputMeter {
+    successes: u64,
+    rounds: u64,
+    /// Cumulative throughput sampled every `sample_every` rounds (a "figure
+    /// series" — the x-axis of the convergence plots).
+    pub series: Vec<(u64, f64)>,
+    sample_every: u64,
+}
+
+impl ThroughputMeter {
+    pub fn new(sample_every: u64) -> Self {
+        ThroughputMeter {
+            sample_every: sample_every.max(1),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, success: bool) {
+        self.rounds += 1;
+        self.successes += u64::from(success);
+        if self.rounds % self.sample_every == 0 {
+            self.series.push((self.rounds, self.throughput()));
+        }
+    }
+
+    /// R(d, η) = Σ N_m(d) / M.
+    pub fn throughput(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.successes as f64 / self.rounds as f64
+        }
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn successes(&self) -> u64 {
+        self.successes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_is_success_fraction() {
+        let mut m = ThroughputMeter::new(2);
+        for i in 0..10 {
+            m.push(i % 2 == 0);
+        }
+        assert_eq!(m.rounds(), 10);
+        assert_eq!(m.successes(), 5);
+        assert!((m.throughput() - 0.5).abs() < 1e-12);
+        assert_eq!(m.series.len(), 5);
+        assert_eq!(m.series.last().unwrap().0, 10);
+    }
+
+    #[test]
+    fn empty_meter_is_zero() {
+        let m = ThroughputMeter::new(10);
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Round-based cluster simulator (the Fig.-3 numerical study and the
+//! substrate under the Fig.-4 analog).
+//!
+//! The paper's system is round-synchronous: one computation request per
+//! round, deadline d within the round. Given each worker's state (from
+//! [`crate::markov`]) speeds are deterministic, so a round's outcome is a
+//! pure function of (states, loads) — no event queue needed; what matters is
+//! the state dynamics, the allocation policy and the decodability check.
+//!
+//! - [`cluster`] — worker state evolution + round outcome computation.
+//! - [`arrivals`] — the shift-exponential request arrival process (§6.2).
+//! - [`metrics`] — timely computation throughput (Definition 2.1) + series.
+//! - [`runner`] — the strategy/cluster driver loop.
+//! - [`scenarios`] — the paper's Fig.-3 and Fig.-4 scenario registry.
+
+pub mod arrivals;
+pub mod cluster;
+pub mod metrics;
+pub mod runner;
+pub mod scenarios;

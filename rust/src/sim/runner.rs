@@ -1,0 +1,287 @@
+//! The simulation driver: strategy × cluster × coding scheme → throughput.
+
+use super::arrivals::Arrivals;
+use super::cluster::SimCluster;
+use super::metrics::ThroughputMeter;
+use crate::coding::scheme::CodingScheme;
+use crate::markov::WState;
+use crate::scheduler::strategy::Strategy;
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+
+/// What the master can learn from a round. `Full` is the paper's setting:
+/// every worker's completion time reveals its state (even a missed deadline
+/// does — only a bad worker misses). `Censored` is the honest variant for
+/// zero-load workers: ℓ_i = 0 completes instantly in either state, so those
+/// workers reveal nothing and the estimator must skip them (this is what the
+/// exec layer does too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Observability {
+    Full,
+    Censored,
+}
+
+/// Round-return semantics: the paper's all-or-nothing, or the streaming
+/// extension where partial results count toward decodability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReturnModel {
+    AllOrNothing,
+    Streaming,
+}
+
+/// Simulation run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub rounds: u64,
+    pub deadline: f64,
+    pub arrivals: Arrivals,
+    pub observability: Observability,
+    pub returns: ReturnModel,
+    /// Sample the cumulative-throughput series every this many rounds.
+    pub sample_every: u64,
+}
+
+impl RunConfig {
+    pub fn simple(rounds: u64, deadline: f64) -> Self {
+        RunConfig {
+            rounds,
+            deadline,
+            arrivals: Arrivals::Fixed(0.0),
+            observability: Observability::Full,
+            returns: ReturnModel::AllOrNothing,
+            sample_every: u64::MAX,
+        }
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub strategy: &'static str,
+    pub throughput: f64,
+    pub rounds: u64,
+    pub successes: u64,
+    pub series: Vec<(u64, f64)>,
+    /// Mean of the strategy's own estimated success probability (NaN-free).
+    pub mean_est_success: f64,
+    /// Mean fraction of workers in the good state (sanity vs stationary).
+    pub mean_good_fraction: f64,
+}
+
+/// Run `strategy` against `cluster` for `cfg.rounds` rounds.
+pub fn run(
+    strategy: &mut dyn Strategy,
+    cluster: &mut SimCluster,
+    scheme: &CodingScheme,
+    cfg: &RunConfig,
+    seed: u64,
+) -> RunResult {
+    let mut rng = Rng::new(seed);
+    let mut meter = ThroughputMeter::new(cfg.sample_every);
+    let mut est = Welford::default();
+    let mut good_frac = Welford::default();
+    let n = cluster.n();
+
+    // Hot-loop buffers, reused across rounds (EXPERIMENTS.md §Perf).
+    let mut states: Vec<WState> = Vec::with_capacity(n);
+    let mut completed: Vec<bool> = Vec::with_capacity(n);
+    let mut observed: Vec<Option<WState>> = Vec::with_capacity(n);
+
+    for _ in 0..cfg.rounds {
+        let gap = cfg.arrivals.sample(&mut rng);
+        cluster.advance_into(gap, &mut states);
+        let alloc = strategy.allocate(&mut rng);
+        debug_assert_eq!(alloc.loads.len(), n);
+
+        let success = match cfg.returns {
+            ReturnModel::AllOrNothing => {
+                cluster.completed_into(&states, &alloc.loads, cfg.deadline, &mut completed);
+                scheme.round_success(&alloc.loads, &completed)
+            }
+            ReturnModel::Streaming => {
+                let progress = cluster.partial_progress(&states, &alloc.loads, cfg.deadline);
+                let mut received = Vec::new();
+                for (i, &done) in progress.iter().enumerate() {
+                    received.extend(scheme.assigned_chunks(i, done));
+                }
+                scheme.is_decodable(&received)
+            }
+        };
+        meter.push(success);
+        if alloc.est_success.is_finite() {
+            est.push(alloc.est_success);
+        }
+        good_frac.push(states.iter().filter(|s| s.is_good()).count() as f64 / n as f64);
+
+        observed.clear();
+        match cfg.observability {
+            Observability::Full => observed.extend(states.iter().map(|&s| Some(s))),
+            Observability::Censored => observed.extend(
+                states
+                    .iter()
+                    .zip(&alloc.loads)
+                    .map(|(&s, &l)| if l == 0 { None } else { Some(s) }),
+            ),
+        };
+        strategy.observe(&observed);
+    }
+
+    RunResult {
+        strategy: strategy.name(),
+        throughput: meter.throughput(),
+        rounds: meter.rounds(),
+        successes: meter.successes(),
+        series: meter.series.clone(),
+        mean_est_success: est.mean(),
+        mean_good_fraction: good_frac.mean(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::threshold::Geometry;
+    use crate::markov::chain::TwoState;
+    use crate::scheduler::lea::Lea;
+    use crate::scheduler::oracle::Oracle;
+    use crate::scheduler::static_strategy::StaticStrategy;
+    use crate::scheduler::success::LoadParams;
+    use crate::sim::cluster::Speeds;
+
+    fn setup(seed: u64) -> (CodingScheme, LoadParams, SimCluster) {
+        let geo = Geometry {
+            n: 15,
+            r: 10,
+            k: 50,
+            deg_f: 2,
+        };
+        let scheme = CodingScheme::for_geometry(geo);
+        let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+        let cluster = SimCluster::markov(
+            15,
+            TwoState::new(0.8, 0.8),
+            Speeds {
+                mu_g: 10.0,
+                mu_b: 3.0,
+            },
+            seed,
+        );
+        (scheme, params, cluster)
+    }
+
+    #[test]
+    fn lea_beats_static_in_scenario_1() {
+        // The paper's headline comparison at small scale (5k rounds).
+        let (scheme, params, mut cl1) = setup(100);
+        let mut lea = Lea::new(params);
+        let cfg = RunConfig::simple(5000, 1.0);
+        let r_lea = run(&mut lea, &mut cl1, &scheme, &cfg, 1);
+
+        let (_, _, mut cl2) = setup(100); // identical state sequence
+        let pi = vec![TwoState::new(0.8, 0.8).stationary_good(); 15];
+        let mut st = StaticStrategy::stationary(params, pi);
+        let r_st = run(&mut st, &mut cl2, &scheme, &cfg, 1);
+
+        assert!(
+            r_lea.throughput > r_st.throughput * 1.2,
+            "LEA {} vs static {}",
+            r_lea.throughput,
+            r_st.throughput
+        );
+    }
+
+    #[test]
+    fn oracle_upper_bounds_lea_and_lea_converges() {
+        let (scheme, params, mut cl1) = setup(200);
+        let cfg = RunConfig::simple(20_000, 1.0);
+        let mut lea = Lea::new(params);
+        let r_lea = run(&mut lea, &mut cl1, &scheme, &cfg, 2);
+
+        let (_, _, mut cl2) = setup(200);
+        let mut oracle = Oracle::new(params, vec![TwoState::new(0.8, 0.8); 15]);
+        let r_or = run(&mut oracle, &mut cl2, &scheme, &cfg, 2);
+
+        // Theorem 5.1: R_LEA → R*; with 20k rounds and the same state
+        // sequence they should be within a few percent, with oracle ≥ LEA
+        // up to sampling noise.
+        assert!(
+            r_or.throughput >= r_lea.throughput - 0.02,
+            "oracle {} vs LEA {}",
+            r_or.throughput,
+            r_lea.throughput
+        );
+        assert!(
+            (r_or.throughput - r_lea.throughput).abs() < 0.05,
+            "LEA should converge: oracle {} vs LEA {}",
+            r_or.throughput,
+            r_lea.throughput
+        );
+    }
+
+    #[test]
+    fn good_fraction_matches_stationary() {
+        let (scheme, params, mut cl) = setup(300);
+        let mut lea = Lea::new(params);
+        let cfg = RunConfig::simple(20_000, 1.0);
+        let r = run(&mut lea, &mut cl, &scheme, &cfg, 3);
+        assert!((r.mean_good_fraction - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn streaming_returns_weakly_improve() {
+        let (scheme, params, mut cl1) = setup(400);
+        let mut lea1 = Lea::new(params);
+        let mut cfg = RunConfig::simple(5000, 1.0);
+        let all = run(&mut lea1, &mut cl1, &scheme, &cfg, 4);
+
+        let (_, _, mut cl2) = setup(400);
+        let mut lea2 = Lea::new(params);
+        cfg.returns = ReturnModel::Streaming;
+        let streaming = run(&mut lea2, &mut cl2, &scheme, &cfg, 4);
+        assert!(
+            streaming.throughput >= all.throughput - 1e-12,
+            "streaming {} < all-or-nothing {}",
+            streaming.throughput,
+            all.throughput
+        );
+    }
+
+    #[test]
+    fn censored_observability_still_learns() {
+        // Geometry with ℓ_b = 0 so zero-loaded workers genuinely reveal
+        // nothing; LEA must still learn from the loaded ones and stay close
+        // to its fully-observed performance.
+        let geo = Geometry {
+            n: 15,
+            r: 2,
+            k: 8,
+            deg_f: 2,
+        };
+        let scheme = CodingScheme::for_geometry(geo);
+        let params = LoadParams::from_rates(15, 2, scheme.kstar(), 2.0, 0.5, 1.0);
+        assert_eq!(params.lb, 0);
+        let speeds = Speeds {
+            mu_g: 2.0,
+            mu_b: 0.5,
+        };
+        let chain = TwoState::new(0.8, 0.8);
+
+        let mut cl1 = SimCluster::markov(15, chain, speeds, 500);
+        let mut lea1 = Lea::new(params);
+        let mut cfg = RunConfig::simple(10_000, 1.0);
+        cfg.observability = Observability::Censored;
+        let censored = run(&mut lea1, &mut cl1, &scheme, &cfg, 5);
+
+        let mut cl2 = SimCluster::markov(15, chain, speeds, 500);
+        let mut lea2 = Lea::new(params);
+        cfg.observability = Observability::Full;
+        let full = run(&mut lea2, &mut cl2, &scheme, &cfg, 5);
+
+        assert!(
+            censored.throughput > full.throughput * 0.8,
+            "censored LEA collapsed: {} vs full {}",
+            censored.throughput,
+            full.throughput
+        );
+    }
+}

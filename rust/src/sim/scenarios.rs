@@ -1,0 +1,297 @@
+//! The paper's experiment scenarios (§6.1 Fig. 3 and §6.2 Fig. 4).
+
+use crate::coding::scheme::CodingScheme;
+use crate::coding::threshold::Geometry;
+use crate::markov::chain::TwoState;
+use crate::markov::credit::CreditCpu;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::{SimCluster, Speeds};
+
+/// One §6.1 numerical scenario: homogeneous chain, known μ's, d = 1.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig3Scenario {
+    pub id: usize,
+    pub p_gg: f64,
+    pub p_bb: f64,
+    /// The stationary π_g the paper reports for the scenario.
+    pub pi_g: f64,
+}
+
+impl Fig3Scenario {
+    pub fn chain(&self) -> TwoState {
+        TwoState::new(self.p_gg, self.p_bb)
+    }
+}
+
+/// §6.1: n=15, r=10, k=50, quadratic f ⇒ K* = 99; μ = (10, 3); d = 1.
+pub fn fig3_geometry() -> Geometry {
+    Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    }
+}
+
+pub fn fig3_speeds() -> Speeds {
+    Speeds {
+        mu_g: 10.0,
+        mu_b: 3.0,
+    }
+}
+
+pub const FIG3_DEADLINE: f64 = 1.0;
+
+pub fn fig3_load_params() -> LoadParams {
+    let geo = fig3_geometry();
+    LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        FIG3_DEADLINE,
+    )
+}
+
+pub fn fig3_scheme() -> CodingScheme {
+    CodingScheme::for_geometry(fig3_geometry())
+}
+
+/// The four §6.1 scenarios.
+pub fn fig3_scenarios() -> Vec<Fig3Scenario> {
+    vec![
+        Fig3Scenario {
+            id: 1,
+            p_gg: 0.8,
+            p_bb: 0.8,
+            pi_g: 0.5,
+        },
+        Fig3Scenario {
+            id: 2,
+            p_gg: 0.8,
+            p_bb: 0.7,
+            pi_g: 0.6,
+        },
+        Fig3Scenario {
+            id: 3,
+            p_gg: 0.8,
+            p_bb: 0.533,
+            pi_g: 0.7,
+        },
+        Fig3Scenario {
+            id: 4,
+            p_gg: 0.9,
+            p_bb: 0.6,
+            pi_g: 0.8,
+        },
+    ]
+}
+
+pub fn fig3_cluster(s: &Fig3Scenario, seed: u64) -> SimCluster {
+    SimCluster::markov(fig3_geometry().n, s.chain(), fig3_speeds(), seed)
+}
+
+/// One §6.2 EC2 scenario: linear workload, credit-model workers,
+/// shift-exponential arrivals (T_c = 30, mean λ), deadline d.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Scenario {
+    pub id: usize,
+    /// Rows of each X_j (25/30/60 in the paper — sets per-eval cost).
+    pub rows: usize,
+    pub k: usize,
+    pub lambda: f64,
+    pub d: f64,
+    /// Evaluations/second when bursting (10× baseline, scaled to `rows`).
+    pub mu_g: f64,
+    pub mu_b: f64,
+}
+
+pub const FIG4_TC: f64 = 30.0;
+pub const FIG4_N: usize = 15;
+pub const FIG4_R: usize = 10;
+
+/// The six §6.2 scenarios. Speeds follow the paper's 10× burst ratio with
+/// per-evaluation cost proportional to rows(X_j); absolute values are chosen
+/// so ℓ_g = 10 = r when bursting the whole deadline and ℓ_b ∈ {1, 2}
+/// (the t2.micro baseline is ~10% of burst).
+pub fn fig4_scenarios() -> Vec<Fig4Scenario> {
+    vec![
+        Fig4Scenario {
+            id: 1,
+            rows: 25,
+            k: 120,
+            lambda: 10.0,
+            d: 2.5,
+            mu_g: 4.0,
+            mu_b: 0.8,
+        },
+        Fig4Scenario {
+            id: 2,
+            rows: 25,
+            k: 120,
+            lambda: 30.0,
+            d: 2.5,
+            mu_g: 4.0,
+            mu_b: 0.8,
+        },
+        Fig4Scenario {
+            id: 3,
+            rows: 30,
+            k: 100,
+            lambda: 10.0,
+            d: 3.0,
+            mu_g: 10.0 / 3.0,
+            mu_b: 2.0 / 3.0,
+        },
+        Fig4Scenario {
+            id: 4,
+            rows: 30,
+            k: 100,
+            lambda: 30.0,
+            d: 3.0,
+            mu_g: 10.0 / 3.0,
+            mu_b: 2.0 / 3.0,
+        },
+        Fig4Scenario {
+            id: 5,
+            rows: 60,
+            k: 50,
+            lambda: 10.0,
+            d: 6.0,
+            mu_g: 10.0 / 6.0,
+            mu_b: 1.0 / 6.0,
+        },
+        Fig4Scenario {
+            id: 6,
+            rows: 60,
+            k: 50,
+            lambda: 30.0,
+            d: 6.0,
+            mu_g: 10.0 / 6.0,
+            mu_b: 1.0 / 6.0,
+        },
+    ]
+}
+
+impl Fig4Scenario {
+    pub fn geometry(&self) -> Geometry {
+        Geometry {
+            n: FIG4_N,
+            r: FIG4_R,
+            k: self.k,
+            deg_f: 1, // linear workload f(X) = X·B
+        }
+    }
+
+    pub fn scheme(&self) -> CodingScheme {
+        CodingScheme::for_geometry(self.geometry())
+    }
+
+    pub fn speeds(&self) -> Speeds {
+        Speeds {
+            mu_g: self.mu_g,
+            mu_b: self.mu_b,
+        }
+    }
+
+    pub fn load_params(&self) -> LoadParams {
+        LoadParams::from_rates(
+            FIG4_N,
+            FIG4_R,
+            self.geometry().kstar(),
+            self.mu_g,
+            self.mu_b,
+            self.d,
+        )
+    }
+
+    pub fn arrivals(&self) -> Arrivals {
+        Arrivals::shift_exp(FIG4_TC, self.lambda)
+    }
+
+    /// Credit model tuned so the sustainable burst duty-cycle at λ = 10 is
+    /// ≈ 55% (Fig. 1's trace is roughly half-and-half), rising with λ.
+    pub fn credit_template(&self) -> CreditCpu {
+        let mean_gap = FIG4_TC + self.lambda.min(10.0); // anchor at λ=10
+        let busy = self.d;
+        let target_duty = 0.55;
+        CreditCpu {
+            earn_rate: target_duty * busy / (mean_gap + busy),
+            burn_rate: 1.0,
+            cap: 4.0 * busy, // dwell times of a few rounds, as in Fig. 1
+            busy_secs: busy,
+            jitter: 0.10,
+            credits: 0.0,
+            resume_frac: 0.5,
+            bursting: false,
+        }
+    }
+
+    pub fn cluster(&self, seed: u64) -> SimCluster {
+        SimCluster::credit(FIG4_N, self.credit_template(), self.speeds(), seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_kstar_is_99() {
+        assert_eq!(fig3_geometry().kstar(), 99);
+        let p = fig3_load_params();
+        assert_eq!((p.lg, p.lb), (10, 3));
+        assert!(!p.is_trivial());
+    }
+
+    #[test]
+    fn fig3_stationaries_match_paper() {
+        for s in fig3_scenarios() {
+            assert!(
+                (s.chain().stationary_good() - s.pi_g).abs() < 2e-3,
+                "scenario {}",
+                s.id
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_geometries_are_feasible_and_nontrivial() {
+        for s in fig4_scenarios() {
+            let g = s.geometry();
+            g.validate().unwrap();
+            let p = s.load_params();
+            assert!(p.lg > p.lb, "scenario {}: lg={} lb={}", s.id, p.lg, p.lb);
+            assert!(!p.is_trivial(), "scenario {} trivial", s.id);
+            // All-good workers must be able to succeed.
+            assert!(p.feasible(p.n), "scenario {} infeasible even all-ℓg", s.id);
+        }
+    }
+
+    #[test]
+    fn fig4_kstar_is_k_for_linear_f() {
+        // deg f = 1 ⇒ K* = k (eq. 15). The paper's text says "K* = 50" for
+        // all six scenarios, which only matches its k=50 scenarios; we follow
+        // the theory (documented in EXPERIMENTS.md).
+        for s in fig4_scenarios() {
+            assert_eq!(s.geometry().kstar(), s.k);
+        }
+    }
+
+    #[test]
+    fn fig4_loads_match_intended_regime() {
+        let loads: Vec<(usize, usize)> = fig4_scenarios()
+            .iter()
+            .map(|s| {
+                let p = s.load_params();
+                (p.lg, p.lb)
+            })
+            .collect();
+        assert_eq!(
+            loads,
+            vec![(10, 2), (10, 2), (10, 2), (10, 2), (10, 1), (10, 1)]
+        );
+    }
+}

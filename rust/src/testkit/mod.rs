@@ -1,0 +1,80 @@
+//! Property-test harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs from
+//! `gen`; on failure it reports the failing input's Debug form and the case
+//! index, so a failure is reproducible from the fixed seed. Generators are
+//! plain closures over [`crate::util::rng::Rng`].
+
+use crate::util::rng::Rng;
+
+/// Run a property over randomly generated cases. Panics (with the failing
+/// input) on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed at case {case} (seed {seed}):\n  input: {input:?}\n  {msg}");
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Uniform probability in [0, 1].
+    pub fn prob(rng: &mut Rng) -> f64 {
+        rng.f64()
+    }
+
+    /// Vector of probabilities.
+    pub fn prob_vec(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.f64()).collect()
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 payload vector in [-1, 1].
+    pub fn payload(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.f64() * 2.0 - 1.0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            1,
+            100,
+            |rng| rng.f64(),
+            |&x| ensure((0.0..1.0).contains(&x), "out of range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(2, 100, |rng| rng.below(10), |&x| ensure(x < 5, "too big"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain binaries (`harness = false`) that use this
+//! module: warm-up, repeated timed runs, mean ± std and ns/op reporting, plus
+//! paper-style result tables. Keep output stable and grep-friendly — the
+//! EXPERIMENTS.md numbers are copied from it.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Time `f` (which should perform ONE logical operation per call).
+///
+/// Runs a warm-up, then `samples` batches of `batch` calls, reporting the
+/// per-op mean and std across batches. `black_box` the inputs/outputs inside
+/// `f` where needed.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, batch: u64, mut f: F) -> BenchResult {
+    // Warm-up: one batch.
+    for _ in 0..batch {
+        f();
+    }
+    let mut per_op = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        per_op.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples as u64 * batch,
+        mean_ns: stats::mean(&per_op),
+        std_ns: stats::std(&per_op),
+    };
+    println!(
+        "bench {:<44} {:>12.1} ns/op  ±{:>9.1}  ({:>10.0} op/s)",
+        res.name,
+        res.mean_ns,
+        res.std_ns,
+        res.per_sec()
+    );
+    res
+}
+
+/// Prevent the optimizer from discarding a value (stable-safe black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a paper-style table: header + rows of (label, values).
+pub fn table(title: &str, columns: &[&str], rows: &[(String, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    print!("{:<28}", "");
+    for c in columns {
+        print!("{c:>16}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<28}");
+        for v in vals {
+            print!("{v:>16.4}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 3, 1000, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns >= 0.0);
+        assert_eq!(r.iters, 3000);
+        assert!(r.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn table_does_not_panic() {
+        table(
+            "demo",
+            &["LEA", "static"],
+            &[("scenario 1".into(), vec![0.9, 0.5])],
+        );
+    }
+}

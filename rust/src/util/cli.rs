@@ -1,0 +1,137 @@
+//! Tiny CLI parser (clap is unavailable offline).
+//!
+//! Grammar: `lea <subcommand> [--key value]... [--flag]...`
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand + string options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args(&["fig3", "--rounds", "5000", "--seed=7", "--quiet"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig3"));
+        assert_eq!(a.usize("rounds", 0).unwrap(), 5000);
+        assert_eq!(a.u64("seed", 0).unwrap(), 7);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&["fig1"]);
+        assert_eq!(a.usize("rounds", 42).unwrap(), 42);
+        assert_eq!(a.f64("d", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("out", "report.json"), "report.json");
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args(&["x", "--shift", "-3.5"]);
+        assert_eq!(a.f64("shift", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+        let a = args(&["x", "--n", "abc"]);
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["run", "--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize("n", 0).unwrap(), 3);
+    }
+}

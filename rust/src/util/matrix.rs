@@ -1,0 +1,192 @@
+//! Row-major dense matrices over f32/f64.
+//!
+//! Used by the exec layer (flattened chunk payloads, CPU fallback GEMMs when
+//! PJRT artifacts are not on disk) and by the coding tests. The f32 GEMM is
+//! the CPU mirror of the L1 Pallas kernel: blocked i-k-j loop order so the
+//! innermost loop is a contiguous AXPY (auto-vectorizes well).
+
+/// Row-major `rows x cols` matrix of f32 (the PJRT buffer dtype).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        MatF32 { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> MatF32 {
+        MatF32::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Blocked GEMM `self @ other` with ikj loop order (contiguous AXPY inner
+    /// loop). This is the CPU stand-in for the Pallas kernel.
+    pub fn matmul(&self, other: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, other.rows, "GEMM contraction mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = MatF32::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = self.data[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ v` for a column vector given as a slice.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        self.data
+            .chunks_exact(self.cols)
+            .map(|row| row.iter().zip(v).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &MatF32) -> MatF32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        MatF32 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &MatF32) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Naive reference GEMM used to validate the blocked one in tests.
+pub fn matmul_naive(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.rows);
+    MatF32::from_fn(a.rows, b.cols, |i, j| {
+        (0..a.cols).map(|kk| a.at(i, kk) * b.at(kk, j)).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, r: usize, c: usize) -> MatF32 {
+        MatF32::from_fn(r, c, |_, _| (rng.f64() * 2.0 - 1.0) as f32)
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (70, 130, 50)] {
+            let a = random(&mut rng, m, k);
+            let b = random(&mut rng, k, n);
+            let got = a.matmul(&b);
+            let want = matmul_naive(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(2);
+        let a = random(&mut rng, 12, 12);
+        assert!(a.matmul(&MatF32::eye(12)).max_abs_diff(&a) < 1e-6);
+        assert!(MatF32::eye(12).matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = random(&mut rng, 7, 11);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = random(&mut rng, 9, 6);
+        let v: Vec<f32> = (0..6).map(|_| rng.f64() as f32).collect();
+        let col = MatF32::from_vec(6, 1, v.clone());
+        let want = a.matmul(&col);
+        assert_eq!(a.matvec(&v), want.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_gemm_panics() {
+        let a = MatF32::zeros(2, 3);
+        let b = MatF32::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

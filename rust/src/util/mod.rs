@@ -1,0 +1,14 @@
+//! Shared infrastructure: deterministic PRNG, JSON, CLI parsing, statistics,
+//! dense matrices and the bench harness.
+//!
+//! The offline registry ships only the `xla` dependency chain, so the usual
+//! ecosystem crates (`rand`, `serde`, `clap`, `criterion`) are replaced by the
+//! small, fully-tested implementations in this module (DESIGN.md §4).
+
+pub mod bench_kit;
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod plot;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,129 @@
+//! ASCII line charts for terminal "figures" (convergence series, sweeps).
+//!
+//! Renders multiple named series on a shared y-axis; the experiment
+//! harnesses use it so `lea convergence`/`lea sweep` show the curve shapes
+//! the paper plots, not just tables.
+
+/// One named series of (x, y) points.
+pub struct Series<'a> {
+    pub name: &'a str,
+    pub points: &'a [(f64, f64)],
+    /// Glyph used for this series.
+    pub glyph: char,
+}
+
+/// Render series into a `height`-row, `width`-column chart with axis labels.
+pub fn chart(series: &[Series<'_>], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4);
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-300 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-300 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy;
+            grid[row][cx.min(width - 1)] = s.glyph;
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yval = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n{:>10} {:<width$.1}{:>8.1}\n",
+        "",
+        "-".repeat(width),
+        "",
+        x0,
+        x1,
+        width = width - 7
+    ));
+    for s in series {
+        out.push_str(&format!("{:>12}: {}\n", s.name, s.glyph));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let pts: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i * i) as f64)).collect();
+        let s = chart(
+            &[Series {
+                name: "quad",
+                points: &pts,
+                glyph: '#',
+            }],
+            60,
+            10,
+        );
+        assert!(s.contains('#'));
+        assert!(s.lines().count() >= 12);
+        // Highest y value appears on the first grid row.
+        assert!(s.lines().next().unwrap().contains('#'));
+    }
+
+    #[test]
+    fn handles_flat_and_empty() {
+        let flat = [(0.0, 1.0), (1.0, 1.0)];
+        let s = chart(
+            &[Series {
+                name: "flat",
+                points: &flat,
+                glyph: 'o',
+            }],
+            20,
+            4,
+        );
+        assert!(s.contains('o'));
+        assert_eq!(chart(&[], 20, 4), "(no data)\n");
+    }
+
+    #[test]
+    fn two_series_both_present() {
+        let a: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, 20.0 - i as f64)).collect();
+        let s = chart(
+            &[
+                Series {
+                    name: "up",
+                    points: &a,
+                    glyph: '#',
+                },
+                Series {
+                    name: "down",
+                    points: &b,
+                    glyph: 'o',
+                },
+            ],
+            40,
+            8,
+        );
+        assert!(s.contains('#') && s.contains('o'));
+    }
+}

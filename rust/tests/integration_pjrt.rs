@@ -1,0 +1,150 @@
+//! Integration over the PJRT runtime + exec layers. These tests require the
+//! AOT artifacts (`make artifacts`); without them they SKIP (print + return)
+//! so `cargo test` stays green on a fresh checkout.
+
+use timely_coded::exec::driver::{run_e2e, E2eConfig};
+use timely_coded::exec::master::Engine;
+use timely_coded::runtime::artifacts::Manifest;
+use timely_coded::runtime::client::Runtime;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::success::LoadParams;
+use timely_coded::util::matrix::MatF32;
+use timely_coded::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn params(cfg: &E2eConfig) -> LoadParams {
+    LoadParams::from_rates(
+        cfg.geometry.n,
+        cfg.geometry.r,
+        cfg.geometry.kstar(),
+        cfg.speeds.mu_g,
+        cfg.speeds.mu_b,
+        cfg.deadline,
+    )
+}
+
+/// The full coded pipeline on PJRT: encode → worker evals → decode must
+/// recover direct evaluation (checked inside the driver via verify_every).
+#[test]
+fn pjrt_e2e_pipeline_decodes_and_trains() {
+    let Some(m) = manifest() else { return };
+    let engine = match Engine::pjrt(&m) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: PJRT unavailable: {e:#}");
+            return;
+        }
+    };
+    let cfg = E2eConfig {
+        rounds: 50,
+        verify_every: 5,
+        ..E2eConfig::default()
+    };
+    let mut lea = Lea::new(params(&cfg));
+    let res = run_e2e(&cfg, &mut lea, engine).unwrap();
+    assert_eq!(res.engine, "pjrt");
+    assert!(res.successes > 5, "successes {}", res.successes);
+    // f32 Lagrange round-trip noise, relative to the initial gradient
+    // scale; golden-strided Chebyshev nodes keep the interpolation
+    // well-conditioned for any received subset (EXPERIMENTS.md
+    // §decode-precision).
+    assert!(
+        res.max_decode_error < 1e-2,
+        "relative decode error {}",
+        res.max_decode_error
+    );
+    assert!(res.final_loss < res.initial_loss);
+}
+
+/// PJRT and native engines must produce the same SUCCESS SEQUENCE for the
+/// same seed (numerics differ in f32 tails; scheduling outcomes must not).
+#[test]
+fn pjrt_and_native_schedules_agree() {
+    let Some(m) = manifest() else { return };
+    let engine = match Engine::pjrt(&m) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: PJRT unavailable: {e:#}");
+            return;
+        }
+    };
+    let cfg = E2eConfig {
+        rounds: 40,
+        verify_every: 0,
+        ..E2eConfig::default()
+    };
+    let mut lea1 = Lea::new(params(&cfg));
+    let pjrt = run_e2e(&cfg, &mut lea1, engine).unwrap();
+    let mut lea2 = Lea::new(params(&cfg));
+    let native = run_e2e(&cfg, &mut lea2, Engine::Native).unwrap();
+    assert_eq!(pjrt.successes, native.successes);
+    assert_eq!(pjrt.throughput, native.throughput);
+    // The trained weights agree to f32 GEMM tolerance: compare final loss.
+    assert!(
+        (pjrt.final_loss - native.final_loss).abs()
+            < 0.05 * native.final_loss.max(native.initial_loss),
+        "pjrt loss {} vs native {}",
+        pjrt.final_loss,
+        native.final_loss
+    );
+}
+
+/// Every artifact executes under the runtime and matches the native GEMM.
+#[test]
+fn all_artifacts_execute_and_match_native() {
+    let Some(m) = manifest() else { return };
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT client unavailable: {e:#}");
+            return;
+        }
+    };
+    let mut rng = Rng::new(9);
+    let mut rand_mat = |r: usize, c: usize| MatF32::from_fn(r, c, |_, _| (rng.f64() - 0.5) as f32);
+
+    // linear: X @ B
+    let e = m.entry("linear").unwrap();
+    let exe = rt.load(&e.file).unwrap();
+    let x = rand_mat(e.inputs[0][0], e.inputs[0][1]);
+    let b = rand_mat(e.inputs[1][0], e.inputs[1][1]);
+    let got = exe.run_mat(&[&x, &b], e.output[0], e.output[1]).unwrap();
+    assert!(got.max_abs_diff(&x.matmul(&b)) < 1e-3);
+
+    // encode / decode are GEMMs too.
+    for name in ["encode", "decode"] {
+        let e = m.entry(name).unwrap();
+        let exe = rt.load(&e.file).unwrap();
+        let a = rand_mat(e.inputs[0][0], e.inputs[0][1]);
+        let b = rand_mat(e.inputs[1][0], e.inputs[1][1]);
+        let got = exe.run_mat(&[&a, &b], e.output[0], e.output[1]).unwrap();
+        assert!(got.max_abs_diff(&a.matmul(&b)) < 1e-3, "{name}");
+    }
+}
+
+/// Artifact shapes in the manifest are mutually consistent with the
+/// geometry parameters (the exec layer depends on this contract).
+#[test]
+fn manifest_shape_contract() {
+    let Some(m) = manifest() else { return };
+    let p = &m.params;
+    let enc = m.entry("encode").unwrap();
+    assert_eq!(enc.inputs[0], vec![p.nr, p.k]);
+    assert_eq!(enc.inputs[1][0], p.k);
+    assert_eq!(enc.inputs[1][1], p.chunk_rows * (p.features + 1));
+    let dec = m.entry("decode").unwrap();
+    assert_eq!(dec.inputs[0], vec![p.k, p.kstar_quadratic]);
+    assert_eq!(dec.inputs[1], vec![p.kstar_quadratic, p.features]);
+    let grad = m.entry("gradient").unwrap();
+    assert_eq!(grad.inputs[0], vec![p.chunk_rows, p.features]);
+    assert_eq!(grad.output, vec![p.features, 1]);
+}

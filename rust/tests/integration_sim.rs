@@ -1,0 +1,340 @@
+//! Cross-module integration + property tests over the simulation stack.
+
+use timely_coded::coding::field::{CodeField, Fp};
+use timely_coded::coding::lagrange::LagrangeCode;
+use timely_coded::coding::scheme::CodingScheme;
+use timely_coded::coding::threshold::Geometry;
+use timely_coded::markov::chain::TwoState;
+use timely_coded::scheduler::allocation::{allocate, brute_force};
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::static_strategy::StaticStrategy;
+use timely_coded::scheduler::success::LoadParams;
+use timely_coded::sim::cluster::{SimCluster, Speeds};
+use timely_coded::sim::runner::{run, ReturnModel, RunConfig};
+use timely_coded::sim::scenarios::fig3_scenarios;
+use timely_coded::testkit::{ensure, forall, gen};
+use timely_coded::util::rng::Rng;
+
+/// Property: decode ∘ (f ∘ encode) ≡ f over GF(2^61−1) for random
+/// geometries, payload sizes, polynomial degrees and received subsets.
+#[test]
+fn property_exact_round_trip_random_geometries() {
+    forall(
+        11,
+        60,
+        |rng| {
+            let k = gen::size(rng, 2, 7);
+            let deg = gen::size(rng, 1, 3);
+            let kstar = (k - 1) * deg + 1;
+            let nr = kstar + gen::size(rng, 0, 6);
+            let dim = gen::size(rng, 1, 9);
+            let seed = rng.next_u64();
+            (k, deg, nr, dim, seed)
+        },
+        |&(k, deg, nr, dim, seed)| {
+            let mut rng = Rng::new(seed);
+            let code = LagrangeCode::<Fp>::new(k, nr);
+            let data: Vec<Vec<Fp>> = (0..k)
+                .map(|_| (0..dim).map(|_| Fp::new(rng.next_u64())).collect())
+                .collect();
+            let enc = code.encode(&data);
+            // f(X) = elementwise X^deg — a degree-`deg` polynomial.
+            let f = |c: &[Fp]| -> Vec<Fp> { c.iter().map(|&x| x.pow(deg as u64)).collect() };
+            let kstar = (k - 1) * deg + 1;
+            let pick = rng.sample_indices(nr, kstar);
+            let received: Vec<(usize, Vec<Fp>)> =
+                pick.iter().map(|&v| (v, f(&enc[v]))).collect();
+            let dec = code.decode(&received, deg).map_err(|e| e)?;
+            let want: Vec<Vec<Fp>> = data.iter().map(|c| f(c)).collect();
+            ensure(dec == want, "decode != direct evaluation")
+        },
+    );
+}
+
+/// Property: the Lemma-4.5 prefix search equals the exhaustive 2^n optimum
+/// for random geometries and probability vectors.
+#[test]
+fn property_prefix_search_is_optimal() {
+    forall(
+        13,
+        150,
+        |rng| {
+            let n = gen::size(rng, 3, 11);
+            let r = gen::size(rng, 1, 8);
+            let mu_b = rng.f64() * 3.0;
+            let mu_g = mu_b + 0.5 + rng.f64() * 7.0;
+            let d = 0.5 + rng.f64() * 1.5;
+            let max_total = n * (((mu_g * d) as usize).min(r));
+            if max_total == 0 {
+                return (0, 0, 0.0, 0.0, 0.0, 0, vec![]);
+            }
+            let kstar = gen::size(rng, 1, max_total);
+            let ps = gen::prob_vec(rng, n);
+            (n, r, mu_g, mu_b, d, kstar, ps)
+        },
+        |&(n, r, mu_g, mu_b, d, kstar, ref ps)| {
+            if n == 0 {
+                return Ok(());
+            }
+            let params = LoadParams::from_rates(n, r, kstar, mu_g, mu_b, d);
+            let a = allocate(&params, ps);
+            let (_, bf) = brute_force(&params, ps);
+            ensure(
+                (a.est_success - bf).abs() < 1e-9,
+                format!("prefix {} vs brute {}", a.est_success, bf),
+            )
+        },
+    );
+}
+
+/// Property: streaming returns never hurt relative to all-or-nothing
+/// (a partial result set is a superset situation).
+#[test]
+fn property_streaming_dominates_all_or_nothing() {
+    forall(
+        17,
+        12,
+        |rng| (rng.next_u64(), gen::size(rng, 2, 4)),
+        |&(seed, scenario_idx)| {
+            let s = fig3_scenarios()[scenario_idx % 4];
+            let geo = Geometry {
+                n: 15,
+                r: 10,
+                k: 50,
+                deg_f: 2,
+            };
+            let scheme = CodingScheme::for_geometry(geo);
+            let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+            let speeds = Speeds {
+                mu_g: 10.0,
+                mu_b: 3.0,
+            };
+            let mut cfg = RunConfig::simple(1500, 1.0);
+
+            let mut lea1 = Lea::new(params);
+            let mut cl1 = SimCluster::markov(15, s.chain(), speeds, seed);
+            let aon = run(&mut lea1, &mut cl1, &scheme, &cfg, seed);
+
+            cfg.returns = ReturnModel::Streaming;
+            let mut lea2 = Lea::new(params);
+            let mut cl2 = SimCluster::markov(15, s.chain(), speeds, seed);
+            let streaming = run(&mut lea2, &mut cl2, &scheme, &cfg, seed);
+            ensure(
+                streaming.throughput >= aon.throughput - 1e-12,
+                format!("streaming {} < aon {}", streaming.throughput, aon.throughput),
+            )
+        },
+    );
+}
+
+/// Determinism: identical seeds give identical runs end to end.
+#[test]
+fn runs_are_reproducible() {
+    let geo = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    };
+    let scheme = CodingScheme::for_geometry(geo);
+    let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+    let speeds = Speeds {
+        mu_g: 10.0,
+        mu_b: 3.0,
+    };
+    let chain = TwoState::new(0.8, 0.7);
+    let mk = || {
+        let mut lea = Lea::new(params);
+        let mut cl = SimCluster::markov(15, chain, speeds, 99);
+        run(
+            &mut lea,
+            &mut cl,
+            &scheme,
+            &RunConfig::simple(3000, 1.0),
+            7,
+        )
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.successes, b.successes);
+    assert_eq!(a.throughput, b.throughput);
+}
+
+/// Failure injection: a cluster that is all-bad forever yields zero
+/// throughput for every strategy (no allocation can reach K* = 99 > n·ℓ_b),
+/// and nothing panics.
+#[test]
+fn all_bad_cluster_never_succeeds() {
+    let geo = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    };
+    let scheme = CodingScheme::for_geometry(geo);
+    let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+    let speeds = Speeds {
+        mu_g: 10.0,
+        mu_b: 3.0,
+    };
+    // p_gg = 0, p_bb = 1: chain is absorbed in Bad.
+    let chain = TwoState::new(0.0, 1.0);
+    for strategy in 0..2 {
+        let mut cl = SimCluster::markov(15, chain, speeds, 1);
+        let cfg = RunConfig::simple(1000, 1.0);
+        let r = match strategy {
+            0 => {
+                let mut lea = Lea::new(params);
+                run(&mut lea, &mut cl, &scheme, &cfg, 2)
+            }
+            _ => {
+                let mut st = StaticStrategy::equal_prob(params);
+                run(&mut st, &mut cl, &scheme, &cfg, 2)
+            }
+        };
+        // Initial stationary draw may start a worker Good for round 1, but
+        // afterwards everything is Bad: at most a vanishing success count.
+        assert!(r.throughput < 0.01, "throughput {}", r.throughput);
+    }
+}
+
+/// An all-good cluster succeeds every round under LEA.
+#[test]
+fn all_good_cluster_always_succeeds() {
+    let geo = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    };
+    let scheme = CodingScheme::for_geometry(geo);
+    let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+    let chain = TwoState::new(1.0, 0.0); // always good
+    let mut cl = SimCluster::markov(
+        15,
+        chain,
+        Speeds {
+            mu_g: 10.0,
+            mu_b: 3.0,
+        },
+        1,
+    );
+    let mut lea = Lea::new(params);
+    let r = run(&mut lea, &mut cl, &scheme, &RunConfig::simple(500, 1.0), 2);
+    assert_eq!(r.successes, 500);
+}
+
+/// Property (Lemma 4.3, monotonicity): for a FIXED load vector, a smaller
+/// recovery threshold never lowers the success probability — checked
+/// empirically over random thresholds on the same simulated state sequence.
+#[test]
+fn property_success_monotone_in_threshold() {
+    use timely_coded::scheduler::oracle::Oracle;
+    forall(
+        23,
+        20,
+        |rng| {
+            let k1 = gen::size(rng, 50, 150);
+            let k2 = gen::size(rng, k1, 150);
+            (k1, k2, rng.next_u64())
+        },
+        |&(k1, k2, seed)| {
+            let geo = Geometry {
+                n: 15,
+                r: 10,
+                k: 50,
+                deg_f: 2,
+            };
+            let chain = TwoState::new(0.8, 0.7);
+            let speeds = Speeds {
+                mu_g: 10.0,
+                mu_b: 3.0,
+            };
+            let tp = |kstar: usize| {
+                // Same FIXED allocator for both thresholds (oracle tuned to
+                // the larger one) so only the decodability rule varies —
+                // the literal setting of Lemma 4.3.
+                let params = LoadParams::from_rates(15, 10, k2, 10.0, 3.0, 1.0);
+                let scheme = CodingScheme::counting(geo, kstar);
+                let mut or = Oracle::new(params, vec![chain; 15]);
+                run(
+                    &mut or,
+                    &mut SimCluster::markov(15, chain, speeds, seed),
+                    &scheme,
+                    &RunConfig::simple(800, 1.0),
+                    seed,
+                )
+                .throughput
+            };
+            ensure(
+                tp(k1) >= tp(k2) - 1e-12,
+                format!("K={k1} gave {} < K={k2} gave {}", tp(k1), tp(k2)),
+            )
+        },
+    );
+}
+
+/// Property: JSON writer/parser round-trips arbitrary machine-generated
+/// values (fuzz for the manifest/config/report path).
+#[test]
+fn property_json_round_trip_fuzz() {
+    use timely_coded::util::json::Json;
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.f64() * 2e6 - 1e6).round() / 16.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        29,
+        300,
+        |rng| gen_json(rng, 3),
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            ensure(&back == j, format!("round-trip mismatch: {text}"))
+        },
+    );
+}
+
+/// Cross-check the f64 and exact-field generator matrices agree on the
+/// rationals they share (integers mapped into both fields).
+#[test]
+fn f64_and_fp_encodings_agree_on_integer_data() {
+    let (k, nr) = (5, 12);
+    let code_f = LagrangeCode::<f64>::new(k, nr);
+    // Integer data; f64 encode then compare against exact rational result
+    // computed via Fp with the SAME alpha/beta points is not possible (the
+    // fields use different point sets), so instead check internal
+    // consistency: decoding the encoded chunks with deg_f = 1 returns the
+    // data in both fields.
+    let data_f: Vec<Vec<f64>> = (0..k)
+        .map(|j| (0..4).map(|t| (j * 7 + t * 3) as f64).collect())
+        .collect();
+    let enc = code_f.encode(&data_f);
+    let received: Vec<(usize, Vec<f64>)> = (0..k).map(|v| (v, enc[v].clone())).collect();
+    let dec = code_f.decode(&received, 1).unwrap();
+    for (a, b) in dec.iter().flatten().zip(data_f.iter().flatten()) {
+        assert!((a - b).abs() < 1e-8);
+    }
+
+    let code_p = LagrangeCode::<Fp>::new(k, nr);
+    let data_p: Vec<Vec<Fp>> = (0..k)
+        .map(|j| (0..4).map(|t| Fp::from_i64((j * 7 + t * 3) as i64)).collect())
+        .collect();
+    let enc_p = code_p.encode(&data_p);
+    let received_p: Vec<(usize, Vec<Fp>)> = (0..k).map(|v| (v, enc_p[v].clone())).collect();
+    assert_eq!(code_p.decode(&received_p, 1).unwrap(), data_p);
+}
