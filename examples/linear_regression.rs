@@ -16,8 +16,9 @@ use timely_coded::exec::master::Engine;
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
 use timely_coded::scheduler::success::LoadParams;
+use timely_coded::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = E2eConfig {
         rounds: 400,
         ..E2eConfig::default()

@@ -1,0 +1,76 @@
+//! Traffic-engine benchmarks: events/second of the event loop, and the
+//! grid runner's thread scaling. The events/s figure is the subsystem's
+//! baseline — record it in CHANGES.md when it moves.
+
+use std::time::Instant;
+
+use timely_coded::experiments::traffic::{run_grid, GridSpec};
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::util::bench_kit::table;
+
+fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut lea = Lea::new(fig3_load_params());
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(rate),
+        1.0,
+        fig3_geometry(),
+        policy,
+    );
+    let t0 = Instant::now();
+    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let secs = t0.elapsed().as_secs_f64();
+    (m.events as f64 / secs, m.events)
+}
+
+fn main() {
+    let jobs = 30_000;
+
+    // ---- raw engine throughput per policy ----
+    let mut rows = Vec::new();
+    for policy in Policy::all() {
+        for rate in [0.8, 2.0] {
+            let (eps, events) = engine_events_per_sec(policy, jobs, rate);
+            println!(
+                "bench traffic_engine {:<16} rate={rate:<4} {events:>8} events  {eps:>12.0} events/s",
+                policy.name()
+            );
+            rows.push((
+                format!("{} rate={rate}", policy.name()),
+                vec![events as f64, eps],
+            ));
+        }
+    }
+    table("Traffic engine (30k jobs, Fig.-3 scenario 1)", &["events", "events/s"], &rows);
+
+    // ---- grid-runner thread scaling ----
+    let mut scale_rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let spec = GridSpec::preset("small", 2000, 5).expect("preset");
+        let t0 = Instant::now();
+        let rows = run_grid(&spec, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+        println!(
+            "bench traffic_grid threads={threads:<2} {events:>9} events  {:>8.2}s  {:>12.0} events/s",
+            secs,
+            events as f64 / secs
+        );
+        scale_rows.push((
+            format!("threads={threads}"),
+            vec![secs, events as f64 / secs],
+        ));
+    }
+    table(
+        "Grid runner scaling (24 cells x 2000 jobs)",
+        &["wall s", "events/s"],
+        &scale_rows,
+    );
+}

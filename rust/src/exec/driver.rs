@@ -7,9 +7,8 @@
 //! `examples/linear_regression.rs`, the `lea e2e` subcommand and the Fig.-4
 //! bench.
 
-use anyhow::Result;
-
 use super::master::{ClusterSpec, CodedMaster, Engine};
+use crate::util::error::Result;
 use crate::coding::scheme::CodingScheme;
 use crate::coding::threshold::Geometry;
 use crate::markov::chain::{MarkovWorker, TwoState};
@@ -147,6 +146,7 @@ fn direct_gradients(data: &[(MatF32, MatF32)], w: &[f32], features: usize) -> Ma
 /// Run coded gradient descent with the given strategy.
 pub fn run_e2e(cfg: &E2eConfig, strategy: &mut dyn Strategy, engine: Engine) -> Result<E2eResult> {
     let mut rng = Rng::new(cfg.seed);
+    let mut arrivals = cfg.arrivals.clone();
     let (data, _w_true) = synth_dataset(cfg, &mut rng);
 
     let scheme = CodingScheme::for_geometry(cfg.geometry);
@@ -183,7 +183,7 @@ pub fn run_e2e(cfg: &E2eConfig, strategy: &mut dyn Strategy, engine: Engine) -> 
     let mut compute_secs = 0.0;
 
     for m in 1..=cfg.rounds {
-        let gap = cfg.arrivals.sample(&mut rng);
+        let gap = arrivals.sample(&mut rng);
         let verify = cfg.verify_every > 0 && m % cfg.verify_every == 0;
         let truth = if verify {
             Some(direct_gradients(&data, &w, cfg.features))

@@ -7,19 +7,23 @@
 //! (DESIGN.md §4 substitution table).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::sync::Mutex;
 use std::thread::JoinHandle;
-
-use anyhow::{anyhow, Result};
 
 use super::protocol::{RoundReply, RoundTask, ToWorker};
 use super::worker::{infer_state, Worker};
+use crate::anyhow;
 use crate::coding::lagrange::LagrangeCode;
 use crate::coding::scheme::CodingScheme;
 use crate::markov::WState;
+#[cfg(feature = "pjrt")]
 use crate::runtime::artifacts::Manifest;
+#[cfg(feature = "pjrt")]
 use crate::runtime::client::{Executable, Runtime};
 use crate::scheduler::strategy::Strategy;
+use crate::util::error::Result;
 use crate::sim::cluster::{Speeds, WorkerProcess};
 use crate::util::matrix::MatF32;
 use crate::util::rng::Rng;
@@ -30,22 +34,30 @@ use crate::util::rng::Rng;
 /// is documented thread-compatible and the CPU client serializes internally);
 /// the `xla` crate just doesn't mark them Send. All executions here are
 /// additionally serialized behind a Mutex.
+#[cfg(feature = "pjrt")]
 struct SendExe(Executable);
+#[cfg(feature = "pjrt")]
 unsafe impl Send for SendExe {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for SendExe {}
 
 /// Same justification as [`SendExe`] for the client that owns them.
+#[cfg(feature = "pjrt")]
 struct SendRuntime(#[allow(dead_code)] Runtime);
+#[cfg(feature = "pjrt")]
 unsafe impl Send for SendRuntime {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for SendRuntime {}
 
-/// Compute engine shared by master and workers: PJRT artifacts or the native
-/// (pure-Rust GEMM) fallback. The fallback keeps everything runnable when
+/// Compute engine shared by master and workers: PJRT artifacts (behind the
+/// `pjrt` feature) or the native (pure-Rust GEMM) fallback. The fallback
+/// keeps everything runnable when the crate is built without the feature or
 /// `make artifacts` has not been executed; tests assert both give the same
 /// numbers.
 pub struct Engine(EngineImpl);
 
 enum EngineImpl {
+    #[cfg(feature = "pjrt")]
     Pjrt {
         gradient: Mutex<SendExe>,
         encode: Mutex<SendExe>,
@@ -62,6 +74,7 @@ impl Engine {
     pub const Native: Engine = Engine(EngineImpl::Native);
 
     /// Load the PJRT engine from the artifact manifest.
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(manifest: &Manifest) -> Result<Engine> {
         let rt = Runtime::cpu()?;
         let load = |name: &str| -> Result<Mutex<SendExe>> {
@@ -77,6 +90,7 @@ impl Engine {
     }
 
     /// PJRT if artifacts are present, native otherwise (with a notice).
+    #[cfg(feature = "pjrt")]
     pub fn auto() -> Engine {
         match Manifest::load_default() {
             Ok(m) => match Engine::pjrt(&m) {
@@ -93,8 +107,16 @@ impl Engine {
         }
     }
 
+    /// Without the `pjrt` feature there is nothing to probe for.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn auto() -> Engine {
+        eprintln!("[engine] built without the `pjrt` feature; using native GEMM fallback");
+        Engine::Native
+    }
+
     pub fn name(&self) -> &'static str {
         match &self.0 {
+            #[cfg(feature = "pjrt")]
             EngineImpl::Pjrt { .. } => "pjrt",
             EngineImpl::Native => "native",
         }
@@ -103,6 +125,7 @@ impl Engine {
     /// f(X̃, ỹ, w) = X̃ᵀ(X̃w − ỹ), flattened (features).
     pub fn gradient(&self, xt: &MatF32, w: &MatF32, yt: &MatF32) -> Vec<f32> {
         match &self.0 {
+            #[cfg(feature = "pjrt")]
             EngineImpl::Pjrt { gradient, .. } => {
                 let exe = gradient.lock().unwrap();
                 exe.0.run(&[xt, w, yt]).expect("gradient artifact failed")
@@ -125,6 +148,7 @@ impl Engine {
     /// Generator GEMM: G (nr×k) @ Xs (k×D).
     pub fn encode(&self, g: &MatF32, xs: &MatF32) -> MatF32 {
         match &self.0 {
+            #[cfg(feature = "pjrt")]
             EngineImpl::Pjrt { encode, .. } => {
                 let exe = encode.lock().unwrap();
                 exe.0
@@ -138,6 +162,7 @@ impl Engine {
     /// Decode GEMM: W (k×K*) @ R (K*×D).
     pub fn decode(&self, wmat: &MatF32, r: &MatF32) -> MatF32 {
         match &self.0 {
+            #[cfg(feature = "pjrt")]
             EngineImpl::Pjrt { decode, .. } => {
                 let exe = decode.lock().unwrap();
                 exe.0

@@ -95,7 +95,7 @@ pub fn run_e2e_scenario(
     rounds: u64,
     seed: u64,
     engine: Engine,
-) -> anyhow::Result<(E2eResult, E2eResult)> {
+) -> crate::util::error::Result<(E2eResult, E2eResult)> {
     let base = E2eConfig {
         rounds,
         deadline: 1.0,

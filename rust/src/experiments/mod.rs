@@ -8,6 +8,8 @@
 //! - [`convergence`] — Theorem 5.1: R_LEA(m) → R*(m) against the oracle.
 //! - [`sweep`] — deadline sweeps + design ablations (coding scheme,
 //!   estimator, search strategy).
+//! - [`traffic`] — the parallel arrival-rate × deadline × policy grid over
+//!   the event-driven traffic engine (`lea traffic`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
 pub mod convergence;
@@ -17,3 +19,4 @@ pub mod fig4;
 pub mod heterogeneous;
 pub mod report;
 pub mod sweep;
+pub mod traffic;

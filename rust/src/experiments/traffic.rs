@@ -1,0 +1,273 @@
+//! Parallel scenario-grid harness for the traffic engine (`lea traffic`).
+//!
+//! Sweeps arrival rate × deadline × admission policy over the Fig.-3
+//! scenario-1 cluster, running LEA inside the event-driven engine for every
+//! cell. Unlike `lea report` (which runs its figures serially) the grid
+//! fans out across `std::thread` workers; each cell derives its own seed
+//! from `(base seed, cell index)`, so the assembled JSON is byte-identical
+//! for a given seed regardless of thread count or scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::scheduler::lea::Lea;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::SimCluster;
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// The grid to sweep. `rates` are offered loads in jobs per virtual second;
+/// `deadlines` are per-job relative deadlines (Fig.-3 geometry: anything
+/// below 0.7 is infeasible even on an all-good cluster).
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub rates: Vec<f64>,
+    pub deadlines: Vec<f64>,
+    pub policies: Vec<Policy>,
+    /// Arrivals simulated per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl GridSpec {
+    /// Named presets for the CLI: `small` is the default 24-cell grid,
+    /// `wide` broadens both axes to 54 cells.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<GridSpec, String> {
+        let (rates, deadlines) = match name {
+            "small" => (vec![0.5, 0.9, 1.3, 2.0], vec![0.8, 1.0]),
+            "wide" => (
+                vec![0.25, 0.5, 0.9, 1.3, 2.0, 4.0],
+                vec![0.8, 1.0, 1.4],
+            ),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(GridSpec {
+            rates,
+            deadlines,
+            policies: Policy::all().to_vec(),
+            jobs,
+            seed,
+        })
+    }
+
+    /// Cells in canonical order (rate-major, then deadline, then policy) —
+    /// the order of the JSON dump.
+    pub fn cells(&self) -> Vec<GridCell> {
+        let mut out = Vec::new();
+        for &rate in &self.rates {
+            for &deadline in &self.deadlines {
+                for &policy in &self.policies {
+                    out.push(GridCell {
+                        idx: out.len(),
+                        rate,
+                        deadline,
+                        policy,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (rate, deadline, policy) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct GridCell {
+    pub idx: usize,
+    pub rate: f64,
+    pub deadline: f64,
+    pub policy: Policy,
+}
+
+/// A cell plus its measured metrics.
+#[derive(Clone, Debug)]
+pub struct GridRow {
+    pub cell: GridCell,
+    pub metrics: TrafficMetrics,
+}
+
+/// SplitMix64-style per-cell seed: decorrelates cells while staying a pure
+/// function of (base seed, cell index).
+fn cell_seed(base: u64, idx: usize) -> u64 {
+    let mut z = base ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA, and the
+/// event engine with arrival-relative deadlines.
+pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
+    let seed = cell_seed(base_seed, cell.idx);
+    let scenario = fig3_scenarios()[0];
+    let mut cluster = SimCluster::markov(
+        fig3_geometry().n,
+        scenario.chain(),
+        fig3_speeds(),
+        seed,
+    );
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        cell.deadline,
+    );
+    let mut lea = Lea::new(params);
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(cell.rate),
+        cell.deadline,
+        geo,
+        cell.policy,
+    );
+    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x7261_6666); // "raff"
+    GridRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing over an
+/// atomic cursor). Results come back in canonical cell order whatever the
+/// interleaving, so the output is deterministic.
+pub fn run_grid(spec: &GridSpec, threads: usize) -> Vec<GridRow> {
+    let cells = spec.cells();
+    let threads = threads.clamp(1, cells.len().max(1));
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<GridRow>>> = Mutex::new(vec![None; cells.len()]);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let row = run_cell(&cells[i], spec.jobs, spec.seed);
+                slots.lock().unwrap()[i] = Some(row);
+            });
+        }
+    });
+
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("grid cell never ran"))
+        .collect()
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell).
+pub fn to_json(spec: &GridSpec, rows: &[GridRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("metrics serialize to an object"),
+            };
+            obj.insert("rate".into(), Json::num(r.cell.rate));
+            obj.insert("deadline".into(), Json::num(r.cell.deadline));
+            obj.insert("policy".into(), Json::str(r.cell.policy.name()));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("traffic-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs_per_cell", Json::num(spec.jobs as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns.
+pub fn print(rows: &[GridRow]) {
+    bench_kit::table(
+        "Traffic grid — Fig.-3 scenario 1, LEA, open-loop arrivals",
+        &[
+            "rate", "d", "timely", "goodput", "miss", "loss", "p95 lat", "mean Q", "max Q",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
+                (
+                    format!("{:<16} #{:02}", r.cell.policy.name(), r.cell.idx),
+                    vec![
+                        r.cell.rate,
+                        r.cell.deadline,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.miss_rate(),
+                        m.loss_rate(),
+                        fin(m.latency_p95()),
+                        m.mean_queue_depth(),
+                        m.queue_max as f64,
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            rates: vec![0.8, 2.0],
+            deadlines: vec![1.0],
+            policies: Policy::all().to_vec(),
+            jobs: 80,
+            seed: 13,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = GridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 24);
+        let wide = GridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 54);
+        assert!(GridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn cell_seeds_are_stable_and_distinct() {
+        let a = cell_seed(7, 0);
+        assert_eq!(a, cell_seed(7, 0));
+        let seeds: Vec<u64> = (0..64).map(|i| cell_seed(7, i)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"policy\":\"edf-feasible\""));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 6);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            assert_eq!(r.metrics.arrivals, spec.jobs);
+        }
+    }
+}

@@ -12,8 +12,10 @@
 //!   and the LEA / static / oracle strategies.
 //! - [`sim`] — a deterministic round simulator + scenario registry reproducing
 //!   Fig. 3 and the convergence study.
-//! - [`runtime`] — PJRT (xla crate) loader for the AOT-compiled JAX/Pallas
-//!   artifacts produced by `python/compile/aot.py`.
+//! - [`traffic`] — the event-driven multi-job engine: open-loop arrivals,
+//!   admission control, and per-job allocation over idle-worker subsets.
+//! - [`runtime`] — PJRT (xla crate, `pjrt` feature) loader for the
+//!   AOT-compiled JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the threaded master/worker cluster that runs real PJRT
 //!   computations under simulated worker states (Fig. 4 analog).
 //! - [`experiments`] — one harness per paper table/figure.
@@ -24,6 +26,7 @@ pub mod coding;
 pub mod markov;
 pub mod scheduler;
 pub mod sim;
+pub mod traffic;
 pub mod runtime;
 pub mod exec;
 pub mod experiments;

@@ -8,8 +8,8 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::anyhow;
+use crate::util::error::{Context, Error, Result};
 use crate::util::matrix::MatF32;
 
 /// A live PJRT CPU client.
@@ -68,7 +68,7 @@ impl Executable {
             .map(|m| {
                 xla::Literal::vec1(&m.data)
                     .reshape(&[m.rows as i64, m.cols as i64])
-                    .map_err(anyhow::Error::from)
+                    .map_err(Error::from)
             })
             .collect::<Result<_>>()?;
         let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;

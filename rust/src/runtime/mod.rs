@@ -6,4 +6,5 @@
 //!   never on this path.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;

@@ -62,6 +62,10 @@ impl Strategy for Lea {
             }
         }
     }
+
+    fn p_good_profile(&self) -> Option<Vec<f64>> {
+        Some(self.p_good_estimates())
+    }
 }
 
 #[cfg(test)]

@@ -71,6 +71,10 @@ impl Strategy for Oracle {
         }
         self.last_states = Some(last);
     }
+
+    fn p_good_profile(&self) -> Option<Vec<f64>> {
+        Some(Oracle::p_good(self))
+    }
 }
 
 #[cfg(test)]

@@ -87,6 +87,10 @@ impl Strategy for StaticStrategy {
     fn observe(&mut self, _states: &[Option<WState>]) {
         // Static: ignores history by definition.
     }
+
+    fn p_good_profile(&self) -> Option<Vec<f64>> {
+        Some(self.pi_g.clone())
+    }
 }
 
 #[cfg(test)]

@@ -21,6 +21,16 @@ pub trait Strategy: Send {
     /// `states[i] = None` models censored observations (extension: a result
     /// that never came back within the observation window).
     fn observe(&mut self, states: &[Option<WState>]);
+
+    /// Per-worker good-state probabilities for the NEXT round, when the
+    /// strategy maintains them (LEA's estimates, the oracle's one-step
+    /// predictions, a static strategy's fixed π). The `traffic` engine
+    /// uses this to run the EA allocator over the subset of idle workers —
+    /// multiple in-flight jobs share one learning strategy. `None` means the
+    /// strategy has no per-worker beliefs; callers fall back to uniform 1/2.
+    fn p_good_profile(&self) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Convenience: full observability (the paper's setting).

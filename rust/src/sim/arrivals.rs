@@ -1,19 +1,33 @@
-//! Request arrival process (paper §6.2): inter-arrival time is
-//! shift-exponential — a constant T_c plus an exponential with mean λ.
+//! Request arrival process (paper §6.2 and the `traffic` engine).
 //!
-//! On burstable instances the gap matters: CPU credits accrue while idle, so
-//! larger λ (sparser requests) pushes workers toward the good state — exactly
-//! the λ ∈ {10, 30} contrast in the paper's six EC2 scenarios.
+//! The paper's process is shift-exponential — a constant T_c plus an
+//! exponential with mean λ. On burstable instances the gap matters: CPU
+//! credits accrue while idle, so larger λ (sparser requests) pushes workers
+//! toward the good state — exactly the λ ∈ {10, 30} contrast in the paper's
+//! six EC2 scenarios.
+//!
+//! The traffic engine widens the family: memoryless Poisson streams, bursty
+//! (geometric burst, short within-gap / long between-gap) mixes, and replayed
+//! traces. Traces make the process stateful, so [`Arrivals::sample`] takes
+//! `&mut self`; drivers clone the config's process into a mutable local.
 
 use crate::util::rng::Rng;
 
 /// Inter-arrival process for computation requests.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Arrivals {
     /// Back-to-back rounds (the Fig.-3 numerical study).
     Fixed(f64),
     /// T_c + Exp(λ) (the Fig.-4 EC2 scenarios, T_c = 30).
     ShiftExponential { shift: f64, mean: f64 },
+    /// Memoryless Poisson stream: Exp(1/rate) gaps, `rate` requests/sec.
+    Poisson { rate: f64 },
+    /// Geometric bursts of mean size `burst`: each gap is the long
+    /// `between` with probability 1/burst (burst ends), else the short
+    /// `within`. Memoryless, so no burst-position state is needed.
+    Bursty { burst: f64, within: f64, between: f64 },
+    /// Replay recorded gaps, cycling when the trace is exhausted.
+    Trace { gaps: Vec<f64>, next: usize },
 }
 
 impl Arrivals {
@@ -22,19 +36,72 @@ impl Arrivals {
         Arrivals::ShiftExponential { shift, mean }
     }
 
+    pub fn poisson(rate: f64) -> Self {
+        assert!(rate > 0.0, "poisson rate must be positive");
+        Arrivals::Poisson { rate }
+    }
+
+    pub fn bursty(burst: f64, within: f64, between: f64) -> Self {
+        assert!(burst >= 1.0, "mean burst size must be ≥ 1");
+        assert!(within >= 0.0 && between >= 0.0);
+        Arrivals::Bursty {
+            burst,
+            within,
+            between,
+        }
+    }
+
+    pub fn trace(gaps: Vec<f64>) -> Self {
+        assert!(!gaps.is_empty(), "trace must contain at least one gap");
+        assert!(
+            gaps.iter().all(|g| g.is_finite() && *g >= 0.0),
+            "trace gaps must be finite and non-negative"
+        );
+        Arrivals::Trace { gaps, next: 0 }
+    }
+
     /// Sample the idle gap before the next request.
-    pub fn sample(&self, rng: &mut Rng) -> f64 {
-        match *self {
-            Arrivals::Fixed(gap) => gap,
-            Arrivals::ShiftExponential { shift, mean } => shift + rng.exp(mean),
+    pub fn sample(&mut self, rng: &mut Rng) -> f64 {
+        match self {
+            Arrivals::Fixed(gap) => *gap,
+            Arrivals::ShiftExponential { shift, mean } => *shift + rng.exp(*mean),
+            Arrivals::Poisson { rate } => rng.exp(1.0 / *rate),
+            Arrivals::Bursty {
+                burst,
+                within,
+                between,
+            } => {
+                if rng.f64() < 1.0 / *burst {
+                    *between
+                } else {
+                    *within
+                }
+            }
+            Arrivals::Trace { gaps, next } => {
+                let g = gaps[*next % gaps.len()];
+                *next = (*next + 1) % gaps.len();
+                g
+            }
         }
     }
 
     /// Expected gap.
     pub fn mean(&self) -> f64 {
-        match *self {
-            Arrivals::Fixed(gap) => gap,
+        match self {
+            Arrivals::Fixed(gap) => *gap,
             Arrivals::ShiftExponential { shift, mean } => shift + mean,
+            Arrivals::Poisson { rate } => 1.0 / rate,
+            Arrivals::Bursty {
+                burst,
+                within,
+                between,
+            } => {
+                let p_end = 1.0 / burst;
+                p_end * between + (1.0 - p_end) * within
+            }
+            Arrivals::Trace { gaps, .. } => {
+                gaps.iter().sum::<f64>() / gaps.len() as f64
+            }
         }
     }
 }
@@ -45,7 +112,7 @@ mod tests {
 
     #[test]
     fn fixed_is_constant() {
-        let a = Arrivals::Fixed(2.0);
+        let mut a = Arrivals::Fixed(2.0);
         let mut rng = Rng::new(1);
         for _ in 0..10 {
             assert_eq!(a.sample(&mut rng), 2.0);
@@ -55,7 +122,7 @@ mod tests {
 
     #[test]
     fn shift_exp_mean_and_support() {
-        let a = Arrivals::shift_exp(30.0, 10.0);
+        let mut a = Arrivals::shift_exp(30.0, 10.0);
         let mut rng = Rng::new(2);
         let n = 100_000;
         let mut sum = 0.0;
@@ -66,5 +133,90 @@ mod tests {
         }
         assert!((sum / n as f64 - 40.0).abs() < 0.2);
         assert_eq!(a.mean(), 40.0);
+    }
+
+    #[test]
+    fn poisson_matches_rate() {
+        let mut a = Arrivals::poisson(4.0);
+        assert!((a.mean() - 0.25).abs() < 1e-12);
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| a.sample(&mut rng)).sum();
+        assert!((sum / n as f64 - 0.25).abs() < 0.005);
+    }
+
+    #[test]
+    fn bursty_mean_and_support() {
+        let mut a = Arrivals::bursty(5.0, 0.1, 3.0);
+        // mean = (1/5)·3 + (4/5)·0.1 = 0.68
+        assert!((a.mean() - 0.68).abs() < 1e-12);
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut longs = 0u64;
+        for _ in 0..n {
+            let g = a.sample(&mut rng);
+            assert!(g == 0.1 || g == 3.0, "unexpected gap {g}");
+            longs += u64::from(g == 3.0);
+            sum += g;
+        }
+        assert!((sum / n as f64 - 0.68).abs() < 0.02);
+        // Burst-end probability 1/5 ⇒ mean burst size 5.
+        let f = longs as f64 / n as f64;
+        assert!((f - 0.2).abs() < 0.01, "burst-end frequency {f}");
+    }
+
+    #[test]
+    fn bursty_degenerate_burst_of_one() {
+        // burst = 1 ⇒ every gap is the between-gap: a fixed process.
+        let mut a = Arrivals::bursty(1.0, 0.1, 2.0);
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.sample(&mut rng), 2.0);
+        }
+        assert_eq!(a.mean(), 2.0);
+    }
+
+    #[test]
+    fn trace_replays_and_cycles() {
+        let mut a = Arrivals::trace(vec![1.0, 2.0, 0.5]);
+        let mut rng = Rng::new(6);
+        let got: Vec<f64> = (0..7).map(|_| a.sample(&mut rng)).collect();
+        assert_eq!(got, vec![1.0, 2.0, 0.5, 1.0, 2.0, 0.5, 1.0]);
+        assert!((a.mean() - 3.5 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_single_element_is_fixed() {
+        let mut a = Arrivals::trace(vec![0.25]);
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(a.sample(&mut rng), 0.25);
+        }
+    }
+
+    #[test]
+    fn trace_clone_keeps_cursor_and_fresh_trace_restarts() {
+        // A clone carries the consumed cursor with it; a freshly built
+        // trace starts from the beginning.
+        let mut a = Arrivals::trace(vec![1.0, 2.0]);
+        let mut rng = Rng::new(8);
+        a.sample(&mut rng);
+        let mut b = a.clone();
+        assert_eq!(b.sample(&mut rng), 2.0); // clone keeps the cursor
+        let mut fresh = Arrivals::trace(vec![1.0, 2.0]);
+        assert_eq!(fresh.sample(&mut rng), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one gap")]
+    fn empty_trace_rejected() {
+        let _ = Arrivals::trace(vec![]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_trace_rejected() {
+        let _ = Arrivals::trace(vec![1.0, f64::NAN]);
     }
 }

@@ -115,6 +115,22 @@ impl SimCluster {
         states.extend(self.workers.iter_mut().map(|w| w.next_state(rng, gap_secs)));
     }
 
+    /// Advance a SUBSET of workers, each by its own idle gap, in the order
+    /// given (the traffic engine passes ascending ids so the shared RNG is
+    /// consumed deterministically — and identically to [`Self::advance_into`]
+    /// when `ids` covers every worker). Workers not listed keep their state
+    /// process untouched; their idle time is accounted for on their next
+    /// participation (credit models accrue over it, Markov chains tick once
+    /// per participation).
+    pub fn advance_subset(&mut self, ids: &[usize], gaps: &[f64]) -> Vec<WState> {
+        assert_eq!(ids.len(), gaps.len());
+        let mut out = Vec::with_capacity(ids.len());
+        for (&i, &g) in ids.iter().zip(gaps) {
+            out.push(self.workers[i].next_state(&mut self.rng, g));
+        }
+        out
+    }
+
     /// Allocation-free completion check: `completed[i]` ⇔ worker i returns
     /// all `loads[i]` evaluations by the deadline (same epsilon convention
     /// as [`Self::outcome`]).
@@ -216,6 +232,17 @@ mod tests {
         use WState::{Bad as B, Good as G};
         let p = cl.partial_progress(&[G, B], &[7, 10], 1.0);
         assert_eq!(p, vec![7, 3]); // good: capped by load; bad: 3 evals max
+    }
+
+    #[test]
+    fn advance_subset_of_everyone_matches_advance() {
+        let mut a = SimCluster::markov(6, TwoState::new(0.7, 0.4), speeds(), 11);
+        let mut b = SimCluster::markov(6, TwoState::new(0.7, 0.4), speeds(), 11);
+        let ids: Vec<usize> = (0..6).collect();
+        let gaps = vec![0.5; 6];
+        for _ in 0..30 {
+            assert_eq!(a.advance(0.5), b.advance_subset(&ids, &gaps));
+        }
     }
 
     #[test]

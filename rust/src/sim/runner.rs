@@ -77,6 +77,7 @@ pub fn run(
     seed: u64,
 ) -> RunResult {
     let mut rng = Rng::new(seed);
+    let mut arrivals = cfg.arrivals.clone();
     let mut meter = ThroughputMeter::new(cfg.sample_every);
     let mut est = Welford::default();
     let mut good_frac = Welford::default();
@@ -88,7 +89,7 @@ pub fn run(
     let mut observed: Vec<Option<WState>> = Vec::with_capacity(n);
 
     for _ in 0..cfg.rounds {
-        let gap = cfg.arrivals.sample(&mut rng);
+        let gap = arrivals.sample(&mut rng);
         cluster.advance_into(gap, &mut states);
         let alloc = strategy.allocate(&mut rng);
         debug_assert_eq!(alloc.loads.len(), n);

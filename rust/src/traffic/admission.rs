@@ -1,0 +1,180 @@
+//! Admission control: who gets to queue, and in what order.
+//!
+//! Three pluggable policies make timely throughput and goodput diverge:
+//!
+//! * [`Policy::AdmitAll`] — FIFO, serve unconditionally on whatever workers
+//!   are idle. The naive baseline: doomed jobs occupy workers and starve
+//!   feasible ones.
+//! * [`Policy::EdfFeasible`] — earliest-absolute-deadline-first, with a
+//!   feasibility check ([`crate::scheduler::success::LoadParams::feasible`])
+//!   at dispatch: a job that cannot reach K* on the idle workers in its
+//!   remaining window *waits* if the full cluster could still make it, and
+//!   is shed otherwise. High goodput, bounded waste.
+//! * [`Policy::DropInfeasible`] — a loss system: serve immediately at
+//!   arrival if feasible on the currently idle workers, otherwise bounce.
+//!   Never queues, so served jobs always get their full window.
+
+use std::collections::VecDeque;
+
+use super::job::Job;
+
+/// Admission/scheduling policy of the traffic engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    AdmitAll,
+    EdfFeasible,
+    DropInfeasible,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::AdmitAll => "admit-all",
+            Policy::EdfFeasible => "edf-feasible",
+            Policy::DropInfeasible => "drop-infeasible",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s {
+            "admit-all" => Ok(Policy::AdmitAll),
+            "edf-feasible" | "edf" => Ok(Policy::EdfFeasible),
+            "drop-infeasible" | "drop" => Ok(Policy::DropInfeasible),
+            other => Err(format!(
+                "unknown policy '{other}' (admit-all | edf-feasible | drop-infeasible)"
+            )),
+        }
+    }
+
+    pub fn all() -> [Policy; 3] {
+        [Policy::AdmitAll, Policy::EdfFeasible, Policy::DropInfeasible]
+    }
+}
+
+/// The waiting room: FIFO for admit-all/drop-infeasible, deadline-ordered
+/// for EDF. Stores `(job id, absolute deadline)`; the engine owns the jobs.
+#[derive(Debug)]
+pub(crate) struct AdmissionQueue {
+    policy: Policy,
+    q: VecDeque<(u64, f64)>,
+}
+
+impl AdmissionQueue {
+    pub fn new(policy: Policy) -> Self {
+        AdmissionQueue {
+            policy,
+            q: VecDeque::new(),
+        }
+    }
+
+    /// Enqueue an admitted job. For EDF the queue stays sorted by
+    /// `(absolute_deadline, id)` — the id tie-break keeps it deterministic.
+    pub fn push(&mut self, job: &Job) {
+        let entry = (job.id, job.absolute_deadline);
+        match self.policy {
+            Policy::AdmitAll | Policy::DropInfeasible => self.q.push_back(entry),
+            Policy::EdfFeasible => {
+                let key = (job.absolute_deadline, job.id);
+                let pos = self
+                    .q
+                    .iter()
+                    .position(|&(id, dl)| (dl, id) > key)
+                    .unwrap_or(self.q.len());
+                self.q.insert(pos, entry);
+            }
+        }
+    }
+
+    /// The next job to consider for dispatch.
+    pub fn front(&self) -> Option<u64> {
+        self.q.front().map(|&(id, _)| id)
+    }
+
+    pub fn pop_front(&mut self) -> Option<u64> {
+        self.q.pop_front().map(|(id, _)| id)
+    }
+
+    /// Remove a job anywhere in the queue (deadline expiry). Returns whether
+    /// it was present.
+    pub fn remove(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.q.iter().position(|&(j, _)| j == id) {
+            self.q.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.q.iter().any(|&(j, _)| j == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, arrival: f64, d: f64) -> Job {
+        Job {
+            id,
+            class: 0,
+            arrival,
+            absolute_deadline: arrival + d,
+        }
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let mut q = AdmissionQueue::new(Policy::AdmitAll);
+        q.push(&job(1, 0.0, 9.0));
+        q.push(&job(2, 1.0, 1.0));
+        q.push(&job(3, 2.0, 5.0));
+        assert_eq!(q.pop_front(), Some(1));
+        assert_eq!(q.pop_front(), Some(2));
+        assert_eq!(q.pop_front(), Some(3));
+        assert_eq!(q.pop_front(), None);
+    }
+
+    #[test]
+    fn edf_orders_by_absolute_deadline() {
+        let mut q = AdmissionQueue::new(Policy::EdfFeasible);
+        q.push(&job(1, 0.0, 9.0)); // deadline 9
+        q.push(&job(2, 1.0, 1.0)); // deadline 2
+        q.push(&job(3, 2.0, 5.0)); // deadline 7
+        assert_eq!(q.front(), Some(2));
+        assert_eq!(q.pop_front(), Some(2));
+        assert_eq!(q.pop_front(), Some(3));
+        assert_eq!(q.pop_front(), Some(1));
+    }
+
+    #[test]
+    fn edf_ties_break_on_id() {
+        let mut q = AdmissionQueue::new(Policy::EdfFeasible);
+        q.push(&job(5, 0.0, 3.0));
+        q.push(&job(4, 1.0, 2.0)); // same absolute deadline 3
+        assert_eq!(q.pop_front(), Some(4));
+        assert_eq!(q.pop_front(), Some(5));
+    }
+
+    #[test]
+    fn remove_from_middle() {
+        let mut q = AdmissionQueue::new(Policy::AdmitAll);
+        for i in 0..4 {
+            q.push(&job(i, i as f64, 10.0));
+        }
+        assert!(q.remove(2));
+        assert!(!q.remove(2));
+        assert!(q.contains(1));
+        assert!(!q.contains(2));
+        assert_eq!(q.len(), 3);
+        assert!(!q.is_empty());
+    }
+}

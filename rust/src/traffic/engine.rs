@@ -1,0 +1,626 @@
+//! The event-driven multi-job engine.
+//!
+//! Where [`crate::sim::runner`] is round-synchronous — one request at a
+//! time, the next arrives only after the previous resolves — this engine is
+//! open-loop: jobs arrive on their own clock ([`Arrivals`]), each carries
+//! its own deadline and coding geometry ([`JobClass`]), and multiple
+//! in-flight jobs contend for the same `n` workers.
+//!
+//! Mechanics per dispatched job:
+//!
+//! 1. the admission layer ([`Policy`]) decides whether/when it reaches the
+//!    workers (see `admission.rs` for the three policies);
+//! 2. the EA allocator runs over the SUBSET of currently idle workers,
+//!    with per-worker good-state probabilities from the shared
+//!    [`Strategy::p_good_profile`] — LEA keeps learning across overlapping
+//!    jobs;
+//! 3. each participating worker's state process advances by its true idle
+//!    time in virtual seconds (credit CPUs accrue over it), the completion
+//!    times follow, and the worker is released at `min(finish, window end)`;
+//! 4. at the window's end the round is evaluated with the exact
+//!    all-or-nothing decodability rule of the round simulator
+//!    ([`CodingScheme::round_success`]), and the strategy observes the
+//!    participants' states (non-participants are censored).
+//!
+//! With `max_in_flight = 1`, `Arrivals::Fixed(0.0)` and deadlines counted
+//! from service start, the engine consumes the cluster RNG in exactly the
+//! round simulator's order and reproduces `sim::runner::run` throughput
+//! bit-for-bit (see `tests/integration_traffic.rs`).
+
+use std::collections::BTreeMap;
+
+use super::admission::{AdmissionQueue, Policy};
+use super::event::{EventKind, EventQueue};
+use super::job::{Job, JobClass, JobFate, Service};
+use super::metrics::TrafficMetrics;
+use crate::coding::scheme::CodingScheme;
+use crate::markov::WState;
+use crate::scheduler::allocation;
+use crate::scheduler::strategy::Strategy;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::SimCluster;
+use crate::util::rng::Rng;
+
+/// What a job's deadline is measured from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlineFrom {
+    /// `arrival + d` — queueing delay eats into the computation window
+    /// (the open-loop traffic setting; jobs can expire while queued).
+    Arrival,
+    /// `service start + d` — the round simulator's semantics, where waiting
+    /// time does not exist. Used by the runner-equivalence regression.
+    ServiceStart,
+}
+
+/// Configuration of one traffic run.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Total arrivals to generate.
+    pub jobs: u64,
+    /// Inter-arrival process (open loop).
+    pub arrivals: Arrivals,
+    /// Workload mix; sampled by weight per arrival.
+    pub classes: Vec<JobClass>,
+    pub policy: Policy,
+    /// Cap on concurrently served jobs; 0 = unbounded (worker-limited).
+    pub max_in_flight: usize,
+    pub deadline_from: DeadlineFrom,
+}
+
+impl TrafficConfig {
+    /// Single-class open-loop config with sensible defaults.
+    pub fn single_class(
+        jobs: u64,
+        arrivals: Arrivals,
+        deadline: f64,
+        geometry: crate::coding::threshold::Geometry,
+        policy: Policy,
+    ) -> Self {
+        TrafficConfig {
+            jobs,
+            arrivals,
+            classes: vec![JobClass::new(1.0, deadline, geometry)],
+            policy,
+            max_in_flight: 0,
+            deadline_from: DeadlineFrom::Arrival,
+        }
+    }
+}
+
+struct WorkerSlot {
+    busy: bool,
+    /// When this worker last went idle (for the per-worker idle gap).
+    last_release: f64,
+}
+
+/// Run one traffic simulation to completion and return its metrics.
+///
+/// `strategy` is shared across all jobs (it keeps learning); `cluster`
+/// provides the worker state processes and speeds; `seed` drives the
+/// engine's own randomness (arrival gaps, class mix) — the cluster carries
+/// its own RNG, exactly as in `sim::runner::run`.
+pub fn run_traffic(
+    strategy: &mut dyn Strategy,
+    cluster: &mut SimCluster,
+    cfg: &TrafficConfig,
+    seed: u64,
+) -> TrafficMetrics {
+    assert!(!cfg.classes.is_empty(), "at least one job class required");
+    for c in &cfg.classes {
+        assert_eq!(
+            c.scheme.geometry.n,
+            cluster.n(),
+            "class geometry n must match the cluster"
+        );
+    }
+    let n = cluster.n();
+    let mut engine = Engine {
+        cfg,
+        strategy,
+        cluster,
+        rng: Rng::new(seed),
+        arrivals: cfg.arrivals.clone(),
+        events: EventQueue::new(),
+        queue: AdmissionQueue::new(cfg.policy),
+        jobs: BTreeMap::new(),
+        services: BTreeMap::new(),
+        workers: (0..n)
+            .map(|_| WorkerSlot {
+                busy: false,
+                last_release: 0.0,
+            })
+            .collect(),
+        in_flight: 0,
+        spawned: 0,
+        now: 0.0,
+        metrics: TrafficMetrics::new(),
+    };
+    engine.run()
+}
+
+struct Engine<'a> {
+    cfg: &'a TrafficConfig,
+    strategy: &'a mut dyn Strategy,
+    cluster: &'a mut SimCluster,
+    rng: Rng,
+    arrivals: Arrivals,
+    events: EventQueue,
+    queue: AdmissionQueue,
+    /// Jobs alive in the system (queued or in service), by id.
+    jobs: BTreeMap<u64, Job>,
+    services: BTreeMap<u64, Service>,
+    workers: Vec<WorkerSlot>,
+    in_flight: usize,
+    spawned: u64,
+    now: f64,
+    metrics: TrafficMetrics,
+}
+
+impl Engine<'_> {
+    fn run(mut self) -> TrafficMetrics {
+        if self.cfg.jobs > 0 {
+            let gap = self.arrivals.sample(&mut self.rng);
+            self.events.push(gap.max(0.0), EventKind::Arrival);
+        }
+        while let Some(ev) = self.events.pop() {
+            self.metrics.tick(self.queue.len(), ev.time);
+            self.now = ev.time;
+            match ev.kind {
+                EventKind::Arrival => self.handle_arrival(),
+                EventKind::Release { worker } => {
+                    self.workers[worker].busy = false;
+                    self.workers[worker].last_release = self.now;
+                    self.try_dispatch();
+                }
+                EventKind::QueueExpiry { job } => self.handle_queue_expiry(job),
+                EventKind::Resolve { job } => self.handle_resolve(job),
+            }
+        }
+        debug_assert!(self.jobs.is_empty(), "jobs leaked: {:?}", self.jobs.keys());
+        debug_assert!(self.services.is_empty());
+        debug_assert_eq!(
+            self.metrics.arrivals,
+            self.metrics.completed
+                + self.metrics.missed_service
+                + self.metrics.dropped_at_arrival
+                + self.metrics.dropped_infeasible
+                + self.metrics.expired_in_queue
+        );
+        self.metrics
+    }
+
+    fn handle_arrival(&mut self) {
+        self.spawned += 1;
+        let id = self.spawned;
+        let class = self.pick_class();
+        let d = self.cfg.classes[class].deadline;
+        let job = Job {
+            id,
+            class,
+            arrival: self.now,
+            absolute_deadline: self.now + d,
+        };
+        self.metrics.on_arrival();
+
+        // Keep the arrival stream going (one pending arrival at a time).
+        if self.spawned < self.cfg.jobs {
+            let gap = self.arrivals.sample(&mut self.rng);
+            self.events.push(self.now + gap.max(0.0), EventKind::Arrival);
+        }
+
+        self.queue.push(&job);
+        // Drop-infeasible jobs settle synchronously below — no expiry needed.
+        if self.cfg.deadline_from == DeadlineFrom::Arrival
+            && self.cfg.policy != Policy::DropInfeasible
+        {
+            self.events
+                .push(job.absolute_deadline, EventKind::QueueExpiry { job: id });
+        }
+        self.jobs.insert(id, job);
+        self.try_dispatch();
+
+        // The loss system bounces anything that could not start immediately:
+        // capacity bounces (no idle worker / in-flight cap) count as
+        // dropped-at-arrival, feasibility rejections as dropped-infeasible.
+        if self.cfg.policy == Policy::DropInfeasible && self.queue.remove(id) {
+            self.jobs.remove(&id);
+            let capacity_blocked = (self.cfg.max_in_flight > 0
+                && self.in_flight >= self.cfg.max_in_flight)
+                || self.workers.iter().all(|w| w.busy);
+            self.metrics.on_loss(if capacity_blocked {
+                JobFate::DroppedAtArrival
+            } else {
+                JobFate::DroppedInfeasible
+            });
+        }
+    }
+
+    fn handle_queue_expiry(&mut self, id: u64) {
+        // Only meaningful if the job is still waiting; if it was served its
+        // Resolve event (same instant, later seq) settles it, and if it was
+        // dropped this event finds nothing.
+        if self.queue.remove(id) {
+            self.jobs.remove(&id);
+            self.metrics.on_loss(JobFate::ExpiredInQueue);
+            self.try_dispatch();
+        }
+    }
+
+    fn handle_resolve(&mut self, id: u64) {
+        let svc = self.services.remove(&id).expect("resolve without service");
+        let job = self.jobs.remove(&id).expect("resolve without job");
+        let class = &self.cfg.classes[job.class];
+        let n = self.workers.len();
+
+        // Reassemble full-length vectors for the exact round-simulator
+        // decodability rule (zero-load workers trivially "complete").
+        let mut loads_full = vec![0usize; n];
+        let mut completed_full = vec![true; n];
+        for i in 0..svc.workers.len() {
+            loads_full[svc.workers[i]] = svc.loads[i];
+            completed_full[svc.workers[i]] = svc.completed[i];
+        }
+        let success = class.scheme.round_success(&loads_full, &completed_full);
+        let latency = if success {
+            decode_time(&svc, &class.scheme).unwrap_or(svc.window_end) - job.arrival
+        } else {
+            svc.window_end - job.arrival
+        };
+
+        // Observation phase: participants reveal their state through their
+        // completion time; everyone else is censored this round.
+        let mut observed: Vec<Option<WState>> = vec![None; n];
+        for (&w, &s) in svc.workers.iter().zip(&svc.states) {
+            observed[w] = Some(s);
+        }
+        self.strategy.observe(&observed);
+
+        self.metrics.on_resolve(success, latency);
+        self.in_flight -= 1;
+        self.try_dispatch();
+    }
+
+    fn try_dispatch(&mut self) {
+        loop {
+            let Some(front) = self.queue.front() else { break };
+            if self.cfg.max_in_flight > 0 && self.in_flight >= self.cfg.max_in_flight {
+                break;
+            }
+            let idle: Vec<usize> = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| !w.busy)
+                .map(|(i, _)| i)
+                .collect();
+            if idle.is_empty() {
+                break;
+            }
+            let job = self.jobs[&front].clone();
+            let class = &self.cfg.classes[job.class];
+            let d_eff = match self.cfg.deadline_from {
+                DeadlineFrom::ServiceStart => class.deadline,
+                DeadlineFrom::Arrival => job.absolute_deadline - self.now,
+            };
+            if d_eff <= 1e-12 {
+                // Window already gone before service could start.
+                self.queue.remove(front);
+                self.jobs.remove(&front);
+                self.metrics.on_loss(JobFate::ExpiredInQueue);
+                continue;
+            }
+            let speeds = self.cluster.speeds;
+            let geo = class.scheme.geometry;
+            let params = LoadParams::from_rates(
+                idle.len(),
+                geo.r,
+                class.scheme.kstar(),
+                speeds.mu_g,
+                speeds.mu_b,
+                d_eff,
+            );
+            let feasible_now = params.feasible(params.n);
+            match self.cfg.policy {
+                Policy::AdmitAll => {}
+                Policy::DropInfeasible => {
+                    if !feasible_now {
+                        break; // the arrival handler bounces it
+                    }
+                }
+                Policy::EdfFeasible => {
+                    if !feasible_now {
+                        let full = LoadParams::from_rates(
+                            self.workers.len(),
+                            geo.r,
+                            class.scheme.kstar(),
+                            speeds.mu_g,
+                            speeds.mu_b,
+                            d_eff,
+                        );
+                        if full.feasible(full.n) {
+                            // More workers could still save it: hold the line
+                            // (strict EDF — no bypassing the earliest job).
+                            break;
+                        }
+                        self.queue.remove(front);
+                        self.jobs.remove(&front);
+                        self.metrics.on_loss(JobFate::DroppedInfeasible);
+                        continue;
+                    }
+                }
+            }
+            self.queue.pop_front();
+            self.dispatch(job, &idle, &params, d_eff);
+        }
+    }
+
+    /// Allocate over the idle subset, advance the participants' state
+    /// processes by their true idle gaps, and schedule the outcome.
+    fn dispatch(&mut self, job: Job, idle: &[usize], params: &LoadParams, d_eff: f64) {
+        let n = self.workers.len();
+        let profile = self
+            .strategy
+            .p_good_profile()
+            .unwrap_or_else(|| vec![0.5; n]);
+        debug_assert_eq!(profile.len(), n);
+        let ps: Vec<f64> = idle.iter().map(|&i| profile[i]).collect();
+        let alloc = allocation::allocate(params, &ps);
+
+        // Participants: loaded workers, ascending id (idle is ascending, so
+        // the shared cluster RNG is consumed deterministically).
+        let mut workers_v = Vec::with_capacity(idle.len());
+        let mut loads_v = Vec::with_capacity(idle.len());
+        for (slot, &w) in idle.iter().enumerate() {
+            if alloc.loads[slot] > 0 {
+                workers_v.push(w);
+                loads_v.push(alloc.loads[slot]);
+            }
+        }
+        if workers_v.is_empty() {
+            // Nothing could be loaded (e.g. ℓ_b = 0 with no feasible prefix):
+            // the service is vacuous — settle it as an immediate miss without
+            // occupying workers or an in-flight slot.
+            self.metrics
+                .on_serve((self.now - job.arrival).max(0.0), alloc.est_success);
+            self.metrics.on_resolve(false, d_eff);
+            self.jobs.remove(&job.id);
+            return;
+        }
+        let gaps: Vec<f64> = workers_v
+            .iter()
+            .map(|&w| (self.now - self.workers[w].last_release).max(0.0))
+            .collect();
+        let states = self.cluster.advance_subset(&workers_v, &gaps);
+
+        let window_end = self.now + d_eff;
+        // The deadline-completion rule (incl. its epsilon convention) is the
+        // round simulator's, via the same code path.
+        let mut completed = Vec::with_capacity(workers_v.len());
+        self.cluster
+            .completed_into(&states, &loads_v, d_eff, &mut completed);
+        let mut finish = Vec::with_capacity(workers_v.len());
+        for (i, &w) in workers_v.iter().enumerate() {
+            let rate = self.cluster.speeds.rate(states[i]);
+            let t_fin = if rate > 0.0 {
+                self.now + loads_v[i] as f64 / rate
+            } else {
+                f64::INFINITY
+            };
+            finish.push(t_fin);
+            self.workers[w].busy = true;
+            // Abandon unfinished work when the window closes.
+            self.events
+                .push(t_fin.min(window_end), EventKind::Release { worker: w });
+        }
+        self.events.push(window_end, EventKind::Resolve { job: job.id });
+
+        self.metrics
+            .on_serve((self.now - job.arrival).max(0.0), alloc.est_success);
+        self.in_flight += 1;
+        self.services.insert(
+            job.id,
+            Service {
+                workers: workers_v,
+                loads: loads_v,
+                states,
+                finish,
+                completed,
+                window_end,
+            },
+        );
+    }
+
+    fn pick_class(&mut self) -> usize {
+        if self.cfg.classes.len() == 1 {
+            return 0;
+        }
+        let total: f64 = self.cfg.classes.iter().map(|c| c.weight).sum();
+        let mut u = self.rng.f64() * total;
+        for (i, c) in self.cfg.classes.iter().enumerate() {
+            u -= c.weight;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        self.cfg.classes.len() - 1
+    }
+}
+
+/// Earliest instant at which the received results reach K* distinct chunks
+/// (Lagrange counting; for repetition designs this is an optimistic bound —
+/// `round_success` remains authoritative for WHETHER the job succeeded).
+fn decode_time(svc: &Service, scheme: &CodingScheme) -> Option<f64> {
+    let mut done: Vec<(f64, usize)> = (0..svc.workers.len())
+        .filter(|&i| svc.completed[i])
+        .map(|i| (svc.finish[i], svc.loads[i]))
+        .collect();
+    done.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut cum = 0usize;
+    for (t, l) in done {
+        cum += l;
+        if cum >= scheme.kstar() {
+            return Some(t.min(svc.window_end));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::TwoState;
+    use crate::scheduler::lea::Lea;
+    use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
+
+    fn cluster(seed: u64) -> SimCluster {
+        SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
+    }
+
+    fn overload_cfg(policy: Policy, jobs: u64) -> TrafficConfig {
+        // ~2 jobs/sec against a server that needs d = 1s of most of the
+        // cluster per job: heavily overloaded.
+        TrafficConfig::single_class(
+            jobs,
+            Arrivals::poisson(2.0),
+            1.0,
+            fig3_geometry(),
+            policy,
+        )
+    }
+
+    fn run_policy(policy: Policy, jobs: u64, seed: u64) -> TrafficMetrics {
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(seed);
+        run_traffic(&mut lea, &mut cl, &overload_cfg(policy, jobs), seed ^ 0xA5)
+    }
+
+    #[test]
+    fn every_arrival_is_accounted_for() {
+        for policy in Policy::all() {
+            let m = run_policy(policy, 400, 11);
+            assert_eq!(m.arrivals, 400, "{}", policy.name());
+            assert_eq!(
+                m.arrivals,
+                m.completed
+                    + m.missed_service
+                    + m.dropped_at_arrival
+                    + m.dropped_infeasible
+                    + m.expired_in_queue,
+                "conservation failed for {}",
+                policy.name()
+            );
+            assert!(m.events > 400);
+            assert!(m.horizon > 0.0);
+            assert!(m.served >= m.completed + m.missed_service);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_bytes() {
+        let a = run_policy(Policy::EdfFeasible, 300, 5).to_json().to_string();
+        let b = run_policy(Policy::EdfFeasible, 300, 5).to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn policies_make_throughput_and_goodput_diverge() {
+        let all = run_policy(Policy::AdmitAll, 1500, 23);
+        let edf = run_policy(Policy::EdfFeasible, 1500, 23);
+        let drop = run_policy(Policy::DropInfeasible, 1500, 23);
+
+        // Admit-all serves doomed jobs; the feasibility-checked policies only
+        // spend workers on rounds that can still reach K*.
+        assert!(
+            edf.goodput() > all.goodput(),
+            "edf goodput {} vs admit-all {}",
+            edf.goodput(),
+            all.goodput()
+        );
+        assert!(
+            drop.goodput() > all.goodput(),
+            "drop goodput {} vs admit-all {}",
+            drop.goodput(),
+            all.goodput()
+        );
+        // Under 2x overload every policy sheds or misses a lot.
+        assert!(all.miss_rate() > 0.3);
+        assert!(edf.dropped_infeasible + edf.expired_in_queue > 0);
+        assert!(drop.dropped_at_arrival > 0);
+        // Timely throughput never exceeds goodput's served base.
+        for m in [&all, &edf, &drop] {
+            assert!(m.timely_throughput() <= m.goodput() + 1e-12);
+            let e = m.mean_est_success();
+            assert!((0.0..=1.0).contains(&e) || e.is_nan());
+        }
+    }
+
+    #[test]
+    fn light_load_mostly_completes() {
+        // One job every ~4s against d = 1: essentially no contention, so
+        // LEA should complete most jobs under any policy.
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(42);
+        let cfg = TrafficConfig::single_class(
+            600,
+            Arrivals::poisson(0.25),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        );
+        let m = run_traffic(&mut lea, &mut cl, &cfg, 7);
+        assert!(
+            m.timely_throughput() > 0.5,
+            "throughput {}",
+            m.timely_throughput()
+        );
+        // Light load: queueing is rare, and with arrival-relative deadlines
+        // no completed job can take longer than d = 1.
+        assert!(m.mean_wait() < 0.25, "wait {}", m.mean_wait());
+        assert!(m.latency_p99() <= 1.0 + 1e-9);
+        assert!(m.latency_p50() > 0.0 && m.latency_p50() <= m.latency_p99() + 1e-9);
+    }
+
+    #[test]
+    fn mixed_classes_flow_through_one_cluster() {
+        // Two classes with different deadlines share the workers.
+        let classes = vec![
+            JobClass::new(3.0, 1.0, fig3_geometry()),
+            JobClass::new(1.0, 1.5, fig3_geometry()),
+        ];
+        let cfg = TrafficConfig {
+            jobs: 500,
+            arrivals: Arrivals::poisson(0.3),
+            classes,
+            policy: Policy::EdfFeasible,
+            max_in_flight: 0,
+            deadline_from: DeadlineFrom::Arrival,
+        };
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(9);
+        let m = run_traffic(&mut lea, &mut cl, &cfg, 9);
+        assert_eq!(m.arrivals, 500);
+        assert!(m.completed > 0);
+    }
+
+    #[test]
+    fn bursty_arrivals_stress_the_queue() {
+        let cfg = TrafficConfig::single_class(
+            800,
+            Arrivals::bursty(6.0, 0.05, 8.0),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        );
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(31);
+        let m = run_traffic(&mut lea, &mut cl, &cfg, 31);
+        // Bursts of ~6 near-simultaneous jobs against a 1-job server: deep
+        // queues and in-queue expiries must appear.
+        assert!(m.queue_max >= 3, "queue_max {}", m.queue_max);
+        assert!(
+            m.expired_in_queue + m.missed_service > 0,
+            "bursts should overwhelm the deadline"
+        );
+    }
+}

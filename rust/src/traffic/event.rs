@@ -1,0 +1,127 @@
+//! Virtual-time event queue for the traffic engine.
+//!
+//! A binary min-heap keyed by `(time, seq)`: `seq` is the global insertion
+//! counter, so simultaneous events fire in the order they were scheduled.
+//! That tie-break is load-bearing — worker releases scheduled at dispatch
+//! time must precede the job's resolution at the same instant, and the whole
+//! engine must be deterministic for the byte-identical grid dumps.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens at an event's firing time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The next request enters the system.
+    Arrival,
+    /// A worker finishes (or abandons, at the window's end) its assignment.
+    Release { worker: usize },
+    /// A queued job's absolute deadline passes before it was served.
+    QueueExpiry { job: u64 },
+    /// A served job's deadline window closes: evaluate success, free state.
+    Resolve { job: u64 },
+}
+
+/// A scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The engine's future: a deterministic min-heap of events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at `time`; later pushes at the same time fire later.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "event time must be finite: {time}");
+        let e = Event {
+            time,
+            seq: self.seq,
+            kind,
+        };
+        self.seq += 1;
+        self.heap.push(e);
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::Arrival);
+        q.push(1.0, EventKind::Release { worker: 0 });
+        q.push(2.0, EventKind::Resolve { job: 1 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Release { worker: 7 });
+        q.push(1.0, EventKind::Release { worker: 8 });
+        q.push(1.0, EventKind::Resolve { job: 3 });
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Release { worker: 7 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Release { worker: 8 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Resolve { job: 3 });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite_times() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, EventKind::Arrival);
+    }
+}

@@ -1,0 +1,73 @@
+//! Jobs and job classes for the open-loop traffic engine.
+
+use crate::coding::scheme::CodingScheme;
+use crate::coding::threshold::Geometry;
+use crate::markov::WState;
+
+/// A class of computation requests in the workload mix: its own deadline and
+/// coding geometry (and hence recovery threshold K*).
+#[derive(Clone, Debug)]
+pub struct JobClass {
+    /// Sampling weight within the mix (relative; need not sum to 1).
+    pub weight: f64,
+    /// Relative deadline d of every job of this class.
+    pub deadline: f64,
+    /// Coding scheme (placement + decodability + K*).
+    pub scheme: CodingScheme,
+}
+
+impl JobClass {
+    pub fn new(weight: f64, deadline: f64, geometry: Geometry) -> Self {
+        assert!(weight > 0.0, "class weight must be positive");
+        assert!(deadline > 0.0, "class deadline must be positive");
+        JobClass {
+            weight,
+            deadline,
+            scheme: CodingScheme::for_geometry(geometry),
+        }
+    }
+}
+
+/// Why a job left the system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobFate {
+    /// Decoded before its deadline.
+    Completed,
+    /// Served but not decodable by the deadline.
+    Missed,
+    /// Bounced by the admission policy at arrival.
+    DroppedAtArrival,
+    /// Rejected by a feasibility check (EDF / drop-if-infeasible).
+    DroppedInfeasible,
+    /// Admitted but its deadline passed while still queued.
+    ExpiredInQueue,
+}
+
+/// One request moving through the system.
+#[derive(Clone, Debug)]
+pub(crate) struct Job {
+    pub id: u64,
+    pub class: usize,
+    pub arrival: f64,
+    /// `arrival + class.deadline` — the EDF ordering key, and the expiry
+    /// instant when deadlines count from arrival.
+    pub absolute_deadline: f64,
+}
+
+/// Book-keeping for a job currently occupying workers.
+#[derive(Clone, Debug)]
+pub(crate) struct Service {
+    /// Global ids of the workers given load > 0, ascending.
+    pub workers: Vec<usize>,
+    /// Their loads (aligned with `workers`).
+    pub loads: Vec<usize>,
+    /// Their true states this round (aligned with `workers`).
+    pub states: Vec<WState>,
+    /// Absolute completion time of each participant's full load (may lie
+    /// beyond the window; such workers are released at the window's end).
+    pub finish: Vec<f64>,
+    /// Whether each participant delivered all results inside the window.
+    pub completed: Vec<bool>,
+    /// `service start + d_eff` — when the round is evaluated.
+    pub window_end: f64,
+}

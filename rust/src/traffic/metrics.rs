@@ -1,0 +1,268 @@
+//! Traffic-level metrics: timely throughput vs goodput, deadline misses,
+//! queueing, and per-job latency percentiles.
+//!
+//! Extends the round simulator's [`crate::sim::metrics::ThroughputMeter`]
+//! view of the world (one success bit per request) with everything a
+//! queueing system adds: where jobs are lost, how long they wait, and how
+//! deep the backlog runs. Latency percentiles use the O(1)-memory P² sketch
+//! ([`crate::util::stats::P2Quantile`]) so horizon-scale runs stay cheap.
+
+use super::job::JobFate;
+use crate::util::json::Json;
+use crate::util::stats::{P2Quantile, Welford};
+
+/// Aggregated outcome of one traffic run. All fields are deterministic
+/// functions of (config, seed) — wall-clock never enters — so serialized
+/// results are byte-identical across thread schedules.
+#[derive(Clone, Debug)]
+pub struct TrafficMetrics {
+    pub arrivals: u64,
+    pub served: u64,
+    pub completed: u64,
+    pub missed_service: u64,
+    pub dropped_at_arrival: u64,
+    pub dropped_infeasible: u64,
+    pub expired_in_queue: u64,
+    /// Events processed by the engine (the bench's unit of work).
+    pub events: u64,
+    /// Virtual time when the last event fired.
+    pub horizon: f64,
+    /// Peak admission-queue depth.
+    pub queue_max: usize,
+    latency_mean: Welford,
+    latency_p50: P2Quantile,
+    latency_p95: P2Quantile,
+    latency_p99: P2Quantile,
+    wait_mean: Welford,
+    est_success: Welford,
+    /// ∫ queue-depth dt, for the time-averaged backlog.
+    queue_area: f64,
+    last_time: f64,
+}
+
+impl Default for TrafficMetrics {
+    fn default() -> Self {
+        TrafficMetrics {
+            arrivals: 0,
+            served: 0,
+            completed: 0,
+            missed_service: 0,
+            dropped_at_arrival: 0,
+            dropped_infeasible: 0,
+            expired_in_queue: 0,
+            events: 0,
+            horizon: 0.0,
+            queue_max: 0,
+            latency_mean: Welford::default(),
+            latency_p50: P2Quantile::new(0.50),
+            latency_p95: P2Quantile::new(0.95),
+            latency_p99: P2Quantile::new(0.99),
+            wait_mean: Welford::default(),
+            est_success: Welford::default(),
+            queue_area: 0.0,
+            last_time: 0.0,
+        }
+    }
+}
+
+impl TrafficMetrics {
+    pub fn new() -> Self {
+        TrafficMetrics::default()
+    }
+
+    /// Advance the queue-depth integral to `now` with the depth that held
+    /// since the previous event. Call BEFORE mutating the queue.
+    pub(crate) fn tick(&mut self, depth: usize, now: f64) {
+        debug_assert!(now >= self.last_time - 1e-9);
+        self.events += 1;
+        self.queue_area += depth as f64 * (now - self.last_time).max(0.0);
+        self.queue_max = self.queue_max.max(depth);
+        self.last_time = now;
+        self.horizon = self.horizon.max(now);
+    }
+
+    pub(crate) fn on_arrival(&mut self) {
+        self.arrivals += 1;
+    }
+
+    pub(crate) fn on_serve(&mut self, wait: f64, est_success: f64) {
+        self.served += 1;
+        self.wait_mean.push(wait.max(0.0));
+        if est_success.is_finite() {
+            self.est_success.push(est_success);
+        }
+    }
+
+    pub(crate) fn on_loss(&mut self, fate: JobFate) {
+        match fate {
+            JobFate::DroppedAtArrival => self.dropped_at_arrival += 1,
+            JobFate::DroppedInfeasible => self.dropped_infeasible += 1,
+            JobFate::ExpiredInQueue => self.expired_in_queue += 1,
+            JobFate::Completed | JobFate::Missed => {
+                unreachable!("served outcomes go through on_resolve")
+            }
+        }
+    }
+
+    pub(crate) fn on_resolve(&mut self, success: bool, latency: f64) {
+        if success {
+            self.completed += 1;
+            self.latency_mean.push(latency);
+            self.latency_p50.push(latency);
+            self.latency_p95.push(latency);
+            self.latency_p99.push(latency);
+        } else {
+            self.missed_service += 1;
+        }
+    }
+
+    /// Definition 2.1 lifted to open-loop traffic: completed-by-deadline
+    /// jobs per *arrival* — drops and queue expiries count against it.
+    pub fn timely_throughput(&self) -> f64 {
+        ratio(self.completed, self.arrivals)
+    }
+
+    /// Completed-by-deadline jobs per *served* job: what fraction of the
+    /// work the cluster actually took on paid off.
+    pub fn goodput(&self) -> f64 {
+        ratio(self.completed, self.served)
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            1.0 - self.timely_throughput()
+        }
+    }
+
+    /// Jobs shed before service (any reason), per arrival.
+    pub fn loss_rate(&self) -> f64 {
+        ratio(
+            self.dropped_at_arrival + self.dropped_infeasible + self.expired_in_queue,
+            self.arrivals,
+        )
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        self.latency_mean.mean()
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        self.latency_p50.value()
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        self.latency_p95.value()
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        self.latency_p99.value()
+    }
+
+    pub fn mean_wait(&self) -> f64 {
+        self.wait_mean.mean()
+    }
+
+    pub fn mean_est_success(&self) -> f64 {
+        self.est_success.mean()
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.queue_area / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Serialize every reported figure (deterministic key order via the
+    /// JSON object's BTreeMap; NaN percentiles — no completions — become 0).
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| Json::num(if x.is_finite() { x } else { 0.0 });
+        Json::obj(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("missed_service", Json::num(self.missed_service as f64)),
+            (
+                "dropped_at_arrival",
+                Json::num(self.dropped_at_arrival as f64),
+            ),
+            (
+                "dropped_infeasible",
+                Json::num(self.dropped_infeasible as f64),
+            ),
+            ("expired_in_queue", Json::num(self.expired_in_queue as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("horizon", num(self.horizon)),
+            ("timely_throughput", num(self.timely_throughput())),
+            ("goodput", num(self.goodput())),
+            ("miss_rate", num(self.miss_rate())),
+            ("loss_rate", num(self.loss_rate())),
+            ("mean_latency", num(self.mean_latency())),
+            ("latency_p50", num(self.latency_p50())),
+            ("latency_p95", num(self.latency_p95())),
+            ("latency_p99", num(self.latency_p99())),
+            ("mean_wait", num(self.mean_wait())),
+            ("mean_queue_depth", num(self.mean_queue_depth())),
+            ("queue_max", Json::num(self.queue_max as f64)),
+        ])
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_integral_is_time_weighted() {
+        let mut m = TrafficMetrics::new();
+        m.tick(0, 0.0);
+        m.tick(2, 1.0); // depth 0 held over [0,1)
+        m.tick(1, 3.0); // depth 2 held over [1,3)
+        m.tick(0, 4.0); // depth 1 held over [3,4)
+        assert_eq!(m.events, 4);
+        assert_eq!(m.queue_max, 2);
+        assert!((m.mean_queue_depth() - 5.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates_and_fates_are_consistent() {
+        let mut m = TrafficMetrics::new();
+        for _ in 0..10 {
+            m.on_arrival();
+        }
+        m.on_loss(JobFate::DroppedAtArrival);
+        m.on_loss(JobFate::DroppedInfeasible);
+        m.on_loss(JobFate::ExpiredInQueue);
+        for i in 0..7 {
+            m.on_serve(0.1, 0.9);
+            m.on_resolve(i < 5, 0.5 + 0.1 * i as f64);
+        }
+        assert_eq!(m.completed, 5);
+        assert_eq!(m.missed_service, 2);
+        assert!((m.timely_throughput() - 0.5).abs() < 1e-12);
+        assert!((m.goodput() - 5.0 / 7.0).abs() < 1e-12);
+        assert!((m.loss_rate() - 0.3).abs() < 1e-12);
+        assert!((m.miss_rate() - 0.5).abs() < 1e-12);
+        assert!(m.latency_p50() >= 0.5 && m.latency_p50() <= 0.9);
+    }
+
+    #[test]
+    fn empty_run_serializes_finite() {
+        let m = TrafficMetrics::new();
+        let j = m.to_json();
+        assert_eq!(j.get("arrivals").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("latency_p99").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("goodput").unwrap().as_f64(), Some(0.0));
+    }
+}

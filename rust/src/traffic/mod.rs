@@ -1,0 +1,33 @@
+//! Event-driven multi-job traffic engine — the queueing layer above the
+//! round simulator.
+//!
+//! The paper (and [`crate::sim::runner`]) serves exactly one request per
+//! round. Real clusters face open-loop streams: jobs arrive on their own
+//! clock, each with its own deadline and coding geometry, and overlapping
+//! jobs contend for the same workers. This module opens that scenario space:
+//!
+//! - [`event`] — a deterministic virtual-time event queue (arrivals, worker
+//!   releases, queue expiries, round resolutions).
+//! - [`job`] — job classes (deadline + geometry mix) and in-flight state.
+//! - [`admission`] — pluggable admission/scheduling policies (admit-all,
+//!   EDF-with-feasibility-check, drop-if-infeasible) that make timely
+//!   throughput and goodput diverge.
+//! - [`engine`] — the simulation loop: per-job EA allocation over the idle
+//!   worker subset through the shared [`crate::scheduler::strategy::Strategy`],
+//!   worker state processes advanced by true elapsed virtual time.
+//! - [`metrics`] — deadline-miss rate, goodput, queue depth, and p50/p95/p99
+//!   latency via the O(1)-memory P² sketch.
+//!
+//! The parallel scenario-grid harness lives in [`crate::experiments::traffic`]
+//! (`lea traffic` on the CLI).
+
+pub mod admission;
+pub mod engine;
+pub mod event;
+pub mod job;
+pub mod metrics;
+
+pub use admission::Policy;
+pub use engine::{run_traffic, DeadlineFrom, TrafficConfig};
+pub use job::{JobClass, JobFate};
+pub use metrics::TrafficMetrics;

@@ -1,0 +1,135 @@
+//! Minimal `anyhow`-style error type (the crate is unavailable offline).
+//!
+//! The exec/runtime layers want a cheap "string of context frames" error that
+//! any `std::error::Error` converts into via `?`. This module provides the
+//! subset the repo uses: [`Error`], the [`Result`] alias, the [`anyhow!`]
+//! macro and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! [`anyhow!`]: crate::anyhow
+
+use std::fmt;
+
+/// A flattened error message with its context chain baked in.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+
+    /// Prepend a context frame: `"{context}: {cause}"`.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what keeps this blanket conversion coherent (same trick as anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("worker {n} died");
+        assert_eq!(b.to_string(), "worker 3 died");
+        let c = anyhow!("{} of {}", 1, 2);
+        assert_eq!(c.to_string(), "1 of 2");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Result<()> = io_fail().context("loading manifest");
+        let msg = e.unwrap_err().to_string();
+        assert!(msg.starts_with("loading manifest: "), "{msg}");
+
+        let o: Option<u32> = None;
+        let msg = o.with_context(|| format!("missing key '{}'", "k")).unwrap_err();
+        assert_eq!(msg.to_string(), "missing key 'k'");
+    }
+
+    #[test]
+    fn alternate_format_is_stable() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}

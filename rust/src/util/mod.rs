@@ -7,6 +7,7 @@
 
 pub mod bench_kit;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod matrix;
 pub mod plot;

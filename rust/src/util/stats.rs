@@ -78,6 +78,133 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Streaming quantile estimator — the P² algorithm (Jain & Chlamtac 1985).
+///
+/// Tracks one quantile `q` with five markers in O(1) memory and O(1) update,
+/// so the traffic engine can report p50/p95/p99 latencies over millions of
+/// jobs without retaining them. Fully deterministic for a given input
+/// sequence (required for the byte-identical grid JSON dumps). Exact for the
+/// first five observations, an interpolated estimate afterwards.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    q: f64,
+    count: u64,
+    /// Marker heights h_0..h_4 (h_2 estimates the quantile).
+    heights: [f64; 5],
+    /// Actual marker positions n_0..n_4 (1-based ranks).
+    positions: [f64; 5],
+    /// Desired marker positions n'_0..n'_4.
+    desired: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    dn: [f64; 5],
+    /// Buffer for the first five observations.
+    init: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        P2Quantile {
+            q,
+            count: 0,
+            heights: [0.0; 5],
+            positions: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dn: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            init: [0.0; 5],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "P2Quantile::push({x})");
+        if self.count < 5 {
+            self.init[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                let mut v = self.init;
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.heights = v;
+            }
+            return;
+        }
+        self.count += 1;
+
+        // Locate the cell k with h_k ≤ x < h_{k+1}, widening the extremes.
+        let h = &mut self.heights;
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x >= h[4] {
+            h[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= h[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+
+        for p in self.positions[k + 1..].iter_mut() {
+            *p += 1.0;
+        }
+        for (d, inc) in self.desired.iter_mut().zip(self.dn) {
+            *d += inc;
+        }
+
+        // Adjust the three interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.desired[i] - self.positions[i];
+            let right = self.positions[i + 1] - self.positions[i];
+            let left = self.positions[i - 1] - self.positions[i];
+            if (d >= 1.0 && right > 1.0) || (d <= -1.0 && left < -1.0) {
+                let s = d.signum();
+                let hp = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < hp && hp < self.heights[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, s)
+                };
+                self.positions[i] += s;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic prediction of marker i moved by s ∈ {−1, +1}.
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (h, n) = (&self.heights, &self.positions);
+        h[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + s * (self.heights[j] - self.heights[i]) / (self.positions[j] - self.positions[i])
+    }
+
+    /// Current quantile estimate. NaN before the first observation; exact
+    /// (sorted interpolation) through the fifth.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count <= 5 {
+            let mut v = self.init[..self.count as usize].to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return percentile(&v, self.q * 100.0);
+        }
+        self.heights[2]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +237,58 @@ mod tests {
         w.push(5.0);
         assert_eq!(w.variance(), 0.0);
         assert_eq!(w.ci95(), 0.0);
+    }
+
+    #[test]
+    fn p2_small_counts_are_exact() {
+        let mut s = P2Quantile::new(0.5);
+        assert!(s.value().is_nan());
+        for x in [4.0, 1.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.value(), percentile(&[1.0, 3.0, 4.0], 50.0));
+        s.push(2.0);
+        s.push(5.0);
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.value(), 3.0);
+    }
+
+    #[test]
+    fn p2_tracks_exact_percentiles_on_skewed_data() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.exp(2.0)).collect();
+        for q in [0.5, 0.95, 0.99] {
+            let mut sketch = P2Quantile::new(q);
+            for &x in &xs {
+                sketch.push(x);
+            }
+            let exact = percentile(&xs, q * 100.0);
+            let got = sketch.value();
+            assert!(
+                (got - exact).abs() < 0.05 * exact.max(1.0),
+                "q={q}: sketch {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2_is_deterministic_and_ordered() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.f64() * 100.0).collect();
+        let mut a = P2Quantile::new(0.95);
+        let mut b = P2Quantile::new(0.95);
+        let mut med = P2Quantile::new(0.5);
+        for &x in &xs {
+            a.push(x);
+            b.push(x);
+            med.push(x);
+        }
+        assert_eq!(a.value().to_bits(), b.value().to_bits());
+        assert!(med.value() < a.value());
+        // Uniform[0,100): estimates must land near the true quantiles.
+        assert!((med.value() - 50.0).abs() < 3.0, "{}", med.value());
+        assert!((a.value() - 95.0).abs() < 2.0, "{}", a.value());
     }
 }

@@ -1,0 +1,120 @@
+//! Integration tests over the traffic subsystem: the runner-equivalence
+//! regression (acceptance criterion of the traffic engine) and the parallel
+//! grid's determinism guarantee.
+
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::runner::{run, RunConfig};
+use timely_coded::sim::scenarios::{
+    fig3_geometry, fig3_load_params, fig3_scenarios, fig3_scheme, fig3_speeds,
+};
+use timely_coded::traffic::{run_traffic, DeadlineFrom, Policy, TrafficConfig};
+use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
+
+/// With one job in flight, back-to-back fixed arrivals and service-relative
+/// deadlines, the event engine IS the round simulator: same cluster seed,
+/// same LEA state trajectory, same per-round allocations and success bits.
+/// The throughputs must agree to 1e-9 (they are bit-identical computations).
+#[test]
+fn single_flight_engine_reproduces_round_runner() {
+    let scenario = fig3_scenarios()[0];
+    let rounds = 3000u64;
+
+    // Round simulator.
+    let mut cl_runner =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 404);
+    let mut lea_runner = Lea::new(fig3_load_params());
+    let runner_res = run(
+        &mut lea_runner,
+        &mut cl_runner,
+        &fig3_scheme(),
+        &RunConfig::simple(rounds, 1.0),
+        17,
+    );
+
+    // Event engine, constrained to the runner's regime.
+    let mut cl_engine =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 404);
+    let mut lea_engine = Lea::new(fig3_load_params());
+    let cfg = TrafficConfig {
+        jobs: rounds,
+        arrivals: Arrivals::Fixed(0.0),
+        classes: vec![timely_coded::traffic::JobClass::new(
+            1.0,
+            1.0,
+            fig3_geometry(),
+        )],
+        policy: Policy::AdmitAll,
+        max_in_flight: 1,
+        deadline_from: DeadlineFrom::ServiceStart,
+    };
+    let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
+
+    assert_eq!(m.arrivals, rounds);
+    assert_eq!(m.served, rounds);
+    assert_eq!(m.completed + m.missed_service, rounds);
+    assert!(
+        (m.timely_throughput() - runner_res.throughput).abs() < 1e-9,
+        "engine {} vs runner {}",
+        m.timely_throughput(),
+        runner_res.throughput
+    );
+    // The success COUNT must match exactly, not just the ratio.
+    assert_eq!(m.completed, runner_res.successes);
+}
+
+/// The ≥24-cell acceptance grid: parallel execution with per-cell seeding is
+/// byte-identical across thread counts and across repeated runs.
+#[test]
+fn grid_json_is_byte_identical_across_thread_counts() {
+    let spec = GridSpec::preset("small", 120, 2024).expect("preset");
+    assert!(spec.cells().len() >= 24);
+
+    let rows1 = run_grid(&spec, 1);
+    let rows4 = run_grid(&spec, 4);
+    let json1 = to_json(&spec, &rows1).to_string();
+    let json4 = to_json(&spec, &rows4).to_string();
+    assert_eq!(json1, json4);
+
+    // And a different seed must actually change the data.
+    let spec2 = GridSpec::preset("small", 120, 2025).expect("preset");
+    let json_other = to_json(&spec2, &run_grid(&spec2, 4)).to_string();
+    assert_ne!(json1, json_other);
+
+    // Parseable, with one entry per cell carrying the cell coordinates.
+    let parsed = timely_coded::util::json::Json::parse(&json1).expect("valid json");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 24);
+    for c in cells {
+        assert!(c.get("rate").is_some());
+        assert!(c.get("deadline").is_some());
+        assert!(c.get("policy").is_some());
+        assert!(c.get("timely_throughput").is_some());
+    }
+}
+
+/// Queueing pressure must show up in the grid: at fixed deadline/policy,
+/// higher offered load cannot improve timely throughput (deterministic
+/// seeds; checked on the admit-all column where nothing is shed early).
+#[test]
+fn heavier_offered_load_does_not_raise_timely_throughput() {
+    let spec = GridSpec {
+        rates: vec![0.3, 3.0],
+        deadlines: vec![1.0],
+        policies: vec![Policy::AdmitAll],
+        jobs: 600,
+        seed: 7,
+    };
+    let rows = run_grid(&spec, 2);
+    assert_eq!(rows.len(), 2);
+    let light = &rows[0].metrics;
+    let heavy = &rows[1].metrics;
+    assert!(
+        light.timely_throughput() > heavy.timely_throughput() + 0.05,
+        "light {} vs heavy {}",
+        light.timely_throughput(),
+        heavy.timely_throughput()
+    );
+    assert!(heavy.mean_queue_depth() > light.mean_queue_depth());
+}
