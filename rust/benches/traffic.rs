@@ -1,6 +1,8 @@
 //! Traffic-engine benchmarks: events/second of the event loop, and the
 //! grid runner's thread scaling. The events/s figure is the subsystem's
-//! baseline — record it in CHANGES.md when it moves.
+//! baseline — record it in CHANGES.md when it moves. Figures land in
+//! `BENCH_traffic.json` (uploaded by the CI bench-smoke job); set
+//! `BENCH_SMOKE=1` for a fast validity run.
 
 use std::time::Instant;
 
@@ -10,7 +12,7 @@ use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
 use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
-use timely_coded::util::bench_kit::table;
+use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
     let scenario = fig3_scenarios()[0];
@@ -31,7 +33,8 @@ fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
 }
 
 fn main() {
-    let jobs = 30_000;
+    let mut log = BenchLog::new();
+    let jobs: u64 = if smoke_mode() { 2_000 } else { 30_000 };
 
     // ---- raw engine throughput per policy ----
     let mut rows = Vec::new();
@@ -42,18 +45,25 @@ fn main() {
                 "bench traffic_engine {:<16} rate={rate:<4} {events:>8} events  {eps:>12.0} events/s",
                 policy.name()
             );
+            log.note(&format!("events_per_sec_{}_rate{rate}", policy.name()), eps);
             rows.push((
                 format!("{} rate={rate}", policy.name()),
                 vec![events as f64, eps],
             ));
         }
     }
-    table("Traffic engine (30k jobs, Fig.-3 scenario 1)", &["events", "events/s"], &rows);
+    table(
+        &format!("Traffic engine ({}k jobs, Fig.-3 scenario 1)", jobs / 1000),
+        &["events", "events/s"],
+        &rows,
+    );
 
     // ---- grid-runner thread scaling ----
+    let grid_jobs = if smoke_mode() { 200 } else { 2000 };
+    let threads_list: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 2, 4, 8] };
     let mut scale_rows = Vec::new();
-    for threads in [1usize, 2, 4, 8] {
-        let spec = GridSpec::preset("small", 2000, 5).expect("preset");
+    for &threads in threads_list {
+        let spec = GridSpec::preset("small", grid_jobs, 5).expect("preset");
         let t0 = Instant::now();
         let rows = run_grid(&spec, threads);
         let secs = t0.elapsed().as_secs_f64();
@@ -63,14 +73,20 @@ fn main() {
             secs,
             events as f64 / secs
         );
+        log.note(
+            &format!("grid_events_per_sec_threads{threads}"),
+            events as f64 / secs,
+        );
         scale_rows.push((
             format!("threads={threads}"),
             vec![secs, events as f64 / secs],
         ));
     }
     table(
-        "Grid runner scaling (24 cells x 2000 jobs)",
+        &format!("Grid runner scaling (24 cells x {grid_jobs} jobs)"),
         &["wall s", "events/s"],
         &scale_rows,
     );
+
+    log.write("BENCH_traffic.json");
 }

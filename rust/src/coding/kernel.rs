@@ -1,0 +1,289 @@
+//! Flat payload kernels for the coding layer.
+//!
+//! The master's per-round hot path is two GEMMs — encode `G @ X` and decode
+//! `W @ R` — plus the construction of the per-round weight matrix `W`. This
+//! module supplies both halves of the rebuild:
+//!
+//! * [`gemm`] / [`gemm_into`] — a blocked i-k-j GEMM over any [`CodeField`]
+//!   on contiguous row-major [`Mat`] buffers. The inner loop walks a row of
+//!   the right operand (a "transposed" access pattern: no column strides
+//!   anywhere), so it vectorizes like the f32 kernel in `util::matrix`.
+//!   Per output element the contraction index is consumed in ascending
+//!   order with the same zero-coefficient skip the seed nested-`Vec` path
+//!   used, so results are bit-identical to it — exactly over `GF(2^61−1)`,
+//!   and operation-for-operation over `f64` (pinned by
+//!   `tests/flat_kernels.rs`).
+//! * [`PlanCache`] — a bounded LRU keyed by a sorted received-index set.
+//!   Under the two-state worker model the same fast-worker subsets recur in
+//!   steady state, so the per-round decode plan (the interpolated `W`) is
+//!   cached instead of re-derived; `coding::lagrange::DecodePlanCache` is
+//!   the instantiation that stores `W`, and the traffic engine reuses the
+//!   same structure with `()` values to *measure* subset recurrence.
+
+use super::field::CodeField;
+use crate::util::matrix::Mat;
+
+/// Default capacity for decode-plan caches: comfortably above the number of
+/// distinct fast-worker subsets seen in steady state at paper scale (n = 15)
+/// while keeping the linear-scan LRU cheap.
+pub const DEFAULT_PLAN_CACHE_CAP: usize = 64;
+
+/// A `rows x cols` matrix of field zeros.
+pub fn zeros<F: CodeField>(rows: usize, cols: usize) -> Mat<F> {
+    Mat::filled(rows, cols, F::zero())
+}
+
+/// Blocked GEMM `out = a @ b` over a [`CodeField`].
+///
+/// i-k-j loop order with the contraction dimension blocked: the innermost
+/// loop is an AXPY over contiguous rows of `b` and `out`. For every output
+/// element the k-terms accumulate in ascending order and zero coefficients
+/// are skipped, matching the seed nested-`Vec` evaluation bit-for-bit.
+pub fn gemm_into<F: CodeField>(a: &Mat<F>, b: &Mat<F>, out: &mut Mat<F>) {
+    assert_eq!(a.cols, b.rows, "GEMM contraction mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols), "GEMM output shape");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    for x in &mut out.data {
+        *x = F::zero();
+    }
+    const BK: usize = 64;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let coef = a.data[i * k + kk];
+                if coef == F::zero() {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (o, &x) in orow.iter_mut().zip(brow) {
+                    *o = o.add(coef.mul(x));
+                }
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`gemm_into`].
+pub fn gemm<F: CodeField>(a: &Mat<F>, b: &Mat<F>) -> Mat<F> {
+    let mut out = zeros(a.rows, b.cols);
+    gemm_into(a, b, &mut out);
+    out
+}
+
+/// Bounded LRU cache keyed by a set of received encoded-chunk indices
+/// (callers key by the SORTED set so recurring subsets hit regardless of
+/// arrival order). Values are whatever the caller derives from the key —
+/// the Lagrange decode plan `W`, or `()` when only recurrence statistics
+/// are wanted.
+///
+/// Entries are held most-recently-used-last in a flat Vec: capacities are
+/// small (default [`DEFAULT_PLAN_CACHE_CAP`]) and keys are short, so a
+/// linear scan beats hashing and keeps iteration order deterministic.
+#[derive(Clone, Debug)]
+pub struct PlanCache<V> {
+    cap: usize,
+    entries: Vec<(Vec<usize>, V)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<V> PlanCache<V> {
+    /// A cache holding at most `cap` plans (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        PlanCache {
+            cap: cap.max(1),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Hits / (hits + misses); NaN-free (0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Whether `key` is cached, without touching LRU order or counters.
+    pub fn contains(&self, key: &[usize]) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    /// Look up `key`; on a miss, build the value with `make` (a miss is
+    /// recorded even if `make` fails, and nothing is inserted). The
+    /// least-recently-used entry is evicted when the cache is full.
+    pub fn get_or_try_insert_with<E>(
+        &mut self,
+        key: &[usize],
+        make: impl FnOnce() -> Result<V, E>,
+    ) -> Result<&V, E> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            self.hits += 1;
+            // Move to back = most recently used.
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+        } else {
+            self.misses += 1;
+            let value = make()?;
+            if self.entries.len() == self.cap {
+                self.entries.remove(0);
+                self.evictions += 1;
+            }
+            self.entries.push((key.to_vec(), value));
+        }
+        Ok(&self.entries.last().expect("just pushed or moved").1)
+    }
+
+    /// Record a lookup of `key`, inserting it on a miss; returns whether it
+    /// was a hit. For recurrence probes (`V = ()` style) where the value is
+    /// produced infallibly.
+    pub fn touch(&mut self, key: &[usize], make: impl FnOnce() -> V) -> bool {
+        let before = self.hits;
+        let _ = self.get_or_try_insert_with(key, || Ok::<V, std::convert::Infallible>(make()));
+        self.hits > before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::field::Fp;
+    use crate::util::rng::Rng;
+
+    fn rand_mat_fp(rng: &mut Rng, r: usize, c: usize) -> Mat<Fp> {
+        Mat::from_fn(r, c, |_, _| Fp::new(rng.next_u64()))
+    }
+
+    /// Plain j-loop reference; over the exact field every summation order
+    /// agrees, so this pins correctness independently of blocking.
+    fn gemm_naive_fp(a: &Mat<Fp>, b: &Mat<Fp>) -> Mat<Fp> {
+        Mat::from_fn(a.rows, b.cols, |i, j| {
+            let mut acc = <Fp as CodeField>::zero();
+            for kk in 0..a.cols {
+                acc = acc.add(a.at(i, kk).mul(b.at(kk, j)));
+            }
+            acc
+        })
+    }
+
+    #[test]
+    fn blocked_field_gemm_matches_naive_fp() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 70, 9), (50, 99, 33), (8, 130, 4)] {
+            let a = rand_mat_fp(&mut rng, m, k);
+            let b = rand_mat_fp(&mut rng, k, n);
+            assert_eq!(gemm(&a, &b), gemm_naive_fp(&a, &b), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn field_gemm_f64_matches_f32_kernel_shape() {
+        // Same blocked schedule as MatF32::matmul: cross-check numerically.
+        let mut rng = Rng::new(12);
+        let a = Mat::<f64>::from_fn(13, 70, |_, _| rng.f64() * 2.0 - 1.0);
+        let b = Mat::<f64>::from_fn(70, 7, |_, _| rng.f64() * 2.0 - 1.0);
+        let got = gemm(&a, &b);
+        for i in 0..13 {
+            for j in 0..7 {
+                let want: f64 = (0..70).map(|kk| a.at(i, kk) * b.at(kk, j)).sum();
+                assert!((got.at(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_into_reuses_buffer() {
+        let mut rng = Rng::new(13);
+        let a = rand_mat_fp(&mut rng, 4, 6);
+        let b = rand_mat_fp(&mut rng, 6, 5);
+        let mut out = Mat::filled(4, 5, Fp::new(u64::MAX)); // garbage to overwrite
+        gemm_into(&a, &b, &mut out);
+        assert_eq!(out, gemm(&a, &b));
+    }
+
+    #[test]
+    fn plan_cache_hits_and_lru_eviction() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        let mk = |v: u32| move || Ok::<u32, String>(v);
+        assert_eq!(*c.get_or_try_insert_with(&[1, 2], mk(12)).unwrap(), 12);
+        assert_eq!(*c.get_or_try_insert_with(&[3, 4], mk(34)).unwrap(), 34);
+        assert_eq!((c.hits(), c.misses(), c.len()), (0, 2, 2));
+
+        // Hit refreshes recency: [1,2] becomes MRU.
+        assert_eq!(*c.get_or_try_insert_with(&[1, 2], mk(99)).unwrap(), 12);
+        assert_eq!(c.hits(), 1);
+
+        // Inserting a third evicts the LRU entry [3,4], not [1,2].
+        assert_eq!(*c.get_or_try_insert_with(&[5, 6], mk(56)).unwrap(), 56);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.contains(&[1, 2]));
+        assert!(!c.contains(&[3, 4]));
+        assert!(c.contains(&[5, 6]));
+        assert_eq!(c.len(), 2);
+        assert!((c.hit_rate() - 1.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_cache_failed_build_inserts_nothing() {
+        let mut c: PlanCache<u32> = PlanCache::new(4);
+        let err: Result<&u32, String> =
+            c.get_or_try_insert_with(&[7], || Err("nope".to_string()));
+        assert!(err.is_err());
+        assert_eq!((c.len(), c.misses()), (0, 1));
+        // The key is retryable afterwards.
+        assert_eq!(*c.get_or_try_insert_with(&[7], || Ok::<_, String>(7)).unwrap(), 7);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn touch_probe_counts_recurrence() {
+        let mut probe: PlanCache<()> = PlanCache::new(2);
+        assert!(!probe.touch(&[1, 2, 3], || ()));
+        assert!(probe.touch(&[1, 2, 3], || ()));
+        assert!(!probe.touch(&[4], || ()));
+        assert!(!probe.touch(&[5], || ())); // evicts [1,2,3]
+        assert!(!probe.touch(&[1, 2, 3], || ()));
+        assert_eq!(probe.hits(), 1);
+        assert_eq!(probe.misses(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c: PlanCache<u8> = PlanCache::new(0);
+        assert_eq!(c.capacity(), 1);
+        assert!(!c.touch(&[1], || 1)); // first insert is a miss
+        assert!(c.touch(&[1], || 1)); // second lookup hits
+    }
+}

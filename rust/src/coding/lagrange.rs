@@ -10,9 +10,30 @@
 //! `{(v, f(X̃_v))}` determine it; evaluating the interpolant at the β's
 //! recovers every `f(X_j)`. Also expressible as a GEMM with the per-round
 //! weight matrix `W[j][v] = L̂_v(β_j)` (the `decode.hlo.txt` artifact).
+//!
+//! Hot-path layout: the generator matrix and the β barycentric weights are
+//! computed once in [`LagrangeCode::new`] and held as flat row-major
+//! [`Mat`] buffers; encode and decode are single blocked GEMMs
+//! ([`kernel::gemm`]). The per-round decode plan `W` depends only on WHICH
+//! K* encoded indices arrived, and under the two-state worker model the
+//! same fast-worker subsets recur in steady state — [`DecodePlanCache`]
+//! (an LRU keyed by the sorted received-index set) therefore caches plans
+//! across rounds. The nested-`Vec` entry points survive as thin compat
+//! wrappers and are pinned bit-for-bit to the flat kernels by
+//! `tests/flat_kernels.rs`.
 
 use super::field::CodeField;
+use super::kernel::{self, PlanCache};
 use super::poly;
+use crate::util::matrix::Mat;
+
+/// LRU cache of per-round decode plans: sorted received-index set → `W`.
+///
+/// Keys are index sets ONLY, so a cache belongs to exactly one
+/// [`LagrangeCode`] instance and one `deg_f` (as in `exec::master`, which
+/// owns one per cluster) — sharing it across codes would serve plans for
+/// the wrong geometry.
+pub type DecodePlanCache<F> = PlanCache<Mat<F>>;
 
 /// A Lagrange code instance for k data chunks and nr encoded chunks.
 #[derive(Clone, Debug)]
@@ -21,17 +42,27 @@ pub struct LagrangeCode<F: CodeField> {
     pub nr: usize,
     betas: Vec<F>,
     alphas: Vec<F>,
+    /// Barycentric weights over the β nodes (cached for the generator).
+    beta_weights: Vec<F>,
+    /// Generator matrix `G (nr × k)`, cached at construction.
+    gen: Mat<F>,
 }
 
 impl<F: CodeField> LagrangeCode<F> {
     pub fn new(k: usize, nr: usize) -> Self {
         assert!(k >= 1, "k must be positive");
         assert!(nr >= 1, "nr must be positive");
+        let betas = F::betas(k);
+        let alphas = F::alphas(k, nr);
+        let beta_weights = poly::barycentric_weights(&betas);
+        let gen = poly::basis_matrix_flat(&betas, &beta_weights, &alphas);
         LagrangeCode {
             k,
             nr,
-            betas: F::betas(k),
-            alphas: F::alphas(k, nr),
+            betas,
+            alphas,
+            beta_weights,
+            gen,
         }
     }
 
@@ -43,17 +74,41 @@ impl<F: CodeField> LagrangeCode<F> {
         &self.alphas
     }
 
+    /// Barycentric weights over the β nodes (cached at construction).
+    pub fn beta_weights(&self) -> &[F] {
+        &self.beta_weights
+    }
+
     /// Recovery threshold for a degree-`deg_f` function (eq. 15).
     pub fn kstar(&self, deg_f: usize) -> usize {
         (self.k - 1) * deg_f + 1
     }
 
-    /// Generator matrix `G (nr × k)`: `X̃ = G · X_stack`.
+    /// Cached generator matrix `G (nr × k)`: `X̃ = G · X_stack`.
+    pub fn generator(&self) -> &Mat<F> {
+        &self.gen
+    }
+
+    /// Generator as nested rows (compat; prefer [`Self::generator`]).
     pub fn generator_matrix(&self) -> Vec<Vec<F>> {
-        poly::basis_matrix(&self.betas, &self.alphas)
+        self.gen.to_rows()
+    }
+
+    /// Encode `k` data chunks stacked as the rows of a `(k × dim)` matrix
+    /// into `nr` encoded rows: one blocked GEMM against the cached generator.
+    pub fn encode_mat(&self, data: &Mat<F>) -> Mat<F> {
+        assert_eq!(data.rows, self.k, "expected k={} chunk rows", self.k);
+        kernel::gemm(&self.gen, data)
+    }
+
+    /// [`Self::encode_mat`] into a caller-owned output buffer (no allocation).
+    pub fn encode_into(&self, data: &Mat<F>, out: &mut Mat<F>) {
+        assert_eq!(data.rows, self.k, "expected k={} chunk rows", self.k);
+        kernel::gemm_into(&self.gen, data, out);
     }
 
     /// Encode `k` data chunks (equal-length payload vectors) into `nr`.
+    /// Compat wrapper over [`Self::encode_mat`] — bit-identical results.
     pub fn encode(&self, data: &[Vec<F>]) -> Vec<Vec<F>> {
         assert_eq!(data.len(), self.k, "expected k={} chunks", self.k);
         let dim = data[0].len();
@@ -61,26 +116,17 @@ impl<F: CodeField> LagrangeCode<F> {
             data.iter().all(|d| d.len() == dim),
             "all chunks must have equal payload length"
         );
-        let g = self.generator_matrix();
-        g.iter()
-            .map(|row| {
-                let mut out = vec![F::zero(); dim];
-                for (coef, chunk) in row.iter().zip(data) {
-                    if *coef == F::zero() {
-                        continue;
-                    }
-                    for (o, &x) in out.iter_mut().zip(chunk) {
-                        *o = o.add(coef.mul(x));
-                    }
-                }
-                out
-            })
-            .collect()
+        let mut stacked = kernel::zeros(self.k, dim);
+        for (j, chunk) in data.iter().enumerate() {
+            stacked.row_mut(j).copy_from_slice(chunk);
+        }
+        self.encode_mat(&stacked).to_rows()
     }
 
     /// Per-round decode weight matrix `W (k × K*)` for the received encoded
-    /// indices. Errors unless exactly K* distinct in-range indices are given.
-    pub fn decode_weights(&self, received: &[usize], deg_f: usize) -> Result<Vec<Vec<F>>, String> {
+    /// indices, as a flat buffer. Errors unless exactly K* distinct in-range
+    /// indices are given.
+    pub fn decode_weights_mat(&self, received: &[usize], deg_f: usize) -> Result<Mat<F>, String> {
         let kstar = self.kstar(deg_f);
         if received.len() != kstar {
             return Err(format!(
@@ -98,45 +144,119 @@ impl<F: CodeField> LagrangeCode<F> {
             return Err(format!("index out of range (nr={})", self.nr));
         }
         let nodes: Vec<F> = received.iter().map(|&v| self.alphas[v]).collect();
-        Ok(poly::basis_matrix(&nodes, &self.betas))
+        let node_weights = poly::barycentric_weights(&nodes);
+        Ok(poly::basis_matrix_flat(&nodes, &node_weights, &self.betas))
+    }
+
+    /// Nested-row compat wrapper over [`Self::decode_weights_mat`].
+    pub fn decode_weights(&self, received: &[usize], deg_f: usize) -> Result<Vec<Vec<F>>, String> {
+        Ok(self.decode_weights_mat(received, deg_f)?.to_rows())
+    }
+
+    /// The decode plan for a SORTED received-index set, served from `cache`
+    /// (computed and inserted on a miss, LRU-evicted when full).
+    pub fn decode_plan<'c>(
+        &self,
+        cache: &'c mut DecodePlanCache<F>,
+        sorted_received: &[usize],
+        deg_f: usize,
+    ) -> Result<&'c Mat<F>, String> {
+        debug_assert!(
+            sorted_received.windows(2).all(|w| w[0] < w[1]),
+            "plan keys must be sorted and distinct"
+        );
+        let plan = cache.get_or_try_insert_with(sorted_received, || {
+            self.decode_weights_mat(sorted_received, deg_f)
+        })?;
+        debug_assert_eq!(
+            (plan.rows, plan.cols),
+            (self.k, sorted_received.len()),
+            "plan cache shared across code instances?"
+        );
+        Ok(plan)
+    }
+
+    /// Positions (into `received`) of the first K* results with distinct
+    /// in-range encoded indices, in arrival order. Duplicate reports of an
+    /// index (e.g. a retried worker) are skipped, not fatal.
+    fn select_distinct(
+        &self,
+        received: &[(usize, Vec<F>)],
+        kstar: usize,
+    ) -> Result<Vec<usize>, String> {
+        let mut pick = Vec::with_capacity(kstar);
+        let mut seen = vec![false; self.nr];
+        for (pos, (v, _)) in received.iter().enumerate() {
+            if *v >= self.nr {
+                return Err(format!("index out of range (nr={})", self.nr));
+            }
+            if !seen[*v] {
+                seen[*v] = true;
+                pick.push(pos);
+                if pick.len() == kstar {
+                    break;
+                }
+            }
+        }
+        if pick.len() < kstar {
+            return Err(format!(
+                "need K*={kstar} distinct results, got {}",
+                pick.len()
+            ));
+        }
+        let dim = received[pick[0]].1.len();
+        if pick.iter().any(|&p| received[p].1.len() != dim) {
+            return Err("received payloads must have equal length".into());
+        }
+        Ok(pick)
+    }
+
+    /// Indices and stacked payload rows of the selected results, in `pick`
+    /// order — the `(idx, R)` pair both decode entry points feed the GEMM.
+    fn gather(&self, received: &[(usize, Vec<F>)], pick: &[usize]) -> (Vec<usize>, Mat<F>) {
+        let idx: Vec<usize> = pick.iter().map(|&p| received[p].0).collect();
+        let dim = received[pick[0]].1.len();
+        let mut r = kernel::zeros(pick.len(), dim);
+        for (row, &p) in pick.iter().enumerate() {
+            r.row_mut(row).copy_from_slice(&received[p].1);
+        }
+        (idx, r)
     }
 
     /// Recover `f(X_1)..f(X_k)` from any ≥ K* results `(encoded index, f(X̃_v))`.
-    /// Extra results beyond K* are ignored (the K* fastest are used).
+    /// The first K* DISTINCT results are used (duplicates — e.g. a worker
+    /// reporting twice after a retry — are skipped); extras are ignored.
     pub fn decode(
         &self,
         received: &[(usize, Vec<F>)],
         deg_f: usize,
     ) -> Result<Vec<Vec<F>>, String> {
         let kstar = self.kstar(deg_f);
-        if received.len() < kstar {
-            return Err(format!(
-                "need K*={kstar} results, got {}",
-                received.len()
-            ));
-        }
-        let use_set = &received[..kstar];
-        let idx: Vec<usize> = use_set.iter().map(|(v, _)| *v).collect();
-        let w = self.decode_weights(&idx, deg_f)?;
-        let dim = use_set[0].1.len();
-        if use_set.iter().any(|(_, p)| p.len() != dim) {
-            return Err("received payloads must have equal length".into());
-        }
-        Ok(w
-            .iter()
-            .map(|row| {
-                let mut out = vec![F::zero(); dim];
-                for (coef, (_, payload)) in row.iter().zip(use_set) {
-                    if *coef == F::zero() {
-                        continue;
-                    }
-                    for (o, &x) in out.iter_mut().zip(payload) {
-                        *o = o.add(coef.mul(x));
-                    }
-                }
-                out
-            })
-            .collect())
+        let pick = self.select_distinct(received, kstar)?;
+        let (idx, r) = self.gather(received, &pick);
+        let w = self.decode_weights_mat(&idx, deg_f)?;
+        Ok(kernel::gemm(&w, &r).to_rows())
+    }
+
+    /// [`Self::decode`] through the plan cache: the selected results are
+    /// canonicalized to ascending index order so recurring subsets share one
+    /// cached `W` regardless of arrival order. Returns the decoded
+    /// `(k × dim)` matrix. Exact over `GF(2^61−1)`; over floats the
+    /// reordered summation may differ from [`Self::decode`] in the last ulp.
+    pub fn decode_with_cache(
+        &self,
+        cache: &mut DecodePlanCache<F>,
+        received: &[(usize, Vec<F>)],
+        deg_f: usize,
+    ) -> Result<Mat<F>, String> {
+        let kstar = self.kstar(deg_f);
+        let mut pick = self.select_distinct(received, kstar)?;
+        // Unstable sort (no merge-buffer allocation, §Perf rule 7): the
+        // selected indices are distinct, so the order is already total.
+        pick.sort_unstable_by_key(|&p| received[p].0);
+        let (idx, r) = self.gather(received, &pick);
+        let w = self.decode_plan(cache, &idx, deg_f)?;
+        Ok(kernel::gemm(w, &r))
     }
 }
 
@@ -262,6 +382,33 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_report_among_first_kstar_is_skipped() {
+        // Regression: a retried worker reporting the same chunk twice inside
+        // the first K* slots must not fail the round when ≥ K* DISTINCT
+        // results exist — the duplicate is skipped, not fatal.
+        let mut rng = Rng::new(5);
+        let code = LagrangeCode::<Fp>::new(3, 9);
+        let data = rand_chunks_fp(&mut rng, 3, 4);
+        let enc = code.encode(&data);
+        let received: Vec<(usize, Vec<Fp>)> = vec![
+            (4, enc[4].clone()),
+            (4, enc[4].clone()), // duplicate in slot 1 < K* = 3
+            (7, enc[7].clone()),
+            (2, enc[2].clone()),
+        ];
+        assert_eq!(code.decode(&received, 1).unwrap(), data);
+
+        // Still an error when the distinct count falls short of K*.
+        let short: Vec<(usize, Vec<Fp>)> = vec![
+            (4, enc[4].clone()),
+            (4, enc[4].clone()),
+            (4, enc[4].clone()),
+            (7, enc[7].clone()),
+        ];
+        assert!(code.decode(&short, 1).is_err());
+    }
+
+    #[test]
     fn extra_results_are_ignored() {
         let mut rng = Rng::new(6);
         let code = LagrangeCode::<Fp>::new(3, 9);
@@ -279,6 +426,10 @@ mod tests {
         for row in &g {
             let s: f64 = row.iter().sum();
             assert!((s - 1.0).abs() < 1e-10);
+        }
+        // The cached flat generator is the same matrix.
+        for (i, row) in g.iter().enumerate() {
+            assert_eq!(code.generator().row(i), row.as_slice());
         }
     }
 
@@ -308,5 +459,80 @@ mod tests {
                 assert_eq!(ec[v][t], a.mul(ex[v][t]).add(ey[v][t]));
             }
         }
+    }
+
+    #[test]
+    fn encode_mat_agrees_with_compat_wrapper() {
+        let mut rng = Rng::new(8);
+        let code = LagrangeCode::<Fp>::new(5, 11);
+        let data = rand_chunks_fp(&mut rng, 5, 6);
+        let mut stacked = kernel::zeros(5, 6);
+        for (j, c) in data.iter().enumerate() {
+            stacked.row_mut(j).copy_from_slice(c);
+        }
+        let flat = code.encode_mat(&stacked);
+        let nested = code.encode(&data);
+        for (i, row) in nested.iter().enumerate() {
+            assert_eq!(flat.row(i), row.as_slice());
+        }
+        // encode_into reuses a buffer and matches.
+        let mut out = kernel::zeros(11, 6);
+        code.encode_into(&stacked, &mut out);
+        assert_eq!(out, flat);
+    }
+
+    #[test]
+    fn decode_plan_cache_hits_across_arrival_orders() {
+        let mut rng = Rng::new(9);
+        let code = LagrangeCode::<Fp>::new(4, 12);
+        let data = rand_chunks_fp(&mut rng, 4, 5);
+        let enc = code.encode(&data);
+        let mut cache: DecodePlanCache<Fp> = DecodePlanCache::new(8);
+        let want = {
+            let mut m = kernel::zeros(4, 5);
+            for (j, c) in data.iter().enumerate() {
+                m.row_mut(j).copy_from_slice(c);
+            }
+            m
+        };
+
+        // Same subset {1,4,7,9} in two arrival orders: one miss, then a hit.
+        let order_a = [7usize, 1, 9, 4];
+        let order_b = [4usize, 9, 1, 7];
+        for (i, order) in [order_a, order_b].iter().enumerate() {
+            let received: Vec<(usize, Vec<Fp>)> =
+                order.iter().map(|&v| (v, enc[v].clone())).collect();
+            let dec = code.decode_with_cache(&mut cache, &received, 1).unwrap();
+            assert_eq!(dec, want, "order {i}");
+        }
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+
+        // A different subset misses and occupies a second slot.
+        let received: Vec<(usize, Vec<Fp>)> =
+            [0usize, 2, 3, 5].iter().map(|&v| (v, enc[v].clone())).collect();
+        assert_eq!(code.decode_with_cache(&mut cache, &received, 1).unwrap(), want);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 2, 2));
+    }
+
+    #[test]
+    fn cached_decode_is_exact_over_fp_with_duplicates_and_extras() {
+        let mut rng = Rng::new(10);
+        let (k, nr) = (4, 10);
+        let code = LagrangeCode::<Fp>::new(k, nr);
+        let data = rand_chunks_fp(&mut rng, k, 3);
+        let enc = code.encode(&data);
+        let kstar = code.kstar(2);
+        let mut cache: DecodePlanCache<Fp> = DecodePlanCache::new(4);
+        // 7 distinct + one duplicate + one extra, shuffled.
+        let mut idx: Vec<usize> = (0..kstar).collect();
+        idx.push(0); // duplicate
+        idx.push(8); // extra beyond K*
+        rng.shuffle(&mut idx);
+        let received: Vec<(usize, Vec<Fp>)> =
+            idx.iter().map(|&v| (v, square_fp(&enc[v]))).collect();
+        let dec = code.decode_with_cache(&mut cache, &received, 2).unwrap();
+        let want: Vec<Vec<Fp>> = data.iter().map(|c| square_fp(c)).collect();
+        assert_eq!(dec.to_rows(), want);
     }
 }

@@ -3,14 +3,19 @@
 //! - [`field`] — the element trait plus `GF(2^61 - 1)` exact arithmetic and
 //!   the `f64` instance with Chebyshev evaluation points.
 //! - [`poly`] — barycentric Lagrange basis matrices (generic over the field).
-//! - [`lagrange`] — the Lagrange coding scheme: generator matrix, encode,
-//!   decode from any K* results (eq. 6 and Definition 4.2).
+//! - [`kernel`] — flat row-major payload kernels: the blocked field GEMM the
+//!   encode/decode hot path runs on, and the LRU [`kernel::PlanCache`]
+//!   behind per-round decode-plan reuse.
+//! - [`lagrange`] — the Lagrange coding scheme: cached generator matrix,
+//!   encode, decode from any K* results (eq. 6 and Definition 4.2), and the
+//!   [`lagrange::DecodePlanCache`] keyed by sorted received-index sets.
 //! - [`repetition`] — the repetition design used when `nr < k·deg f − 1`.
 //! - [`threshold`] — optimal recovery thresholds K* (eqs. 15–16 / eq. 9).
 //! - [`scheme`] — unified [`scheme::CodingScheme`] used by scheduler/sim/exec:
 //!   per-worker chunk placement and decodability checks.
 
 pub mod field;
+pub mod kernel;
 pub mod lagrange;
 pub mod poly;
 pub mod repetition;

@@ -12,6 +12,7 @@
 //! second-form barycentric interpolation).
 
 use super::field::CodeField;
+use crate::util::matrix::Mat;
 
 /// Barycentric weights w_v = 1 / Π_{l≠v} (x_v − x_l). O(n²).
 pub fn barycentric_weights<F: CodeField>(nodes: &[F]) -> Vec<F> {
@@ -33,24 +34,9 @@ pub fn barycentric_weights<F: CodeField>(nodes: &[F]) -> Vec<F> {
 
 /// Evaluate every Lagrange basis polynomial over `nodes` at one `target`.
 pub fn basis_row<F: CodeField>(nodes: &[F], weights: &[F], target: F) -> Vec<F> {
-    debug_assert_eq!(nodes.len(), weights.len());
-    // Exact node hit → unit row (also required for exactness over f64).
-    if let Some(hit) = nodes.iter().position(|&x| x == target) {
-        let mut row = vec![F::zero(); nodes.len()];
-        row[hit] = F::one();
-        return row;
-    }
-    let terms: Vec<F> = nodes
-        .iter()
-        .zip(weights)
-        .map(|(&x, &w)| w.div(target.sub(x)))
-        .collect();
-    let mut denom = F::zero();
-    for &t in &terms {
-        denom = denom.add(t);
-    }
-    let inv = denom.inv();
-    terms.into_iter().map(|t| t.mul(inv)).collect()
+    let mut row = vec![F::zero(); nodes.len()];
+    basis_row_into(nodes, weights, target, &mut row);
+    row
 }
 
 /// M[t][v] = L_v(targets[t]); rows sum to one (partition of unity).
@@ -60,6 +46,42 @@ pub fn basis_matrix<F: CodeField>(nodes: &[F], targets: &[F]) -> Vec<Vec<F>> {
         .iter()
         .map(|&t| basis_row(nodes, &w, t))
         .collect()
+}
+
+/// Allocation-free [`basis_row`]: writes `L_v(target)` for every `v` into
+/// `out` (length = `nodes.len()`). Identical operation sequence to the
+/// allocating form, so results are bit-for-bit equal.
+pub fn basis_row_into<F: CodeField>(nodes: &[F], weights: &[F], target: F, out: &mut [F]) {
+    debug_assert_eq!(nodes.len(), weights.len());
+    debug_assert_eq!(nodes.len(), out.len());
+    // Exact node hit → unit row (also required for exactness over f64).
+    if let Some(hit) = nodes.iter().position(|&x| x == target) {
+        for (v, o) in out.iter_mut().enumerate() {
+            *o = if v == hit { F::one() } else { F::zero() };
+        }
+        return;
+    }
+    for ((o, &x), &w) in out.iter_mut().zip(nodes).zip(weights) {
+        *o = w.div(target.sub(x));
+    }
+    let mut denom = F::zero();
+    for &t in out.iter() {
+        denom = denom.add(t);
+    }
+    let inv = denom.inv();
+    for o in out.iter_mut() {
+        *o = o.mul(inv);
+    }
+}
+
+/// Flat [`basis_matrix`] over precomputed `weights`:
+/// `M.at(t, v) = L_v(targets[t])` in one contiguous row-major buffer.
+pub fn basis_matrix_flat<F: CodeField>(nodes: &[F], weights: &[F], targets: &[F]) -> Mat<F> {
+    let mut m = Mat::filled(targets.len(), nodes.len(), F::zero());
+    for (t, &target) in targets.iter().enumerate() {
+        basis_row_into(nodes, weights, target, m.row_mut(t));
+    }
+    m
 }
 
 /// Evaluate the interpolating polynomial through (nodes, values) at `target`,
@@ -155,5 +177,31 @@ mod tests {
         let w = barycentric_weights(&nodes);
         let row = basis_row(&nodes, &w, 2.0);
         assert_eq!(row, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn flat_basis_matrix_is_bit_identical_to_nested() {
+        // Same op sequence ⇒ same bits, over both fields.
+        let mut rng = Rng::new(21);
+        let nodes_fp: Vec<Fp> = (0..9).map(Fp::from_i64).collect();
+        let targets_fp: Vec<Fp> = (20..26)
+            .map(|_| Fp::new(rng.next_u64()))
+            .chain(std::iter::once(nodes_fp[4])) // include a node hit
+            .collect();
+        let w_fp = barycentric_weights(&nodes_fp);
+        let flat = basis_matrix_flat(&nodes_fp, &w_fp, &targets_fp);
+        let nested = basis_matrix(&nodes_fp, &targets_fp);
+        for (t, row) in nested.iter().enumerate() {
+            assert_eq!(flat.row(t), row.as_slice());
+        }
+
+        let nodes_f: Vec<f64> = vec![0.0, 0.7, 1.9, 3.2, 4.0];
+        let targets_f: Vec<f64> = vec![0.25, 1.9, 2.6, -1.0];
+        let w_f = barycentric_weights(&nodes_f);
+        let flat_f = basis_matrix_flat(&nodes_f, &w_f, &targets_f);
+        let nested_f = basis_matrix(&nodes_f, &targets_f);
+        for (t, row) in nested_f.iter().enumerate() {
+            assert_eq!(flat_f.row(t), row.as_slice());
+        }
     }
 }

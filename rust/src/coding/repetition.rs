@@ -55,6 +55,36 @@ impl RepetitionCode {
         false
     }
 
+    /// Flat-payload decode: `payloads` holds one received result per row
+    /// (row i ↔ `received[i]`); the output gathers the first copy of each
+    /// data chunk into a `(k × dim)` matrix. Errors if coverage is
+    /// incomplete. The row-gather is the repetition analog of the Lagrange
+    /// decode GEMM — no per-chunk `Vec`s on the hot path.
+    pub fn decode_rows<T: Copy>(
+        &self,
+        received: &[usize],
+        payloads: &crate::util::matrix::Mat<T>,
+    ) -> Result<crate::util::matrix::Mat<T>, String> {
+        assert_eq!(received.len(), payloads.rows, "one payload row per result");
+        let mut src: Vec<Option<usize>> = vec![None; self.k];
+        for (row, &v) in received.iter().enumerate() {
+            let j = self.data_index(v);
+            if src[j].is_none() {
+                src[j] = Some(row);
+            }
+        }
+        let mut data = Vec::with_capacity(self.k * payloads.cols);
+        for j in 0..self.k {
+            let row = src[j].ok_or_else(|| format!("no copy of chunk {j} received"))?;
+            data.extend_from_slice(payloads.row(row));
+        }
+        Ok(crate::util::matrix::Mat::from_vec(
+            self.k,
+            payloads.cols,
+            data,
+        ))
+    }
+
     /// Recover data evaluations from results: any copy of each chunk works
     /// (all copies are identical). Errors if coverage is incomplete.
     pub fn decode<T: Clone>(&self, received: &[(usize, T)]) -> Result<Vec<T>, String> {
@@ -121,6 +151,24 @@ mod tests {
         // slot 6 stores chunk 0 (6 % 3).
         assert_eq!(c.decode(&received).unwrap(), vec![100, 11, 22]);
         assert!(c.decode(&received[..2].to_vec()).is_err());
+    }
+
+    #[test]
+    fn decode_rows_gathers_first_copy() {
+        use crate::util::matrix::Mat;
+        let c = RepetitionCode::new(3, 7);
+        // Results for slots [6, 1, 2, 3]: chunks [0, 1, 2, 0] — chunk 0's
+        // first copy (row 0) wins over the later one (row 3).
+        let idx = vec![6usize, 1, 2, 3];
+        let payloads = Mat::from_fn(4, 2, |i, j| (10 * i + j) as u32);
+        let out = c.decode_rows(&idx, &payloads).unwrap();
+        assert_eq!(out.row(0), &[0, 1]);
+        assert_eq!(out.row(1), &[10, 11]);
+        assert_eq!(out.row(2), &[20, 21]);
+
+        // Incomplete coverage errors.
+        let short = Mat::from_fn(2, 2, |i, j| (10 * i + j) as u32);
+        assert!(c.decode_rows(&[6, 3], &short).is_err());
     }
 
     #[test]

@@ -69,12 +69,21 @@ impl CodingScheme {
 
     /// Chunk indices worker `i` evaluates under load `ℓ` (its first ℓ chunks).
     pub fn assigned_chunks(&self, i: usize, load: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(load);
+        self.extend_assigned(i, load, &mut out);
+        out
+    }
+
+    /// Append worker `i`'s assigned chunk indices under load `ℓ` to `out` —
+    /// the allocation-free form for per-round hot loops (the caller owns and
+    /// recycles the buffer; see EXPERIMENTS.md §Perf).
+    pub fn extend_assigned(&self, i: usize, load: usize, out: &mut Vec<usize>) {
         assert!(
             load <= self.geometry.r,
             "load {load} exceeds storage r={}",
             self.geometry.r
         );
-        (0..load).map(|j| i + j * self.geometry.n).collect()
+        out.extend((0..load).map(|j| i + j * self.geometry.n));
     }
 
     /// Is the union of received encoded-chunk indices decodable?

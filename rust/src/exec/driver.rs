@@ -86,6 +86,23 @@ pub struct E2eResult {
     pub max_decode_error: f64,
     /// Total worker PJRT compute time (seconds).
     pub compute_secs: f64,
+    /// Master decode-plan cache hits (one lookup per successful round).
+    pub decode_plan_hits: u64,
+    /// Master decode-plan cache misses.
+    pub decode_plan_misses: u64,
+}
+
+impl E2eResult {
+    /// Fraction of successful rounds whose decode plan was served from the
+    /// cache (0 when nothing decoded).
+    pub fn decode_plan_hit_rate(&self) -> f64 {
+        let total = self.decode_plan_hits + self.decode_plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.decode_plan_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Synthetic linear-regression dataset split into k chunks: y = X w* + noise.
@@ -213,6 +230,7 @@ pub fn run_e2e(cfg: &E2eConfig, strategy: &mut dyn Strategy, engine: Engine) -> 
         }
     }
     let final_loss = loss(&data, &w);
+    let (decode_plan_hits, decode_plan_misses, _) = master.decode_plan_stats();
     master.shutdown();
 
     Ok(E2eResult {
@@ -226,6 +244,8 @@ pub fn run_e2e(cfg: &E2eConfig, strategy: &mut dyn Strategy, engine: Engine) -> 
         initial_loss,
         max_decode_error,
         compute_secs,
+        decode_plan_hits,
+        decode_plan_misses,
     })
 }
 
@@ -274,6 +294,14 @@ mod tests {
             "relative decode error {}",
             res.max_decode_error
         );
+        // Exactly one plan lookup per successful round; the hit rate is a
+        // free observable (how often the same K*-subset recurred).
+        assert_eq!(
+            res.decode_plan_hits + res.decode_plan_misses,
+            res.successes,
+            "one decode-plan lookup per success"
+        );
+        assert!((0.0..=1.0).contains(&res.decode_plan_hit_rate()));
     }
 
     #[test]

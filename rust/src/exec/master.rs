@@ -15,6 +15,7 @@ use std::thread::JoinHandle;
 use super::protocol::{RoundReply, RoundTask, ToWorker};
 use super::worker::{infer_state, Worker};
 use crate::anyhow;
+use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::lagrange::LagrangeCode;
 use crate::coding::scheme::CodingScheme;
 use crate::markov::WState;
@@ -203,6 +204,12 @@ pub struct CodedMaster {
     handles: Vec<JoinHandle<()>>,
     features: usize,
     round: u64,
+    /// Per-round decode plans, keyed by the sorted received-index set. In
+    /// steady state the same fast-worker subsets recur (two-state model),
+    /// so `W` is usually served from here instead of re-interpolated. The
+    /// plan is stored ALREADY converted to the engine's f32 dtype, so a hit
+    /// costs a key scan — no interpolation, allocation, or cast.
+    plan_cache: PlanCache<MatF32>,
 }
 
 /// Everything needed to start a cluster.
@@ -231,8 +238,8 @@ impl CodedMaster {
 
         // ---- encode: stack (X_j | y_j) rows, multiply by the generator ----
         let code = LagrangeCode::<f64>::new(k, nr);
-        let g64 = code.generator_matrix();
-        let g = MatF32::from_fn(nr, k, |i, j| g64[i][j] as f32);
+        let g64 = code.generator(); // cached flat generator, no rebuild
+        let g = MatF32::from_fn(nr, k, |i, j| g64.at(i, j) as f32);
         let mut xs = MatF32::zeros(k, rows * (feats + 1));
         for (j, (x, y)) in spec.data.iter().enumerate() {
             let row = &mut xs.data[j * (rows * (feats + 1))..(j + 1) * (rows * (feats + 1))];
@@ -287,11 +294,22 @@ impl CodedMaster {
             handles,
             features: feats,
             round: 0,
+            plan_cache: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
         })
     }
 
     pub fn engine_name(&self) -> &'static str {
         self.engine.name()
+    }
+
+    /// Decode-plan cache counters: (hits, misses, evictions). One lookup
+    /// happens per successfully decoded round.
+    pub fn decode_plan_stats(&self) -> (u64, u64, u64) {
+        (
+            self.plan_cache.hits(),
+            self.plan_cache.misses(),
+            self.plan_cache.evictions(),
+        )
     }
 
     /// Run one round: allocate via `strategy`, dispatch, gather, decode.
@@ -336,37 +354,56 @@ impl CodedMaster {
         }
         let replies: Vec<RoundReply> = replies.into_iter().map(Option::unwrap).collect();
 
-        // Deadline check in virtual time; collect payloads of on-time workers.
+        // Deadline check in virtual time; collect payloads of on-time workers
+        // tagged with their completion time.
         let mut completed = vec![false; n];
-        let mut received: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut received: Vec<(f64, usize, Vec<f32>)> = Vec::new();
         let mut compute_secs = 0.0;
         for rep in &replies {
             compute_secs += rep.compute_secs;
             if rep.finish_virtual <= self.deadline * (1.0 + 1e-9) {
                 completed[rep.worker] = true;
-                received.extend(rep.payloads.iter().cloned());
+                received.extend(
+                    rep.payloads
+                        .iter()
+                        .cloned()
+                        .map(|(v, p)| (rep.finish_virtual, v, p)),
+                );
             }
         }
         let success = self.scheme.round_success(&alloc.loads, &completed);
 
-        // Decode if decodable: take the K* fastest results.
+        // Decode if decodable from whichever K* results arrived FIRST (the
+        // paper's rule): order by completion time, take K*, then canonicalize
+        // to ascending index order — the plan `W` depends only on WHICH
+        // indices are used, so the LRU-cached plan is keyed by the sorted set
+        // and recurring fast-worker subsets hit regardless of arrival order.
+        // (The traffic engine's plan_probe uses the same fastest-K* key.)
         let mut decoded = None;
         let mut decode_error = None;
         if success {
             let kstar = self.scheme.kstar();
+            received.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
             received.truncate(kstar);
-            let idx: Vec<usize> = received.iter().map(|(v, _)| *v).collect();
-            let w64 = self
-                .code
-                .decode_weights(&idx, self.scheme.geometry.deg_f)
-                .map_err(|e| anyhow!(e))?;
-            let wmat = MatF32::from_fn(self.scheme.geometry.k, kstar, |i, j| w64[i][j] as f32);
+            received.sort_unstable_by_key(|&(_, v, _)| v);
+            let idx: Vec<usize> = received.iter().map(|&(_, v, _)| v).collect();
             let mut rmat = MatF32::zeros(kstar, self.features);
-            for (row, (_, payload)) in received.iter().enumerate() {
+            for (row, (_, _, payload)) in received.iter().enumerate() {
                 rmat.data[row * self.features..(row + 1) * self.features]
                     .copy_from_slice(payload);
             }
-            let out = self.engine.decode(&wmat, &rmat);
+            let code = &self.code;
+            let deg_f = self.scheme.geometry.deg_f;
+            let wmat = self
+                .plan_cache
+                .get_or_try_insert_with(&idx, || {
+                    let w64 = code.decode_weights_mat(&idx, deg_f)?;
+                    Ok::<_, String>(MatF32::from_fn(w64.rows, w64.cols, |i, j| {
+                        w64.at(i, j) as f32
+                    }))
+                })
+                .map_err(|e| anyhow!(e))?;
+            let out = self.engine.decode(wmat, &rmat);
             if let Some(truth) = direct {
                 let scale = truth
                     .data

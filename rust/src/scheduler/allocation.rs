@@ -42,6 +42,44 @@ pub fn allocate(params: &LoadParams, p_good: &[f64]) -> Allocation {
     allocate_with_scratch(params, p_good, &mut AllocScratch::default())
 }
 
+/// An estimate's sort key: NaN (a poisoned `p_good_profile` entry) is
+/// treated as 0-probability — the worker sorts last and contributes nothing
+/// to the success DP — instead of panicking the allocator.
+#[inline]
+fn prob_key(p: f64) -> f64 {
+    if p.is_nan() {
+        0.0
+    } else {
+        p
+    }
+}
+
+/// Insertion sort of `order` by probability descending with an ascending
+/// index tie-break (a deterministic total order; NaN via [`prob_key`]).
+/// No allocation and ~O(n) on the nearly-sorted permutations the allocator
+/// feeds it — unlike the stable `sort_by`, which heap-allocates its merge
+/// buffer every call.
+fn insertion_sort_desc(order: &mut [usize], p_good: &[f64]) {
+    for i in 1..order.len() {
+        let cur = order[i];
+        let ck = prob_key(p_good[cur]);
+        let mut j = i;
+        while j > 0 {
+            let prev = order[j - 1];
+            let pk = prob_key(p_good[prev]);
+            // `cur` belongs before `prev` iff it has strictly higher
+            // probability, or equal probability and a smaller index.
+            if pk < ck || (pk == ck && prev > cur) {
+                order[j] = prev;
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        order[j] = cur;
+    }
+}
+
 /// [`allocate`] with caller-owned scratch (no per-round allocations beyond
 /// the returned load vector itself).
 pub fn allocate_with_scratch(
@@ -51,19 +89,19 @@ pub fn allocate_with_scratch(
 ) -> Allocation {
     assert_eq!(p_good.len(), params.n);
     // Keep last round's order as the starting permutation: estimates drift
-    // slowly, so the slice is nearly sorted and the small-slice insertion
-    // sort runs in ~O(n) (EXPERIMENTS.md §Perf).
+    // slowly, so the slice is nearly sorted and the insertion sort runs in
+    // ~O(n) (EXPERIMENTS.md §Perf).
     if scratch.order.len() != params.n {
         scratch.order.clear();
         scratch.order.extend(0..params.n);
     }
-    // Sort by probability descending; stable tie-break on index keeps the
-    // allocation deterministic.
-    scratch
-        .order
-        .sort_by(|&a, &b| p_good[b].partial_cmp(&p_good[a]).unwrap().then(a.cmp(&b)));
+    // Sort by probability descending; the index tie-break keeps the
+    // allocation deterministic. NaN estimates count as 0-probability.
+    insertion_sort_desc(&mut scratch.order, p_good);
     scratch.ps_desc.clear();
-    scratch.ps_desc.extend(scratch.order.iter().map(|&i| p_good[i]));
+    scratch
+        .ps_desc
+        .extend(scratch.order.iter().map(|&i| prob_key(p_good[i])));
 
     let (i_star, prob) = best_prefix_scratch(params, &scratch.ps_desc, &mut scratch.prefix);
     let mut loads = vec![params.lb; params.n];
@@ -213,5 +251,57 @@ mod tests {
         let alloc = allocate(&params, &[0.6; 8]);
         let (_, bf) = brute_force(&params, &[0.6; 8]);
         assert!((alloc.est_success - bf).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insertion_sort_matches_std_sort_over_reused_scratch() {
+        // The scratch keeps last round's permutation; drifting inputs across
+        // rounds must still produce exactly the std-sort order every time.
+        let params = params_small();
+        let mut rng = Rng::new(71);
+        let mut scratch = AllocScratch::default();
+        let mut p_good: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+        for round in 0..200 {
+            // Small drift + occasional jump + deliberate ties.
+            for p in p_good.iter_mut() {
+                *p = (*p + (rng.f64() - 0.5) * 0.05).clamp(0.0, 1.0);
+            }
+            if round % 17 == 0 {
+                p_good[round % 8] = p_good[(round + 3) % 8]; // exact tie
+            }
+            let got = allocate_with_scratch(&params, &p_good, &mut scratch);
+            let want = allocate(&params, &p_good);
+            assert_eq!(got, want, "round {round}");
+            // The scratch order is the full descending sort with index
+            // tie-break — compare against a std reference sort.
+            let mut reference: Vec<usize> = (0..8).collect();
+            reference.sort_by(|&a, &b| {
+                p_good[b].partial_cmp(&p_good[a]).unwrap().then(a.cmp(&b))
+            });
+            let mut fresh = AllocScratch::default();
+            let _ = allocate_with_scratch(&params, &p_good, &mut fresh);
+            assert_eq!(fresh.order, reference, "round {round}");
+            assert_eq!(scratch.order, reference, "round {round} (reused)");
+        }
+    }
+
+    #[test]
+    fn nan_probability_is_treated_as_zero_not_a_panic() {
+        let params = params_small();
+        let mut with_nan = vec![0.1, 0.9, 0.3, 0.8, 0.2, 0.7, 0.4, 0.6];
+        let mut with_zero = with_nan.clone();
+        with_nan[3] = f64::NAN;
+        with_zero[3] = 0.0;
+        let a_nan = allocate(&params, &with_nan);
+        let a_zero = allocate(&params, &with_zero);
+        // Identical ordering, DP input, and therefore allocation.
+        assert_eq!(a_nan.loads, a_zero.loads);
+        assert_eq!(a_nan.i_star, a_zero.i_star);
+        assert!((a_nan.est_success - a_zero.est_success).abs() < 1e-15);
+        assert!(a_nan.est_success.is_finite());
+        // All-NaN input degrades to the all-zero allocation, still no panic.
+        let all_nan = allocate(&params, &[f64::NAN; 8]);
+        let all_zero = allocate(&params, &[0.0; 8]);
+        assert_eq!(all_nan.loads, all_zero.loads);
     }
 }

@@ -40,7 +40,7 @@ pub struct LoadParams {
     pub kstar: usize,
     /// ℓ_g = min(⌊μ_g·d⌋, r): evaluations a good worker completes by d.
     pub lg: usize,
-    /// ℓ_b = ⌊μ_b·d⌋: evaluations a bad worker completes by d.
+    /// ℓ_b = min(⌊μ_b·d⌋, r): evaluations a bad worker completes by d.
     pub lb: usize,
 }
 
@@ -50,7 +50,8 @@ impl LoadParams {
         LoadParams { n, kstar, lg, lb }
     }
 
-    /// Derive from speeds and deadline: ℓ_b = ⌊μ_b·d⌋, ℓ_g = min(⌊μ_g·d⌋, r).
+    /// Derive from speeds and deadline: ℓ_b = min(⌊μ_b·d⌋, r),
+    /// ℓ_g = min(⌊μ_g·d⌋, r) — both clamped to the r chunks a worker stores.
     /// Floors keep loads integral (a partially-finished evaluation is useless).
     pub fn from_rates(n: usize, r: usize, kstar: usize, mu_g: f64, mu_b: f64, d: f64) -> Self {
         assert!(mu_g >= mu_b && mu_b >= 0.0 && d > 0.0);

@@ -87,6 +87,7 @@ pub fn run(
     let mut states: Vec<WState> = Vec::with_capacity(n);
     let mut completed: Vec<bool> = Vec::with_capacity(n);
     let mut observed: Vec<Option<WState>> = Vec::with_capacity(n);
+    let mut received_chunks: Vec<usize> = Vec::new();
 
     for _ in 0..cfg.rounds {
         let gap = arrivals.sample(&mut rng);
@@ -101,11 +102,11 @@ pub fn run(
             }
             ReturnModel::Streaming => {
                 let progress = cluster.partial_progress(&states, &alloc.loads, cfg.deadline);
-                let mut received = Vec::new();
+                received_chunks.clear();
                 for (i, &done) in progress.iter().enumerate() {
-                    received.extend(scheme.assigned_chunks(i, done));
+                    scheme.extend_assigned(i, done, &mut received_chunks);
                 }
-                scheme.is_decodable(&received)
+                scheme.is_decodable(&received_chunks)
             }
         };
         meter.push(success);

@@ -33,7 +33,9 @@ use super::admission::{AdmissionQueue, Policy};
 use super::event::{EventKind, EventQueue};
 use super::job::{Job, JobClass, JobFate, Service};
 use super::metrics::TrafficMetrics;
+use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::scheme::CodingScheme;
+use crate::coding::threshold::Design;
 use crate::markov::WState;
 use crate::scheduler::allocation;
 use crate::scheduler::strategy::Strategy;
@@ -135,6 +137,9 @@ pub fn run_traffic(
         spawned: 0,
         now: 0.0,
         metrics: TrafficMetrics::new(),
+        plan_probe: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
+        probe_order: Vec::new(),
+        probe_key: Vec::new(),
     };
     engine.run()
 }
@@ -155,6 +160,14 @@ struct Engine<'a> {
     spawned: u64,
     now: f64,
     metrics: TrafficMetrics,
+    /// Measures steady-state recurrence of the K*-fastest chunk subsets —
+    /// the hit rate a master-side decode-plan cache would see under this
+    /// traffic (same LRU structure, `()` values; coding::kernel).
+    plan_probe: PlanCache<()>,
+    /// Scratch for the probe (recycled per resolve; EXPERIMENTS.md §Perf):
+    /// per-chunk (finish time, chunk index) pairs, and the sorted key.
+    probe_order: Vec<(f64, usize)>,
+    probe_key: Vec<usize>,
 }
 
 impl Engine<'_> {
@@ -262,6 +275,9 @@ impl Engine<'_> {
             completed_full[svc.workers[i]] = svc.completed[i];
         }
         let success = class.scheme.round_success(&loads_full, &completed_full);
+        if success && class.scheme.design() == Design::Lagrange {
+            self.probe_plan_recurrence(&svc, &class.scheme);
+        }
         let latency = if success {
             decode_time(&svc, &class.scheme).unwrap_or(svc.window_end) - job.arrival
         } else {
@@ -431,6 +447,40 @@ impl Engine<'_> {
         );
     }
 
+    /// Record whether this successful round's sorted K*-fastest chunk set
+    /// was seen recently — exactly the key the master builds for its decode
+    /// plan cache (per-chunk results ordered by (finish time, chunk index),
+    /// truncated to K*, then sorted; see `exec::master::round`), so the
+    /// measured hit rate transfers. Ties matter here: completion times are
+    /// discrete (load/rate over two rates), so the tie-break must match.
+    fn probe_plan_recurrence(&mut self, svc: &Service, scheme: &CodingScheme) {
+        let kstar = scheme.kstar();
+        self.probe_order.clear();
+        for i in 0..svc.workers.len() {
+            if svc.completed[i] {
+                let finish = svc.finish[i];
+                self.probe_key.clear();
+                scheme.extend_assigned(svc.workers[i], svc.loads[i], &mut self.probe_key);
+                self.probe_order
+                    .extend(self.probe_key.iter().map(|&v| (finish, v)));
+            }
+        }
+        if self.probe_order.len() < kstar {
+            return; // defensive: round_success said yes, counts disagree
+        }
+        // Allocation-free sort (EXPERIMENTS.md §Perf rule 7) by the master's
+        // exact order: completion time, then chunk index.
+        self.probe_order
+            .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        self.probe_order.truncate(kstar);
+        let key = &mut self.probe_key;
+        key.clear();
+        key.extend(self.probe_order.iter().map(|&(_, v)| v));
+        key.sort_unstable();
+        let hit = self.plan_probe.touch(&self.probe_key, || ());
+        self.metrics.on_plan_probe(hit);
+    }
+
     fn pick_class(&mut self) -> usize {
         if self.cfg.classes.len() == 1 {
             return 0;
@@ -513,6 +563,14 @@ mod tests {
             assert!(m.events > 400);
             assert!(m.horizon > 0.0);
             assert!(m.served >= m.completed + m.missed_service);
+            // Every successful (Lagrange) round is probed exactly once.
+            assert_eq!(
+                m.plan_probe_hits + m.plan_probe_misses,
+                m.completed,
+                "one plan probe per completion ({})",
+                policy.name()
+            );
+            assert!((0.0..=1.0).contains(&m.plan_hit_rate()));
         }
     }
 

@@ -25,6 +25,11 @@ pub struct TrafficMetrics {
     pub expired_in_queue: u64,
     /// Events processed by the engine (the bench's unit of work).
     pub events: u64,
+    /// Decode-plan recurrence probe: successful Lagrange rounds whose sorted
+    /// K*-fastest chunk set was seen recently (would hit a decode-plan cache).
+    pub plan_probe_hits: u64,
+    /// Probe misses (first sight of a subset, or evicted since).
+    pub plan_probe_misses: u64,
     /// Virtual time when the last event fired.
     pub horizon: f64,
     /// Peak admission-queue depth.
@@ -51,6 +56,8 @@ impl Default for TrafficMetrics {
             dropped_infeasible: 0,
             expired_in_queue: 0,
             events: 0,
+            plan_probe_hits: 0,
+            plan_probe_misses: 0,
             horizon: 0.0,
             queue_max: 0,
             latency_mean: Welford::default(),
@@ -101,6 +108,14 @@ impl TrafficMetrics {
             JobFate::Completed | JobFate::Missed => {
                 unreachable!("served outcomes go through on_resolve")
             }
+        }
+    }
+
+    pub(crate) fn on_plan_probe(&mut self, hit: bool) {
+        if hit {
+            self.plan_probe_hits += 1;
+        } else {
+            self.plan_probe_misses += 1;
         }
     }
 
@@ -168,6 +183,13 @@ impl TrafficMetrics {
         self.est_success.mean()
     }
 
+    /// Fraction of probed (successful Lagrange) rounds whose K*-subset
+    /// recurred — the steady-state decode-plan cache hit rate the master
+    /// would see under this traffic (0 when nothing was probed).
+    pub fn plan_hit_rate(&self) -> f64 {
+        ratio(self.plan_probe_hits, self.plan_probe_hits + self.plan_probe_misses)
+    }
+
     pub fn mean_queue_depth(&self) -> f64 {
         if self.horizon > 0.0 {
             self.queue_area / self.horizon
@@ -207,6 +229,12 @@ impl TrafficMetrics {
             ("mean_wait", num(self.mean_wait())),
             ("mean_queue_depth", num(self.mean_queue_depth())),
             ("queue_max", Json::num(self.queue_max as f64)),
+            ("plan_probe_hits", Json::num(self.plan_probe_hits as f64)),
+            (
+                "plan_probe_misses",
+                Json::num(self.plan_probe_misses as f64),
+            ),
+            ("plan_hit_rate", num(self.plan_hit_rate())),
         ])
     }
 }

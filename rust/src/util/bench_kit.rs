@@ -7,7 +7,84 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
+
+/// True when the `BENCH_SMOKE` environment variable is set: the CI smoke job
+/// runs every bench in this mode to validate the harness and produce small
+/// JSON artifacts without paying full measurement budgets.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// Scale a `(samples, batch)` measurement budget down in smoke mode.
+pub fn budget(samples: usize, batch: u64) -> (usize, u64) {
+    if smoke_mode() {
+        (samples.min(2), (batch / 20).max(1))
+    } else {
+        (samples, batch)
+    }
+}
+
+/// Collects [`BenchResult`]s plus derived figures and writes one JSON
+/// artifact per bench binary (`BENCH_<name>.json`) — the files CI uploads
+/// and EXPERIMENTS.md §Baselines quotes.
+#[derive(Debug, Default)]
+pub struct BenchLog {
+    results: Vec<BenchResult>,
+    notes: Vec<(String, f64)>,
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        BenchLog::default()
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Record a derived figure (a speedup ratio, an events/s rate, …).
+    pub fn note(&mut self, key: &str, value: f64) {
+        self.notes.push((key.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let cases = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("iters", Json::num(r.iters as f64)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("std_ns", Json::num(r.std_ns)),
+                        ("per_sec", Json::num(r.per_sec())),
+                    ])
+                })
+                .collect(),
+        );
+        let notes = Json::Obj(
+            self.notes
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke_mode())),
+            ("cases", cases),
+            ("notes", notes),
+        ])
+    }
+
+    /// Write the artifact, reporting where it landed.
+    pub fn write(&self, path: &str) {
+        match std::fs::write(path, format!("{}\n", self.to_json())) {
+            Ok(()) => println!("bench artifact written to {path}"),
+            Err(e) => eprintln!("bench artifact {path} NOT written: {e}"),
+        }
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -103,5 +180,28 @@ mod tests {
             &["LEA", "static"],
             &[("scenario 1".into(), vec![0.9, 0.5])],
         );
+    }
+
+    #[test]
+    fn bench_log_serializes_cases_and_notes() {
+        let mut log = BenchLog::new();
+        log.push(&BenchResult {
+            name: "demo_case".into(),
+            iters: 10,
+            mean_ns: 123.0,
+            std_ns: 4.5,
+        });
+        log.note("speedup", 3.5);
+        let j = log.to_json();
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("mean_ns").unwrap().as_f64(), Some(123.0));
+        assert_eq!(
+            j.get("notes").unwrap().get("speedup").unwrap().as_f64(),
+            Some(3.5)
+        );
+        // Round-trips through the writer's format.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
     }
 }

@@ -1,62 +1,84 @@
-//! Row-major dense matrices over f32/f64.
+//! Row-major dense matrices: a generic flat container [`Mat<T>`] plus the
+//! f32 instance [`MatF32`] used on the PJRT path.
 //!
-//! Used by the exec layer (flattened chunk payloads, CPU fallback GEMMs when
-//! PJRT artifacts are not on disk) and by the coding tests. The f32 GEMM is
-//! the CPU mirror of the L1 Pallas kernel: blocked i-k-j loop order so the
-//! innermost loop is a contiguous AXPY (auto-vectorizes well).
+//! `Mat<T>` is the storage type every payload kernel shares: the exec layer
+//! (flattened chunk payloads, CPU fallback GEMMs when PJRT artifacts are not
+//! on disk), and the coding layer's flat field kernels (`coding::kernel`,
+//! generic over `CodeField`). The f32 GEMM is the CPU mirror of the L1
+//! Pallas kernel: blocked i-k-j loop order so the innermost loop is a
+//! contiguous AXPY (auto-vectorizes well).
 
-/// Row-major `rows x cols` matrix of f32 (the PJRT buffer dtype).
+/// Row-major `rows x cols` matrix over an arbitrary copyable element.
 #[derive(Clone, Debug, PartialEq)]
-pub struct MatF32 {
+pub struct Mat<T> {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: Vec<T>,
 }
 
-impl MatF32 {
-    pub fn zeros(rows: usize, cols: usize) -> Self {
-        MatF32 {
+/// Row-major f32 matrix (the PJRT buffer dtype).
+pub type MatF32 = Mat<f32>;
+
+impl<T: Copy> Mat<T> {
+    /// `rows x cols` matrix with every element set to `fill`.
+    pub fn filled(rows: usize, cols: usize, fill: T) -> Self {
+        Mat {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: vec![fill; rows * cols],
         }
     }
 
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        MatF32 { rows, cols, data }
+        Mat { rows, cols, data }
     }
 
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
                 data.push(f(i, j));
             }
         }
-        MatF32 { rows, cols, data }
-    }
-
-    pub fn eye(n: usize) -> Self {
-        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+        Mat { rows, cols, data }
     }
 
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f32 {
+    pub fn at(&self, i: usize, j: usize) -> T {
         self.data[i * self.cols + j]
     }
 
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
         self.data[i * self.cols + j] = v;
     }
 
-    pub fn row(&self, i: usize) -> &[f32] {
+    pub fn row(&self, i: usize) -> &[T] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    pub fn transpose(&self) -> MatF32 {
-        MatF32::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat<T> {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Rows as a Vec-of-Vecs (compat bridge for the nested-Vec APIs).
+    pub fn to_rows(&self) -> Vec<Vec<T>> {
+        (0..self.rows).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+impl Mat<f32> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat::filled(rows, cols, 0.0)
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
     /// Blocked GEMM `self @ other` with ikj loop order (contiguous AXPY inner
@@ -102,7 +124,7 @@ impl MatF32 {
 
     pub fn sub(&self, other: &MatF32) -> MatF32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        MatF32 {
+        Mat {
             rows: self.rows,
             cols: self.cols,
             data: self
@@ -180,6 +202,20 @@ mod tests {
         let col = MatF32::from_vec(6, 1, v.clone());
         let want = a.matmul(&col);
         assert_eq!(a.matvec(&v), want.data);
+    }
+
+    #[test]
+    fn generic_container_roundtrips() {
+        let m = Mat::<u64>::from_fn(3, 4, |i, j| (10 * i + j) as u64);
+        assert_eq!(m.at(2, 3), 23);
+        assert_eq!(m.row(1), &[10, 11, 12, 13]);
+        assert_eq!(m.transpose().at(3, 2), 23);
+        let rows = m.to_rows();
+        assert_eq!(rows[2], vec![20, 21, 22, 23]);
+        let mut f = Mat::<u64>::filled(2, 2, 7);
+        f.set(0, 1, 9);
+        f.row_mut(1)[0] = 5;
+        assert_eq!(f.data, vec![7, 9, 5, 7]);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Property tests pinning the flat coding kernels to the seed path.
+//!
+//! The seed implementation (nested `Vec<Vec<F>>` payloads, generator and
+//! barycentric weights rebuilt on every call) is kept here verbatim as the
+//! reference. The rebuilt `coding::lagrange` must reproduce it BIT-FOR-BIT
+//! over `GF(2^61−1)` — and, because the flat kernels execute the identical
+//! operation sequence, over `f64` as well — across randomized geometries,
+//! payload sizes, degrees and received subsets.
+
+use timely_coded::coding::field::Fp;
+use timely_coded::coding::lagrange::{DecodePlanCache, LagrangeCode};
+use timely_coded::coding::poly;
+use timely_coded::testkit::{ensure, forall, gen};
+use timely_coded::util::rng::Rng;
+
+/// The seed algorithms, generic over the field exactly as they shipped.
+mod seed {
+    use super::poly;
+    use timely_coded::coding::field::CodeField;
+
+    pub fn encode<F: CodeField>(betas: &[F], alphas: &[F], data: &[Vec<F>]) -> Vec<Vec<F>> {
+        let dim = data[0].len();
+        let g = poly::basis_matrix(betas, alphas);
+        g.iter()
+            .map(|row| {
+                let mut out = vec![F::zero(); dim];
+                for (coef, chunk) in row.iter().zip(data) {
+                    if *coef == F::zero() {
+                        continue;
+                    }
+                    for (o, &x) in out.iter_mut().zip(chunk) {
+                        *o = o.add(coef.mul(x));
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    pub fn decode_weights<F: CodeField>(
+        alphas: &[F],
+        betas: &[F],
+        received: &[usize],
+    ) -> Vec<Vec<F>> {
+        let nodes: Vec<F> = received.iter().map(|&v| alphas[v]).collect();
+        poly::basis_matrix(&nodes, betas)
+    }
+
+    pub fn decode<F: CodeField>(
+        alphas: &[F],
+        betas: &[F],
+        received: &[(usize, Vec<F>)],
+        kstar: usize,
+    ) -> Vec<Vec<F>> {
+        let use_set = &received[..kstar];
+        let idx: Vec<usize> = use_set.iter().map(|(v, _)| *v).collect();
+        let w = decode_weights(alphas, betas, &idx);
+        let dim = use_set[0].1.len();
+        w.iter()
+            .map(|row| {
+                let mut out = vec![F::zero(); dim];
+                for (coef, (_, payload)) in row.iter().zip(use_set) {
+                    if *coef == F::zero() {
+                        continue;
+                    }
+                    for (o, &x) in out.iter_mut().zip(payload) {
+                        *o = o.add(coef.mul(x));
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+type Case = (usize, usize, usize, usize, u64);
+
+fn random_case(rng: &mut Rng) -> Case {
+    let k = gen::size(rng, 2, 8);
+    let deg = gen::size(rng, 1, 3);
+    let kstar = (k - 1) * deg + 1;
+    let nr = kstar + gen::size(rng, 0, 7);
+    let dim = gen::size(rng, 1, 10);
+    (k, deg, nr, dim, rng.next_u64())
+}
+
+#[test]
+fn property_flat_kernels_match_seed_bit_for_bit_over_fp() {
+    forall(17, 50, random_case, |&(k, deg, nr, dim, s)| {
+        let mut rng = Rng::new(s);
+        let code = LagrangeCode::<Fp>::new(k, nr);
+        let data: Vec<Vec<Fp>> = (0..k)
+            .map(|_| (0..dim).map(|_| Fp::new(rng.next_u64())).collect())
+            .collect();
+
+        // Generator: cached flat buffer vs per-call rebuild.
+        let g_seed = poly::basis_matrix(code.betas(), code.alphas());
+        ensure(code.generator_matrix() == g_seed, "generator diverged")?;
+
+        // Encode.
+        let enc = code.encode(&data);
+        let enc_seed = seed::encode(code.betas(), code.alphas(), &data);
+        ensure(enc == enc_seed, "encode diverged")?;
+
+        // Decode weights + decode from a random distinct received subset.
+        let kstar = code.kstar(deg);
+        let pick = rng.sample_indices(nr, kstar);
+        let w = code.decode_weights(&pick, deg)?;
+        let w_seed = seed::decode_weights(code.alphas(), code.betas(), &pick);
+        ensure(w == w_seed, "decode_weights diverged")?;
+
+        let f = |c: &[Fp]| -> Vec<Fp> { c.iter().map(|&x| x.pow(deg as u64)).collect() };
+        let received: Vec<(usize, Vec<Fp>)> =
+            pick.iter().map(|&v| (v, f(&enc[v]))).collect();
+        let dec = code.decode(&received, deg)?;
+        let dec_seed = seed::decode(code.alphas(), code.betas(), &received, kstar);
+        ensure(dec == dec_seed, "decode diverged")?;
+
+        // Both must equal direct evaluation (the paper's correctness claim).
+        let want: Vec<Vec<Fp>> = data.iter().map(|c| f(c)).collect();
+        ensure(dec == want, "decode != direct evaluation")
+    });
+}
+
+#[test]
+fn property_flat_kernels_match_seed_bit_for_bit_over_f64() {
+    // Identical operation sequence ⇒ identical IEEE results, not merely
+    // close ones. deg = 1 keeps the worker computation exact (identity).
+    forall(19, 30, random_case, |&(k, _, nr, dim, s)| {
+        let mut rng = Rng::new(s);
+        let code = LagrangeCode::<f64>::new(k, nr);
+        let data: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..dim).map(|_| rng.f64() * 2.0 - 1.0).collect())
+            .collect();
+        let enc = code.encode(&data);
+        let enc_seed = seed::encode(code.betas(), code.alphas(), &data);
+        ensure(enc == enc_seed, "f64 encode diverged")?;
+
+        let kstar = code.kstar(1);
+        let pick = rng.sample_indices(nr, kstar);
+        let w = code.decode_weights(&pick, 1)?;
+        let w_seed = seed::decode_weights(code.alphas(), code.betas(), &pick);
+        ensure(w == w_seed, "f64 decode_weights diverged")?;
+
+        let received: Vec<(usize, Vec<f64>)> =
+            pick.iter().map(|&v| (v, enc[v].clone())).collect();
+        let dec = code.decode(&received, 1)?;
+        let dec_seed = seed::decode(code.alphas(), code.betas(), &received, kstar);
+        ensure(dec == dec_seed, "f64 decode diverged")
+    });
+}
+
+#[test]
+fn property_cached_decode_matches_uncached_over_fp() {
+    // The plan-cache path canonicalizes to sorted index order; over the
+    // exact field the result must match the uncached arrival-order decode
+    // bit-for-bit, whatever the arrival order. A cache belongs to ONE code
+    // instance (keys are index sets only), so each case gets its own.
+    forall(23, 60, random_case, |&(k, deg, nr, dim, s)| {
+        let mut rng = Rng::new(s);
+        let code = LagrangeCode::<Fp>::new(k, nr);
+        let mut cache: DecodePlanCache<Fp> = DecodePlanCache::new(4);
+        let data: Vec<Vec<Fp>> = (0..k)
+            .map(|_| (0..dim).map(|_| Fp::new(rng.next_u64())).collect())
+            .collect();
+        let enc = code.encode(&data);
+        let kstar = code.kstar(deg);
+        let f = |c: &[Fp]| -> Vec<Fp> { c.iter().map(|&x| x.pow(deg as u64)).collect() };
+        let mut pick = rng.sample_indices(nr, kstar);
+        rng.shuffle(&mut pick);
+        let received: Vec<(usize, Vec<Fp>)> =
+            pick.iter().map(|&v| (v, f(&enc[v]))).collect();
+        let plain = code.decode(&received, deg)?;
+        let first = code.decode_with_cache(&mut cache, &received, deg)?;
+        ensure(first.to_rows() == plain, "cached decode (miss path) diverged")?;
+        // The second lookup is served from the cache and must be identical.
+        let second = code.decode_with_cache(&mut cache, &received, deg)?;
+        ensure(second == first, "cached decode (hit path) diverged")?;
+        ensure(
+            cache.hits() == 1 && cache.misses() == 1,
+            "expected exactly one miss then one hit",
+        )
+    });
+}
+
+#[test]
+fn decode_plan_cache_eviction_keeps_results_exact() {
+    // Cycle 3 subsets through a 2-slot cache: every lookup misses (LRU
+    // evicts the next subset to arrive), evictions accumulate, and decoded
+    // values stay exact throughout.
+    let mut rng = Rng::new(31);
+    let code = LagrangeCode::<Fp>::new(4, 12);
+    let data: Vec<Vec<Fp>> = (0..4)
+        .map(|_| (0..5).map(|_| Fp::new(rng.next_u64())).collect())
+        .collect();
+    let enc = code.encode(&data);
+    let subsets: [[usize; 4]; 3] = [[0, 1, 2, 3], [4, 5, 6, 7], [8, 9, 10, 11]];
+    let mut cache: DecodePlanCache<Fp> = DecodePlanCache::new(2);
+    for _ in 0..2 {
+        for sub in &subsets {
+            let received: Vec<(usize, Vec<Fp>)> =
+                sub.iter().map(|&v| (v, enc[v].clone())).collect();
+            let dec = code.decode_with_cache(&mut cache, &received, 1).unwrap();
+            assert_eq!(dec.to_rows(), data);
+        }
+    }
+    assert_eq!(cache.hits(), 0, "cap-2 cache cannot hold a 3-subset cycle");
+    assert_eq!(cache.misses(), 6);
+    assert_eq!(cache.evictions(), 4);
+    assert_eq!(cache.len(), 2);
+
+    // Back-to-back repeats of one subset DO hit.
+    let received: Vec<(usize, Vec<Fp>)> =
+        subsets[0].iter().map(|&v| (v, enc[v].clone())).collect();
+    let _ = code.decode_with_cache(&mut cache, &received, 1).unwrap();
+    let _ = code.decode_with_cache(&mut cache, &received, 1).unwrap();
+    assert_eq!(cache.hits(), 1);
+}
