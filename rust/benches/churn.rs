@@ -1,0 +1,93 @@
+//! Elastic-fleet benchmarks: engine events/second as the churn rate rises
+//! (preemptions add leave/join events and stale-release filtering to the
+//! hot loop), plus the churn grid runner's thread scaling. Figures land in
+//! `BENCH_churn.json` (uploaded by the CI bench-smoke job); set
+//! `BENCH_SMOKE=1` for a fast validity run.
+
+use std::time::Instant;
+
+use timely_coded::experiments::churn::{run_grid, ChurnGridSpec};
+use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::churn::ChurnModel;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
+
+fn engine_events_per_sec(churn: ChurnModel, jobs: u64) -> (f64, u64, u64) {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Carryover);
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(0.8),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+    .with_churn(churn);
+    let t0 = Instant::now();
+    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let secs = t0.elapsed().as_secs_f64();
+    (m.events as f64 / secs, m.events, m.leaves)
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+    let jobs: u64 = if smoke_mode() { 2_000 } else { 30_000 };
+
+    // ---- engine throughput vs churn rate ----
+    let mut rows = Vec::new();
+    for rate in [0.0, 0.05, 0.2, 0.5] {
+        let churn = ChurnModel::spot(rate, 2.0);
+        let (eps, events, leaves) = engine_events_per_sec(churn, jobs);
+        println!(
+            "bench churn_engine rate={rate:<5} {events:>9} events  {leaves:>7} leaves  \
+             {eps:>12.0} events/s"
+        );
+        log.note(&format!("events_per_sec_churn{rate}"), eps);
+        rows.push((
+            format!("churn rate={rate}"),
+            vec![events as f64, leaves as f64, eps],
+        ));
+    }
+    table(
+        &format!("Churn engine ({}k jobs, Fig.-3 scenario 1, EDF)", jobs / 1000),
+        &["events", "leaves", "events/s"],
+        &rows,
+    );
+
+    // ---- churn-grid thread scaling ----
+    let grid_jobs = if smoke_mode() { 200 } else { 2000 };
+    let threads_list: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut scale_rows = Vec::new();
+    for &threads in threads_list {
+        let spec = ChurnGridSpec::preset("small", grid_jobs, 5).expect("preset");
+        let t0 = Instant::now();
+        let rows = run_grid(&spec, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+        println!(
+            "bench churn_grid threads={threads:<2} {events:>9} events  {secs:>8.2}s  \
+             {:>12.0} events/s",
+            events as f64 / secs
+        );
+        log.note(
+            &format!("grid_events_per_sec_threads{threads}"),
+            events as f64 / secs,
+        );
+        scale_rows.push((
+            format!("threads={threads}"),
+            vec![secs, events as f64 / secs],
+        ));
+    }
+    table(
+        &format!("Churn grid scaling (12 cells x {grid_jobs} jobs)"),
+        &["wall s", "events/s"],
+        &scale_rows,
+    );
+
+    log.write("BENCH_churn.json");
+}

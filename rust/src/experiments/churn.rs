@@ -1,0 +1,304 @@
+//! Elastic-fleet scenario grid (`lea churn`): churn rate × rejoin policy ×
+//! admission policy over the Fig.-3 scenario-1 cluster.
+//!
+//! Each cell runs LEA inside the event engine against a fleet whose workers
+//! are preempted and replaced by the [`ChurnModel`] on/off renewal process
+//! (`sim::churn`). The grid's axes answer the questions the fixed-n paper
+//! cannot: how fast does timely throughput fall with the preemption rate,
+//! how much assigned work is lost in flight, and does LEA recover faster
+//! when rejoining estimators carry over ([`RejoinPolicy::Carryover`]) or
+//! start cold ([`RejoinPolicy::Reset`])?
+//!
+//! Like the `lea traffic` grid, cells fan out across OS threads with
+//! per-cell seeds derived from `(base seed, cell index)`, so the assembled
+//! JSON is byte-identical for a given seed whatever the thread count
+//! (`tests/determinism.rs`).
+
+use super::traffic::cell_seed;
+use crate::scheduler::lea::{Lea, RejoinPolicy};
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::churn::ChurnModel;
+use crate::sim::cluster::SimCluster;
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// Offset applied to the base seed so churn cells never share a stream with
+/// the `lea traffic` grid's cells at the same index.
+const CHURN_SEED_SALT: u64 = 0x6368_7572_6e5f; // "churn_"
+
+/// The grid to sweep: per-worker preemption rates (0 = the fixed fleet of
+/// the paper, the baseline row) × LEA rejoin policies × admission policies,
+/// at a fixed offered load.
+#[derive(Clone, Debug)]
+pub struct ChurnGridSpec {
+    /// Per-worker preemption rates (leave events per live-second).
+    pub churn_rates: Vec<f64>,
+    pub rejoin: Vec<RejoinPolicy>,
+    pub policies: Vec<Policy>,
+    /// Mean replacement delay once preempted (seconds).
+    pub mean_downtime: f64,
+    /// Offered load, jobs per virtual second (Poisson).
+    pub rate: f64,
+    /// Per-job relative deadline.
+    pub deadline: f64,
+    /// Arrivals simulated per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl ChurnGridSpec {
+    /// Named presets for the CLI: `small` is the 12-cell acceptance grid
+    /// (3 churn rates × 2 rejoin policies × 2 admission policies), `wide`
+    /// broadens to 36 cells with all three admission policies.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<ChurnGridSpec, String> {
+        let (churn_rates, policies) = match name {
+            "small" => (
+                vec![0.0, 0.05, 0.2],
+                vec![Policy::AdmitAll, Policy::EdfFeasible],
+            ),
+            "wide" => (
+                vec![0.0, 0.02, 0.05, 0.1, 0.2, 0.5],
+                Policy::all().to_vec(),
+            ),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(ChurnGridSpec {
+            churn_rates,
+            rejoin: RejoinPolicy::all().to_vec(),
+            policies,
+            mean_downtime: 2.0,
+            rate: 0.6,
+            deadline: 1.0,
+            jobs,
+            seed,
+        })
+    }
+
+    /// Cells in canonical order (churn-rate-major, then rejoin, then
+    /// policy) — the order of the JSON dump.
+    pub fn cells(&self) -> Vec<ChurnCell> {
+        let mut out = Vec::new();
+        for &churn_rate in &self.churn_rates {
+            for &rejoin in &self.rejoin {
+                for &policy in &self.policies {
+                    out.push(ChurnCell {
+                        idx: out.len(),
+                        churn_rate,
+                        rejoin,
+                        policy,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (churn rate, rejoin policy, admission policy) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnCell {
+    pub idx: usize,
+    pub churn_rate: f64,
+    pub rejoin: RejoinPolicy,
+    pub policy: Policy,
+}
+
+/// A cell plus its measured metrics.
+#[derive(Clone, Debug)]
+pub struct ChurnRow {
+    pub cell: ChurnCell,
+    pub metrics: TrafficMetrics,
+}
+
+/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA with the
+/// cell's rejoin policy, and the event engine with the cell's churn process.
+pub fn run_cell(cell: &ChurnCell, spec: &ChurnGridSpec) -> ChurnRow {
+    run_cell_with_churn(
+        cell,
+        spec,
+        ChurnModel::spot(cell.churn_rate, spec.mean_downtime),
+    )
+}
+
+/// [`run_cell`] with an explicit churn process — the regression hook that
+/// lets `tests/determinism.rs` run the SAME cell (same seed derivation,
+/// same cluster, same LEA) against a genuinely churn-free
+/// [`ChurnModel::none`] fleet and compare bytes against the rate-0 column.
+pub fn run_cell_with_churn(cell: &ChurnCell, spec: &ChurnGridSpec, churn: ChurnModel) -> ChurnRow {
+    let seed = cell_seed(spec.seed ^ CHURN_SEED_SALT, cell.idx);
+    let scenario = fig3_scenarios()[0];
+    let geo = fig3_geometry();
+    let mut cluster = SimCluster::markov(geo.n, scenario.chain(), fig3_speeds(), seed);
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        spec.deadline,
+    );
+    let mut lea = Lea::with_rejoin(params, cell.rejoin);
+    let cfg = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(spec.rate),
+        spec.deadline,
+        geo,
+        cell.policy,
+    )
+    .with_churn(churn);
+    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x6368_6e21); // "chn!"
+    ChurnRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared [`super::fan_out`] runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
+pub fn run_grid(spec: &ChurnGridSpec, threads: usize) -> Vec<ChurnRow> {
+    let cells = spec.cells();
+    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell).
+pub fn to_json(spec: &ChurnGridSpec, rows: &[ChurnRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("metrics serialize to an object"),
+            };
+            obj.insert("churn_rate".into(), Json::num(r.cell.churn_rate));
+            obj.insert("rejoin".into(), Json::str(r.cell.rejoin.name()));
+            obj.insert("policy".into(), Json::str(r.cell.policy.name()));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("churn-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs_per_cell", Json::num(spec.jobs as f64)),
+        ("arrival_rate", Json::num(spec.rate)),
+        ("deadline", Json::num(spec.deadline)),
+        ("mean_downtime", Json::num(spec.mean_downtime)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns: throughput vs churn rate,
+/// work lost to preemption, and the rejoin-policy ablation side by side.
+pub fn print(rows: &[ChurnRow]) {
+    bench_kit::table(
+        "Churn grid — Fig.-3 scenario 1, LEA, elastic fleet",
+        &[
+            "churn", "timely", "goodput", "preempt", "lost", "mean live", "min live", "shed",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                (
+                    format!(
+                        "{:<9} {:<16} #{:02}",
+                        r.cell.rejoin.name(),
+                        r.cell.policy.name(),
+                        r.cell.idx
+                    ),
+                    vec![
+                        r.cell.churn_rate,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.preemptions as f64,
+                        m.work_lost as f64,
+                        m.mean_live_workers(),
+                        m.min_live_workers() as f64,
+                        (m.dropped_infeasible + m.expired_in_queue) as f64,
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ChurnGridSpec {
+        ChurnGridSpec {
+            churn_rates: vec![0.0, 0.3],
+            rejoin: RejoinPolicy::all().to_vec(),
+            policies: vec![Policy::AdmitAll],
+            mean_downtime: 2.0,
+            rate: 0.6,
+            deadline: 1.0,
+            jobs: 120,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = ChurnGridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 12);
+        let wide = ChurnGridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 36);
+        assert!(ChurnGridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"rejoin\":\"carryover\""));
+        assert!(serial.contains("\"churn_rate\":0.3"));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order_with_churn_visible() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            assert_eq!(r.metrics.arrivals, spec.jobs);
+        }
+        // Churn-0 rows keep the full fleet; churn rows lose workers and work.
+        for r in &rows {
+            if r.cell.churn_rate == 0.0 {
+                assert_eq!(r.metrics.leaves, 0);
+                assert_eq!(r.metrics.min_live_workers(), 15);
+            } else {
+                assert!(r.metrics.leaves > 0);
+                assert!(r.metrics.mean_live_workers() < 15.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_churn_cells_are_rejoin_invariant() {
+        // Rejoin policy can only matter once somebody rejoins: at churn
+        // rate 0, two cells differing ONLY in the rejoin policy (same idx,
+        // hence same seed) must be byte-identical.
+        let spec = tiny_spec();
+        let mk = |rejoin| ChurnCell {
+            idx: 0,
+            churn_rate: 0.0,
+            rejoin,
+            policy: Policy::AdmitAll,
+        };
+        let a = run_cell(&mk(RejoinPolicy::Reset), &spec);
+        let b = run_cell(&mk(RejoinPolicy::Carryover), &spec);
+        assert_eq!(
+            a.metrics.to_json().to_string(),
+            b.metrics.to_json().to_string()
+        );
+    }
+}

@@ -10,8 +10,11 @@
 //!   estimator, search strategy).
 //! - [`traffic`] — the parallel arrival-rate × deadline × policy grid over
 //!   the event-driven traffic engine (`lea traffic`).
+//! - [`churn`] — the elastic-fleet grid: churn rate × rejoin policy ×
+//!   admission policy under spot preemption/rejoin (`lea churn`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
+pub mod churn;
 pub mod convergence;
 pub mod fig1;
 pub mod fig3;
@@ -20,3 +23,41 @@ pub mod heterogeneous;
 pub mod report;
 pub mod sweep;
 pub mod traffic;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Work-stealing fan-out shared by the grid runners (`traffic`, `churn`):
+/// run `count` independent cells across `threads` OS threads (an atomic
+/// cursor hands out indices) and return the results in cell order whatever
+/// the interleaving — each cell must be a pure function of its index for
+/// the output to be deterministic.
+pub(crate) fn fan_out<R: Send>(
+    count: usize,
+    threads: usize,
+    run_one: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let threads = threads.clamp(1, count.max(1));
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..count).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                let r = run_one(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("grid cell never ran"))
+        .collect()
+}

@@ -7,9 +7,6 @@
 //! from `(base seed, cell index)`, so the assembled JSON is byte-identical
 //! for a given seed regardless of thread count or scheduling.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
 use crate::scheduler::lea::Lea;
 use crate::scheduler::success::LoadParams;
 use crate::sim::arrivals::Arrivals;
@@ -90,8 +87,10 @@ pub struct GridRow {
 }
 
 /// SplitMix64-style per-cell seed: decorrelates cells while staying a pure
-/// function of (base seed, cell index).
-fn cell_seed(base: u64, idx: usize) -> u64 {
+/// function of (base seed, cell index). Shared with the churn grid
+/// (`experiments::churn`), which offsets its base seed so the two grids
+/// never reuse a stream.
+pub(crate) fn cell_seed(base: u64, idx: usize) -> u64 {
     let mut z = base ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -133,34 +132,14 @@ pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
     }
 }
 
-/// Run the whole grid across `threads` OS threads (work-stealing over an
-/// atomic cursor). Results come back in canonical cell order whatever the
-/// interleaving, so the output is deterministic.
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared [`super::fan_out`] runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
 pub fn run_grid(spec: &GridSpec, threads: usize) -> Vec<GridRow> {
     let cells = spec.cells();
-    let threads = threads.clamp(1, cells.len().max(1));
-    let cursor = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<GridRow>>> = Mutex::new(vec![None; cells.len()]);
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                let row = run_cell(&cells[i], spec.jobs, spec.seed);
-                slots.lock().unwrap()[i] = Some(row);
-            });
-        }
-    });
-
-    slots
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("grid cell never ran"))
-        .collect()
+    super::fan_out(cells.len(), threads, |i| {
+        run_cell(&cells[i], spec.jobs, spec.seed)
+    })
 }
 
 /// Assemble the deterministic JSON dump (spec + one object per cell).

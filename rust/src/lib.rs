@@ -13,7 +13,8 @@
 //! - [`sim`] — a deterministic round simulator + scenario registry reproducing
 //!   Fig. 3 and the convergence study.
 //! - [`traffic`] — the event-driven multi-job engine: open-loop arrivals,
-//!   admission control, and per-job allocation over idle-worker subsets.
+//!   admission control, per-job allocation over idle-worker subsets, and
+//!   the elastic fleet (spot preemption/rejoin churn, `sim::churn`).
 //! - [`runtime`] — PJRT (xla crate, `pjrt` feature) loader for the
 //!   AOT-compiled JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the threaded master/worker cluster that runs real PJRT

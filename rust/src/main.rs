@@ -11,13 +11,18 @@
 //! lea e2e         [--rounds N] [--native] [--strategy lea] real PJRT cluster run
 //! lea traffic     [--grid small|wide] [--threads T]        parallel traffic grid
 //!                 [--jobs N] [--seed S] [--dump grid.json]
+//! lea churn       [--grid small|wide] [--threads T]        elastic-fleet grid
+//!                 [--jobs N] [--seed S] [--dump churn.json]
 //! lea report      [--out report.json] [--fast]             everything + JSON
 //! ```
 
 use timely_coded::exec::driver::{run_e2e, E2eConfig};
 use timely_coded::exec::master::Engine;
+use timely_coded::experiments::churn::ChurnGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
-use timely_coded::experiments::{convergence, fig1, fig3, fig4, heterogeneous, report, sweep, traffic};
+use timely_coded::experiments::{
+    churn, convergence, fig1, fig3, fig4, heterogeneous, report, sweep, traffic,
+};
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
 use timely_coded::scheduler::success::LoadParams;
@@ -196,6 +201,34 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 println!("wrote {path}");
             }
         }
+        "churn" => {
+            let spec = ChurnGridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
+                args.u64("seed", 2024)?,
+            )?;
+            let default_threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4);
+            let threads = args.usize("threads", default_threads)?;
+            let cells = spec.cells().len();
+            let t0 = std::time::Instant::now();
+            let rows = churn::run_grid(&spec, threads);
+            churn::print(&rows);
+            let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "\n{cells} cells x {} jobs on {threads} threads: {events} events in {secs:.2}s \
+                 ({:.0} events/s)",
+                spec.jobs,
+                events as f64 / secs.max(1e-9)
+            );
+            if let Some(path) = args.get("dump") {
+                let j = churn::to_json(&spec, &rows);
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
         "report" => {
             let cfg = if args.flag("fast") {
                 report::ReportConfig {
@@ -237,6 +270,12 @@ SUBCOMMANDS
                threads: arrival-rate x deadline x admission-policy cells
                (--grid small|wide, --threads T, --jobs N-per-cell, --seed S,
                 --dump grid.json; same seed => byte-identical JSON)
+  churn        elastic-fleet grid: spot preemption/rejoin churn over the
+               traffic engine — churn-rate x rejoin-policy (reset|carryover)
+               x admission-policy cells, reporting throughput vs churn,
+               work lost to preemption, and live-fleet size
+               (--grid small|wide [12|36 cells], --threads T, --jobs N,
+                --seed S, --dump churn.json; same seed => byte-identical)
   report       run everything, print paper-vs-measured, write JSON (--fast)
 
 Common flags: --rounds N, --seed S. `make artifacts` first for PJRT e2e

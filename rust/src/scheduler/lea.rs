@@ -11,11 +11,51 @@ use crate::markov::estimator::TransitionEstimator;
 use crate::markov::WState;
 use crate::util::rng::Rng;
 
+/// What LEA does with a worker slot's estimator when a replacement instance
+/// rejoins after a preemption (elastic-fleet engine, `sim::churn`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejoinPolicy {
+    /// The replacement is a different machine: discard the estimator and
+    /// relearn from the uninformative prior. Honest, but pays the cold-start
+    /// price on every rejoin.
+    Reset,
+    /// Keep the transition counts: replacement instances of the same class
+    /// behave statistically alike, and the estimator's τ-step aging
+    /// (`TransitionEstimator::tick_unobserved`) has already decayed the
+    /// *state* prediction toward the stationary distribution during the
+    /// absence — only the learned chain parameters carry over.
+    Carryover,
+}
+
+impl RejoinPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejoinPolicy::Reset => "reset",
+            RejoinPolicy::Carryover => "carryover",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RejoinPolicy, String> {
+        match s {
+            "reset" => Ok(RejoinPolicy::Reset),
+            "carryover" | "carry" => Ok(RejoinPolicy::Carryover),
+            other => Err(format!(
+                "unknown rejoin policy '{other}' (reset | carryover)"
+            )),
+        }
+    }
+
+    pub fn all() -> [RejoinPolicy; 2] {
+        [RejoinPolicy::Reset, RejoinPolicy::Carryover]
+    }
+}
+
 /// The LEA strategy state: one estimator per worker.
 #[derive(Clone, Debug)]
 pub struct Lea {
     pub params: LoadParams,
     estimators: Vec<TransitionEstimator>,
+    rejoin: RejoinPolicy,
     // Hot-path buffers, recycled every round (EXPERIMENTS.md §Perf).
     scratch: AllocScratch,
     p_buf: Vec<f64>,
@@ -23,12 +63,22 @@ pub struct Lea {
 
 impl Lea {
     pub fn new(params: LoadParams) -> Self {
+        Lea::with_rejoin(params, RejoinPolicy::Carryover)
+    }
+
+    /// LEA with an explicit estimator policy for rejoining workers.
+    pub fn with_rejoin(params: LoadParams, rejoin: RejoinPolicy) -> Self {
         Lea {
             estimators: vec![TransitionEstimator::new(); params.n],
+            rejoin,
             scratch: AllocScratch::default(),
             p_buf: Vec::with_capacity(params.n),
             params,
         }
+    }
+
+    pub fn rejoin_policy(&self) -> RejoinPolicy {
+        self.rejoin
     }
 
     /// Current p̂_{g,i}(m) vector (diagnostics + convergence experiment).
@@ -65,6 +115,17 @@ impl Strategy for Lea {
 
     fn p_good_profile(&self) -> Option<Vec<f64>> {
         Some(self.p_good_estimates())
+    }
+
+    fn on_worker_join(&mut self, worker: usize) {
+        if self.rejoin == RejoinPolicy::Reset {
+            if let Some(e) = self.estimators.get_mut(worker) {
+                *e = TransitionEstimator::new();
+            }
+        }
+        // Carryover: nothing to do — the absence was a run of
+        // `tick_unobserved` calls, so the prediction has already decayed
+        // toward the estimated stationary distribution.
     }
 }
 
@@ -131,6 +192,37 @@ mod tests {
             assert!((e.p_gg_hat() - 0.9).abs() < 0.03, "{}", e.p_gg_hat());
             assert!((e.p_bb_hat() - 0.6).abs() < 0.05, "{}", e.p_bb_hat());
         }
+    }
+
+    #[test]
+    fn rejoin_reset_forgets_carryover_remembers() {
+        let mut reset = Lea::with_rejoin(fig3_params(), RejoinPolicy::Reset);
+        let mut carry = Lea::with_rejoin(fig3_params(), RejoinPolicy::Carryover);
+        assert_eq!(Lea::new(fig3_params()).rejoin_policy(), RejoinPolicy::Carryover);
+        for _ in 0..50 {
+            let states = vec![WState::Good; 15];
+            observe_all(&mut reset, &states);
+            observe_all(&mut carry, &states);
+        }
+        assert!(reset.estimator(3).observations() > 0);
+        reset.on_worker_join(3);
+        carry.on_worker_join(3);
+        assert_eq!(reset.estimator(3).observations(), 0);
+        assert_eq!(reset.estimator(2).observations(), 49); // untouched slot
+        assert_eq!(carry.estimator(3).observations(), 49);
+        // Reset slot predicts from the uninformative prior again.
+        assert_eq!(reset.p_good_estimates()[3], 0.5);
+        assert!(carry.p_good_estimates()[3] > 0.9);
+        // Out-of-range ids are ignored, not a panic.
+        reset.on_worker_join(999);
+    }
+
+    #[test]
+    fn rejoin_policy_parse_roundtrip() {
+        for p in RejoinPolicy::all() {
+            assert_eq!(RejoinPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RejoinPolicy::parse("bogus").is_err());
     }
 
     #[test]

@@ -31,6 +31,18 @@ pub trait Strategy: Send {
     fn p_good_profile(&self) -> Option<Vec<f64>> {
         None
     }
+
+    /// Worker `worker` left the fleet (spot preemption). The elastic-fleet
+    /// engine calls this when a `WorkerLeave` event fires; the slot index
+    /// stays valid — a replacement will rejoin under the same id. Default:
+    /// no-op (the paper's fixed-fleet strategies never see churn).
+    fn on_worker_leave(&mut self, _worker: usize) {}
+
+    /// A replacement instance came up in slot `worker`. What the strategy
+    /// knows about the DEPARTED machine may or may not transfer to the new
+    /// one — see `scheduler::lea::RejoinPolicy` for LEA's two answers.
+    /// Default: no-op.
+    fn on_worker_join(&mut self, _worker: usize) {}
 }
 
 /// Convenience: full observability (the paper's setting).

@@ -1,0 +1,152 @@
+//! Worker churn: spot preemption / rejoin as a per-worker on/off renewal
+//! process.
+//!
+//! The paper (§2.2) fixes the worker set and lets only the *speeds* vary,
+//! but the EC2 measurements motivating the model come from exactly the
+//! environment where instances are preempted and replaced mid-computation
+//! (the elastic regime of arXiv:2206.09399 and arXiv:2103.01921). This
+//! module supplies the membership dynamics the traffic engine drives:
+//! each worker alternates independently between *live* spells (exponential,
+//! preemption rate `leave_rate`) and *down* spells (shifted exponential —
+//! a re-provisioning floor plus an exponential tail). Exponential holding
+//! times make the joint process a per-worker two-state CTMC, i.e. the
+//! Markov-modulated special case of the renewal model.
+//!
+//! The process itself is just the distribution pair; the traffic engine
+//! owns the clock and a dedicated churn RNG (`traffic::engine`), so a run
+//! with `leave_rate = 0` schedules no churn events, consumes no extra
+//! randomness, and reproduces the fixed-fleet engine exactly.
+
+use crate::util::rng::Rng;
+
+/// Parameters of the per-worker on/off renewal process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnModel {
+    /// Preemptions per live-second per worker; 0 disables churn.
+    pub leave_rate: f64,
+    /// Mean of the exponential tail of the downtime, in seconds.
+    pub mean_downtime: f64,
+    /// Re-provisioning floor: no replacement lands faster than this.
+    pub min_downtime: f64,
+}
+
+impl ChurnModel {
+    /// The fixed-fleet model of the paper: nobody ever leaves.
+    pub fn none() -> Self {
+        ChurnModel {
+            leave_rate: 0.0,
+            mean_downtime: 0.0,
+            min_downtime: 0.0,
+        }
+    }
+
+    /// Spot-market shorthand: preemption rate + mean replacement delay
+    /// (no provisioning floor).
+    pub fn spot(leave_rate: f64, mean_downtime: f64) -> Self {
+        let m = ChurnModel {
+            leave_rate,
+            mean_downtime,
+            min_downtime: 0.0,
+        };
+        m.validate();
+        m
+    }
+
+    pub fn validate(&self) {
+        assert!(
+            self.leave_rate.is_finite() && self.leave_rate >= 0.0,
+            "leave_rate must be finite and non-negative: {}",
+            self.leave_rate
+        );
+        assert!(
+            self.mean_downtime.is_finite() && self.mean_downtime >= 0.0,
+            "mean_downtime must be finite and non-negative: {}",
+            self.mean_downtime
+        );
+        assert!(
+            self.min_downtime.is_finite() && self.min_downtime >= 0.0,
+            "min_downtime must be finite and non-negative: {}",
+            self.min_downtime
+        );
+    }
+
+    /// Whether any churn events should be scheduled at all.
+    pub fn is_active(&self) -> bool {
+        self.leave_rate > 0.0
+    }
+
+    /// Duration of one live spell (exponential with rate `leave_rate`).
+    /// Only meaningful when [`Self::is_active`].
+    pub fn sample_uptime(&self, rng: &mut Rng) -> f64 {
+        debug_assert!(self.is_active());
+        rng.exp(1.0 / self.leave_rate)
+    }
+
+    /// Duration of one down spell: `min_downtime + Exp(mean_downtime)`.
+    pub fn sample_downtime(&self, rng: &mut Rng) -> f64 {
+        self.min_downtime + rng.exp(self.mean_downtime)
+    }
+
+    /// Stationary probability a worker is live: mean-up / (mean-up +
+    /// mean-down). 1.0 when churn is disabled.
+    pub fn expected_live_fraction(&self) -> f64 {
+        if !self.is_active() {
+            return 1.0;
+        }
+        let up = 1.0 / self.leave_rate;
+        up / (up + self.min_downtime + self.mean_downtime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inactive_and_fully_live() {
+        let m = ChurnModel::none();
+        assert!(!m.is_active());
+        assert_eq!(m.expected_live_fraction(), 1.0);
+    }
+
+    #[test]
+    fn uptime_mean_matches_rate() {
+        let m = ChurnModel::spot(0.25, 2.0);
+        assert!(m.is_active());
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| m.sample_uptime(&mut rng)).sum();
+        assert!((sum / n as f64 - 4.0).abs() < 0.05, "{}", sum / n as f64);
+    }
+
+    #[test]
+    fn downtime_respects_floor_and_mean() {
+        let m = ChurnModel {
+            leave_rate: 0.1,
+            mean_downtime: 1.5,
+            min_downtime: 0.5,
+        };
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let d = m.sample_downtime(&mut rng);
+            assert!(d >= 0.5);
+            sum += d;
+        }
+        assert!((sum / n as f64 - 2.0).abs() < 0.02, "{}", sum / n as f64);
+    }
+
+    #[test]
+    fn live_fraction_formula() {
+        // mean up 5, mean down 2 -> 5/7.
+        let m = ChurnModel::spot(0.2, 2.0);
+        assert!((m.expected_live_fraction() - 5.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "leave_rate")]
+    fn negative_rate_rejected() {
+        let _ = ChurnModel::spot(-1.0, 1.0);
+    }
+}

@@ -131,6 +131,23 @@ impl SimCluster {
         out
     }
 
+    /// Replace worker `i`'s state process with a fresh instance, as when a
+    /// preempted spot worker is re-provisioned: a rejoining machine is a NEW
+    /// machine, not the one that left. Markov workers restart from the
+    /// stationary draw (taken lazily on their next participation, exactly as
+    /// at t = 0); credit workers restart at the resume threshold — the
+    /// deterministic fresh-boot balance — with bursting recomputed. Consumes
+    /// no RNG, so fleets without churn are byte-identical to before.
+    pub fn reset_worker(&mut self, i: usize) {
+        match &mut self.workers[i] {
+            WorkerProcess::Markov(m) => *m = MarkovWorker::new(m.params),
+            WorkerProcess::Credit(c) => {
+                c.credits = c.resume_frac * c.cap;
+                c.bursting = c.credits >= c.resume_frac * c.cap;
+            }
+        }
+    }
+
     /// Allocation-free completion check: `completed[i]` ⇔ worker i returns
     /// all `loads[i]` evaluations by the deadline (same epsilon convention
     /// as [`Self::outcome`]).
@@ -242,6 +259,43 @@ mod tests {
         let gaps = vec![0.5; 6];
         for _ in 0..30 {
             assert_eq!(a.advance(0.5), b.advance_subset(&ids, &gaps));
+        }
+    }
+
+    #[test]
+    fn reset_worker_redraws_from_stationary_and_consumes_no_rng() {
+        // Two identical clusters; one resets a worker mid-run. The reset
+        // itself must not consume RNG (the OTHER workers' sequences stay
+        // identical), and the reset worker redraws from the stationary
+        // distribution like a fresh machine.
+        let chain = TwoState::new(0.95, 0.95); // sticky: resets are visible
+        let mut a = SimCluster::markov(4, chain, speeds(), 21);
+        let mut b = SimCluster::markov(4, chain, speeds(), 21);
+        for _ in 0..10 {
+            assert_eq!(a.advance(0.0), b.advance(0.0));
+        }
+        b.reset_worker(2);
+        for _ in 0..20 {
+            let sa = a.advance(0.0);
+            let sb = b.advance(0.0);
+            // Workers advance in id order off one shared RNG; worker ids
+            // 0 and 1 precede the reset one, so their draws are untouched.
+            assert_eq!(sa[0], sb[0]);
+            assert_eq!(sa[1], sb[1]);
+        }
+    }
+
+    #[test]
+    fn reset_credit_worker_restarts_at_resume_threshold() {
+        let template = CreditCpu::t2_micro(0.0);
+        let mut cl = SimCluster::credit(3, template, speeds(), 8);
+        let _ = cl.advance(0.0);
+        cl.reset_worker(1);
+        if let WorkerProcess::Credit(c) = &cl.workers[1] {
+            assert!((c.credits - c.resume_frac * c.cap).abs() < 1e-12);
+            assert!(c.bursting);
+        } else {
+            panic!("expected credit worker");
         }
     }
 

@@ -9,11 +9,14 @@
 //!
 //! - [`cluster`] — worker state evolution + round outcome computation.
 //! - [`arrivals`] — the shift-exponential request arrival process (§6.2).
+//! - [`churn`] — spot preemption/rejoin as per-worker on/off renewal
+//!   processes (the elastic-fleet extension driven by `traffic::engine`).
 //! - [`metrics`] — timely computation throughput (Definition 2.1) + series.
 //! - [`runner`] — the strategy/cluster driver loop.
 //! - [`scenarios`] — the paper's Fig.-3 and Fig.-4 scenario registry.
 
 pub mod arrivals;
+pub mod churn;
 pub mod cluster;
 pub mod metrics;
 pub mod runner;

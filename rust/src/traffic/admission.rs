@@ -51,6 +51,53 @@ impl Policy {
     }
 }
 
+/// What to do with the queue's front job at a dispatch opportunity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchVerdict {
+    /// Serve it now on the idle workers.
+    Serve,
+    /// Leave it at the front and stop dispatching for now (more capacity —
+    /// idle workers or, under churn, rejoining ones — could still save it;
+    /// for drop-infeasible, the arrival handler bounces it instead).
+    Hold,
+    /// Shed it as infeasible: even the full *live* fleet cannot reach K*
+    /// inside the remaining window.
+    Shed,
+}
+
+/// The admission decision, churn-aware: `feasible_idle` is the K*
+/// feasibility of the currently idle live workers, `feasible_live` that of
+/// the whole LIVE fleet (the paper's fixed n shrinks to the live subset —
+/// a departed worker cannot save a waiting job, so EDF must not hold a job
+/// hostage for capacity that no longer exists).
+pub fn dispatch_verdict(
+    policy: Policy,
+    feasible_idle: bool,
+    feasible_live: bool,
+) -> DispatchVerdict {
+    match policy {
+        Policy::AdmitAll => DispatchVerdict::Serve,
+        // The loss system settles at the arrival handler; Hold here simply
+        // stops the dispatch scan so the bounce can happen.
+        Policy::DropInfeasible => {
+            if feasible_idle {
+                DispatchVerdict::Serve
+            } else {
+                DispatchVerdict::Hold
+            }
+        }
+        Policy::EdfFeasible => {
+            if feasible_idle {
+                DispatchVerdict::Serve
+            } else if feasible_live {
+                DispatchVerdict::Hold
+            } else {
+                DispatchVerdict::Shed
+            }
+        }
+    }
+}
+
 /// The waiting room: FIFO for admit-all/drop-infeasible, deadline-ordered
 /// for EDF. Stores `(job id, absolute deadline)`; the engine owns the jobs.
 #[derive(Debug)]
@@ -162,6 +209,26 @@ mod tests {
         q.push(&job(4, 1.0, 2.0)); // same absolute deadline 3
         assert_eq!(q.pop_front(), Some(4));
         assert_eq!(q.pop_front(), Some(5));
+    }
+
+    #[test]
+    fn dispatch_verdicts_cover_the_policy_matrix() {
+        use DispatchVerdict::{Hold, Serve, Shed};
+        // Admit-all never looks at feasibility.
+        for fi in [false, true] {
+            for fl in [false, true] {
+                assert_eq!(dispatch_verdict(Policy::AdmitAll, fi, fl), Serve);
+            }
+        }
+        // Drop-infeasible: serve iff the idle subset works; never sheds at
+        // dispatch (the arrival handler owns the bounce).
+        assert_eq!(dispatch_verdict(Policy::DropInfeasible, true, true), Serve);
+        assert_eq!(dispatch_verdict(Policy::DropInfeasible, false, true), Hold);
+        assert_eq!(dispatch_verdict(Policy::DropInfeasible, false, false), Hold);
+        // EDF: hold only while the LIVE fleet could still make it.
+        assert_eq!(dispatch_verdict(Policy::EdfFeasible, true, false), Serve);
+        assert_eq!(dispatch_verdict(Policy::EdfFeasible, false, true), Hold);
+        assert_eq!(dispatch_verdict(Policy::EdfFeasible, false, false), Shed);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!
 //! 1. the admission layer ([`Policy`]) decides whether/when it reaches the
 //!    workers (see `admission.rs` for the three policies);
-//! 2. the EA allocator runs over the SUBSET of currently idle workers,
+//! 2. the EA allocator runs over the SUBSET of currently idle LIVE workers,
 //!    with per-worker good-state probabilities from the shared
 //!    [`Strategy::p_good_profile`] — LEA keeps learning across overlapping
 //!    jobs;
@@ -22,6 +22,18 @@
 //!    ([`CodingScheme::round_success`]), and the strategy observes the
 //!    participants' states (non-participants are censored).
 //!
+//! **Elastic fleet.** With an active [`ChurnModel`] workers are preempted
+//! and replaced mid-run: `WorkerLeave` abandons any in-flight assignment
+//! (the job keeps running on the survivors; success is re-evaluated at
+//! resolve over the results that actually arrive), `WorkerJoin` brings up a
+//! *fresh* instance in the slot ([`SimCluster::reset_worker`]) and notifies
+//! the strategy ([`Strategy::on_worker_join`] — LEA's
+//! [`crate::scheduler::lea::RejoinPolicy`] decides whether the estimator
+//! survives). Dispatch, admission feasibility and the Lemma-4.5 prefix
+//! search all operate on the LIVE subset. Churn draws from its own RNG
+//! stream, so a run with churn rate 0 schedules no churn events, consumes
+//! no extra randomness, and is byte-identical to the fixed-fleet engine.
+//!
 //! With `max_in_flight = 1`, `Arrivals::Fixed(0.0)` and deadlines counted
 //! from service start, the engine consumes the cluster RNG in exactly the
 //! round simulator's order and reproduces `sim::runner::run` throughput
@@ -29,7 +41,7 @@
 
 use std::collections::BTreeMap;
 
-use super::admission::{AdmissionQueue, Policy};
+use super::admission::{dispatch_verdict, AdmissionQueue, DispatchVerdict, Policy};
 use super::event::{EventKind, EventQueue};
 use super::job::{Job, JobClass, JobFate, Service};
 use super::metrics::TrafficMetrics;
@@ -41,6 +53,7 @@ use crate::scheduler::allocation;
 use crate::scheduler::strategy::Strategy;
 use crate::scheduler::success::LoadParams;
 use crate::sim::arrivals::Arrivals;
+use crate::sim::churn::ChurnModel;
 use crate::sim::cluster::SimCluster;
 use crate::util::rng::Rng;
 
@@ -68,10 +81,13 @@ pub struct TrafficConfig {
     /// Cap on concurrently served jobs; 0 = unbounded (worker-limited).
     pub max_in_flight: usize,
     pub deadline_from: DeadlineFrom,
+    /// Worker preemption/rejoin process; [`ChurnModel::none`] fixes the
+    /// fleet (the paper's setting).
+    pub churn: ChurnModel,
 }
 
 impl TrafficConfig {
-    /// Single-class open-loop config with sensible defaults.
+    /// Single-class open-loop config with sensible defaults (fixed fleet).
     pub fn single_class(
         jobs: u64,
         arrivals: Arrivals,
@@ -86,12 +102,27 @@ impl TrafficConfig {
             policy,
             max_in_flight: 0,
             deadline_from: DeadlineFrom::Arrival,
+            churn: ChurnModel::none(),
         }
+    }
+
+    /// Builder: replace the churn process.
+    pub fn with_churn(mut self, churn: ChurnModel) -> Self {
+        self.churn = churn;
+        self
     }
 }
 
 struct WorkerSlot {
-    busy: bool,
+    /// Job currently served by this worker (`None` = idle). The handle a
+    /// preemption needs to find the in-flight assignment it abandons.
+    job: Option<u64>,
+    /// Whether the slot currently holds a live instance.
+    live: bool,
+    /// Lifecycle generation, bumped on every leave AND join: a `Release`
+    /// carrying an older generation belongs to a departed incarnation and
+    /// is ignored (`handle_release`).
+    gen: u64,
     /// When this worker last went idle (for the per-worker idle gap).
     last_release: f64,
 }
@@ -101,7 +132,8 @@ struct WorkerSlot {
 /// `strategy` is shared across all jobs (it keeps learning); `cluster`
 /// provides the worker state processes and speeds; `seed` drives the
 /// engine's own randomness (arrival gaps, class mix) — the cluster carries
-/// its own RNG, exactly as in `sim::runner::run`.
+/// its own RNG, exactly as in `sim::runner::run`, and the churn process a
+/// third, so enabling churn never perturbs the other two streams.
 pub fn run_traffic(
     strategy: &mut dyn Strategy,
     cluster: &mut SimCluster,
@@ -109,6 +141,7 @@ pub fn run_traffic(
     seed: u64,
 ) -> TrafficMetrics {
     assert!(!cfg.classes.is_empty(), "at least one job class required");
+    cfg.churn.validate();
     for c in &cfg.classes {
         assert_eq!(
             c.scheme.geometry.n,
@@ -122,6 +155,7 @@ pub fn run_traffic(
         strategy,
         cluster,
         rng: Rng::new(seed),
+        churn_rng: Rng::new(seed ^ 0x6368_7572_6e21), // "churn!"
         arrivals: cfg.arrivals.clone(),
         events: EventQueue::new(),
         queue: AdmissionQueue::new(cfg.policy),
@@ -129,10 +163,13 @@ pub fn run_traffic(
         services: BTreeMap::new(),
         workers: (0..n)
             .map(|_| WorkerSlot {
-                busy: false,
+                job: None,
+                live: true,
+                gen: 0,
                 last_release: 0.0,
             })
             .collect(),
+        live: n,
         in_flight: 0,
         spawned: 0,
         now: 0.0,
@@ -149,6 +186,9 @@ struct Engine<'a> {
     strategy: &'a mut dyn Strategy,
     cluster: &'a mut SimCluster,
     rng: Rng,
+    /// Dedicated stream for the churn process: untouched (and untouching)
+    /// when churn is disabled, so fixed-fleet runs are byte-identical.
+    churn_rng: Rng,
     arrivals: Arrivals,
     events: EventQueue,
     queue: AdmissionQueue,
@@ -156,6 +196,8 @@ struct Engine<'a> {
     jobs: BTreeMap<u64, Job>,
     services: BTreeMap<u64, Service>,
     workers: Vec<WorkerSlot>,
+    /// Count of live slots (`workers[i].live`), maintained incrementally.
+    live: usize,
     in_flight: usize,
     spawned: u64,
     now: f64,
@@ -175,19 +217,36 @@ impl Engine<'_> {
         if self.cfg.jobs > 0 {
             let gap = self.arrivals.sample(&mut self.rng);
             self.events.push(gap.max(0.0), EventKind::Arrival);
+            if self.cfg.churn.is_active() {
+                // Every slot starts live; schedule its first preemption.
+                for w in 0..self.workers.len() {
+                    let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
+                    self.events.push(up, EventKind::WorkerLeave { worker: w });
+                }
+            }
         }
         while let Some(ev) = self.events.pop() {
-            self.metrics.tick(self.queue.len(), ev.time);
+            // Once every arrival is settled, the only events left are churn
+            // lifecycle ones: drop them unprocessed (no tick, no reschedule)
+            // so post-traffic dead air never inflates the horizon, the
+            // leave/join counts, or the live/queue time integrals.
+            if self.draining()
+                && matches!(
+                    ev.kind,
+                    EventKind::WorkerLeave { .. } | EventKind::WorkerJoin { .. }
+                )
+            {
+                continue;
+            }
+            self.metrics.tick(self.queue.len(), self.live, ev.time);
             self.now = ev.time;
             match ev.kind {
                 EventKind::Arrival => self.handle_arrival(),
-                EventKind::Release { worker } => {
-                    self.workers[worker].busy = false;
-                    self.workers[worker].last_release = self.now;
-                    self.try_dispatch();
-                }
+                EventKind::Release { worker, gen } => self.handle_release(worker, gen),
                 EventKind::QueueExpiry { job } => self.handle_queue_expiry(job),
                 EventKind::Resolve { job } => self.handle_resolve(job),
+                EventKind::WorkerLeave { worker } => self.handle_leave(worker),
+                EventKind::WorkerJoin { worker } => self.handle_join(worker),
             }
         }
         debug_assert!(self.jobs.is_empty(), "jobs leaked: {:?}", self.jobs.keys());
@@ -201,6 +260,15 @@ impl Engine<'_> {
                 + self.metrics.expired_in_queue
         );
         self.metrics
+    }
+
+    /// All arrivals generated and every job settled: only churn lifecycle
+    /// events can remain, and the event loop drops them unprocessed — they
+    /// are post-traffic dead air, and dropping them (instead of handling
+    /// and rescheduling) both keeps them out of the metrics and lets the
+    /// queue drain.
+    fn draining(&self) -> bool {
+        self.spawned >= self.cfg.jobs && self.jobs.is_empty()
     }
 
     fn handle_arrival(&mut self) {
@@ -234,13 +302,13 @@ impl Engine<'_> {
         self.try_dispatch();
 
         // The loss system bounces anything that could not start immediately:
-        // capacity bounces (no idle worker / in-flight cap) count as
+        // capacity bounces (no idle live worker / in-flight cap) count as
         // dropped-at-arrival, feasibility rejections as dropped-infeasible.
         if self.cfg.policy == Policy::DropInfeasible && self.queue.remove(id) {
             self.jobs.remove(&id);
             let capacity_blocked = (self.cfg.max_in_flight > 0
                 && self.in_flight >= self.cfg.max_in_flight)
-                || self.workers.iter().all(|w| w.busy);
+                || self.workers.iter().all(|w| !w.live || w.job.is_some());
             self.metrics.on_loss(if capacity_blocked {
                 JobFate::DroppedAtArrival
             } else {
@@ -260,6 +328,75 @@ impl Engine<'_> {
         }
     }
 
+    fn handle_release(&mut self, worker: usize, gen: u64) {
+        // Stale if the worker left (or left and rejoined) since this release
+        // was scheduled: the slot belongs to a different incarnation whose
+        // departure already settled the assignment.
+        if self.workers[worker].gen != gen {
+            return;
+        }
+        self.workers[worker].job = None;
+        self.workers[worker].last_release = self.now;
+        self.try_dispatch();
+    }
+
+    /// The worker is preempted: mark the slot dead, abandon any in-flight
+    /// assignment (the job keeps running on the survivors), and schedule the
+    /// replacement instance.
+    fn handle_leave(&mut self, worker: usize) {
+        let slot = &mut self.workers[worker];
+        debug_assert!(slot.live, "leave for a worker that is not live");
+        slot.live = false;
+        slot.gen += 1;
+        self.live -= 1;
+        self.metrics.on_leave();
+        if let Some(jid) = self.workers[worker].job.take() {
+            let svc = self
+                .services
+                .get_mut(&jid)
+                .expect("busy worker without a service");
+            let i = svc
+                .workers
+                .iter()
+                .position(|&w| w == worker)
+                .expect("busy worker missing from its service");
+            debug_assert!(!svc.lost[i], "double preemption of one assignment");
+            svc.lost[i] = true;
+            // Its results never arrive; success is re-evaluated against K*
+            // over the survivors at the window's end.
+            svc.completed[i] = false;
+            self.metrics.on_preemption(svc.loads[i]);
+        }
+        self.strategy.on_worker_leave(worker);
+        // The replacement is always scheduled; if the run drains first, the
+        // event loop drops it unprocessed.
+        let down = self.cfg.churn.sample_downtime(&mut self.churn_rng);
+        self.events
+            .push(self.now + down, EventKind::WorkerJoin { worker });
+        // Shrinking the LIVE fleet can flip the front job from "hold for
+        // capacity" to "shed as infeasible" — re-evaluate.
+        self.try_dispatch();
+    }
+
+    /// A replacement instance comes up in the slot: a NEW machine under the
+    /// same id, idle from now, with a fresh state process.
+    fn handle_join(&mut self, worker: usize) {
+        let slot = &mut self.workers[worker];
+        debug_assert!(!slot.live, "join for a worker that is already live");
+        slot.live = true;
+        slot.gen += 1;
+        slot.job = None;
+        slot.last_release = self.now;
+        self.live += 1;
+        self.metrics.on_join();
+        self.cluster.reset_worker(worker);
+        self.strategy.on_worker_join(worker);
+        let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
+        self.events
+            .push(self.now + up, EventKind::WorkerLeave { worker });
+        self.try_dispatch();
+    }
+
     fn handle_resolve(&mut self, id: u64) {
         let svc = self.services.remove(&id).expect("resolve without service");
         let job = self.jobs.remove(&id).expect("resolve without job");
@@ -267,7 +404,8 @@ impl Engine<'_> {
         let n = self.workers.len();
 
         // Reassemble full-length vectors for the exact round-simulator
-        // decodability rule (zero-load workers trivially "complete").
+        // decodability rule (zero-load workers trivially "complete";
+        // preempted participants were forced incomplete at their leave).
         let mut loads_full = vec![0usize; n];
         let mut completed_full = vec![true; n];
         for i in 0..svc.workers.len() {
@@ -285,10 +423,17 @@ impl Engine<'_> {
         };
 
         // Observation phase: participants reveal their state through their
-        // completion time; everyone else is censored this round.
+        // completion time; everyone else is censored this round. A
+        // participant whose instance has since departed (preempted mid-run,
+        // or finished and then left) is censored too — the master has no
+        // completion time for a machine that is gone, and the slot may
+        // already host a fresh instance the old state says nothing about.
         let mut observed: Vec<Option<WState>> = vec![None; n];
-        for (&w, &s) in svc.workers.iter().zip(&svc.states) {
-            observed[w] = Some(s);
+        for i in 0..svc.workers.len() {
+            let w = svc.workers[i];
+            if self.workers[w].gen == svc.gens[i] {
+                observed[w] = Some(svc.states[i]);
+            }
         }
         self.strategy.observe(&observed);
 
@@ -307,7 +452,7 @@ impl Engine<'_> {
                 .workers
                 .iter()
                 .enumerate()
-                .filter(|(_, w)| !w.busy)
+                .filter(|(_, w)| w.live && w.job.is_none())
                 .map(|(i, _)| i)
                 .collect();
             if idle.is_empty() {
@@ -336,34 +481,31 @@ impl Engine<'_> {
                 speeds.mu_b,
                 d_eff,
             );
-            let feasible_now = params.feasible(params.n);
-            match self.cfg.policy {
-                Policy::AdmitAll => {}
-                Policy::DropInfeasible => {
-                    if !feasible_now {
-                        break; // the arrival handler bounces it
-                    }
-                }
-                Policy::EdfFeasible => {
-                    if !feasible_now {
-                        let full = LoadParams::from_rates(
-                            self.workers.len(),
-                            geo.r,
-                            class.scheme.kstar(),
-                            speeds.mu_g,
-                            speeds.mu_b,
-                            d_eff,
-                        );
-                        if full.feasible(full.n) {
-                            // More workers could still save it: hold the line
-                            // (strict EDF — no bypassing the earliest job).
-                            break;
-                        }
-                        self.queue.remove(front);
-                        self.jobs.remove(&front);
-                        self.metrics.on_loss(JobFate::DroppedInfeasible);
-                        continue;
-                    }
+            let feasible_idle = params.feasible(params.n);
+            // Feasibility against the LIVE fleet, not the nominal n: under
+            // churn a departed worker cannot save a waiting job, so holding
+            // for it would park the job until expiry. Only EDF consults it,
+            // and only when the idle subset falls short — keep the second
+            // `from_rates` off the hot path otherwise.
+            let feasible_live = !feasible_idle
+                && self.cfg.policy == Policy::EdfFeasible
+                && LoadParams::from_rates(
+                    self.live,
+                    geo.r,
+                    class.scheme.kstar(),
+                    speeds.mu_g,
+                    speeds.mu_b,
+                    d_eff,
+                )
+                .feasible(self.live);
+            match dispatch_verdict(self.cfg.policy, feasible_idle, feasible_live) {
+                DispatchVerdict::Serve => {}
+                DispatchVerdict::Hold => break,
+                DispatchVerdict::Shed => {
+                    self.queue.remove(front);
+                    self.jobs.remove(&front);
+                    self.metrics.on_loss(JobFate::DroppedInfeasible);
+                    continue;
                 }
             }
             self.queue.pop_front();
@@ -371,7 +513,7 @@ impl Engine<'_> {
         }
     }
 
-    /// Allocate over the idle subset, advance the participants' state
+    /// Allocate over the idle live subset, advance the participants' state
     /// processes by their true idle gaps, and schedule the outcome.
     fn dispatch(&mut self, job: Job, idle: &[usize], params: &LoadParams, d_eff: f64) {
         let n = self.workers.len();
@@ -416,6 +558,7 @@ impl Engine<'_> {
         self.cluster
             .completed_into(&states, &loads_v, d_eff, &mut completed);
         let mut finish = Vec::with_capacity(workers_v.len());
+        let mut gens = Vec::with_capacity(workers_v.len());
         for (i, &w) in workers_v.iter().enumerate() {
             let rate = self.cluster.speeds.rate(states[i]);
             let t_fin = if rate > 0.0 {
@@ -424,16 +567,23 @@ impl Engine<'_> {
                 f64::INFINITY
             };
             finish.push(t_fin);
-            self.workers[w].busy = true;
+            gens.push(self.workers[w].gen);
+            self.workers[w].job = Some(job.id);
             // Abandon unfinished work when the window closes.
-            self.events
-                .push(t_fin.min(window_end), EventKind::Release { worker: w });
+            self.events.push(
+                t_fin.min(window_end),
+                EventKind::Release {
+                    worker: w,
+                    gen: self.workers[w].gen,
+                },
+            );
         }
         self.events.push(window_end, EventKind::Resolve { job: job.id });
 
         self.metrics
             .on_serve((self.now - job.arrival).max(0.0), alloc.est_success);
         self.in_flight += 1;
+        let lost = vec![false; workers_v.len()];
         self.services.insert(
             job.id,
             Service {
@@ -442,6 +592,8 @@ impl Engine<'_> {
                 states,
                 finish,
                 completed,
+                lost,
+                gens,
                 window_end,
             },
         );
@@ -520,7 +672,7 @@ fn decode_time(svc: &Service, scheme: &CodingScheme) -> Option<f64> {
 mod tests {
     use super::*;
     use crate::markov::chain::TwoState;
-    use crate::scheduler::lea::Lea;
+    use crate::scheduler::lea::{Lea, RejoinPolicy};
     use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
 
     fn cluster(seed: u64) -> SimCluster {
@@ -543,6 +695,26 @@ mod tests {
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(seed);
         run_traffic(&mut lea, &mut cl, &overload_cfg(policy, jobs), seed ^ 0xA5)
+    }
+
+    fn run_churn(
+        policy: Policy,
+        churn: ChurnModel,
+        rejoin: RejoinPolicy,
+        jobs: u64,
+        seed: u64,
+    ) -> TrafficMetrics {
+        let mut lea = Lea::with_rejoin(fig3_load_params(), rejoin);
+        let mut cl = cluster(seed);
+        let cfg = TrafficConfig::single_class(
+            jobs,
+            Arrivals::poisson(0.6),
+            1.0,
+            fig3_geometry(),
+            policy,
+        )
+        .with_churn(churn);
+        run_traffic(&mut lea, &mut cl, &cfg, seed ^ 0xA5)
     }
 
     #[test]
@@ -571,6 +743,10 @@ mod tests {
                 policy.name()
             );
             assert!((0.0..=1.0).contains(&m.plan_hit_rate()));
+            // Fixed fleet: no churn bookkeeping moves.
+            assert_eq!((m.leaves, m.joins, m.preemptions, m.work_lost), (0, 0, 0, 0));
+            assert_eq!(m.min_live_workers(), 15);
+            assert!((m.mean_live_workers() - 15.0).abs() < 1e-9);
         }
     }
 
@@ -653,6 +829,7 @@ mod tests {
             policy: Policy::EdfFeasible,
             max_in_flight: 0,
             deadline_from: DeadlineFrom::Arrival,
+            churn: ChurnModel::none(),
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);
@@ -679,6 +856,234 @@ mod tests {
         assert!(
             m.expired_in_queue + m.missed_service > 0,
             "bursts should overwhelm the deadline"
+        );
+    }
+
+    #[test]
+    fn churn_conserves_jobs_and_loses_work() {
+        // Aggressive churn: mean uptime 2.5s against 1s jobs, so many
+        // assignments are abandoned mid-window — every stale Release this
+        // produces must be ignored (gen mismatch), every job still settles.
+        let churn = ChurnModel::spot(0.4, 2.0);
+        for policy in Policy::all() {
+            let m = run_churn(policy, churn, RejoinPolicy::Carryover, 500, 77);
+            assert_eq!(m.arrivals, 500, "{}", policy.name());
+            assert_eq!(
+                m.arrivals,
+                m.completed
+                    + m.missed_service
+                    + m.dropped_at_arrival
+                    + m.dropped_infeasible
+                    + m.expired_in_queue,
+                "conservation failed under churn for {}",
+                policy.name()
+            );
+            assert!(m.leaves > 0, "{}", policy.name());
+            assert!(m.joins > 0, "{}", policy.name());
+            // Joins lag leaves by at most the slots currently down.
+            assert!(m.joins <= m.leaves);
+            assert!(m.leaves - m.joins <= 15);
+            assert!(
+                m.preemptions > 0 && m.work_lost > 0,
+                "in-flight preemptions must occur under {} churn ({})",
+                churn.leave_rate,
+                policy.name()
+            );
+            assert!(m.work_lost >= m.preemptions); // ≥ 1 eval per preemption
+            assert!(m.mean_live_workers() < 15.0);
+            assert!(m.min_live_workers() < 15);
+            // Live fraction should be near the renewal-theory mean.
+            let expect = 15.0 * churn.expected_live_fraction();
+            assert!(
+                (m.mean_live_workers() - expect).abs() < 2.5,
+                "mean live {} vs expected {}",
+                m.mean_live_workers(),
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_churn_is_byte_identical_to_fixed_fleet() {
+        // leave_rate = 0 must take the fixed-fleet path exactly: same event
+        // sequence, same RNG consumption, same metrics bytes.
+        let fixed = run_churn(
+            Policy::EdfFeasible,
+            ChurnModel::none(),
+            RejoinPolicy::Reset,
+            300,
+            13,
+        );
+        let zero = run_churn(
+            Policy::EdfFeasible,
+            ChurnModel {
+                leave_rate: 0.0,
+                mean_downtime: 3.0,
+                min_downtime: 0.5,
+            },
+            RejoinPolicy::Reset,
+            300,
+            13,
+        );
+        assert_eq!(fixed.to_json().to_string(), zero.to_json().to_string());
+        assert_eq!((zero.leaves, zero.joins), (0, 0));
+    }
+
+    #[test]
+    fn churn_degrades_throughput() {
+        // Same seed and load, increasing preemption rate: timely throughput
+        // must fall and lost work must rise.
+        let calm = run_churn(
+            Policy::AdmitAll,
+            ChurnModel::none(),
+            RejoinPolicy::Carryover,
+            800,
+            3,
+        );
+        let stormy = run_churn(
+            Policy::AdmitAll,
+            ChurnModel::spot(0.5, 3.0),
+            RejoinPolicy::Carryover,
+            800,
+            3,
+        );
+        assert!(
+            stormy.timely_throughput() < calm.timely_throughput() - 0.05,
+            "churn {} vs fixed {}",
+            stormy.timely_throughput(),
+            calm.timely_throughput()
+        );
+        assert!(stormy.work_lost > calm.work_lost);
+    }
+
+    #[test]
+    fn rejoin_policies_diverge_under_churn() {
+        // Reset and carryover share every RNG stream, so the first
+        // divergence can only come from the estimator lifecycle.
+        let churn = ChurnModel::spot(0.3, 2.0);
+        let reset = run_churn(Policy::AdmitAll, churn, RejoinPolicy::Reset, 600, 29);
+        let carry = run_churn(Policy::AdmitAll, churn, RejoinPolicy::Carryover, 600, 29);
+        assert_eq!(reset.arrivals, carry.arrivals);
+        // The churn stream is shared, so the preemption schedules agree up
+        // to the (slightly different) drain cutoff.
+        assert!(reset.leaves > 0 && carry.leaves > 0);
+        assert_ne!(
+            reset.to_json().to_string(),
+            carry.to_json().to_string(),
+            "rejoin policy must be observable in the metrics"
+        );
+    }
+
+    #[test]
+    fn stale_release_and_queue_expiry_are_ignored() {
+        // White-box regression for the stale-event fix: a Release scheduled
+        // for an incarnation that has since been preempted (and possibly
+        // replaced) must not free the slot, and a QueueExpiry for a job
+        // already in service must not settle it.
+        let cfg = TrafficConfig::single_class(
+            0,
+            Arrivals::Fixed(0.0),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        )
+        .with_churn(ChurnModel::spot(0.1, 0.2));
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(1);
+        let mut e = Engine {
+            cfg: &cfg,
+            strategy: &mut lea,
+            cluster: &mut cl,
+            rng: Rng::new(1),
+            churn_rng: Rng::new(2),
+            arrivals: cfg.arrivals.clone(),
+            events: EventQueue::new(),
+            queue: AdmissionQueue::new(cfg.policy),
+            jobs: BTreeMap::new(),
+            services: BTreeMap::new(),
+            workers: (0..15)
+                .map(|_| WorkerSlot {
+                    job: None,
+                    live: true,
+                    gen: 0,
+                    last_release: 0.0,
+                })
+                .collect(),
+            live: 15,
+            in_flight: 0,
+            spawned: 0,
+            now: 0.0,
+            metrics: TrafficMetrics::new(),
+            plan_probe: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
+            probe_order: Vec::new(),
+            probe_key: Vec::new(),
+        };
+        // Worker 3 is serving job 42; its Release (gen 0) is outstanding.
+        e.jobs.insert(
+            42,
+            Job {
+                id: 42,
+                class: 0,
+                arrival: 0.0,
+                absolute_deadline: 1.0,
+            },
+        );
+        e.in_flight = 1;
+        e.workers[3].job = Some(42);
+        e.services.insert(
+            42,
+            Service {
+                workers: vec![3],
+                loads: vec![10],
+                states: vec![WState::Good],
+                finish: vec![0.9],
+                completed: vec![true],
+                lost: vec![false],
+                gens: vec![0],
+                window_end: 1.0,
+            },
+        );
+        // Preemption at t = 0.5: the assignment is lost with the instance.
+        e.now = 0.5;
+        e.handle_leave(3);
+        assert!(!e.workers[3].live);
+        assert_eq!(e.workers[3].gen, 1);
+        assert!(e.services[&42].lost[0]);
+        assert!(!e.services[&42].completed[0]);
+        assert_eq!(e.metrics.preemptions, 1);
+        assert_eq!(e.metrics.work_lost, 10);
+        // Replacement instance at t = 0.7, immediately re-dispatched.
+        e.now = 0.7;
+        e.handle_join(3);
+        assert!(e.workers[3].live);
+        assert_eq!(e.workers[3].gen, 2);
+        e.workers[3].job = Some(77);
+        // The ORIGINAL gen-0 release fires at t = 0.9: stale — it must not
+        // free the new incarnation's assignment.
+        e.now = 0.9;
+        e.handle_release(3, 0);
+        assert_eq!(e.workers[3].job, Some(77));
+        assert_eq!(e.workers[3].last_release, 0.7, "stale release must not touch the slot");
+        // A current-generation release does free it.
+        e.handle_release(3, 2);
+        assert_eq!(e.workers[3].job, None);
+        // QueueExpiry for a job in service (not queued): a no-op.
+        e.handle_queue_expiry(42);
+        assert_eq!(e.metrics.expired_in_queue, 0);
+        assert!(e.jobs.contains_key(&42), "expiry must not settle a served job");
+    }
+
+    #[test]
+    fn edf_sheds_when_live_fleet_is_infeasible() {
+        // Preemption-heavy fleet: the live set regularly drops below the 8
+        // ℓ_g workers Fig.-3 feasibility needs, so EDF must shed jobs it
+        // would have held for the nominal 15.
+        let churn = ChurnModel::spot(0.6, 6.0);
+        let m = run_churn(Policy::EdfFeasible, churn, RejoinPolicy::Carryover, 600, 41);
+        assert!(m.min_live_workers() < 8, "live {}", m.min_live_workers());
+        assert!(
+            m.dropped_infeasible > 0,
+            "live-N feasibility must shed jobs"
         );
     }
 }

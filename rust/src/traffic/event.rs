@@ -4,7 +4,15 @@
 //! counter, so simultaneous events fire in the order they were scheduled.
 //! That tie-break is load-bearing — worker releases scheduled at dispatch
 //! time must precede the job's resolution at the same instant, and the whole
-//! engine must be deterministic for the byte-identical grid dumps.
+//! engine must be deterministic for the byte-identical grid dumps
+//! (`tests/determinism.rs` pins it).
+//!
+//! Events can go stale: a `Release` outlives its worker when the worker is
+//! preempted mid-assignment, and a `QueueExpiry` outlives its job when the
+//! job was served or dropped first. Stale events are *ignored at the
+//! handler*, not surgically removed from the heap — `Release` carries the
+//! worker's lifecycle generation (`gen`) for an O(1) staleness check, and
+//! `QueueExpiry`/`Resolve` validate against the live job tables.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -15,11 +23,19 @@ pub enum EventKind {
     /// The next request enters the system.
     Arrival,
     /// A worker finishes (or abandons, at the window's end) its assignment.
-    Release { worker: usize },
+    /// `gen` is the worker's lifecycle generation at scheduling time; the
+    /// handler drops the event if the worker has left (or left and rejoined)
+    /// since — its slot state belongs to a different incarnation.
+    Release { worker: usize, gen: u64 },
     /// A queued job's absolute deadline passes before it was served.
     QueueExpiry { job: u64 },
     /// A served job's deadline window closes: evaluate success, free state.
     Resolve { job: u64 },
+    /// The worker is preempted: it leaves the fleet, abandoning any
+    /// in-flight assignment (the job continues on the survivors).
+    WorkerLeave { worker: usize },
+    /// A replacement instance for the worker slot comes up.
+    WorkerJoin { worker: usize },
 }
 
 /// A scheduled event.
@@ -99,7 +115,7 @@ mod tests {
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(3.0, EventKind::Arrival);
-        q.push(1.0, EventKind::Release { worker: 0 });
+        q.push(1.0, EventKind::Release { worker: 0, gen: 0 });
         q.push(2.0, EventKind::Resolve { job: 1 });
         let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
         assert_eq!(times, vec![1.0, 2.0, 3.0]);
@@ -108,14 +124,36 @@ mod tests {
     #[test]
     fn ties_fire_in_insertion_order() {
         let mut q = EventQueue::new();
-        q.push(1.0, EventKind::Release { worker: 7 });
-        q.push(1.0, EventKind::Release { worker: 8 });
+        q.push(1.0, EventKind::Release { worker: 7, gen: 0 });
+        q.push(1.0, EventKind::Release { worker: 8, gen: 0 });
         q.push(1.0, EventKind::Resolve { job: 3 });
         assert_eq!(q.len(), 3);
-        assert_eq!(q.pop().unwrap().kind, EventKind::Release { worker: 7 });
-        assert_eq!(q.pop().unwrap().kind, EventKind::Release { worker: 8 });
+        assert_eq!(
+            q.pop().unwrap().kind,
+            EventKind::Release { worker: 7, gen: 0 }
+        );
+        assert_eq!(
+            q.pop().unwrap().kind,
+            EventKind::Release { worker: 8, gen: 0 }
+        );
         assert_eq!(q.pop().unwrap().kind, EventKind::Resolve { job: 3 });
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn churn_events_obey_the_same_tie_break() {
+        // A leave scheduled before a same-instant release must fire first —
+        // the engine relies on this to invalidate the release via `gen`.
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::WorkerLeave { worker: 3 });
+        q.push(2.0, EventKind::Release { worker: 3, gen: 5 });
+        q.push(2.0, EventKind::WorkerJoin { worker: 3 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::WorkerLeave { worker: 3 });
+        assert_eq!(
+            q.pop().unwrap().kind,
+            EventKind::Release { worker: 3, gen: 5 }
+        );
+        assert_eq!(q.pop().unwrap().kind, EventKind::WorkerJoin { worker: 3 });
     }
 
     #[test]

@@ -67,7 +67,12 @@ pub(crate) struct Service {
     /// beyond the window; such workers are released at the window's end).
     pub finish: Vec<f64>,
     /// Whether each participant delivered all results inside the window.
+    /// Cleared for participants preempted before finishing (see `lost`).
     pub completed: Vec<bool>,
+    /// Whether each participant was preempted before delivering: its results
+    /// never arrive (`completed` is forced false) and its state is censored
+    /// at the observation phase — the master saw no completion time.
+    pub lost: Vec<bool>,
     /// `service start + d_eff` — when the round is evaluated.
     pub window_end: f64,
 }

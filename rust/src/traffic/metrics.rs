@@ -34,6 +34,17 @@ pub struct TrafficMetrics {
     pub horizon: f64,
     /// Peak admission-queue depth.
     pub queue_max: usize,
+    /// Worker departures (spot preemptions) over the run.
+    pub leaves: u64,
+    /// Worker rejoins (replacement instances coming up).
+    pub joins: u64,
+    /// Departures that abandoned an in-flight assignment.
+    pub preemptions: u64,
+    /// Evaluations lost to those abandoned assignments (work the survivors
+    /// must do without — the churn grid's waste metric).
+    pub work_lost: u64,
+    /// Minimum live-fleet size observed at any event.
+    pub live_min: usize,
     latency_mean: Welford,
     latency_p50: P2Quantile,
     latency_p95: P2Quantile,
@@ -42,6 +53,8 @@ pub struct TrafficMetrics {
     est_success: Welford,
     /// ∫ queue-depth dt, for the time-averaged backlog.
     queue_area: f64,
+    /// ∫ live-worker-count dt, for the time-averaged fleet size.
+    live_area: f64,
     last_time: f64,
 }
 
@@ -60,6 +73,11 @@ impl Default for TrafficMetrics {
             plan_probe_misses: 0,
             horizon: 0.0,
             queue_max: 0,
+            leaves: 0,
+            joins: 0,
+            preemptions: 0,
+            work_lost: 0,
+            live_min: usize::MAX,
             latency_mean: Welford::default(),
             latency_p50: P2Quantile::new(0.50),
             latency_p95: P2Quantile::new(0.95),
@@ -67,6 +85,7 @@ impl Default for TrafficMetrics {
             wait_mean: Welford::default(),
             est_success: Welford::default(),
             queue_area: 0.0,
+            live_area: 0.0,
             last_time: 0.0,
         }
     }
@@ -77,15 +96,33 @@ impl TrafficMetrics {
         TrafficMetrics::default()
     }
 
-    /// Advance the queue-depth integral to `now` with the depth that held
-    /// since the previous event. Call BEFORE mutating the queue.
-    pub(crate) fn tick(&mut self, depth: usize, now: f64) {
+    /// Advance the queue-depth and live-fleet integrals to `now` with the
+    /// values that held since the previous event. Call BEFORE mutating
+    /// either the queue or the live set.
+    pub(crate) fn tick(&mut self, depth: usize, live: usize, now: f64) {
         debug_assert!(now >= self.last_time - 1e-9);
         self.events += 1;
-        self.queue_area += depth as f64 * (now - self.last_time).max(0.0);
+        let dt = (now - self.last_time).max(0.0);
+        self.queue_area += depth as f64 * dt;
+        self.live_area += live as f64 * dt;
         self.queue_max = self.queue_max.max(depth);
+        self.live_min = self.live_min.min(live);
         self.last_time = now;
         self.horizon = self.horizon.max(now);
+    }
+
+    pub(crate) fn on_leave(&mut self) {
+        self.leaves += 1;
+    }
+
+    pub(crate) fn on_join(&mut self) {
+        self.joins += 1;
+    }
+
+    /// A departure abandoned an in-flight assignment of `load` evaluations.
+    pub(crate) fn on_preemption(&mut self, load: usize) {
+        self.preemptions += 1;
+        self.work_lost += load as u64;
     }
 
     pub(crate) fn on_arrival(&mut self) {
@@ -198,6 +235,25 @@ impl TrafficMetrics {
         }
     }
 
+    /// Time-averaged live-fleet size (= n when churn is disabled).
+    pub fn mean_live_workers(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.live_area / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Minimum live-fleet size seen (n when churn is disabled; 0 before any
+    /// event fired).
+    pub fn min_live_workers(&self) -> usize {
+        if self.live_min == usize::MAX {
+            0
+        } else {
+            self.live_min
+        }
+    }
+
     /// Serialize every reported figure (deterministic key order via the
     /// JSON object's BTreeMap; NaN percentiles — no completions — become 0).
     pub fn to_json(&self) -> Json {
@@ -229,6 +285,15 @@ impl TrafficMetrics {
             ("mean_wait", num(self.mean_wait())),
             ("mean_queue_depth", num(self.mean_queue_depth())),
             ("queue_max", Json::num(self.queue_max as f64)),
+            ("leaves", Json::num(self.leaves as f64)),
+            ("joins", Json::num(self.joins as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("work_lost", Json::num(self.work_lost as f64)),
+            ("mean_live_workers", num(self.mean_live_workers())),
+            (
+                "min_live_workers",
+                Json::num(self.min_live_workers() as f64),
+            ),
             ("plan_probe_hits", Json::num(self.plan_probe_hits as f64)),
             (
                 "plan_probe_misses",
@@ -253,14 +318,43 @@ mod tests {
 
     #[test]
     fn queue_integral_is_time_weighted() {
+        // tick(depth, live, now) is called BEFORE the event mutates state,
+        // so the passed values are the ones that HELD since the previous
+        // event — integrate them over (last_time, now].
         let mut m = TrafficMetrics::new();
-        m.tick(0, 0.0);
-        m.tick(2, 1.0); // depth 0 held over [0,1)
-        m.tick(1, 3.0); // depth 2 held over [1,3)
-        m.tick(0, 4.0); // depth 1 held over [3,4)
+        m.tick(0, 15, 0.0);
+        m.tick(2, 15, 1.0); // depth 2 held over [0,1)
+        m.tick(1, 15, 3.0); // depth 1 held over [1,3)
+        m.tick(3, 15, 4.0); // depth 3 held over [3,4)
         assert_eq!(m.events, 4);
-        assert_eq!(m.queue_max, 2);
-        assert!((m.mean_queue_depth() - 5.0 / 4.0).abs() < 1e-12);
+        assert_eq!(m.queue_max, 3);
+        assert!((m.mean_queue_depth() - 7.0 / 4.0).abs() < 1e-12);
+        // Constant fleet: the live integral is flat at n.
+        assert!((m.mean_live_workers() - 15.0).abs() < 1e-12);
+        assert_eq!(m.min_live_workers(), 15);
+    }
+
+    #[test]
+    fn live_integral_tracks_churn() {
+        // Same pre-event convention as the queue integral: the live count
+        // passed at time t held since the previous event.
+        let mut m = TrafficMetrics::new();
+        m.tick(0, 10, 0.0);
+        m.tick(0, 10, 2.0); // 10 live held over [0,2); this event: 2 leaves
+        m.on_leave();
+        m.on_leave();
+        m.tick(0, 8, 4.0); // 8 live held over [2,4); this event: 2 joins
+        m.on_join();
+        m.on_join();
+        assert!((m.mean_live_workers() - 9.0).abs() < 1e-12);
+        assert_eq!(m.min_live_workers(), 8);
+        assert_eq!((m.leaves, m.joins), (2, 2));
+        m.on_preemption(7);
+        m.on_preemption(3);
+        assert_eq!((m.preemptions, m.work_lost), (2, 10));
+        let j = m.to_json();
+        assert_eq!(j.get("work_lost").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("mean_live_workers").unwrap().as_f64(), Some(9.0));
     }
 
     #[test]

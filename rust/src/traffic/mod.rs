@@ -11,15 +11,22 @@
 //! - [`job`] — job classes (deadline + geometry mix) and in-flight state.
 //! - [`admission`] — pluggable admission/scheduling policies (admit-all,
 //!   EDF-with-feasibility-check, drop-if-infeasible) that make timely
-//!   throughput and goodput diverge.
+//!   throughput and goodput diverge; feasibility is checked against the
+//!   LIVE fleet, which under churn is smaller than the nominal n.
 //! - [`engine`] — the simulation loop: per-job EA allocation over the idle
-//!   worker subset through the shared [`crate::scheduler::strategy::Strategy`],
-//!   worker state processes advanced by true elapsed virtual time.
-//! - [`metrics`] — deadline-miss rate, goodput, queue depth, and p50/p95/p99
-//!   latency via the O(1)-memory P² sketch.
+//!   live-worker subset through the shared
+//!   [`crate::scheduler::strategy::Strategy`], worker state processes
+//!   advanced by true elapsed virtual time, and the elastic-fleet
+//!   lifecycle (`WorkerLeave`/`WorkerJoin` driven by
+//!   [`crate::sim::churn::ChurnModel`]): preemptions abandon in-flight
+//!   assignments, rejoining slots come up as fresh instances.
+//! - [`metrics`] — deadline-miss rate, goodput, queue depth, churn
+//!   accounting (leaves/joins, work lost to preemption, live-fleet
+//!   integral), and p50/p95/p99 latency via the O(1)-memory P² sketch.
 //!
-//! The parallel scenario-grid harness lives in [`crate::experiments::traffic`]
-//! (`lea traffic` on the CLI).
+//! The parallel scenario-grid harnesses live in
+//! [`crate::experiments::traffic`] (`lea traffic`) and
+//! [`crate::experiments::churn`] (`lea churn`).
 
 pub mod admission;
 pub mod engine;
@@ -27,6 +34,7 @@ pub mod event;
 pub mod job;
 pub mod metrics;
 
+pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
 pub use engine::{run_traffic, DeadlineFrom, TrafficConfig};
 pub use job::{JobClass, JobFate};

@@ -1,0 +1,130 @@
+//! Determinism golden suite: the byte-identity guarantees the grid dumps
+//! advertise, pinned as tests.
+//!
+//! Three layers, each load-bearing:
+//! 1. the event queue's `(time, seq)` tie-break — simultaneous events fire
+//!    in scheduling order (releases before resolves, leaves before the
+//!    releases they invalidate); unit-pinned in `traffic::event`, exercised
+//!    end-to-end by every byte-comparison below;
+//! 2. one engine run is a pure function of (config, seed) — wall clock
+//!    never enters;
+//! 3. the parallel grid runners produce byte-identical JSON at 1 vs N
+//!    threads and across reruns, for both `lea traffic` and `lea churn`.
+//!
+//! CI runs this suite under `--release` too: optimized float codegen must
+//! not change the bytes either.
+
+use timely_coded::experiments::churn::{self, ChurnGridSpec};
+use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
+use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::churn::ChurnModel;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+
+/// Layer 2: the engine itself (with and without churn) is seed-pure.
+#[test]
+fn engine_run_is_a_pure_function_of_config_and_seed() {
+    for churn in [ChurnModel::none(), ChurnModel::spot(0.25, 2.0)] {
+        let run_once = || {
+            let scenario = fig3_scenarios()[0];
+            let mut cluster =
+                SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 55);
+            let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Reset);
+            let cfg = TrafficConfig::single_class(
+                400,
+                Arrivals::poisson(0.8),
+                1.0,
+                fig3_geometry(),
+                Policy::EdfFeasible,
+            )
+            .with_churn(churn);
+            run_traffic(&mut lea, &mut cluster, &cfg, 55)
+                .to_json()
+                .to_string()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a, b, "engine not seed-pure (churn {:?})", churn.leave_rate);
+    }
+}
+
+/// Layer 3a: the `lea traffic` grid, run twice and at 1 vs N threads.
+#[test]
+fn traffic_grid_dump_is_byte_identical_twice_and_across_threads() {
+    let spec = GridSpec::preset("small", 150, 911).expect("preset");
+    let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+    let serial_again = to_json(&spec, &run_grid(&spec, 1)).to_string();
+    let threaded = to_json(&spec, &run_grid(&spec, 6)).to_string();
+    assert_eq!(serial, serial_again, "rerun changed the traffic dump");
+    assert_eq!(serial, threaded, "thread count changed the traffic dump");
+}
+
+/// Layer 3b: the `lea churn` acceptance grid — ≥ 12 cells of churn-rate ×
+/// rejoin-policy × admission-policy, byte-identical across reruns and
+/// thread counts, and actually exercising churn (leaves occur).
+#[test]
+fn churn_grid_dump_is_byte_identical_twice_and_across_threads() {
+    let spec = ChurnGridSpec::preset("small", 150, 912).expect("preset");
+    assert!(spec.cells().len() >= 12, "acceptance grid too small");
+    let serial_rows = churn::run_grid(&spec, 1);
+    let serial = churn::to_json(&spec, &serial_rows).to_string();
+    let serial_again = churn::to_json(&spec, &churn::run_grid(&spec, 1)).to_string();
+    let threaded = churn::to_json(&spec, &churn::run_grid(&spec, 5)).to_string();
+    assert_eq!(serial, serial_again, "rerun changed the churn dump");
+    assert_eq!(serial, threaded, "thread count changed the churn dump");
+    // The grid exercises real churn, not just the zero row.
+    assert!(serial_rows.iter().any(|r| r.metrics.leaves > 0));
+    // And a different seed actually changes the data.
+    let spec2 = ChurnGridSpec::preset("small", 150, 913).expect("preset");
+    let other = churn::to_json(&spec2, &churn::run_grid(&spec2, 5)).to_string();
+    assert_ne!(serial, other);
+    // Parseable, with the cell coordinates and churn metrics present.
+    let parsed = timely_coded::util::json::Json::parse(&serial).expect("valid json");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 12);
+    for c in cells {
+        assert!(c.get("churn_rate").is_some());
+        assert!(c.get("rejoin").is_some());
+        assert!(c.get("policy").is_some());
+        assert!(c.get("work_lost").is_some());
+        assert!(c.get("mean_live_workers").is_some());
+    }
+}
+
+/// The churn-0 column of the churn grid must reproduce a genuinely
+/// churn-free fixed-fleet run exactly (the acceptance criterion's 1e-9,
+/// achieved as byte-identity): same cell, same seed derivation, but the
+/// engine configured with [`ChurnModel::none`] — the path `lea traffic`
+/// and the runner-equivalence regression exercise — instead of a rate-0
+/// renewal process. Catches any regression where a zero-rate process
+/// starts consuming RNG or perturbing dispatch.
+#[test]
+fn churn_grid_zero_rate_cell_matches_fixed_fleet_run() {
+    let spec = ChurnGridSpec::preset("small", 200, 77).expect("preset");
+    let rows = churn::run_grid(&spec, 2);
+    let mut zero_cells = 0;
+    for row in rows.iter().filter(|r| r.cell.churn_rate == 0.0) {
+        zero_cells += 1;
+        let fixed = churn::run_cell_with_churn(&row.cell, &spec, ChurnModel::none());
+        assert_eq!(
+            row.metrics.to_json().to_string(),
+            fixed.metrics.to_json().to_string(),
+            "cell {}: rate-0 churn diverged from the fixed fleet",
+            row.cell.idx
+        );
+        // Fixed fleet invariants at rate 0.
+        assert_eq!(row.metrics.leaves, 0);
+        assert_eq!(row.metrics.preemptions, 0);
+        assert!(
+            (row.metrics.mean_live_workers() - 15.0).abs() < 1e-9,
+            "live integral {}",
+            row.metrics.mean_live_workers()
+        );
+        assert!(
+            (row.metrics.timely_throughput() - fixed.metrics.timely_throughput()).abs() < 1e-9
+        );
+    }
+    assert_eq!(zero_cells, 4, "small preset has 4 rate-0 cells");
+}

@@ -216,3 +216,64 @@ fn decode_plan_cache_eviction_keeps_results_exact() {
     let _ = code.decode_with_cache(&mut cache, &received, 1).unwrap();
     assert_eq!(cache.hits(), 1);
 }
+
+#[test]
+fn property_plan_cache_invariants_under_random_workload() {
+    // Long random lookup sequences against small caches, checking the three
+    // PlanCache contracts after EVERY operation:
+    //   1. the capacity bound is never exceeded;
+    //   2. a permuted arrival order of an already-cached index set HITS and
+    //      decodes to the same (exact) result;
+    //   3. a key that was evicted decodes identically to a fresh,
+    //      cache-free plan when it comes back.
+    forall(41, 12, |rng: &mut Rng| (gen::size(rng, 1, 5), rng.next_u64()), |&(cap, s)| {
+        let mut rng = Rng::new(s);
+        let code = LagrangeCode::<Fp>::new(4, 14);
+        let data: Vec<Vec<Fp>> = (0..4)
+            .map(|_| (0..3).map(|_| Fp::new(rng.next_u64())).collect())
+            .collect();
+        let enc = code.encode(&data);
+        let mut cache: DecodePlanCache<Fp> = DecodePlanCache::new(cap);
+        ensure(cache.capacity() == cap, "capacity clamped unexpectedly")?;
+
+        // A pool of distinct K*-subsets larger than any cap, so evictions
+        // and re-insertions both occur.
+        let pool: Vec<Vec<usize>> = (0..8).map(|_| rng.sample_indices(14, 4)).collect();
+        let mut hits_expected: u64 = 0;
+        for step in 0..200 {
+            let sub = &pool[(rng.next_u64() % pool.len() as u64) as usize];
+            let mut sorted = sub.clone();
+            sorted.sort_unstable();
+            let was_cached = cache.contains(&sorted);
+            // Random arrival order every time: the canonicalized key must
+            // make permutations indistinguishable.
+            let mut order = sub.clone();
+            rng.shuffle(&mut order);
+            let received: Vec<(usize, Vec<Fp>)> =
+                order.iter().map(|&v| (v, enc[v].clone())).collect();
+            let dec = code.decode_with_cache(&mut cache, &received, 1)?;
+            // Whether served fresh, from cache, or re-built after an
+            // eviction, the decode is the exact data.
+            ensure(
+                dec.to_rows() == data,
+                format!("step {step}: decode diverged (cached={was_cached})"),
+            )?;
+            hits_expected += u64::from(was_cached);
+            ensure(
+                cache.hits() == hits_expected,
+                format!("step {step}: contains() and hit accounting disagree"),
+            )?;
+            ensure(
+                cache.len() <= cache.capacity(),
+                format!("step {step}: capacity bound exceeded: {}", cache.len()),
+            )?;
+        }
+        // With 8 distinct keys cycling through a ≤5-slot cache, evictions
+        // must have occurred — the eviction path was genuinely exercised.
+        ensure(cache.evictions() > 0, "workload never evicted")?;
+        ensure(
+            cache.hits() + cache.misses() == 200,
+            "every lookup is a hit or a miss",
+        )
+    });
+}

@@ -48,6 +48,7 @@ fn single_flight_engine_reproduces_round_runner() {
         policy: Policy::AdmitAll,
         max_in_flight: 1,
         deadline_from: DeadlineFrom::ServiceStart,
+        churn: timely_coded::traffic::ChurnModel::none(),
     };
     let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
 
