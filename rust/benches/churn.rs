@@ -17,8 +17,7 @@ use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(churn: ChurnModel, jobs: u64) -> (f64, u64, u64) {
     let scenario = fig3_scenarios()[0];
-    let mut cluster =
-        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
     let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Carryover);
     let cfg = TrafficConfig::single_class(
         jobs,

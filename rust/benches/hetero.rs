@@ -1,0 +1,141 @@
+//! Heterogeneous-fleet benchmarks: the fleet allocator's three paths
+//! (uniform delegate / exact DFS / heuristic) in ns per allocation, engine
+//! events/s per fleet mix, and the `lea hetero` grid runner's thread
+//! scaling. Figures land in `BENCH_hetero.json` (uploaded by the CI
+//! bench-smoke job and gated by `lea bench-check`); set `BENCH_SMOKE=1` for
+//! a fast validity run.
+
+use std::time::Instant;
+
+use timely_coded::experiments::hetero_grid::{run_grid, FleetMix, HeteroGridSpec};
+use timely_coded::scheduler::allocation::{allocate_fleet_with_scratch, FleetAllocScratch};
+use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
+use timely_coded::scheduler::success::FleetLoadParams;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_scenarios};
+use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::util::bench_kit::{bench, black_box, budget, smoke_mode, table, BenchLog};
+use timely_coded::util::rng::Rng;
+
+fn fleet_for(mix: FleetMix, n: usize, d: f64) -> FleetLoadParams {
+    let rates: Vec<(f64, f64)> = mix.speeds(n).iter().map(|s| (s.mu_g, s.mu_b)).collect();
+    FleetLoadParams::from_rates(fig3_geometry().r, fig3_geometry().kstar(), &rates, d)
+}
+
+fn bench_allocator(log: &mut BenchLog) {
+    let mut rng = Rng::new(17);
+    let mut scratch = FleetAllocScratch::default();
+    let mut ps: Vec<f64> = (0..15).map(|_| rng.f64()).collect();
+    let drift = |ps: &mut [f64], rng: &mut Rng| {
+        for p in ps.iter_mut() {
+            *p = (*p + (rng.f64() - 0.5) * 0.05).clamp(0.0, 1.0);
+        }
+    };
+
+    // Uniform fleet: the Lemma-4.5 delegation path.
+    let uniform = fleet_for(FleetMix::Uniform, 15, 1.0);
+    let (samples, batch) = budget(5, 20_000);
+    let r = bench("alloc_fleet_uniform_delegate_n15", samples, batch, || {
+        drift(&mut ps, &mut rng);
+        black_box(allocate_fleet_with_scratch(&uniform, &ps, &mut scratch));
+    });
+    log.push(&r);
+
+    // Mixed fleet, 10 uncertain workers: the exact shared-prefix DFS.
+    let spread15 = fleet_for(FleetMix::Spread, 15, 1.0);
+    let exact10 = spread15.subset(&[0, 1, 3, 5, 7, 9, 10, 11, 13, 14]);
+    assert!(exact10.as_uniform().is_none());
+    let mut ps10: Vec<f64> = (0..10).map(|_| rng.f64()).collect();
+    let (samples, batch) = budget(5, 500);
+    let r = bench("alloc_fleet_exact_n10", samples, batch, || {
+        drift(&mut ps10, &mut rng);
+        black_box(allocate_fleet_with_scratch(&exact10, &ps10, &mut scratch));
+    });
+    log.push(&r);
+
+    // Mixed fleet, 15 uncertain workers: the prefix + local-search heuristic.
+    let (samples, batch) = budget(5, 1_000);
+    let r = bench("alloc_fleet_heuristic_n15", samples, batch, || {
+        drift(&mut ps, &mut rng);
+        black_box(allocate_fleet_with_scratch(&spread15, &ps, &mut scratch));
+    });
+    log.push(&r);
+}
+
+fn engine_events_per_sec(mix: FleetMix, jobs: u64) -> (f64, u64) {
+    let geo = fig3_geometry();
+    let scenario = fig3_scenarios()[0];
+    let profile = mix.speeds(geo.n);
+    let mut cluster = SimCluster::markov_fleet(&vec![scenario.chain(); geo.n], &profile, 99);
+    let rates: Vec<(f64, f64)> = profile.iter().map(|s| (s.mu_g, s.mu_b)).collect();
+    let fleet = FleetLoadParams::from_rates(geo.r, geo.kstar(), &rates, 1.0);
+    let mut lea = Lea::for_fleet(fleet, RejoinPolicy::Carryover);
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(0.8),
+        1.0,
+        geo,
+        Policy::EdfFeasible,
+    );
+    let t0 = Instant::now();
+    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let secs = t0.elapsed().as_secs_f64();
+    (m.events as f64 / secs, m.events)
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+
+    bench_allocator(&mut log);
+
+    // ---- engine throughput per fleet mix ----
+    let jobs: u64 = if smoke_mode() { 2_000 } else { 20_000 };
+    let mut rows = Vec::new();
+    for mix in [FleetMix::Uniform, FleetMix::Dual, FleetMix::Spread] {
+        let (eps, events) = engine_events_per_sec(mix, jobs);
+        println!(
+            "bench hetero_engine mix={:<9} {events:>9} events  {eps:>12.0} events/s",
+            mix.name()
+        );
+        log.note(&format!("events_per_sec_{}", mix.name()), eps);
+        rows.push((format!("mix={}", mix.name()), vec![events as f64, eps]));
+    }
+    table(
+        &format!("Hetero engine ({}k jobs, scenario-1 chains)", jobs / 1000),
+        &["events", "events/s"],
+        &rows,
+    );
+
+    // ---- hetero-grid thread scaling ----
+    let grid_jobs = if smoke_mode() { 200 } else { 2000 };
+    let threads_list: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut scale_rows = Vec::new();
+    for &threads in threads_list {
+        let spec = HeteroGridSpec::preset("small", grid_jobs, 5).expect("preset");
+        let t0 = Instant::now();
+        let rows = run_grid(&spec, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+        println!(
+            "bench hetero_grid threads={threads:<2} {events:>9} events  {secs:>8.2}s  \
+             {:>12.0} events/s",
+            events as f64 / secs
+        );
+        log.note(
+            &format!("grid_events_per_sec_threads{threads}"),
+            events as f64 / secs,
+        );
+        scale_rows.push((
+            format!("threads={threads}"),
+            vec![secs, events as f64 / secs],
+        ));
+    }
+    table(
+        &format!("Hetero grid scaling (12 cells x {grid_jobs} jobs)"),
+        &["wall s", "events/s"],
+        &scale_rows,
+    );
+
+    log.write("BENCH_hetero.json");
+}

@@ -16,8 +16,7 @@ use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
     let scenario = fig3_scenarios()[0];
-    let mut cluster =
-        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
     let mut lea = Lea::new(fig3_load_params());
     let cfg = TrafficConfig::single_class(
         jobs,

@@ -176,8 +176,8 @@ impl CodeField for f64 {
         (0..nr)
             .map(|v| {
                 let j = (v * s) % nr;
-                (k as f64 - 1.0) / 2.0
-                    * (1.0 - (std::f64::consts::PI * (2.0 * j as f64 + 1.0) / (2.0 * nr as f64)).cos())
+                let theta = std::f64::consts::PI * (2.0 * j as f64 + 1.0) / (2.0 * nr as f64);
+                (k as f64 - 1.0) / 2.0 * (1.0 - theta.cos())
             })
             .collect()
     }

@@ -78,11 +78,7 @@ impl RepetitionCode {
             let row = src[j].ok_or_else(|| format!("no copy of chunk {j} received"))?;
             data.extend_from_slice(payloads.row(row));
         }
-        Ok(crate::util::matrix::Mat::from_vec(
-            self.k,
-            payloads.cols,
-            data,
-        ))
+        Ok(crate::util::matrix::Mat::from_vec(self.k, payloads.cols, data))
     }
 
     /// Recover data evaluations from results: any copy of each chunk works

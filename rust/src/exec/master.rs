@@ -424,7 +424,8 @@ impl CodedMaster {
                 if alloc.loads[r.worker] == 0 {
                     None
                 } else {
-                    let inferred = infer_state(alloc.loads[r.worker], r.finish_virtual, &self.speeds);
+                    let inferred =
+                        infer_state(alloc.loads[r.worker], r.finish_virtual, &self.speeds);
                     debug_assert_eq!(inferred, r.state, "timing must reveal the true state");
                     Some(inferred)
                 }

@@ -157,7 +157,7 @@ pub fn run_cell_with_churn(cell: &ChurnCell, spec: &ChurnGridSpec, churn: ChurnM
 }
 
 /// Run the whole grid across `threads` OS threads (work-stealing via the
-/// shared [`super::fan_out`] runner). Results come back in canonical cell
+/// shared `super::fan_out` runner). Results come back in canonical cell
 /// order whatever the interleaving, so the output is deterministic.
 pub fn run_grid(spec: &ChurnGridSpec, threads: usize) -> Vec<ChurnRow> {
     let cells = spec.cells();

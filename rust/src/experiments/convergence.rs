@@ -8,7 +8,9 @@ use crate::scheduler::lea::Lea;
 use crate::scheduler::oracle::Oracle;
 use crate::scheduler::strategy::Strategy;
 use crate::sim::metrics::ThroughputMeter;
-use crate::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scheme, Fig3Scenario, FIG3_DEADLINE};
+use crate::sim::scenarios::{
+    fig3_cluster, fig3_load_params, fig3_scheme, Fig3Scenario, FIG3_DEADLINE,
+};
 use crate::util::rng::Rng;
 
 /// Convergence study output.

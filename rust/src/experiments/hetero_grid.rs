@@ -1,0 +1,367 @@
+//! Heterogeneous-fleet scenario grid (`lea hetero`): fleet mix × deadline ×
+//! admission policy over the traffic engine.
+//!
+//! Where `lea traffic` and `lea churn` run the paper's homogeneous fleet,
+//! every cell here builds a cluster whose workers mix instance types
+//! ([`FleetMix`]), derives per-worker ℓ_g(i)/ℓ_b(i) from each worker's own
+//! speeds ([`FleetLoadParams`]), and runs the heterogeneity-aware EA
+//! allocation end-to-end. The `uniform` mix row doubles as a regression
+//! anchor: it takes the Lemma-4.5 delegation path, so its cells behave
+//! exactly like a homogeneous fleet.
+//!
+//! Like the other grids, cells fan out across OS threads with per-cell
+//! seeds derived from `(base seed, cell index)`, so the assembled JSON is
+//! byte-identical for a given seed whatever the thread count
+//! (`tests/determinism.rs`).
+
+use super::traffic::cell_seed;
+use crate::markov::chain::TwoState;
+use crate::scheduler::lea::{Lea, RejoinPolicy};
+use crate::scheduler::success::FleetLoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::{SimCluster, Speeds};
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios};
+use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// Offset applied to the base seed so hetero cells never share a stream
+/// with the `lea traffic`/`lea churn` grids at the same index.
+const HETERO_SEED_SALT: u64 = 0x6865_7465_726f; // "hetero"
+
+/// Named fleet compositions: what mix of instance types the n slots hold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetMix {
+    /// All workers at the Fig.-3 speeds (10, 3) — the homogeneous anchor.
+    Uniform,
+    /// Roughly half fast (10, 3), half slow (6, 2) — two instance types.
+    Dual,
+    /// μ_g spread linearly over [6, 14] (ℓ_g capped by r), μ_b over [2, 4].
+    Spread,
+    /// Mostly fast with a few crawling stragglers (3, 0.5).
+    Outliers,
+}
+
+impl FleetMix {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetMix::Uniform => "uniform",
+            FleetMix::Dual => "dual",
+            FleetMix::Spread => "spread",
+            FleetMix::Outliers => "outliers",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FleetMix, String> {
+        match s {
+            "uniform" => Ok(FleetMix::Uniform),
+            "dual" => Ok(FleetMix::Dual),
+            "spread" => Ok(FleetMix::Spread),
+            "outliers" => Ok(FleetMix::Outliers),
+            other => Err(format!(
+                "unknown fleet mix '{other}' (uniform | dual | spread | outliers)"
+            )),
+        }
+    }
+
+    pub fn all() -> [FleetMix; 4] {
+        [
+            FleetMix::Uniform,
+            FleetMix::Dual,
+            FleetMix::Spread,
+            FleetMix::Outliers,
+        ]
+    }
+
+    /// The per-worker speed profile for an n-slot fleet.
+    pub fn speeds(&self, n: usize) -> Vec<Speeds> {
+        let fast = Speeds {
+            mu_g: 10.0,
+            mu_b: 3.0,
+        };
+        match self {
+            FleetMix::Uniform => vec![fast; n],
+            FleetMix::Dual => {
+                let fast_count = n.div_ceil(2);
+                let mut v = vec![fast; fast_count];
+                v.resize(
+                    n,
+                    Speeds {
+                        mu_g: 6.0,
+                        mu_b: 2.0,
+                    },
+                );
+                v
+            }
+            FleetMix::Spread => (0..n)
+                .map(|i| {
+                    let t = i as f64 / (n.max(2) - 1) as f64;
+                    Speeds {
+                        mu_g: 6.0 + 8.0 * t,
+                        mu_b: 2.0 + 2.0 * t,
+                    }
+                })
+                .collect(),
+            FleetMix::Outliers => {
+                // n ≥ 1: between 1 and n/5 stragglers.
+                let slow_count = (n / 5).max(1);
+                let mut v = vec![fast; n - slow_count];
+                v.resize(
+                    n,
+                    Speeds {
+                        mu_g: 3.0,
+                        mu_b: 0.5,
+                    },
+                );
+                v
+            }
+        }
+    }
+}
+
+/// The grid to sweep: fleet mix × per-job deadline × admission policy at a
+/// fixed offered load.
+#[derive(Clone, Debug)]
+pub struct HeteroGridSpec {
+    pub mixes: Vec<FleetMix>,
+    pub deadlines: Vec<f64>,
+    pub policies: Vec<Policy>,
+    /// Offered load, jobs per virtual second (Poisson).
+    pub rate: f64,
+    /// Arrivals simulated per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl HeteroGridSpec {
+    /// Named presets for the CLI: `small` is the 12-cell acceptance grid
+    /// (3 mixes × 2 deadlines × 2 admission policies), `wide` broadens to
+    /// 36 cells with all four mixes and all three policies.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<HeteroGridSpec, String> {
+        let (mixes, deadlines, policies) = match name {
+            "small" => (
+                vec![FleetMix::Uniform, FleetMix::Dual, FleetMix::Spread],
+                vec![1.0, 1.4],
+                vec![Policy::AdmitAll, Policy::EdfFeasible],
+            ),
+            "wide" => (
+                FleetMix::all().to_vec(),
+                vec![0.8, 1.0, 1.4],
+                Policy::all().to_vec(),
+            ),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(HeteroGridSpec {
+            mixes,
+            deadlines,
+            policies,
+            rate: 0.6,
+            jobs,
+            seed,
+        })
+    }
+
+    /// Cells in canonical order (mix-major, then deadline, then policy) —
+    /// the order of the JSON dump.
+    pub fn cells(&self) -> Vec<HeteroCell> {
+        let mut out = Vec::new();
+        for &mix in &self.mixes {
+            for &deadline in &self.deadlines {
+                for &policy in &self.policies {
+                    out.push(HeteroCell {
+                        idx: out.len(),
+                        mix,
+                        deadline,
+                        policy,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (fleet mix, deadline, policy) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct HeteroCell {
+    pub idx: usize,
+    pub mix: FleetMix,
+    pub deadline: f64,
+    pub policy: Policy,
+}
+
+/// A cell plus its measured metrics.
+#[derive(Clone, Debug)]
+pub struct HeteroRow {
+    pub cell: HeteroCell,
+    pub metrics: TrafficMetrics,
+}
+
+/// Run one cell: a Fig.-3 scenario-1 chain on every worker, the cell's
+/// speed profile, a fleet-aware LEA, and the event engine with
+/// arrival-relative deadlines.
+pub fn run_cell(cell: &HeteroCell, spec: &HeteroGridSpec) -> HeteroRow {
+    let seed = cell_seed(spec.seed ^ HETERO_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let scenario = fig3_scenarios()[0];
+    let profile = cell.mix.speeds(geo.n);
+    let chains = vec![scenario.chain(); geo.n];
+    let mut cluster = SimCluster::markov_fleet(&chains, &profile, seed);
+    let rates: Vec<(f64, f64)> = profile.iter().map(|s| (s.mu_g, s.mu_b)).collect();
+    let fleet = FleetLoadParams::from_rates(geo.r, geo.kstar(), &rates, cell.deadline);
+    let mut lea = Lea::for_fleet(fleet, RejoinPolicy::Carryover);
+    let cfg = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(spec.rate),
+        cell.deadline,
+        geo,
+        cell.policy,
+    );
+    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x6865_7421); // "het!"
+    HeteroRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared `super::fan_out` runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
+pub fn run_grid(spec: &HeteroGridSpec, threads: usize) -> Vec<HeteroRow> {
+    let cells = spec.cells();
+    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell).
+pub fn to_json(spec: &HeteroGridSpec, rows: &[HeteroRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("metrics serialize to an object"),
+            };
+            obj.insert("mix".into(), Json::str(r.cell.mix.name()));
+            obj.insert("deadline".into(), Json::num(r.cell.deadline));
+            obj.insert("policy".into(), Json::str(r.cell.policy.name()));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("hetero-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs_per_cell", Json::num(spec.jobs as f64)),
+        ("arrival_rate", Json::num(spec.rate)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns: throughput per fleet mix,
+/// with the shed/miss split that shows where heterogeneity bites.
+pub fn print(rows: &[HeteroRow]) {
+    bench_kit::table(
+        "Hetero grid — Fig.-3 scenario-1 chains, mixed instance types, LEA",
+        &[
+            "d", "timely", "goodput", "miss", "shed", "p95 lat", "mean Q",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
+                (
+                    format!(
+                        "{:<9} {:<16} #{:02}",
+                        r.cell.mix.name(),
+                        r.cell.policy.name(),
+                        r.cell.idx
+                    ),
+                    vec![
+                        r.cell.deadline,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.miss_rate(),
+                        (m.dropped_infeasible + m.expired_in_queue) as f64,
+                        fin(m.latency_p95()),
+                        m.mean_queue_depth(),
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> HeteroGridSpec {
+        HeteroGridSpec {
+            mixes: vec![FleetMix::Uniform, FleetMix::Dual],
+            deadlines: vec![1.0],
+            policies: vec![Policy::EdfFeasible],
+            rate: 0.6,
+            jobs: 120,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = HeteroGridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 12);
+        let wide = HeteroGridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 36);
+        assert!(HeteroGridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn mix_profiles_have_documented_shapes() {
+        for mix in FleetMix::all() {
+            let p = mix.speeds(15);
+            assert_eq!(p.len(), 15);
+            for s in &p {
+                assert!(s.mu_g > s.mu_b && s.mu_b > 0.0);
+            }
+            assert_eq!(FleetMix::parse(mix.name()).unwrap(), mix);
+        }
+        assert!(FleetMix::parse("bogus").is_err());
+        // Uniform is uniform; the others are not.
+        let uni = FleetMix::Uniform.speeds(15);
+        assert!(uni.iter().all(|&s| s == uni[0]));
+        assert!(FleetMix::Dual.speeds(15).iter().any(|&s| s != uni[0]));
+        // Dual splits 8 fast / 7 slow at n = 15.
+        let dual = FleetMix::Dual.speeds(15);
+        assert_eq!(dual.iter().filter(|s| s.mu_g == 10.0).count(), 8);
+        assert_eq!(dual.iter().filter(|s| s.mu_g == 6.0).count(), 7);
+        // Outliers keeps 3 stragglers at n = 15.
+        let out = FleetMix::Outliers.speeds(15);
+        assert_eq!(out.iter().filter(|s| s.mu_g == 3.0).count(), 3);
+        // Spread covers the documented band.
+        let spread = FleetMix::Spread.speeds(15);
+        assert!((spread[0].mu_g - 6.0).abs() < 1e-12);
+        assert!((spread[14].mu_g - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"mix\":\"dual\""));
+        assert!(serial.contains("\"experiment\":\"hetero-grid\""));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order_and_complete_jobs() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 2);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            assert_eq!(r.metrics.arrivals, spec.jobs);
+            assert!(r.metrics.completed > 0, "cell {i} completed nothing");
+        }
+    }
+}

@@ -12,6 +12,8 @@
 //!   the event-driven traffic engine (`lea traffic`).
 //! - [`churn`] — the elastic-fleet grid: churn rate × rejoin policy ×
 //!   admission policy under spot preemption/rejoin (`lea churn`).
+//! - [`hetero_grid`] — the heterogeneous-fleet grid: fleet mix × deadline ×
+//!   admission policy with per-worker speeds (`lea hetero`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
 pub mod churn;
@@ -19,6 +21,7 @@ pub mod convergence;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
+pub mod hetero_grid;
 pub mod heterogeneous;
 pub mod report;
 pub mod sweep;

@@ -29,7 +29,12 @@ pub struct SweepPoint {
 /// Sweep the deadline for a Fig.-3 scenario: shows the crossover from
 /// "nothing helps" (d too small) through the LEA-wins band to "everything
 /// succeeds" (d ≥ K*/(n·μ_b)).
-pub fn deadline_sweep(s: &Fig3Scenario, deadlines: &[f64], rounds: u64, seed: u64) -> Vec<SweepPoint> {
+pub fn deadline_sweep(
+    s: &Fig3Scenario,
+    deadlines: &[f64],
+    rounds: u64,
+    seed: u64,
+) -> Vec<SweepPoint> {
     let geo = fig3_geometry();
     let scheme = CodingScheme::for_geometry(geo);
     let speeds = fig3_speeds();
@@ -171,7 +176,8 @@ pub fn estimator_ablation(s: &Fig3Scenario, rounds: u64, seed: u64) -> (f64, f64
     let geo = fig3_geometry();
     let scheme = CodingScheme::for_geometry(geo);
     let speeds = fig3_speeds();
-    let params = LoadParams::from_rates(geo.n, geo.r, scheme.kstar(), speeds.mu_g, speeds.mu_b, 1.0);
+    let params =
+        LoadParams::from_rates(geo.n, geo.r, scheme.kstar(), speeds.mu_g, speeds.mu_b, 1.0);
     let cfg = RunConfig::simple(rounds, 1.0);
 
     let mut lea = Lea::new(params);

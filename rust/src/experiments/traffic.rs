@@ -35,10 +35,7 @@ impl GridSpec {
     pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<GridSpec, String> {
         let (rates, deadlines) = match name {
             "small" => (vec![0.5, 0.9, 1.3, 2.0], vec![0.8, 1.0]),
-            "wide" => (
-                vec![0.25, 0.5, 0.9, 1.3, 2.0, 4.0],
-                vec![0.8, 1.0, 1.4],
-            ),
+            "wide" => (vec![0.25, 0.5, 0.9, 1.3, 2.0, 4.0], vec![0.8, 1.0, 1.4]),
             other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
         };
         Ok(GridSpec {
@@ -102,12 +99,7 @@ pub(crate) fn cell_seed(base: u64, idx: usize) -> u64 {
 pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
     let seed = cell_seed(base_seed, cell.idx);
     let scenario = fig3_scenarios()[0];
-    let mut cluster = SimCluster::markov(
-        fig3_geometry().n,
-        scenario.chain(),
-        fig3_speeds(),
-        seed,
-    );
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
     let geo = fig3_geometry();
     let params = LoadParams::from_rates(
         geo.n,
@@ -133,7 +125,7 @@ pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
 }
 
 /// Run the whole grid across `threads` OS threads (work-stealing via the
-/// shared [`super::fan_out`] runner). Results come back in canonical cell
+/// shared `super::fan_out` runner). Results come back in canonical cell
 /// order whatever the interleaving, so the output is deterministic.
 pub fn run_grid(spec: &GridSpec, threads: usize) -> Vec<GridRow> {
     let cells = spec.cells();

@@ -13,20 +13,26 @@
 //!                 [--jobs N] [--seed S] [--dump grid.json]
 //! lea churn       [--grid small|wide] [--threads T]        elastic-fleet grid
 //!                 [--jobs N] [--seed S] [--dump churn.json]
+//! lea hetero      [--grid small|wide] [--threads T]        heterogeneous-fleet grid
+//!                 [--jobs N] [--seed S] [--dump hetero.json] [--study]
+//! lea bench-check [--baseline DIR] [--fresh DIR]           bench-regression gate
+//!                 [--tolerance X] [--names a,b,...]
 //! lea report      [--out report.json] [--fast]             everything + JSON
 //! ```
 
 use timely_coded::exec::driver::{run_e2e, E2eConfig};
 use timely_coded::exec::master::Engine;
 use timely_coded::experiments::churn::ChurnGridSpec;
+use timely_coded::experiments::hetero_grid::HeteroGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
 use timely_coded::experiments::{
-    churn, convergence, fig1, fig3, fig4, heterogeneous, report, sweep, traffic,
+    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, sweep, traffic,
 };
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
 use timely_coded::scheduler::success::LoadParams;
 use timely_coded::sim::scenarios::fig3_scenarios;
+use timely_coded::util::bench_check;
 use timely_coded::util::cli::Args;
 
 fn main() {
@@ -167,11 +173,51 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
             }
         }
         "hetero" => {
-            let res = heterogeneous::run_study(
-                args.u64("rounds", 30_000)?,
+            if args.flag("study") {
+                // The pre-fleet heterogeneous-chain study (π_g,i spectrum).
+                let res =
+                    heterogeneous::run_study(args.u64("rounds", 30_000)?, args.u64("seed", 2024)?);
+                heterogeneous::print(&res);
+                return Ok(());
+            }
+            let spec = HeteroGridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
                 args.u64("seed", 2024)?,
+            )?;
+            let default_threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4);
+            let threads = args.usize("threads", default_threads)?;
+            let cells = spec.cells().len();
+            let t0 = std::time::Instant::now();
+            let rows = hetero_grid::run_grid(&spec, threads);
+            hetero_grid::print(&rows);
+            let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "\n{cells} cells x {} jobs on {threads} threads: {events} events in {secs:.2}s \
+                 ({:.0} events/s)",
+                spec.jobs,
+                events as f64 / secs.max(1e-9)
             );
-            heterogeneous::print(&res);
+            if let Some(path) = args.get("dump") {
+                let j = hetero_grid::to_json(&spec, &rows);
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
+        "bench-check" => {
+            let baseline_dir = args.get_or("baseline", "ci/bench-baselines");
+            let fresh_dir = args.get_or("fresh", ".");
+            let tolerance = args.f64("tolerance", 4.0)?;
+            let names_raw = args.get_or("names", "coding,traffic,churn,hetero");
+            let names: Vec<&str> = names_raw.split(',').filter(|s| !s.is_empty()).collect();
+            let checks = bench_check::check_dirs(baseline_dir, fresh_dir, &names, tolerance)?;
+            bench_check::print_report(&checks);
+            if !bench_check::passed(&checks) {
+                return Err("bench-check: regression gate failed (see above)".into());
+            }
         }
         "traffic" => {
             let spec = GridSpec::preset(
@@ -263,7 +309,17 @@ SUBCOMMANDS
   fig4         §6.2 EC2 analog: LEA vs static-equal, 6 scenarios
   convergence  Theorem 5.1: R_LEA -> R* series + estimator error
   sweep        deadline sweep (crossovers; --scenario 1..4)
-  hetero       heterogeneous-worker study (π_g,i spectrum; LEA vs all)
+  hetero       heterogeneous-FLEET grid: per-worker speed profiles (mixed
+               instance types) with heterogeneity-aware EA allocation —
+               fleet-mix (uniform|dual|spread|outliers) x deadline x
+               admission-policy cells, thread-fanned
+               (--grid small|wide [12|36 cells], --threads T, --jobs N,
+                --seed S, --dump hetero.json; same seed => byte-identical;
+                --study runs the pre-fleet π_g,i-spectrum chain study)
+  bench-check  compare fresh BENCH_*.json smoke artifacts against the
+               committed baselines in ci/bench-baselines — the CI
+               bench-regression gate (--baseline DIR, --fresh DIR,
+               --tolerance X [default 4.0], --names coding,traffic,...)
   e2e          real PJRT master/worker coded gradient descent
                (--rounds N, --native, --strategy lea|static)
   traffic      event-driven multi-job traffic grid, run in parallel across

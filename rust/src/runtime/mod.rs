@@ -1,7 +1,8 @@
 //! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
 //!
 //! - [`artifacts`] — manifest parsing + artifact discovery.
-//! - [`client`] — `xla` crate wrapper: HLO text → compiled executable → typed
+//! - `client` (behind the `pjrt` feature, so not linkable from a default
+//!   docs build) — `xla` crate wrapper: HLO text → compiled executable → typed
 //!   f32 execution. One compiled executable per model entry point; python is
 //!   never on this path.
 

@@ -4,8 +4,20 @@
 //! Given per-worker good-state probabilities, sort descending (Lemma 4.5),
 //! pick i* by the linear prefix search, assign ℓ_g to the top-i* workers and
 //! ℓ_b to the rest.
+//!
+//! **Heterogeneous fleets** ([`allocate_fleet`]): with per-worker loads
+//! ℓ_g(i)/ℓ_b(i) the optimal ℓ_g-set is no longer a prefix of any single
+//! probability ordering (Lemma 4.5's exchange argument needs equal loads),
+//! so the search generalizes: an exact shared-prefix DFS over the ℓ_g-set
+//! lattice when few enough workers are "uncertain" (ℓ_g(i) > ℓ_b(i)), and a
+//! multi-ordering prefix scan plus bounded local search beyond that. The
+//! homogeneous special case delegates to [`allocate_with_scratch`]
+//! bit-for-bit. See EXPERIMENTS.md §Heterogeneity.
 
-use super::success::{best_prefix_scratch, poisson_binomial_tail, LoadParams, PrefixScratch};
+use super::success::{
+    best_prefix_scratch, fleet_success_probability, poisson_binomial_tail, FleetDp,
+    FleetLoadParams, LoadParams, PrefixScratch,
+};
 
 /// A concrete per-worker load assignment for one round.
 #[derive(Clone, Debug, PartialEq)]
@@ -113,6 +125,356 @@ pub fn allocate_with_scratch(
         i_star,
         est_success: prob,
     }
+}
+
+/// Cutoff for the exact heterogeneous search: with at most this many
+/// *uncertain* workers (ℓ_g(i) > ℓ_b(i)) the allocator enumerates every
+/// ℓ_g-set through a shared-prefix DFS (≤ 2^12 censored-DP extensions) and
+/// is provably optimal; beyond it the multi-ordering prefix + local-search
+/// heuristic takes over (worst observed gap ~0.02 on realistic fleet mixes
+/// at n = 15 — EXPERIMENTS.md §Heterogeneity).
+pub const FLEET_EXACT_MAX_UNCERTAIN: usize = 12;
+
+/// Reusable buffers for [`allocate_fleet_with_scratch`] — one per strategy
+/// instance, recycled every round like [`AllocScratch`].
+#[derive(Clone, Debug, Default)]
+pub struct FleetAllocScratch {
+    /// Delegation target for the homogeneous special case.
+    homog: AllocScratch,
+    /// NaN-cleaned probabilities (NaN → 0, the sort-key convention).
+    ps: Vec<f64>,
+    /// Indices of workers with ℓ_g(i) > ℓ_b(i).
+    uncertain: Vec<usize>,
+    members: Vec<bool>,
+    cand: Vec<bool>,
+    order: Vec<usize>,
+    key: Vec<f64>,
+    dp: FleetDp,
+    /// DFS distribution pool (depth ≤ [`FLEET_EXACT_MAX_UNCERTAIN`]).
+    pool: Vec<Vec<f64>>,
+}
+
+/// EA load assignment over a heterogeneous fleet: maximize the per-worker
+/// success probability ([`fleet_success_probability`]). Homogeneous inputs
+/// delegate to [`allocate`] exactly.
+pub fn allocate_fleet(params: &FleetLoadParams, p_good: &[f64]) -> Allocation {
+    allocate_fleet_with_scratch(params, p_good, &mut FleetAllocScratch::default())
+}
+
+/// [`allocate_fleet`] with caller-owned scratch.
+pub fn allocate_fleet_with_scratch(
+    params: &FleetLoadParams,
+    p_good: &[f64],
+    scratch: &mut FleetAllocScratch,
+) -> Allocation {
+    assert_eq!(p_good.len(), params.n());
+    if let Some(u) = params.as_uniform() {
+        return allocate_with_scratch(&u, p_good, &mut scratch.homog);
+    }
+    let n = params.n();
+    scratch.ps.clear();
+    scratch.ps.extend(p_good.iter().map(|&p| prob_key(p)));
+    scratch.uncertain.clear();
+    scratch
+        .uncertain
+        .extend((0..n).filter(|&i| params.lg[i] > params.lb[i]));
+    scratch.members.clear();
+    scratch.members.resize(n, false);
+
+    let est_success = if scratch.uncertain.len() <= FLEET_EXACT_MAX_UNCERTAIN {
+        fleet_exact_search(
+            params,
+            &scratch.ps,
+            &scratch.uncertain,
+            &mut scratch.members,
+            &mut scratch.pool,
+        )
+    } else {
+        fleet_heuristic_search(
+            params,
+            &scratch.ps,
+            &scratch.uncertain,
+            &mut scratch.members,
+            &mut scratch.cand,
+            &mut scratch.order,
+            &mut scratch.key,
+            &mut scratch.dp,
+        )
+    };
+
+    let loads: Vec<usize> = (0..n)
+        .map(|i| {
+            if scratch.members[i] {
+                params.lg[i]
+            } else {
+                params.lb[i]
+            }
+        })
+        .collect();
+    let i_star = scratch.members.iter().filter(|&&m| m).count();
+    Allocation {
+        loads,
+        i_star,
+        est_success,
+    }
+}
+
+/// Exact search: DFS over subsets of the uncertain workers, extending one
+/// censored DP along include-edges so siblings share their prefix work.
+/// Excluding is explored first and improvements must be strict, so the
+/// winner of an exact tie is the first-visited set — a SUBSET-minimal
+/// choice (no tied superset of it can win), deterministic across runs.
+/// Returns the best probability; `members` gets the set.
+fn fleet_exact_search(
+    params: &FleetLoadParams,
+    ps: &[f64],
+    uncertain: &[usize],
+    members: &mut [bool],
+    pool: &mut Vec<Vec<f64>>,
+) -> f64 {
+    let cap = params.kstar.max(1);
+    // Base load if NO uncertain worker joins the ℓ_g-set: everyone carries
+    // ℓ_b(i), except certain workers (ℓ_g = ℓ_b) whose two loads coincide.
+    let base0: usize = params.lb.iter().sum();
+    let mut best_prob = -1.0;
+    let mut best_mask = 0u32;
+    let mut root = pool.pop().unwrap_or_default();
+    root.clear();
+    root.resize(cap + 1, 0.0);
+    root[0] = 1.0;
+    fleet_exact_rec(
+        params, ps, uncertain, cap, 0, &root, base0, 0, &mut best_prob, &mut best_mask, pool,
+    );
+    pool.push(root);
+    for m in members.iter_mut() {
+        *m = false;
+    }
+    for (k, &i) in uncertain.iter().enumerate() {
+        if best_mask >> k & 1 == 1 {
+            members[i] = true;
+        }
+    }
+    best_prob.max(0.0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fleet_exact_rec(
+    params: &FleetLoadParams,
+    ps: &[f64],
+    uncertain: &[usize],
+    cap: usize,
+    k: usize,
+    dist: &[f64],
+    base: usize,
+    mask: u32,
+    best_prob: &mut f64,
+    best_mask: &mut u32,
+    pool: &mut Vec<Vec<f64>>,
+) {
+    if k == uncertain.len() {
+        let deficit = params.kstar as i64 - base as i64;
+        let prob = if deficit <= 0 {
+            1.0
+        } else {
+            dist[deficit as usize..].iter().sum()
+        };
+        if prob > *best_prob + 1e-15 {
+            *best_prob = prob;
+            *best_mask = mask;
+        }
+        return;
+    }
+    let i = uncertain[k];
+    // Exclude worker i first: smaller sets win exact ties.
+    fleet_exact_rec(
+        params, ps, uncertain, cap, k + 1, dist, base, mask, best_prob, best_mask, pool,
+    );
+    // Include worker i: its ℓ_b leaves the certain base, ℓ_g(i)·Bern(p_i)
+    // joins the DP.
+    let mut nd = pool.pop().unwrap_or_default();
+    nd.clear();
+    nd.resize(cap + 1, 0.0);
+    let v = params.lg[i];
+    let p = ps[i];
+    for (c, &d) in dist.iter().enumerate() {
+        if d != 0.0 {
+            nd[c] += d * (1.0 - p);
+            nd[(c + v).min(cap)] += d * p;
+        }
+    }
+    fleet_exact_rec(
+        params,
+        ps,
+        uncertain,
+        cap,
+        k + 1,
+        &nd,
+        base - params.lb[i],
+        mask | (1 << k),
+        best_prob,
+        best_mask,
+        pool,
+    );
+    pool.push(nd);
+}
+
+/// Number of boundary candidates per side considered by the heuristic's
+/// swap neighborhood.
+const FLEET_SWAP_BOUNDARY: usize = 4;
+/// Local-search improvement rounds before the heuristic settles.
+const FLEET_LOCAL_ROUNDS: usize = 6;
+
+/// Heuristic search for large uncertain sets: prefix scans over several
+/// marginal-contribution orderings seed a bounded best-improvement local
+/// search (single toggles + boundary swaps). Deterministic: orderings,
+/// enumeration order, and strict-improvement thresholds are all fixed.
+#[allow(clippy::too_many_arguments)]
+fn fleet_heuristic_search(
+    params: &FleetLoadParams,
+    ps: &[f64],
+    uncertain: &[usize],
+    members: &mut Vec<bool>,
+    cand: &mut Vec<bool>,
+    order: &mut Vec<usize>,
+    key: &mut Vec<f64>,
+    dp: &mut FleetDp,
+) -> f64 {
+    let n = params.n();
+    let marginal = |i: usize| -> f64 { ps[i] * params.lg[i] as f64 - params.lb[i] as f64 };
+    // Candidate orderings: expected marginal gain, gain over own safe load,
+    // pure reliability, expected ambitious yield.
+    let keys: [&dyn Fn(usize) -> f64; 4] = [
+        &|i| ps[i] * params.lg[i] as f64 - params.lb[i] as f64,
+        &|i| ps[i] * (params.lg[i] - params.lb[i]) as f64,
+        &|i| ps[i],
+        &|i| ps[i] * params.lg[i] as f64,
+    ];
+    let mut best_prob = -1.0f64;
+    let mut best_len = 0usize;
+    let mut best_key = 0usize;
+    for (ki, score) in keys.iter().enumerate() {
+        key.clear();
+        key.resize(n, 0.0);
+        for &i in uncertain {
+            key[i] = score(i);
+        }
+        order.clear();
+        order.extend(uncertain.iter().copied());
+        order.sort_unstable_by(|&a, &b| key[b].total_cmp(&key[a]).then(a.cmp(&b)));
+        // Incremental prefix scan: extend the DP worker by worker.
+        dp.reset(params.kstar);
+        let mut base: usize = params.lb.iter().sum();
+        let mut prob = if params.kstar as i64 - base as i64 <= 0 {
+            1.0
+        } else {
+            0.0
+        };
+        if prob > best_prob + 1e-15 {
+            best_prob = prob;
+            best_len = 0;
+            best_key = ki;
+        }
+        for (len, &i) in order.iter().enumerate() {
+            dp.push(params.lg[i], ps[i]);
+            base -= params.lb[i];
+            prob = dp.tail(params.kstar as i64 - base as i64);
+            if prob > best_prob + 1e-15 {
+                best_prob = prob;
+                best_len = len + 1;
+                best_key = ki;
+            }
+        }
+    }
+    // Materialize the winning prefix.
+    {
+        let score = keys[best_key];
+        key.clear();
+        key.resize(n, 0.0);
+        for &i in uncertain {
+            key[i] = score(i);
+        }
+        order.clear();
+        order.extend(uncertain.iter().copied());
+        order.sort_unstable_by(|&a, &b| key[b].total_cmp(&key[a]).then(a.cmp(&b)));
+    }
+    for m in members.iter_mut() {
+        *m = false;
+    }
+    for &i in order.iter().take(best_len) {
+        members[i] = true;
+    }
+
+    // Bounded best-improvement local search over toggles + boundary swaps.
+    for _ in 0..FLEET_LOCAL_ROUNDS {
+        let mut best_move: Option<Vec<bool>> = None;
+        let mut best_gain = best_prob;
+        // Single toggles of uncertain workers.
+        for &i in uncertain {
+            cand.clear();
+            cand.extend_from_slice(members);
+            cand[i] = !cand[i];
+            let pr = fleet_success_probability(params, ps, cand, dp);
+            if pr > best_gain + 1e-12 {
+                best_gain = pr;
+                best_move = Some(cand.clone());
+            }
+        }
+        // Boundary swaps: weakest members out, strongest non-members in.
+        order.clear();
+        order.extend(uncertain.iter().copied().filter(|&i| members[i]));
+        order.sort_unstable_by(|&a, &b| marginal(a).total_cmp(&marginal(b)).then(a.cmp(&b)));
+        order.truncate(FLEET_SWAP_BOUNDARY);
+        let outs_start = order.len();
+        let mut outs: Vec<usize> = uncertain.iter().copied().filter(|&i| !members[i]).collect();
+        outs.sort_unstable_by(|&a, &b| marginal(b).total_cmp(&marginal(a)).then(a.cmp(&b)));
+        outs.truncate(FLEET_SWAP_BOUNDARY);
+        order.extend(outs);
+        for oi in 0..outs_start {
+            for oj in outs_start..order.len() {
+                cand.clear();
+                cand.extend_from_slice(members);
+                cand[order[oi]] = false;
+                cand[order[oj]] = true;
+                let pr = fleet_success_probability(params, ps, cand, dp);
+                if pr > best_gain + 1e-12 {
+                    best_gain = pr;
+                    best_move = Some(cand.clone());
+                }
+            }
+        }
+        match best_move {
+            Some(m) => {
+                members.clear();
+                members.extend_from_slice(&m);
+                best_prob = best_gain;
+            }
+            None => break,
+        }
+    }
+    best_prob.max(0.0)
+}
+
+/// Success probability of an ARBITRARY per-worker ℓ_g-set `gset` (bitmask)
+/// — the heterogeneous eq. (21) evaluated directly. Test/bench reference.
+pub fn fleet_subset_success(params: &FleetLoadParams, p_good: &[f64], gset: u32) -> f64 {
+    let n = params.n();
+    let members: Vec<bool> = (0..n).map(|i| gset >> i & 1 == 1).collect();
+    fleet_success_probability(params, p_good, &members, &mut FleetDp::default())
+}
+
+/// Exhaustive 2^n search over all per-worker ℓ_g-sets. Only for
+/// tests/benches (n ≤ ~20).
+pub fn fleet_brute_force(params: &FleetLoadParams, p_good: &[f64]) -> (u32, f64) {
+    let n = params.n();
+    assert!(n <= 20, "brute force is exponential");
+    let mut best = (0u32, fleet_subset_success(params, p_good, 0));
+    for gset in 1u32..(1u32 << n) {
+        let p = fleet_subset_success(params, p_good, gset);
+        if p > best.1 + 1e-15 {
+            best = (gset, p);
+        }
+    }
+    best
 }
 
 /// Success probability of an ARBITRARY ℓ_g-set `gset` (bitmask) — the
@@ -283,6 +645,177 @@ mod tests {
             assert_eq!(fresh.order, reference, "round {round}");
             assert_eq!(scratch.order, reference, "round {round} (reused)");
         }
+    }
+
+    /// Random mixed-speed geometry for the fleet-allocator tests.
+    fn random_fleet(rng: &mut Rng, n: usize) -> FleetLoadParams {
+        let r = 2 + rng.below(11) as usize;
+        let rates: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let mu_g = 0.5 + rng.f64() * 11.5;
+                (mu_g, rng.f64() * mu_g)
+            })
+            .collect();
+        let max_tot: usize = rates
+            .iter()
+            .map(|&(g, _)| (g.floor() as usize).min(r))
+            .sum();
+        let kstar = 1 + rng.below(max_tot.max(1) as u64 + 3) as usize;
+        FleetLoadParams::from_rates(r, kstar, &rates, 1.0)
+    }
+
+    #[test]
+    fn fleet_uniform_delegates_bit_for_bit() {
+        // A uniform fleet must take the Lemma-4.5 path EXACTLY: identical
+        // loads, i*, and est_success, including across drifting reused
+        // scratch (the nearly-sorted insertion-sort behavior).
+        let params = params_small();
+        let fleet = FleetLoadParams::uniform(params);
+        let mut rng = Rng::new(41);
+        let mut scratch = FleetAllocScratch::default();
+        let mut homog = AllocScratch::default();
+        let mut p_good: Vec<f64> = (0..8).map(|_| rng.f64()).collect();
+        for round in 0..200 {
+            for p in p_good.iter_mut() {
+                *p = (*p + (rng.f64() - 0.5) * 0.05).clamp(0.0, 1.0);
+            }
+            let got = allocate_fleet_with_scratch(&fleet, &p_good, &mut scratch);
+            let want = allocate_with_scratch(&params, &p_good, &mut homog);
+            assert_eq!(got, want, "round {round}");
+        }
+        // NaN entries flow through the same sort-key convention.
+        let mut with_nan = p_good.clone();
+        with_nan[2] = f64::NAN;
+        assert_eq!(
+            allocate_fleet(&fleet, &with_nan),
+            allocate(&params, &with_nan)
+        );
+    }
+
+    #[test]
+    fn fleet_exact_search_matches_bruteforce() {
+        // The heterogeneous acceptance bar: at small n the allocator's
+        // ℓ_g-set is optimal — est_success equals the 2^n exhaustive
+        // reference on random mixed-speed geometries.
+        let mut rng = Rng::new(42);
+        let mut scratch = FleetAllocScratch::default();
+        for trial in 0..200 {
+            let n = 3 + rng.below(6) as usize; // 3..=8 ⇒ exact path
+            let params = random_fleet(&mut rng, n);
+            if params.as_uniform().is_some() {
+                continue; // uniform draws delegate; covered above
+            }
+            let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let alloc = allocate_fleet_with_scratch(&params, &p_good, &mut scratch);
+            let (_, bf) = fleet_brute_force(&params, &p_good);
+            assert!(
+                (alloc.est_success - bf).abs() < 1e-10,
+                "trial {trial} n={n} K*={}: {} vs {bf}",
+                params.kstar,
+                alloc.est_success
+            );
+            // And the reported probability is consistent with the set the
+            // allocator actually built.
+            let members: Vec<bool> = (0..n)
+                .map(|i| alloc.loads[i] == params.lg[i] && params.lg[i] > params.lb[i])
+                .collect();
+            let direct = crate::scheduler::success::fleet_success_probability(
+                &params,
+                &p_good,
+                &members,
+                &mut crate::scheduler::success::FleetDp::default(),
+            );
+            assert!(
+                (alloc.est_success - direct).abs() < 1e-10,
+                "trial {trial}: est {} vs direct {direct}",
+                alloc.est_success
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_loads_take_only_the_two_per_worker_values() {
+        let mut rng = Rng::new(43);
+        for _ in 0..50 {
+            let n = 3 + rng.below(6) as usize;
+            let params = random_fleet(&mut rng, n);
+            let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let alloc = allocate_fleet(&params, &p_good);
+            assert_eq!(alloc.loads.len(), n);
+            for i in 0..n {
+                assert!(
+                    alloc.loads[i] == params.lg[i] || alloc.loads[i] == params.lb[i],
+                    "worker {i}: load {} not in {{{}, {}}}",
+                    alloc.loads[i],
+                    params.lg[i],
+                    params.lb[i]
+                );
+            }
+            assert!((0.0..=1.0 + 1e-12).contains(&alloc.est_success));
+        }
+    }
+
+    #[test]
+    fn fleet_heuristic_stays_close_to_exact_at_small_n() {
+        // The > FLEET_EXACT_MAX_UNCERTAIN fallback, exercised directly at
+        // sizes where the exact answer is cheap: the bounded local search
+        // must land within a small absolute gap of the optimum (it is not
+        // provably optimal — EXPERIMENTS.md §Heterogeneity records the
+        // measured gap distribution).
+        let mut rng = Rng::new(44);
+        let mut scratch = FleetAllocScratch::default();
+        for _ in 0..120 {
+            let n = 4 + rng.below(5) as usize;
+            let params = random_fleet(&mut rng, n);
+            if params.as_uniform().is_some() {
+                continue;
+            }
+            let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            scratch.ps.clear();
+            scratch.ps.extend(p_good.iter().map(|&p| prob_key(p)));
+            scratch.uncertain.clear();
+            scratch
+                .uncertain
+                .extend((0..n).filter(|&i| params.lg[i] > params.lb[i]));
+            scratch.members.clear();
+            scratch.members.resize(n, false);
+            let h = fleet_heuristic_search(
+                &params,
+                &scratch.ps,
+                &scratch.uncertain,
+                &mut scratch.members,
+                &mut scratch.cand,
+                &mut scratch.order,
+                &mut scratch.key,
+                &mut scratch.dp,
+            );
+            let (_, bf) = fleet_brute_force(&params, &p_good);
+            assert!(
+                h <= bf + 1e-10,
+                "heuristic {h} exceeds the optimum {bf}?!"
+            );
+            assert!(
+                bf - h < 0.2,
+                "heuristic gap too large: {h} vs optimum {bf} (K*={})",
+                params.kstar
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_trivial_and_infeasible_edges() {
+        // Trivial: Σ ℓ_b ≥ K* ⇒ the empty ℓ_g-set wins with probability 1.
+        let f = FleetLoadParams::from_loads(5, vec![6, 4, 3], vec![3, 2, 1]);
+        assert!(f.is_trivial());
+        let a = allocate_fleet(&f, &[0.2, 0.5, 0.9]);
+        assert_eq!(a.est_success, 1.0);
+        assert_eq!(a.i_star, 0);
+        assert_eq!(a.loads, vec![3, 2, 1]);
+        // Infeasible: even all-ℓ_g cannot reach K* ⇒ probability 0.
+        let f = FleetLoadParams::from_loads(20, vec![6, 4, 3], vec![3, 2, 1]);
+        assert!(!f.feasible_all());
+        let a = allocate_fleet(&f, &[0.9, 0.9, 0.9]);
+        assert_eq!(a.est_success, 0.0);
     }
 
     #[test]

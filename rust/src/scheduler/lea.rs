@@ -4,9 +4,9 @@
 //! the EA half: per-worker transition estimators feed p̂_{g,i}(m) into the
 //! eq.-(7)/(8) maximization, solved by the Lemma-4.5 linear prefix search.
 
-use super::allocation::{allocate_with_scratch, AllocScratch, Allocation};
+use super::allocation::{allocate_fleet_with_scratch, Allocation, FleetAllocScratch};
 use super::strategy::Strategy;
-use super::success::LoadParams;
+use super::success::{FleetLoadParams, LoadParams};
 use crate::markov::estimator::TransitionEstimator;
 use crate::markov::WState;
 use crate::util::rng::Rng;
@@ -50,14 +50,17 @@ impl RejoinPolicy {
     }
 }
 
-/// The LEA strategy state: one estimator per worker.
+/// The LEA strategy state: one estimator per worker. The load geometry is
+/// per-worker ([`FleetLoadParams`]); a homogeneous fleet (the paper's
+/// setting, via [`Lea::new`]/[`Lea::with_rejoin`]) delegates to the
+/// Lemma-4.5 prefix search bit-for-bit.
 #[derive(Clone, Debug)]
 pub struct Lea {
-    pub params: LoadParams,
+    fleet: FleetLoadParams,
     estimators: Vec<TransitionEstimator>,
     rejoin: RejoinPolicy,
     // Hot-path buffers, recycled every round (EXPERIMENTS.md §Perf).
-    scratch: AllocScratch,
+    scratch: FleetAllocScratch,
     p_buf: Vec<f64>,
 }
 
@@ -68,13 +71,29 @@ impl Lea {
 
     /// LEA with an explicit estimator policy for rejoining workers.
     pub fn with_rejoin(params: LoadParams, rejoin: RejoinPolicy) -> Self {
+        Lea::for_fleet(FleetLoadParams::uniform(params), rejoin)
+    }
+
+    /// LEA over a heterogeneous fleet: per-worker ℓ_g/ℓ_b derived from each
+    /// worker's own speeds and the deadline.
+    pub fn for_fleet(fleet: FleetLoadParams, rejoin: RejoinPolicy) -> Self {
+        let n = fleet.n();
         Lea {
-            estimators: vec![TransitionEstimator::new(); params.n],
+            estimators: vec![TransitionEstimator::new(); n],
             rejoin,
-            scratch: AllocScratch::default(),
-            p_buf: Vec::with_capacity(params.n),
-            params,
+            scratch: FleetAllocScratch::default(),
+            p_buf: Vec::with_capacity(n),
+            fleet,
         }
+    }
+
+    pub fn n(&self) -> usize {
+        self.fleet.n()
+    }
+
+    /// The per-worker load geometry this LEA allocates against.
+    pub fn fleet_params(&self) -> &FleetLoadParams {
+        &self.fleet
     }
 
     pub fn rejoin_policy(&self) -> RejoinPolicy {
@@ -100,7 +119,7 @@ impl Strategy for Lea {
         self.p_buf.clear();
         self.p_buf
             .extend(self.estimators.iter().map(|e| e.p_good_next()));
-        allocate_with_scratch(&self.params, &self.p_buf, &mut self.scratch)
+        allocate_fleet_with_scratch(&self.fleet, &self.p_buf, &mut self.scratch)
     }
 
     fn observe(&mut self, states: &[Option<WState>]) {
@@ -223,6 +242,44 @@ mod tests {
             assert_eq!(RejoinPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(RejoinPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fleet_lea_assigns_per_worker_loads() {
+        // 2 fast + 2 slow workers: every assigned load must be one of the
+        // worker's OWN two values, and a uniform fleet reproduces Lea::new.
+        let rates = vec![(10.0, 3.0), (10.0, 3.0), (5.0, 1.0), (5.0, 1.0)];
+        let fleet = FleetLoadParams::from_rates(10, 18, &rates, 1.0);
+        let mut lea = Lea::for_fleet(fleet.clone(), RejoinPolicy::Carryover);
+        assert_eq!(lea.n(), 4);
+        assert_eq!(lea.fleet_params(), &fleet);
+        let mut rng = Rng::new(3);
+        let a = lea.allocate(&mut rng);
+        for i in 0..4 {
+            assert!(a.loads[i] == fleet.lg[i] || a.loads[i] == fleet.lb[i]);
+        }
+        // Uniform fleet == homogeneous constructor, observation for
+        // observation.
+        let params = fig3_params();
+        let mut uni = Lea::for_fleet(FleetLoadParams::uniform(params), RejoinPolicy::Carryover);
+        let mut homog = Lea::new(params);
+        let mut rng2 = Rng::new(4);
+        for round in 0..50 {
+            let states: Vec<WState> = (0..15)
+                .map(|_| {
+                    if rng2.bernoulli(0.6) {
+                        WState::Good
+                    } else {
+                        WState::Bad
+                    }
+                })
+                .collect();
+            let au = uni.allocate(&mut rng);
+            let ah = homog.allocate(&mut rng);
+            assert_eq!(au, ah, "round {round}");
+            observe_all(&mut uni, &states);
+            observe_all(&mut homog, &states);
+        }
     }
 
     #[test]

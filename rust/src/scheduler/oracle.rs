@@ -6,31 +6,42 @@
 //! the upper bound R*(d) that LEA provably converges to (Theorem 5.1) — the
 //! convergence experiment measures both.
 
-use super::allocation::{allocate_with_scratch, AllocScratch, Allocation};
+use super::allocation::{allocate_fleet_with_scratch, Allocation, FleetAllocScratch};
 use super::strategy::Strategy;
-use super::success::LoadParams;
+use super::success::{FleetLoadParams, LoadParams};
 use crate::markov::chain::TwoState;
 use crate::markov::WState;
 use crate::util::rng::Rng;
 
-/// Optimal strategy with a known Markov model.
+/// Optimal strategy with a known Markov model. Load geometry is per-worker
+/// ([`FleetLoadParams`]); the homogeneous constructor delegates to the
+/// Lemma-4.5 prefix search bit-for-bit.
 #[derive(Clone, Debug)]
 pub struct Oracle {
-    pub params: LoadParams,
+    fleet: FleetLoadParams,
     chains: Vec<TwoState>,
     last_states: Option<Vec<WState>>,
-    scratch: AllocScratch,
+    scratch: FleetAllocScratch,
 }
 
 impl Oracle {
     pub fn new(params: LoadParams, chains: Vec<TwoState>) -> Self {
-        assert_eq!(chains.len(), params.n);
+        Oracle::for_fleet(FleetLoadParams::uniform(params), chains)
+    }
+
+    /// Genie over a heterogeneous fleet.
+    pub fn for_fleet(fleet: FleetLoadParams, chains: Vec<TwoState>) -> Self {
+        assert_eq!(chains.len(), fleet.n());
         Oracle {
-            params,
+            fleet,
             chains,
             last_states: None,
-            scratch: AllocScratch::default(),
+            scratch: FleetAllocScratch::default(),
         }
+    }
+
+    pub fn n(&self) -> usize {
+        self.fleet.n()
     }
 
     /// Exact p_{g,i}(m): one-step prediction from the last true state, or the
@@ -55,7 +66,7 @@ impl Strategy for Oracle {
 
     fn allocate(&mut self, _rng: &mut Rng) -> Allocation {
         let p = self.p_good();
-        allocate_with_scratch(&self.params, &p, &mut self.scratch)
+        allocate_fleet_with_scratch(&self.fleet, &p, &mut self.scratch)
     }
 
     fn observe(&mut self, states: &[Option<WState>]) {
@@ -63,7 +74,7 @@ impl Strategy for Oracle {
         let mut last = self
             .last_states
             .clone()
-            .unwrap_or_else(|| vec![WState::Good; self.params.n]);
+            .unwrap_or_else(|| vec![WState::Good; self.fleet.n()]);
         for (slot, s) in last.iter_mut().zip(states) {
             if let Some(s) = s {
                 *slot = *s;

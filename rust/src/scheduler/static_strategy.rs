@@ -10,14 +10,18 @@
 
 use super::allocation::Allocation;
 use super::strategy::Strategy;
-use super::success::LoadParams;
+use super::success::{FleetLoadParams, LoadParams};
 use crate::markov::WState;
 use crate::util::rng::Rng;
 
-/// Static strategy drawing loads from fixed per-worker probabilities.
+/// Static strategy drawing loads from fixed per-worker probabilities. The
+/// load geometry is per-worker ([`FleetLoadParams`]): each draw assigns
+/// worker i its OWN ℓ_g(i) or ℓ_b(i). The homogeneous constructors consume
+/// the RNG identically to the pre-fleet seed code (one Bernoulli per worker
+/// per draw).
 #[derive(Clone, Debug)]
 pub struct StaticStrategy {
-    pub params: LoadParams,
+    fleet: FleetLoadParams,
     /// Probability of assigning ℓ_g to each worker.
     pub pi_g: Vec<f64>,
     name: &'static str,
@@ -26,22 +30,37 @@ pub struct StaticStrategy {
 impl StaticStrategy {
     /// §6.1 baseline: uses the true stationary distribution.
     pub fn stationary(params: LoadParams, pi_g: Vec<f64>) -> Self {
-        assert_eq!(pi_g.len(), params.n);
+        StaticStrategy::stationary_fleet(FleetLoadParams::uniform(params), pi_g)
+    }
+
+    /// §6.2 baseline: equal probability (no knowledge at all).
+    pub fn equal_prob(params: LoadParams) -> Self {
+        StaticStrategy::equal_prob_fleet(FleetLoadParams::uniform(params))
+    }
+
+    /// Stationary baseline over a heterogeneous fleet.
+    pub fn stationary_fleet(fleet: FleetLoadParams, pi_g: Vec<f64>) -> Self {
+        assert_eq!(pi_g.len(), fleet.n());
         StaticStrategy {
-            params,
+            fleet,
             pi_g,
             name: "static-stationary",
         }
     }
 
-    /// §6.2 baseline: equal probability (no knowledge at all).
-    pub fn equal_prob(params: LoadParams) -> Self {
-        let n = params.n;
+    /// Equal-probability baseline over a heterogeneous fleet.
+    pub fn equal_prob_fleet(fleet: FleetLoadParams) -> Self {
+        let n = fleet.n();
         StaticStrategy {
-            params,
+            fleet,
             pi_g: vec![0.5; n],
             name: "static-equal",
         }
+    }
+
+    /// The per-worker load geometry this baseline draws from.
+    pub fn fleet_params(&self) -> &FleetLoadParams {
+        &self.fleet
     }
 }
 
@@ -53,22 +72,27 @@ impl Strategy for StaticStrategy {
     fn allocate(&mut self, rng: &mut Rng) -> Allocation {
         // Redraw until total ≥ K* (eq. 35 note). Bounded: if even all-ℓ_g
         // cannot reach K*, give the all-ℓ_g vector (success prob 0 anyway).
-        let all_lg = self.params.n * self.params.lg;
+        let all_lg = self.fleet.total_lg();
         for _ in 0..10_000 {
             let loads: Vec<usize> = self
                 .pi_g
                 .iter()
-                .map(|&p| {
+                .enumerate()
+                .map(|(i, &p)| {
                     if rng.bernoulli(p) {
-                        self.params.lg
+                        self.fleet.lg[i]
                     } else {
-                        self.params.lb
+                        self.fleet.lb[i]
                     }
                 })
                 .collect();
             let total: usize = loads.iter().sum();
-            if total >= self.params.kstar || all_lg < self.params.kstar {
-                let i_star = loads.iter().filter(|&&l| l == self.params.lg).count();
+            if total >= self.fleet.kstar || all_lg < self.fleet.kstar {
+                let i_star = loads
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, &l)| l == self.fleet.lg[i])
+                    .count();
                 return Allocation {
                     loads,
                     i_star,
@@ -78,8 +102,8 @@ impl Strategy for StaticStrategy {
         }
         // Degenerate π (all ≈ 0) with reachable K*: fall back to all-ℓ_g.
         Allocation {
-            loads: vec![self.params.lg; self.params.n],
-            i_star: self.params.n,
+            loads: self.fleet.lg.clone(),
+            i_star: self.fleet.n(),
             est_success: f64::NAN,
         }
     }
@@ -155,6 +179,40 @@ mod tests {
         let mut rng = Rng::new(6);
         let a = s.allocate(&mut rng);
         assert_eq!(a.loads.len(), 4);
+    }
+
+    #[test]
+    fn fleet_draws_use_per_worker_loads_and_uniform_matches_homogeneous() {
+        // Mixed fleet: every drawn load is one of the worker's own pair.
+        let fleet = FleetLoadParams::from_rates(
+            10,
+            18,
+            &[(10.0, 3.0), (10.0, 3.0), (5.0, 1.0), (5.0, 1.0)],
+            1.0,
+        );
+        let mut s = StaticStrategy::stationary_fleet(fleet.clone(), vec![0.7; 4]);
+        assert_eq!(s.fleet_params(), &fleet);
+        let mut rng = Rng::new(8);
+        for _ in 0..200 {
+            let a = s.allocate(&mut rng);
+            for i in 0..4 {
+                assert!(a.loads[i] == fleet.lg[i] || a.loads[i] == fleet.lb[i]);
+            }
+        }
+        // Uniform fleet: identical draw sequence to the homogeneous path
+        // (same RNG consumption, same loads).
+        let p = params();
+        let mut uni =
+            StaticStrategy::stationary_fleet(FleetLoadParams::uniform(p), vec![0.5; 15]);
+        let mut homog = StaticStrategy::stationary(p, vec![0.5; 15]);
+        let mut r1 = Rng::new(19);
+        let mut r2 = Rng::new(19);
+        for _ in 0..100 {
+            // est_success is NaN by convention, so compare the draw itself.
+            let (a, b) = (uni.allocate(&mut r1), homog.allocate(&mut r2));
+            assert_eq!(a.loads, b.loads);
+            assert_eq!(a.i_star, b.i_star);
+        }
     }
 
     #[test]

@@ -95,6 +95,205 @@ impl LoadParams {
     }
 }
 
+/// Per-worker load geometry for a heterogeneous fleet: worker i's own
+/// speeds and the deadline give ℓ_g(i) = min(⌊μ_{g,i}·d⌋, r) and
+/// ℓ_b(i) = min(⌊μ_{b,i}·d⌋, r). The two-value structure of Lemma 4.4
+/// survives per worker (an intermediate load completes in exactly the same
+/// states as ℓ_g(i) but contributes less, so it is dominated), but the
+/// *prefix* structure of Lemma 4.5 does not — see
+/// `scheduler::allocation::allocate_fleet` and EXPERIMENTS.md
+/// §Heterogeneity for the generalized search.
+///
+/// The homogeneous fleet is the special case where every worker shares one
+/// (ℓ_g, ℓ_b) pair; [`FleetLoadParams::as_uniform`] detects it so callers
+/// can delegate to the Lemma-4.5 fast path bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetLoadParams {
+    /// Recovery threshold K* (eq. 9).
+    pub kstar: usize,
+    /// ℓ_g(i) per worker.
+    pub lg: Vec<usize>,
+    /// ℓ_b(i) per worker.
+    pub lb: Vec<usize>,
+    /// Cached homogeneous equivalent when every worker shares one load pair.
+    uniform: Option<LoadParams>,
+}
+
+impl FleetLoadParams {
+    /// Build from explicit per-worker loads.
+    pub fn from_loads(kstar: usize, lg: Vec<usize>, lb: Vec<usize>) -> Self {
+        assert_eq!(lg.len(), lb.len(), "per-worker load vectors must align");
+        for (i, (&g, &b)) in lg.iter().zip(&lb).enumerate() {
+            assert!(g >= b, "worker {i}: ℓ_g {g} < ℓ_b {b} is impossible");
+        }
+        let uniform = match (lg.first(), lb.first()) {
+            (Some(&g0), Some(&b0))
+                if lg.iter().all(|&g| g == g0) && lb.iter().all(|&b| b == b0) =>
+            {
+                Some(LoadParams::new(lg.len(), kstar, g0, b0))
+            }
+            _ => None,
+        };
+        FleetLoadParams {
+            kstar,
+            lg,
+            lb,
+            uniform,
+        }
+    }
+
+    /// Lift a homogeneous geometry into the per-worker form.
+    pub fn uniform(params: LoadParams) -> Self {
+        FleetLoadParams {
+            kstar: params.kstar,
+            lg: vec![params.lg; params.n],
+            lb: vec![params.lb; params.n],
+            uniform: Some(params),
+        }
+    }
+
+    /// Derive from each worker's own rates `(μ_g,i, μ_b,i)` and the
+    /// deadline, clamped to the r chunks a worker stores — the per-worker
+    /// generalization of [`LoadParams::from_rates`].
+    pub fn from_rates(r: usize, kstar: usize, rates: &[(f64, f64)], d: f64) -> Self {
+        assert!(d > 0.0, "deadline must be positive");
+        let mut lg = Vec::with_capacity(rates.len());
+        let mut lb = Vec::with_capacity(rates.len());
+        for &(mu_g, mu_b) in rates {
+            assert!(mu_g >= mu_b && mu_b >= 0.0, "need μ_g ≥ μ_b ≥ 0");
+            lg.push(((mu_g * d).floor() as usize).min(r));
+            lb.push(((mu_b * d).floor() as usize).min(r));
+        }
+        FleetLoadParams::from_loads(kstar, lg, lb)
+    }
+
+    pub fn n(&self) -> usize {
+        self.lg.len()
+    }
+
+    /// The homogeneous equivalent, when one exists (all ℓ_g equal and all
+    /// ℓ_b equal). Callers use it to take the seed Lemma-4.5 path.
+    pub fn as_uniform(&self) -> Option<LoadParams> {
+        self.uniform
+    }
+
+    pub fn total_lg(&self) -> usize {
+        self.lg.iter().sum()
+    }
+
+    pub fn total_lb(&self) -> usize {
+        self.lb.iter().sum()
+    }
+
+    /// Even the all-ℓ_g assignment must reach K* for any round to succeed.
+    pub fn feasible_all(&self) -> bool {
+        self.total_lg() >= self.kstar
+    }
+
+    /// Footnote 2 generalized: Σ ℓ_b(i) ≥ K* makes every round succeed.
+    pub fn is_trivial(&self) -> bool {
+        self.total_lb() >= self.kstar
+    }
+
+    /// Restrict to a subset of workers (the traffic engine's idle set),
+    /// preserving their order.
+    pub fn subset(&self, ids: &[usize]) -> FleetLoadParams {
+        FleetLoadParams::from_loads(
+            self.kstar,
+            ids.iter().map(|&i| self.lg[i]).collect(),
+            ids.iter().map(|&i| self.lb[i]).collect(),
+        )
+    }
+}
+
+/// Censored weighted Poisson-binomial DP: the distribution of
+/// Σ v_i·Bernoulli(p_i) with all mass ≥ `cap` collapsed into the top bin.
+/// Tail queries at thresholds ≤ `cap` are exact under the censoring, and the
+/// heterogeneous allocator only ever asks for deficits ≤ K* = `cap`.
+#[derive(Clone, Debug, Default)]
+pub struct FleetDp {
+    dist: Vec<f64>,
+    cap: usize,
+}
+
+impl FleetDp {
+    /// Reset to the point mass at 0 with censoring cap `cap` (≥ 1).
+    pub fn reset(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        self.dist.clear();
+        self.dist.resize(self.cap + 1, 0.0);
+        self.dist[0] = 1.0;
+    }
+
+    /// Convolve with `value`·Bernoulli(`p`), in place (descending index
+    /// order — the 0/1-knapsack trick; the top bin is absorbing).
+    pub fn push(&mut self, value: usize, p: f64) {
+        debug_assert!((0.0..=1.0).contains(&p), "probability out of range: {p}");
+        if value == 0 || p == 0.0 {
+            return; // contributes nothing either way
+        }
+        // Mass already at the cap stays there under both outcomes.
+        for c in (0..self.cap).rev() {
+            let d = self.dist[c];
+            if d != 0.0 {
+                let t = (c + value).min(self.cap);
+                self.dist[t] += d * p;
+                self.dist[c] = d * (1.0 - p);
+            }
+        }
+    }
+
+    /// P(Σ ≥ `threshold`); exact for `threshold` ≤ cap.
+    pub fn tail(&self, threshold: i64) -> f64 {
+        if threshold <= 0 {
+            return 1.0;
+        }
+        let t = threshold as usize;
+        if t > self.cap {
+            return 0.0;
+        }
+        self.dist[t..].iter().sum()
+    }
+}
+
+/// Success probability of an arbitrary ℓ_g-set under per-worker loads —
+/// eq. (21) generalized. `members[i]` ⇔ worker i is assigned ℓ_g(i); the
+/// rest carry ℓ_b(i) (always completed). A member whose ℓ_g(i) = ℓ_b(i)
+/// also always completes (its "ambitious" load fits the bad rate too), so
+/// it contributes deterministically; only members with ℓ_g(i) > ℓ_b(i) are
+/// Bernoulli. NaN probabilities count as 0 (same convention as the
+/// homogeneous allocator's sort key).
+pub fn fleet_success_probability(
+    params: &FleetLoadParams,
+    p_good: &[f64],
+    members: &[bool],
+    dp: &mut FleetDp,
+) -> f64 {
+    let n = params.n();
+    assert_eq!(p_good.len(), n);
+    assert_eq!(members.len(), n);
+    let mut base = 0usize;
+    for i in 0..n {
+        if !members[i] {
+            base += params.lb[i];
+        } else if params.lg[i] <= params.lb[i] {
+            base += params.lg[i];
+        }
+    }
+    let deficit = params.kstar as i64 - base as i64;
+    if deficit <= 0 {
+        return 1.0;
+    }
+    dp.reset(params.kstar);
+    for i in 0..n {
+        if members[i] && params.lg[i] > params.lb[i] {
+            let p = if p_good[i].is_nan() { 0.0 } else { p_good[i] };
+            dp.push(params.lg[i], p);
+        }
+    }
+    dp.tail(deficit)
+}
+
 /// Success probability when the workers with probabilities `ps` are assigned
 /// ℓ_g and the other n−|ps| workers ℓ_b (eq. 8 / eq. 21).
 pub fn success_probability(params: &LoadParams, ps_gg_loaded: &[f64]) -> f64 {
@@ -331,5 +530,165 @@ mod tests {
         assert_eq!(p.needed_good(2), i64::MAX);
         let bp = best_prefix(&p, &[0.9, 0.8, 0.7, 0.6]);
         assert_eq!(bp.prob, 0.0);
+    }
+
+    #[test]
+    fn fleet_params_uniform_roundtrip() {
+        let p = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+        let f = FleetLoadParams::uniform(p);
+        assert_eq!(f.n(), 15);
+        assert_eq!(f.as_uniform(), Some(p));
+        assert_eq!(f.total_lg(), 150);
+        assert_eq!(f.total_lb(), 45);
+        assert!(f.feasible_all());
+        assert!(!f.is_trivial());
+        // from_rates with identical per-worker rates detects uniformity too.
+        let rates = vec![(10.0, 3.0); 15];
+        let f2 = FleetLoadParams::from_rates(10, 99, &rates, 1.0);
+        assert_eq!(f2.as_uniform(), Some(p));
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn fleet_params_mixed_has_no_uniform() {
+        let rates = vec![(10.0, 3.0), (10.0, 3.0), (6.0, 2.0)];
+        let f = FleetLoadParams::from_rates(10, 20, &rates, 1.0);
+        assert!(f.as_uniform().is_none());
+        assert_eq!(f.lg, vec![10, 10, 6]);
+        assert_eq!(f.lb, vec![3, 3, 2]);
+        let sub = f.subset(&[0, 2]);
+        assert_eq!(sub.lg, vec![10, 6]);
+        assert_eq!(sub.lb, vec![3, 2]);
+        assert_eq!(sub.kstar, 20);
+        // A subset of a mixed fleet can itself be uniform.
+        assert_eq!(f.subset(&[0, 1]).as_uniform(), Some(LoadParams::new(2, 20, 10, 3)));
+    }
+
+    /// Brute-force weighted tail by enumerating all 2^n outcomes.
+    fn weighted_tail_brute(vals: &[usize], ps: &[f64], threshold: i64) -> f64 {
+        let n = vals.len();
+        let mut total = 0.0;
+        for mask in 0..(1u32 << n) {
+            let mut prob = 1.0;
+            let mut sum = 0i64;
+            for i in 0..n {
+                if mask >> i & 1 == 1 {
+                    prob *= ps[i];
+                    sum += vals[i] as i64;
+                } else {
+                    prob *= 1.0 - ps[i];
+                }
+            }
+            if sum >= threshold {
+                total += prob;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn fleet_dp_matches_weighted_bruteforce() {
+        let mut rng = crate::util::rng::Rng::new(91);
+        let mut dp = FleetDp::default();
+        for _ in 0..200 {
+            let n = 1 + rng.below(9) as usize;
+            let vals: Vec<usize> = (0..n).map(|_| rng.below(13) as usize).collect();
+            let ps: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let cap = 1 + rng.below(40) as usize;
+            dp.reset(cap);
+            for (&v, &p) in vals.iter().zip(&ps) {
+                dp.push(v, p);
+            }
+            for threshold in -1..=(cap as i64) {
+                let got = dp.tail(threshold);
+                let want = weighted_tail_brute(&vals, &ps, threshold);
+                assert!(
+                    (got - want).abs() < 1e-10,
+                    "n={n} cap={cap} t={threshold}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    /// Brute-force per-worker success: enumerate the good/bad states.
+    fn fleet_success_brute(params: &FleetLoadParams, p_good: &[f64], members: &[bool]) -> f64 {
+        let n = params.n();
+        let mut total = 0.0;
+        for mask in 0..(1u32 << n) {
+            let mut prob = 1.0;
+            let mut load = 0usize;
+            for i in 0..n {
+                let good = mask >> i & 1 == 1;
+                prob *= if good { p_good[i] } else { 1.0 - p_good[i] };
+                let l = if members[i] { params.lg[i] } else { params.lb[i] };
+                // A load completes iff it fits the state's capacity; ℓ_b
+                // always fits, ℓ_g fits iff good or ℓ_g = ℓ_b.
+                if good || l <= params.lb[i] {
+                    load += l;
+                }
+            }
+            if load >= params.kstar {
+                total += prob;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn fleet_success_matches_state_enumeration() {
+        let mut rng = crate::util::rng::Rng::new(92);
+        let mut dp = FleetDp::default();
+        for trial in 0..150 {
+            let n = 2 + rng.below(6) as usize;
+            let r = 1 + rng.below(10) as usize;
+            let rates: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    let mu_g = 0.5 + rng.f64() * 11.0;
+                    (mu_g, rng.f64() * mu_g)
+                })
+                .collect();
+            let max_tot: usize = rates
+                .iter()
+                .map(|&(g, _)| (g.floor() as usize).min(r))
+                .sum();
+            let kstar = 1 + rng.below(max_tot.max(1) as u64 + 3) as usize;
+            let params = FleetLoadParams::from_rates(r, kstar, &rates, 1.0);
+            let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let members: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+            let got = fleet_success_probability(&params, &p_good, &members, &mut dp);
+            let want = fleet_success_brute(&params, &p_good, &members);
+            assert!(
+                (got - want).abs() < 1e-10,
+                "trial {trial}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_success_uniform_agrees_with_homogeneous_tail() {
+        // Uniform fleet + a prefix-shaped member set must reproduce the
+        // eq.-(8) computation exactly.
+        let p = LoadParams::from_rates(8, 5, 25, 5.0, 2.0, 1.0);
+        let f = FleetLoadParams::uniform(p);
+        let ps = [0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2];
+        let mut dp = FleetDp::default();
+        for i_tilde in 0..=8usize {
+            let members: Vec<bool> = (0..8).map(|i| i < i_tilde).collect();
+            let got = fleet_success_probability(&f, &ps, &members, &mut dp);
+            let want = success_probability(&p, &ps[..i_tilde]);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "ĩ={i_tilde}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_nan_probability_counts_as_zero() {
+        let f = FleetLoadParams::from_loads(10, vec![6, 5], vec![2, 1]);
+        let mut dp = FleetDp::default();
+        let with_nan = fleet_success_probability(&f, &[f64::NAN, 0.7], &[true, true], &mut dp);
+        let with_zero = fleet_success_probability(&f, &[0.0, 0.7], &[true, true], &mut dp);
+        assert!((with_nan - with_zero).abs() < 1e-15);
     }
 }

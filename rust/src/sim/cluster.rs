@@ -5,8 +5,10 @@ use crate::markov::credit::CreditCpu;
 use crate::markov::{StateProcess, WState};
 use crate::util::rng::Rng;
 
-/// Worker speed model shared by all workers of a cluster.
-#[derive(Clone, Copy, Debug)]
+/// One worker's speed model (evaluations per second per state). Historically
+/// shared by every worker of a cluster; since the heterogeneous-fleet pass
+/// each worker carries its own copy ([`SimCluster::speeds_of`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Speeds {
     /// Evaluations per second in the good state.
     pub mu_g: f64,
@@ -49,10 +51,13 @@ pub struct RoundOutcome {
     pub finish_times: Vec<f64>,
 }
 
-/// The simulated cluster: n workers with state processes + speeds.
+/// The simulated cluster: n workers, each with its own state process and
+/// its own [`Speeds`] (heterogeneous fleets mix instance types; the uniform
+/// constructors below are thin wrappers that replicate one pair and consume
+/// the RNG exactly as the pre-fleet seed code did).
 pub struct SimCluster {
     workers: Vec<WorkerProcess>,
-    pub speeds: Speeds,
+    speeds: Vec<Speeds>,
     rng: Rng,
 }
 
@@ -63,19 +68,30 @@ impl SimCluster {
             workers: (0..n)
                 .map(|_| WorkerProcess::Markov(MarkovWorker::new(chain)))
                 .collect(),
-            speeds,
+            speeds: vec![speeds; n],
             rng: Rng::new(seed),
         }
     }
 
-    /// Heterogeneous Markov cluster.
+    /// Heterogeneous Markov *chains* with one shared speed pair (the
+    /// pre-fleet heterogeneous study).
     pub fn markov_heterogeneous(chains: &[TwoState], speeds: Speeds, seed: u64) -> Self {
+        SimCluster::markov_fleet(chains, &vec![speeds; chains.len()], seed)
+    }
+
+    /// Fully heterogeneous Markov fleet: per-worker chains AND speeds.
+    pub fn markov_fleet(chains: &[TwoState], speeds: &[Speeds], seed: u64) -> Self {
+        assert_eq!(
+            chains.len(),
+            speeds.len(),
+            "per-worker chains and speeds must align"
+        );
         SimCluster {
             workers: chains
                 .iter()
                 .map(|&c| WorkerProcess::Markov(MarkovWorker::new(c)))
                 .collect(),
-            speeds,
+            speeds: speeds.to_vec(),
             rng: Rng::new(seed),
         }
     }
@@ -92,13 +108,45 @@ impl SimCluster {
             .collect();
         SimCluster {
             workers,
-            speeds,
+            speeds: vec![speeds; n],
             rng,
         }
     }
 
     pub fn n(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Worker `i`'s own speed pair.
+    pub fn speeds_of(&self, i: usize) -> Speeds {
+        self.speeds[i]
+    }
+
+    /// The whole fleet's speed profile, worker-indexed.
+    pub fn speed_profile(&self) -> &[Speeds] {
+        &self.speeds
+    }
+
+    /// Worker `i`'s service rate in state `s`.
+    pub fn rate(&self, i: usize, s: WState) -> f64 {
+        self.speeds[i].rate(s)
+    }
+
+    /// The shared speed pair if the fleet is homogeneous (`None` once any
+    /// worker differs) — the guard uniform callers use before assuming one
+    /// cluster-wide [`Speeds`].
+    pub fn uniform_speeds(&self) -> Option<Speeds> {
+        match self.speeds.first() {
+            Some(&s0) if self.speeds.iter().all(|&s| s == s0) => Some(s0),
+            _ => None,
+        }
+    }
+
+    /// Replace worker `i`'s speed pair — the elastic-fleet hook for a
+    /// replacement instance of a DIFFERENT type coming up in the slot
+    /// (`traffic::engine::RejoinSpeeds`). Consumes no RNG.
+    pub fn set_worker_speeds(&mut self, i: usize, speeds: Speeds) {
+        self.speeds[i] = speeds;
     }
 
     /// Advance all workers by one round after an idle gap of `gap_secs`.
@@ -159,8 +207,30 @@ impl SimCluster {
         completed: &mut Vec<bool>,
     ) {
         completed.clear();
-        completed.extend(states.iter().zip(loads).map(|(&s, &l)| {
-            let rate = self.speeds.rate(s);
+        completed.extend(states.iter().zip(loads).enumerate().map(|(i, (&s, &l))| {
+            let rate = self.speeds[i].rate(s);
+            l == 0 || (rate > 0.0 && l as f64 <= rate * d * (1.0 + 1e-9))
+        }));
+    }
+
+    /// [`Self::completed_into`] for a SUBSET of workers: `ids[j]` names the
+    /// worker whose OWN speeds judge `states[j]`/`loads[j]` (the traffic
+    /// engine's participant lists — positional indexing would grab the
+    /// wrong worker's speeds on a heterogeneous fleet). Same epsilon
+    /// convention as [`Self::outcome`].
+    pub fn completed_subset_into(
+        &self,
+        ids: &[usize],
+        states: &[WState],
+        loads: &[usize],
+        d: f64,
+        completed: &mut Vec<bool>,
+    ) {
+        assert_eq!(ids.len(), states.len());
+        assert_eq!(ids.len(), loads.len());
+        completed.clear();
+        completed.extend(ids.iter().zip(states.iter().zip(loads)).map(|(&w, (&s, &l))| {
+            let rate = self.speeds[w].rate(s);
             l == 0 || (rate > 0.0 && l as f64 <= rate * d * (1.0 + 1e-9))
         }));
     }
@@ -173,8 +243,9 @@ impl SimCluster {
         let finish_times: Vec<f64> = states
             .iter()
             .zip(loads)
-            .map(|(&s, &l)| {
-                let rate = self.speeds.rate(s);
+            .enumerate()
+            .map(|(i, (&s, &l))| {
+                let rate = self.speeds[i].rate(s);
                 if l == 0 {
                     0.0
                 } else if rate <= 0.0 {
@@ -198,7 +269,8 @@ impl SimCluster {
         states
             .iter()
             .zip(loads)
-            .map(|(&s, &l)| ((self.speeds.rate(s) * d) as usize).min(l))
+            .enumerate()
+            .map(|(i, (&s, &l))| ((self.speeds[i].rate(s) * d) as usize).min(l))
             .collect()
     }
 }
@@ -297,6 +369,116 @@ mod tests {
         } else {
             panic!("expected credit worker");
         }
+    }
+
+    #[test]
+    fn fleet_completion_uses_each_workers_own_speeds() {
+        use WState::{Bad as B, Good as G};
+        let chains = vec![TwoState::new(0.8, 0.8); 3];
+        let profile = [
+            Speeds {
+                mu_g: 10.0,
+                mu_b: 3.0,
+            },
+            Speeds {
+                mu_g: 5.0,
+                mu_b: 1.0,
+            },
+            Speeds {
+                mu_g: 2.0,
+                mu_b: 0.0,
+            },
+        ];
+        let cl = SimCluster::markov_fleet(&chains, &profile, 1);
+        assert_eq!(cl.speeds_of(1).mu_g, 5.0);
+        assert_eq!(cl.speed_profile().len(), 3);
+        assert!(cl.uniform_speeds().is_none());
+        assert_eq!(cl.rate(2, B), 0.0);
+        // Load 5: fits worker 0 good and worker 1 good, nobody bad.
+        let out = cl.outcome(&[G, G, B], &[5, 5, 5], 1.0);
+        assert_eq!(out.completed, vec![true, true, false]);
+        assert!((out.finish_times[0] - 0.5).abs() < 1e-12);
+        assert!((out.finish_times[1] - 1.0).abs() < 1e-12);
+        assert!(out.finish_times[2].is_infinite());
+        // completed_into agrees with outcome.
+        let mut completed = Vec::new();
+        cl.completed_into(&[G, G, B], &[5, 5, 5], 1.0, &mut completed);
+        assert_eq!(completed, out.completed);
+        // partial progress caps at each worker's own rate.
+        assert_eq!(cl.partial_progress(&[G, G, B], &[8, 8, 8], 1.0), vec![8, 5, 0]);
+    }
+
+    #[test]
+    fn completed_subset_uses_the_named_workers_speeds() {
+        use WState::Good as G;
+        let chains = vec![TwoState::new(0.8, 0.8); 3];
+        let profile = [
+            Speeds {
+                mu_g: 2.0,
+                mu_b: 1.0,
+            },
+            Speeds {
+                mu_g: 10.0,
+                mu_b: 3.0,
+            },
+            Speeds {
+                mu_g: 5.0,
+                mu_b: 1.0,
+            },
+        ];
+        let cl = SimCluster::markov_fleet(&chains, &profile, 2);
+        // Participants {1, 2} with load 7: worker 1 (μ_g = 10) makes it,
+        // worker 2 (μ_g = 5) does not. Positional indexing would judge them
+        // by workers 0 and 1's speeds instead (false, true).
+        let mut completed = Vec::new();
+        cl.completed_subset_into(&[1, 2], &[G, G], &[7, 7], 1.0, &mut completed);
+        assert_eq!(completed, vec![true, false]);
+        // Full-fleet subset agrees with completed_into.
+        let states = [G, G, G];
+        let loads = [7, 7, 7];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        cl.completed_subset_into(&[0, 1, 2], &states, &loads, 1.0, &mut a);
+        cl.completed_into(&states, &loads, 1.0, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uniform_fleet_constructor_is_equivalent_to_markov() {
+        // markov() and markov_fleet() with a replicated pair must agree on
+        // speeds, RNG stream, and outcomes.
+        let chain = TwoState::new(0.7, 0.4);
+        let profile = vec![speeds(); 6];
+        let mut a = SimCluster::markov(6, chain, speeds(), 9);
+        let mut b = SimCluster::markov_fleet(&vec![chain; 6], &profile, 9);
+        assert_eq!(b.uniform_speeds(), Some(speeds()));
+        for _ in 0..50 {
+            let sa = a.advance(0.3);
+            let sb = b.advance(0.3);
+            assert_eq!(sa, sb);
+            assert_eq!(
+                a.outcome(&sa, &[7; 6], 1.0).completed,
+                b.outcome(&sb, &[7; 6], 1.0).completed
+            );
+        }
+    }
+
+    #[test]
+    fn set_worker_speeds_retypes_one_slot_only() {
+        let mut cl = SimCluster::markov(3, TwoState::new(0.8, 0.8), speeds(), 4);
+        assert_eq!(cl.uniform_speeds(), Some(speeds()));
+        let slow = Speeds {
+            mu_g: 4.0,
+            mu_b: 1.0,
+        };
+        cl.set_worker_speeds(1, slow);
+        assert!(cl.uniform_speeds().is_none());
+        assert_eq!(cl.speeds_of(0), speeds());
+        assert_eq!(cl.speeds_of(1), slow);
+        use WState::Good as G;
+        // Load 5 fits the original good rate (10) but not the new one (4).
+        let out = cl.outcome(&[G, G, G], &[5, 5, 5], 1.0);
+        assert_eq!(out.completed, vec![true, false, true]);
     }
 
     #[test]

@@ -34,6 +34,17 @@
 //! stream, so a run with churn rate 0 schedules no churn events, consumes
 //! no extra randomness, and is byte-identical to the fixed-fleet engine.
 //!
+//! **Heterogeneous fleet.** Worker speed is a per-worker property
+//! ([`SimCluster::speeds_of`]): every dispatch derives per-worker
+//! ℓ_g(i)/ℓ_b(i) for the idle subset from each worker's own rates and the
+//! job's remaining window ([`FleetLoadParams`]), and the EA allocation runs
+//! the heterogeneity-aware search ([`crate::scheduler::allocation::allocate_fleet`]
+//! — on a uniform fleet it delegates to the Lemma-4.5 prefix path
+//! bit-for-bit, so homogeneous runs are byte-identical to the pre-fleet
+//! engine). Under churn, [`RejoinSpeeds::Sample`] lets a replacement come up
+//! as a DIFFERENT instance type, drawn from a menu via a dedicated RNG
+//! stream ([`RejoinSpeeds::Keep`], the default, consumes none).
+//!
 //! With `max_in_flight = 1`, `Arrivals::Fixed(0.0)` and deadlines counted
 //! from service start, the engine consumes the cluster RNG in exactly the
 //! round simulator's order and reproduces `sim::runner::run` throughput
@@ -50,11 +61,11 @@ use crate::coding::scheme::CodingScheme;
 use crate::coding::threshold::Design;
 use crate::markov::WState;
 use crate::scheduler::allocation;
+use crate::scheduler::success::FleetLoadParams;
 use crate::scheduler::strategy::Strategy;
-use crate::scheduler::success::LoadParams;
 use crate::sim::arrivals::Arrivals;
 use crate::sim::churn::ChurnModel;
-use crate::sim::cluster::SimCluster;
+use crate::sim::cluster::{SimCluster, Speeds};
 use crate::util::rng::Rng;
 
 /// What a job's deadline is measured from.
@@ -66,6 +77,21 @@ pub enum DeadlineFrom {
     /// `service start + d` — the round simulator's semantics, where waiting
     /// time does not exist. Used by the runner-equivalence regression.
     ServiceStart,
+}
+
+/// What instance type a replacement worker comes up with after a
+/// preemption (the churn rejoin's speed-sampling policy).
+#[derive(Clone, Debug)]
+pub enum RejoinSpeeds {
+    /// The replacement has the slot's existing speed pair — the pre-fleet
+    /// behavior. Consumes no RNG, so runs without speed churn stay
+    /// byte-identical.
+    Keep,
+    /// The replacement's instance type is drawn uniformly from this menu
+    /// (spot markets backfill from whatever capacity pool has room). Draws
+    /// come from a dedicated RNG stream, so the arrival/cluster/churn
+    /// streams are untouched.
+    Sample(Vec<Speeds>),
 }
 
 /// Configuration of one traffic run.
@@ -84,6 +110,9 @@ pub struct TrafficConfig {
     /// Worker preemption/rejoin process; [`ChurnModel::none`] fixes the
     /// fleet (the paper's setting).
     pub churn: ChurnModel,
+    /// Instance type of churn replacements; [`RejoinSpeeds::Keep`] (the
+    /// default) preserves each slot's speeds.
+    pub rejoin_speeds: RejoinSpeeds,
 }
 
 impl TrafficConfig {
@@ -103,12 +132,19 @@ impl TrafficConfig {
             max_in_flight: 0,
             deadline_from: DeadlineFrom::Arrival,
             churn: ChurnModel::none(),
+            rejoin_speeds: RejoinSpeeds::Keep,
         }
     }
 
     /// Builder: replace the churn process.
     pub fn with_churn(mut self, churn: ChurnModel) -> Self {
         self.churn = churn;
+        self
+    }
+
+    /// Builder: replace the churn rejoin speed-sampling policy.
+    pub fn with_rejoin_speeds(mut self, rejoin_speeds: RejoinSpeeds) -> Self {
+        self.rejoin_speeds = rejoin_speeds;
         self
     }
 }
@@ -156,6 +192,7 @@ pub fn run_traffic(
         cluster,
         rng: Rng::new(seed),
         churn_rng: Rng::new(seed ^ 0x6368_7572_6e21), // "churn!"
+        speed_rng: Rng::new(seed ^ 0x7265_7479_7065), // "retype"
         arrivals: cfg.arrivals.clone(),
         events: EventQueue::new(),
         queue: AdmissionQueue::new(cfg.policy),
@@ -189,6 +226,10 @@ struct Engine<'a> {
     /// Dedicated stream for the churn process: untouched (and untouching)
     /// when churn is disabled, so fixed-fleet runs are byte-identical.
     churn_rng: Rng,
+    /// Dedicated stream for [`RejoinSpeeds::Sample`] draws: consumed only
+    /// when a replacement actually retypes, so `Keep` runs (and all runs
+    /// without churn) are byte-identical to the pre-fleet engine.
+    speed_rng: Rng,
     arrivals: Arrivals,
     events: EventQueue,
     queue: AdmissionQueue,
@@ -390,6 +431,12 @@ impl Engine<'_> {
         self.live += 1;
         self.metrics.on_join();
         self.cluster.reset_worker(worker);
+        if let RejoinSpeeds::Sample(menu) = &self.cfg.rejoin_speeds {
+            if !menu.is_empty() {
+                let pick = self.speed_rng.below(menu.len() as u64) as usize;
+                self.cluster.set_worker_speeds(worker, menu[pick]);
+            }
+        }
         self.strategy.on_worker_join(worker);
         let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
         self.events
@@ -471,33 +518,35 @@ impl Engine<'_> {
                 self.metrics.on_loss(JobFate::ExpiredInQueue);
                 continue;
             }
-            let speeds = self.cluster.speeds;
             let geo = class.scheme.geometry;
-            let params = LoadParams::from_rates(
-                idle.len(),
-                geo.r,
-                class.scheme.kstar(),
-                speeds.mu_g,
-                speeds.mu_b,
-                d_eff,
-            );
-            let feasible_idle = params.feasible(params.n);
+            // Per-worker load geometry over the idle subset: each worker's
+            // own speeds and the remaining window give its ℓ_g/ℓ_b.
+            let rates: Vec<(f64, f64)> = idle
+                .iter()
+                .map(|&w| {
+                    let s = self.cluster.speeds_of(w);
+                    (s.mu_g, s.mu_b)
+                })
+                .collect();
+            let params = FleetLoadParams::from_rates(geo.r, class.scheme.kstar(), &rates, d_eff);
+            let feasible_idle = params.feasible_all();
             // Feasibility against the LIVE fleet, not the nominal n: under
             // churn a departed worker cannot save a waiting job, so holding
             // for it would park the job until expiry. Only EDF consults it,
             // and only when the idle subset falls short — keep the second
-            // `from_rates` off the hot path otherwise.
+            // pass off the hot path otherwise.
             let feasible_live = !feasible_idle
                 && self.cfg.policy == Policy::EdfFeasible
-                && LoadParams::from_rates(
-                    self.live,
-                    geo.r,
-                    class.scheme.kstar(),
-                    speeds.mu_g,
-                    speeds.mu_b,
-                    d_eff,
-                )
-                .feasible(self.live);
+                && self
+                    .workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, slot)| slot.live)
+                    .map(|(w, _)| {
+                        ((self.cluster.speeds_of(w).mu_g * d_eff).floor() as usize).min(geo.r)
+                    })
+                    .sum::<usize>()
+                    >= class.scheme.kstar();
             match dispatch_verdict(self.cfg.policy, feasible_idle, feasible_live) {
                 DispatchVerdict::Serve => {}
                 DispatchVerdict::Hold => break,
@@ -515,7 +564,7 @@ impl Engine<'_> {
 
     /// Allocate over the idle live subset, advance the participants' state
     /// processes by their true idle gaps, and schedule the outcome.
-    fn dispatch(&mut self, job: Job, idle: &[usize], params: &LoadParams, d_eff: f64) {
+    fn dispatch(&mut self, job: Job, idle: &[usize], params: &FleetLoadParams, d_eff: f64) {
         let n = self.workers.len();
         let profile = self
             .strategy
@@ -523,7 +572,7 @@ impl Engine<'_> {
             .unwrap_or_else(|| vec![0.5; n]);
         debug_assert_eq!(profile.len(), n);
         let ps: Vec<f64> = idle.iter().map(|&i| profile[i]).collect();
-        let alloc = allocation::allocate(params, &ps);
+        let alloc = allocation::allocate_fleet(params, &ps);
 
         // Participants: loaded workers, ascending id (idle is ascending, so
         // the shared cluster RNG is consumed deterministically).
@@ -553,14 +602,15 @@ impl Engine<'_> {
 
         let window_end = self.now + d_eff;
         // The deadline-completion rule (incl. its epsilon convention) is the
-        // round simulator's, via the same code path.
+        // round simulator's, via the same code path — judged against each
+        // PARTICIPANT's own speeds, not positional ones.
         let mut completed = Vec::with_capacity(workers_v.len());
         self.cluster
-            .completed_into(&states, &loads_v, d_eff, &mut completed);
+            .completed_subset_into(&workers_v, &states, &loads_v, d_eff, &mut completed);
         let mut finish = Vec::with_capacity(workers_v.len());
         let mut gens = Vec::with_capacity(workers_v.len());
         for (i, &w) in workers_v.iter().enumerate() {
-            let rate = self.cluster.speeds.rate(states[i]);
+            let rate = self.cluster.rate(w, states[i]);
             let t_fin = if rate > 0.0 {
                 self.now + loads_v[i] as f64 / rate
             } else {
@@ -682,13 +732,7 @@ mod tests {
     fn overload_cfg(policy: Policy, jobs: u64) -> TrafficConfig {
         // ~2 jobs/sec against a server that needs d = 1s of most of the
         // cluster per job: heavily overloaded.
-        TrafficConfig::single_class(
-            jobs,
-            Arrivals::poisson(2.0),
-            1.0,
-            fig3_geometry(),
-            policy,
-        )
+        TrafficConfig::single_class(jobs, Arrivals::poisson(2.0), 1.0, fig3_geometry(), policy)
     }
 
     fn run_policy(policy: Policy, jobs: u64, seed: u64) -> TrafficMetrics {
@@ -830,6 +874,7 @@ mod tests {
             max_in_flight: 0,
             deadline_from: DeadlineFrom::Arrival,
             churn: ChurnModel::none(),
+            rejoin_speeds: RejoinSpeeds::Keep,
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);
@@ -996,6 +1041,7 @@ mod tests {
             cluster: &mut cl,
             rng: Rng::new(1),
             churn_rng: Rng::new(2),
+            speed_rng: Rng::new(3),
             arrivals: cfg.arrivals.clone(),
             events: EventQueue::new(),
             queue: AdmissionQueue::new(cfg.policy),
@@ -1071,6 +1117,92 @@ mod tests {
         e.handle_queue_expiry(42);
         assert_eq!(e.metrics.expired_in_queue, 0);
         assert!(e.jobs.contains_key(&42), "expiry must not settle a served job");
+    }
+
+    #[test]
+    fn mixed_fleet_dispatch_respects_per_worker_loads() {
+        // 8 fast + 7 slow workers: the engine must run (no homogeneity
+        // assumption anywhere on the dispatch path), account every arrival,
+        // and complete jobs despite the slow half's smaller ℓ_g.
+        let chains = vec![TwoState::new(0.8, 0.8); 15];
+        let slow = Speeds {
+            mu_g: 6.0,
+            mu_b: 2.0,
+        };
+        let mut profile = vec![fig3_speeds(); 8];
+        profile.resize(15, slow);
+        let mut cl = SimCluster::markov_fleet(&chains, &profile, 31);
+        let rates: Vec<(f64, f64)> = profile.iter().map(|s| (s.mu_g, s.mu_b)).collect();
+        let fleet = FleetLoadParams::from_rates(10, fig3_geometry().kstar(), &rates, 1.0);
+        let mut lea = Lea::for_fleet(fleet, RejoinPolicy::Carryover);
+        let cfg = TrafficConfig::single_class(
+            400,
+            Arrivals::poisson(0.5),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        );
+        let m = run_traffic(&mut lea, &mut cl, &cfg, 31);
+        assert_eq!(m.arrivals, 400);
+        assert_eq!(
+            m.arrivals,
+            m.completed
+                + m.missed_service
+                + m.dropped_at_arrival
+                + m.dropped_infeasible
+                + m.expired_in_queue
+        );
+        assert!(m.completed > 0, "mixed fleet completed nothing");
+    }
+
+    #[test]
+    fn uniform_fleet_construction_routes_are_byte_identical() {
+        // The same engine run with the cluster built via the homogeneous
+        // constructor vs an explicitly replicated per-worker profile: the
+        // refactor's delegation must make them byte-identical.
+        let run_with = |fleet: bool| {
+            let chain = TwoState::new(0.8, 0.8);
+            let mut cl = if fleet {
+                SimCluster::markov_fleet(&vec![chain; 15], &vec![fig3_speeds(); 15], 77)
+            } else {
+                SimCluster::markov(15, chain, fig3_speeds(), 77)
+            };
+            let mut lea = Lea::new(fig3_load_params());
+            let cfg = overload_cfg(Policy::EdfFeasible, 300);
+            run_traffic(&mut lea, &mut cl, &cfg, 77).to_json().to_string()
+        };
+        assert_eq!(run_with(false), run_with(true));
+    }
+
+    #[test]
+    fn rejoin_speed_sampling_draws_from_a_dedicated_stream() {
+        let churn = ChurnModel::spot(0.3, 2.0);
+        let run_with = |rejoin_speeds: RejoinSpeeds| {
+            let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Carryover);
+            let mut cl = cluster(55);
+            let cfg = TrafficConfig::single_class(
+                500,
+                Arrivals::poisson(0.6),
+                1.0,
+                fig3_geometry(),
+                Policy::AdmitAll,
+            )
+            .with_churn(churn)
+            .with_rejoin_speeds(rejoin_speeds);
+            run_traffic(&mut lea, &mut cl, &cfg, 55).to_json().to_string()
+        };
+        let keep = run_with(RejoinSpeeds::Keep);
+        // A one-entry menu equal to the fleet's own speeds retypes every
+        // rejoin to the SAME instance type: the dedicated stream is consumed
+        // but nothing observable changes.
+        let same = run_with(RejoinSpeeds::Sample(vec![fig3_speeds()]));
+        assert_eq!(keep, same, "no-op retype must not perturb the run");
+        // A genuinely slower replacement pool changes the outcome.
+        let degraded = run_with(RejoinSpeeds::Sample(vec![Speeds {
+            mu_g: 4.0,
+            mu_b: 1.0,
+        }]));
+        assert_ne!(keep, degraded, "speed churn must be observable");
     }
 
     #[test]

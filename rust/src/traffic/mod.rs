@@ -36,6 +36,6 @@ pub mod metrics;
 
 pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
-pub use engine::{run_traffic, DeadlineFrom, TrafficConfig};
+pub use engine::{run_traffic, DeadlineFrom, RejoinSpeeds, TrafficConfig};
 pub use job::{JobClass, JobFate};
 pub use metrics::TrafficMetrics;

@@ -1,0 +1,369 @@
+//! Bench-regression gate (`lea bench-check`): compare fresh `BENCH_*.json`
+//! smoke artifacts against committed baselines.
+//!
+//! The CI `bench-smoke` job runs every bench binary in `BENCH_SMOKE=1` mode
+//! and then runs this check against `rust/ci/bench-baselines/`. Semantics:
+//!
+//! - **Structural**: every case name and note key present in the baseline
+//!   must appear in the fresh artifact (a silently dropped bench case is a
+//!   regression in itself), and every fresh figure must be finite (and
+//!   positive for timings).
+//! - **Numeric**: per-case `mean_ns` and per-note values must stay within a
+//!   relative factor (`--tolerance`, default 4x) of the baseline. Smoke
+//!   timings on shared CI runners are noisy, so the tolerance is a wide
+//!   order-of-magnitude tripwire, not a microbenchmark judgment.
+//! - **Provisional bootstrap**: a baseline carrying `"provisional": true`
+//!   (committed before any toolchain has produced real numbers) runs the
+//!   structural checks only and downgrades key mismatches to warnings; the
+//!   gate stays green until an operator replaces the file with a real CI
+//!   artifact, at which point the numeric comparison becomes binding. See
+//!   EXPERIMENTS.md §Baselines for the replacement workflow.
+
+use crate::util::json::Json;
+
+/// Outcome of checking one `BENCH_<name>.json` pair.
+#[derive(Clone, Debug)]
+pub struct FileCheck {
+    /// Bench name (the `<name>` in `BENCH_<name>.json`).
+    pub name: String,
+    /// Baseline was a provisional placeholder (structural checks only).
+    pub provisional: bool,
+    /// Number of numeric figures actually compared against the baseline.
+    pub compared: usize,
+    /// Hard failures: the gate fails if any file has one.
+    pub failures: Vec<String>,
+    /// Non-fatal notes (provisional key mismatches, skipped figures).
+    pub warnings: Vec<String>,
+}
+
+impl FileCheck {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// True when every file check passed.
+pub fn passed(checks: &[FileCheck]) -> bool {
+    checks.iter().all(FileCheck::ok)
+}
+
+fn fresh_cases(fresh: &Json) -> Vec<(String, f64)> {
+    fresh
+        .get("cases")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|c| {
+                    let name = c.get("name")?.as_str()?.to_string();
+                    let mean = c.get("mean_ns")?.as_f64()?;
+                    Some((name, mean))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn notes_map(j: &Json) -> Vec<(String, f64)> {
+    match j.get("notes") {
+        Some(Json::Obj(m)) => m
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// Compare one baseline/fresh artifact pair.
+pub fn compare_logs(name: &str, baseline: &Json, fresh: &Json, tolerance: f64) -> FileCheck {
+    assert!(tolerance >= 1.0, "tolerance is a relative factor ≥ 1");
+    let provisional = baseline
+        .get("provisional")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let mut check = FileCheck {
+        name: name.to_string(),
+        provisional,
+        compared: 0,
+        failures: Vec::new(),
+        warnings: Vec::new(),
+    };
+
+    let f_cases = fresh_cases(fresh);
+    let f_notes = notes_map(fresh);
+    if f_cases.is_empty() && f_notes.is_empty() {
+        check
+            .failures
+            .push("fresh artifact has no cases and no notes".into());
+        return check;
+    }
+    // Fresh-side sanity: timings must be positive and finite, note figures
+    // finite (a NaN here means a bench divided by a zero elapsed time).
+    for (case, mean_ns) in &f_cases {
+        if !mean_ns.is_finite() || *mean_ns <= 0.0 {
+            check
+                .failures
+                .push(format!("case '{case}': non-positive mean_ns {mean_ns}"));
+        }
+    }
+    for (key, v) in &f_notes {
+        if !v.is_finite() {
+            check.failures.push(format!("note '{key}': non-finite value"));
+        }
+    }
+
+    let b_cases = fresh_cases(baseline);
+    let b_notes = notes_map(baseline);
+    let find = |hay: &[(String, f64)], needle: &str| -> Option<f64> {
+        hay.iter().find(|(k, _)| k == needle).map(|&(_, v)| v)
+    };
+
+    for (case, base) in &b_cases {
+        match find(&f_cases, case) {
+            None if provisional => check
+                .warnings
+                .push(format!("provisional case '{case}' not in fresh artifact")),
+            None => check
+                .failures
+                .push(format!("case '{case}' missing from fresh artifact")),
+            Some(_) if provisional => {}
+            Some(got) => {
+                check.compared += 1;
+                if !(base / tolerance..=base * tolerance).contains(&got) {
+                    check.failures.push(format!(
+                        "case '{case}': mean_ns {got:.1} outside {tolerance}x of baseline {base:.1}"
+                    ));
+                }
+            }
+        }
+    }
+    for (key, base) in &b_notes {
+        match find(&f_notes, key) {
+            None if provisional => check
+                .warnings
+                .push(format!("provisional note '{key}' not in fresh artifact")),
+            None => check
+                .failures
+                .push(format!("note '{key}' missing from fresh artifact")),
+            Some(_) if provisional => {}
+            Some(got) => {
+                if !base.is_finite() || *base <= 0.0 || got <= 0.0 {
+                    check
+                        .warnings
+                        .push(format!("note '{key}': non-positive, ratio check skipped"));
+                } else {
+                    check.compared += 1;
+                    if !(base / tolerance..=base * tolerance).contains(&got) {
+                        check.failures.push(format!(
+                            "note '{key}': {got:.3} outside {tolerance}x of baseline {base:.3}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    check
+}
+
+/// Check `BENCH_<name>.json` for every requested name: baselines from
+/// `baseline_dir`, fresh artifacts from `fresh_dir`. A missing baseline is a
+/// configuration error (hard `Err`); a missing fresh artifact is a gate
+/// failure for that file (the bench did not run or did not emit).
+pub fn check_dirs(
+    baseline_dir: &str,
+    fresh_dir: &str,
+    names: &[&str],
+    tolerance: f64,
+) -> Result<Vec<FileCheck>, String> {
+    let mut out = Vec::new();
+    for name in names {
+        let base_path = format!("{baseline_dir}/BENCH_{name}.json");
+        let fresh_path = format!("{fresh_dir}/BENCH_{name}.json");
+        let base_raw = std::fs::read_to_string(&base_path)
+            .map_err(|e| format!("baseline {base_path}: {e} (commit it first)"))?;
+        let baseline = Json::parse(&base_raw)
+            .map_err(|e| format!("baseline {base_path}: invalid JSON: {e}"))?;
+        let mut check = match std::fs::read_to_string(&fresh_path) {
+            Ok(raw) => match Json::parse(&raw) {
+                Ok(fresh) => compare_logs(name, &baseline, &fresh, tolerance),
+                Err(e) => FileCheck {
+                    name: name.to_string(),
+                    provisional: false,
+                    compared: 0,
+                    failures: vec![format!("fresh {fresh_path}: invalid JSON: {e}")],
+                    warnings: Vec::new(),
+                },
+            },
+            Err(e) => FileCheck {
+                name: name.to_string(),
+                provisional: false,
+                compared: 0,
+                failures: vec![format!(
+                    "fresh {fresh_path}: {e} (did the bench run and emit its artifact?)"
+                )],
+                warnings: Vec::new(),
+            },
+        };
+        check.name = name.to_string();
+        out.push(check);
+    }
+    Ok(out)
+}
+
+/// Human-readable summary, one line per file plus any findings.
+pub fn print_report(checks: &[FileCheck]) {
+    for c in checks {
+        let verdict = if !c.ok() {
+            "FAIL"
+        } else if c.provisional {
+            "PASS (provisional baseline: structure only)"
+        } else {
+            "PASS"
+        };
+        println!(
+            "bench-check BENCH_{}.json: {verdict} ({} figures compared)",
+            c.name, c.compared
+        );
+        for w in &c.warnings {
+            println!("  warn: {w}");
+        }
+        for f in &c.failures {
+            println!("  FAIL: {f}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log(provisional: bool, mean_ns: f64, note: f64) -> Json {
+        let p = if provisional {
+            "\"provisional\":true,"
+        } else {
+            ""
+        };
+        Json::parse(&format!(
+            "{{{p}\"smoke\":true,\"cases\":[{{\"name\":\"alloc\",\"iters\":10,\
+             \"mean_ns\":{mean_ns},\"std_ns\":1.0,\"per_sec\":1.0}}],\
+             \"notes\":{{\"speedup\":{note}}}}}"
+        ))
+        .expect("test json")
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_counts_comparisons() {
+        let base = log(false, 100.0, 2.0);
+        let fresh = log(false, 250.0, 1.0);
+        let c = compare_logs("demo", &base, &fresh, 4.0);
+        assert!(c.ok(), "{:?}", c.failures);
+        assert_eq!(c.compared, 2);
+        assert!(!c.provisional);
+    }
+
+    #[test]
+    fn out_of_tolerance_fails_both_directions() {
+        let base = log(false, 100.0, 2.0);
+        for fresh_ns in [10.0, 1000.0] {
+            let fresh = log(false, fresh_ns, 2.0);
+            let c = compare_logs("demo", &base, &fresh, 4.0);
+            assert!(!c.ok(), "mean_ns {fresh_ns} should fail at 4x");
+            assert!(c.failures[0].contains("alloc"));
+        }
+    }
+
+    #[test]
+    fn missing_case_fails_but_extra_fresh_cases_are_fine() {
+        let base = Json::parse(
+            "{\"cases\":[{\"name\":\"gone\",\"mean_ns\":5.0}],\"notes\":{}}",
+        )
+        .unwrap();
+        let fresh = log(false, 100.0, 2.0);
+        let c = compare_logs("demo", &base, &fresh, 4.0);
+        assert!(!c.ok());
+        assert!(c.failures[0].contains("gone"));
+        // The reverse — baseline subset of fresh — passes: full-mode runs
+        // carry extra cases the smoke baseline does not know.
+        let c2 = compare_logs("demo", &fresh, &fresh, 4.0);
+        assert!(c2.ok());
+    }
+
+    #[test]
+    fn provisional_baseline_checks_structure_only() {
+        let base = log(true, 999_999.0, 123.0); // numbers wildly off
+        let fresh = log(false, 1.5, 0.01);
+        let c = compare_logs("demo", &base, &fresh, 4.0);
+        assert!(c.ok(), "{:?}", c.failures);
+        assert!(c.provisional);
+        assert_eq!(c.compared, 0);
+        // A provisional baseline naming an unknown case warns, not fails.
+        let base2 = Json::parse(
+            "{\"provisional\":true,\"cases\":[{\"name\":\"nope\",\"mean_ns\":1.0}],\"notes\":{}}",
+        )
+        .unwrap();
+        let c2 = compare_logs("demo", &base2, &fresh, 4.0);
+        assert!(c2.ok());
+        assert!(!c2.warnings.is_empty());
+    }
+
+    #[test]
+    fn broken_fresh_artifacts_fail() {
+        let base = log(true, 1.0, 1.0);
+        let empty = Json::parse("{\"cases\":[],\"notes\":{}}").unwrap();
+        assert!(!compare_logs("demo", &base, &empty, 4.0).ok());
+        let nan = Json::parse("{\"cases\":[{\"name\":\"alloc\",\"mean_ns\":0}],\"notes\":{}}")
+            .unwrap();
+        assert!(!compare_logs("demo", &base, &nan, 4.0).ok());
+    }
+
+    #[test]
+    fn check_dirs_round_trips_through_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "bench_check_test_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let base_dir = dir.join("base");
+        let fresh_dir = dir.join("fresh");
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&fresh_dir).unwrap();
+        std::fs::write(
+            base_dir.join("BENCH_demo.json"),
+            log(false, 100.0, 2.0).to_string(),
+        )
+        .unwrap();
+        std::fs::write(
+            fresh_dir.join("BENCH_demo.json"),
+            log(false, 150.0, 2.5).to_string(),
+        )
+        .unwrap();
+        let checks = check_dirs(
+            base_dir.to_str().unwrap(),
+            fresh_dir.to_str().unwrap(),
+            &["demo"],
+            4.0,
+        )
+        .unwrap();
+        assert_eq!(checks.len(), 1);
+        assert!(passed(&checks));
+        print_report(&checks); // must not panic
+        // Missing fresh artifact: a per-file failure, not an Err.
+        std::fs::remove_file(fresh_dir.join("BENCH_demo.json")).unwrap();
+        let checks = check_dirs(
+            base_dir.to_str().unwrap(),
+            fresh_dir.to_str().unwrap(),
+            &["demo"],
+            4.0,
+        )
+        .unwrap();
+        assert!(!passed(&checks));
+        // Missing baseline: a hard configuration error.
+        assert!(check_dirs(
+            fresh_dir.to_str().unwrap(),
+            base_dir.to_str().unwrap(),
+            &["demo"],
+            4.0
+        )
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

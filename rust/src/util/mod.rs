@@ -5,6 +5,7 @@
 //! ecosystem crates (`rand`, `serde`, `clap`, `criterion`) are replaced by the
 //! small, fully-tested implementations in this module (DESIGN.md §4).
 
+pub mod bench_check;
 pub mod bench_kit;
 pub mod cli;
 pub mod error;

@@ -15,6 +15,7 @@
 //! not change the bytes either.
 
 use timely_coded::experiments::churn::{self, ChurnGridSpec};
+use timely_coded::experiments::hetero_grid::{self, HeteroGridSpec};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
 use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
 use timely_coded::sim::arrivals::Arrivals;
@@ -91,6 +92,38 @@ fn churn_grid_dump_is_byte_identical_twice_and_across_threads() {
         assert!(c.get("work_lost").is_some());
         assert!(c.get("mean_live_workers").is_some());
     }
+}
+
+/// Layer 3c: the `lea hetero` grid — fleet-mix × deadline × admission
+/// cells with per-worker speeds — byte-identical across reruns and thread
+/// counts, with the heterogeneous cells actually exercising mixed loads.
+#[test]
+fn hetero_grid_dump_is_byte_identical_twice_and_across_threads() {
+    let spec = HeteroGridSpec::preset("small", 150, 914).expect("preset");
+    assert!(spec.cells().len() >= 12, "acceptance grid too small");
+    let serial = hetero_grid::to_json(&spec, &hetero_grid::run_grid(&spec, 1)).to_string();
+    let serial_again =
+        hetero_grid::to_json(&spec, &hetero_grid::run_grid(&spec, 1)).to_string();
+    let threaded = hetero_grid::to_json(&spec, &hetero_grid::run_grid(&spec, 5)).to_string();
+    assert_eq!(serial, serial_again, "rerun changed the hetero dump");
+    assert_eq!(serial, threaded, "thread count changed the hetero dump");
+    // A different seed actually changes the data.
+    let spec2 = HeteroGridSpec::preset("small", 150, 915).expect("preset");
+    let other = hetero_grid::to_json(&spec2, &hetero_grid::run_grid(&spec2, 5)).to_string();
+    assert_ne!(serial, other);
+    // Parseable, with the cell coordinates present and every mix row
+    // completing work.
+    let parsed = timely_coded::util::json::Json::parse(&serial).expect("valid json");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 12);
+    for c in cells {
+        assert!(c.get("mix").is_some());
+        assert!(c.get("deadline").is_some());
+        assert!(c.get("policy").is_some());
+        assert!(c.get("timely_throughput").is_some());
+    }
+    assert!(serial.contains("\"mix\":\"uniform\""));
+    assert!(serial.contains("\"mix\":\"spread\""));
 }
 
 /// The churn-0 column of the churn grid must reproduce a genuinely

@@ -1,0 +1,211 @@
+//! Heterogeneous-fleet regression suite.
+//!
+//! Three guarantees, each pinned:
+//!
+//! 1. **Homogeneous equivalence** — with every worker given identical
+//!    speeds, the per-worker code paths (fleet allocator, fleet strategies,
+//!    per-worker cluster, traffic engine) are byte-identical to the seed
+//!    homogeneous paths. The refactor must be invisible on the paper's
+//!    setting.
+//! 2. **Optimality** — on mixed-speed fleets the allocator's ℓ_g-set
+//!    matches the 2^n brute-force reference at small n (the exact-DFS
+//!    regime), and the large-n heuristic stays within a small bounded gap.
+//! 3. **Statistical win** — on a mixed fleet, heterogeneity-aware LEA beats
+//!    a speed-oblivious LEA that assumes the fleet-average speeds (the
+//!    pre-fleet behavior), by a wide, seed-stable margin.
+
+use timely_coded::coding::scheme::CodingScheme;
+use timely_coded::coding::threshold::Geometry;
+use timely_coded::markov::chain::TwoState;
+use timely_coded::scheduler::allocation::{
+    allocate, allocate_fleet, allocate_fleet_with_scratch, fleet_brute_force, FleetAllocScratch,
+};
+use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
+use timely_coded::scheduler::success::{FleetLoadParams, LoadParams};
+use timely_coded::sim::cluster::{SimCluster, Speeds};
+use timely_coded::sim::runner::{run, RunConfig};
+use timely_coded::sim::scenarios::fig3_speeds;
+use timely_coded::util::rng::Rng;
+
+/// 8 fast (10, 3) + 7 slow (6, 2) workers — the statistical mixed fleet.
+fn dual_profile() -> Vec<Speeds> {
+    let slow = Speeds {
+        mu_g: 6.0,
+        mu_b: 2.0,
+    };
+    let mut v = vec![fig3_speeds(); 8];
+    v.resize(15, slow);
+    v
+}
+
+fn fleet_params(profile: &[Speeds], r: usize, kstar: usize, d: f64) -> FleetLoadParams {
+    let rates: Vec<(f64, f64)> = profile.iter().map(|s| (s.mu_g, s.mu_b)).collect();
+    FleetLoadParams::from_rates(r, kstar, &rates, d)
+}
+
+#[test]
+fn uniform_fleet_allocation_is_byte_identical_to_seed_path() {
+    // Identical speeds ⇒ the fleet allocator must delegate to the
+    // homogeneous Lemma-4.5 search EXACTLY (loads, i*, est_success), for
+    // fresh and reused scratch alike.
+    let params = LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0);
+    let fleet = FleetLoadParams::uniform(params);
+    let mut rng = Rng::new(5);
+    let mut scratch = FleetAllocScratch::default();
+    for round in 0..300 {
+        let p_good: Vec<f64> = (0..15).map(|_| rng.f64()).collect();
+        let want = allocate(&params, &p_good);
+        assert_eq!(allocate_fleet(&fleet, &p_good), want, "round {round} (fresh)");
+        assert_eq!(
+            allocate_fleet_with_scratch(&fleet, &p_good, &mut scratch),
+            want,
+            "round {round} (reused scratch)"
+        );
+    }
+}
+
+#[test]
+fn uniform_fleet_sim_run_is_byte_identical_to_seed_path() {
+    // The full round simulator: homogeneous constructors vs per-worker
+    // profile + fleet-aware LEA. Same cluster seed, same runner seed —
+    // every reported figure must agree to the bit.
+    let geo = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 2,
+    };
+    let scheme = CodingScheme::for_geometry(geo);
+    let params = LoadParams::from_rates(15, 10, scheme.kstar(), 10.0, 3.0, 1.0);
+    let chain = TwoState::new(0.8, 0.8);
+    let cfg = RunConfig::simple(4000, 1.0);
+
+    let mut homog_cl = SimCluster::markov(15, chain, fig3_speeds(), 42);
+    let mut homog_lea = Lea::new(params);
+    let a = run(&mut homog_lea, &mut homog_cl, &scheme, &cfg, 7);
+
+    let mut fleet_cl =
+        SimCluster::markov_fleet(&vec![chain; 15], &vec![fig3_speeds(); 15], 42);
+    let mut fleet_lea =
+        Lea::for_fleet(FleetLoadParams::uniform(params), RejoinPolicy::Carryover);
+    let b = run(&mut fleet_lea, &mut fleet_cl, &scheme, &cfg, 7);
+
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+    assert_eq!(a.successes, b.successes);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.mean_est_success.to_bits(), b.mean_est_success.to_bits());
+    assert_eq!(a.mean_good_fraction.to_bits(), b.mean_good_fraction.to_bits());
+}
+
+#[test]
+fn mixed_fleet_allocator_matches_bruteforce_at_small_n() {
+    // The exact-DFS regime: random mixed geometries at n ≤ 8, allocator
+    // est_success == the 2^n exhaustive optimum.
+    let mut rng = Rng::new(71);
+    let mut scratch = FleetAllocScratch::default();
+    for trial in 0..120 {
+        let n = 3 + rng.below(6) as usize;
+        let r = 2 + rng.below(11) as usize;
+        let rates: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let mu_g = 0.5 + rng.f64() * 11.5;
+                (mu_g, rng.f64() * mu_g)
+            })
+            .collect();
+        let max_tot: usize = rates
+            .iter()
+            .map(|&(g, _)| (g.floor() as usize).min(r))
+            .sum();
+        let kstar = 1 + rng.below(max_tot.max(1) as u64 + 3) as usize;
+        let params = FleetLoadParams::from_rates(r, kstar, &rates, 1.0);
+        let p_good: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let alloc = allocate_fleet_with_scratch(&params, &p_good, &mut scratch);
+        let (_, best) = fleet_brute_force(&params, &p_good);
+        assert!(
+            (alloc.est_success - best).abs() < 1e-10,
+            "trial {trial} n={n} K*={kstar}: {} vs optimum {best}",
+            alloc.est_success
+        );
+    }
+}
+
+#[test]
+fn mixed_fleet_heuristic_is_near_optimal_at_n15() {
+    // n = 15 with every worker uncertain takes the heuristic path; pin it
+    // within a small absolute gap of the exhaustive optimum on the dual
+    // fleet (measured worst-case gap on realistic mixes is ~0.02 — the
+    // 0.05 bound leaves sampling headroom; EXPERIMENTS.md §Heterogeneity).
+    let profile = dual_profile();
+    let mut rng = Rng::new(72);
+    for kstar in [50usize, 70] {
+        let params = fleet_params(&profile, 10, kstar, 1.0);
+        assert!(params.as_uniform().is_none());
+        let p_good: Vec<f64> = (0..15).map(|_| 0.05 + 0.9 * rng.f64()).collect();
+        let alloc = allocate_fleet(&params, &p_good);
+        let (_, best) = fleet_brute_force(&params, &p_good);
+        assert!(
+            alloc.est_success <= best + 1e-10,
+            "heuristic exceeds the optimum?! {} vs {best}",
+            alloc.est_success
+        );
+        assert!(
+            best - alloc.est_success < 0.05,
+            "K*={kstar}: heuristic {} too far below optimum {best}",
+            alloc.est_success
+        );
+    }
+}
+
+/// Shared harness for the statistical comparison: run LEA with the given
+/// load geometry against the SAME mixed cluster state sequence.
+fn mixed_fleet_throughput(geometry_fleet: FleetLoadParams, seed: u64, rounds: u64) -> f64 {
+    let geo = Geometry {
+        n: 15,
+        r: 10,
+        k: 50,
+        deg_f: 1, // linear ⇒ K* = 50
+    };
+    let scheme = CodingScheme::for_geometry(geo);
+    let chain = TwoState::new(0.8, 0.8);
+    let mut cluster = SimCluster::markov_fleet(&vec![chain; 15], &dual_profile(), seed);
+    let mut lea = Lea::for_fleet(geometry_fleet, RejoinPolicy::Carryover);
+    let cfg = RunConfig::simple(rounds, 1.0);
+    run(&mut lea, &mut cluster, &scheme, &cfg, seed ^ 0x51).throughput
+}
+
+#[test]
+fn hetero_aware_lea_beats_speed_oblivious_lea_on_mixed_fleet() {
+    // The acceptance comparison: same mixed cluster (8 fast + 7 slow), same
+    // seeds. The aware LEA allocates against each worker's own ℓ_g/ℓ_b; the
+    // oblivious LEA assumes the fleet-AVERAGE speeds (ℓ_g = 8, ℓ_b = 2) —
+    // the only thing the pre-fleet code could express. Average-derived
+    // ℓ_g = 8 overloads every slow good worker (8 > 6), so the oblivious
+    // allocator keeps paying for work that cannot finish.
+    let profile = dual_profile();
+    let n = profile.len() as f64;
+    let avg_g = profile.iter().map(|s| s.mu_g).sum::<f64>() / n;
+    let avg_b = profile.iter().map(|s| s.mu_b).sum::<f64>() / n;
+    let oblivious = LoadParams::from_rates(15, 10, 50, avg_g, avg_b, 1.0);
+    assert_eq!((oblivious.lg, oblivious.lb), (8, 2));
+    let aware = fleet_params(&profile, 10, 50, 1.0);
+
+    for seed in [11u64, 22, 33] {
+        let t_aware = mixed_fleet_throughput(aware.clone(), seed, 8_000);
+        let t_obliv =
+            mixed_fleet_throughput(FleetLoadParams::uniform(oblivious), seed, 8_000);
+        assert!(
+            t_aware > 1.5 * t_obliv,
+            "seed {seed}: aware {t_aware} vs oblivious {t_obliv} — \
+             heterogeneity-awareness margin collapsed"
+        );
+        assert!(
+            t_aware > 0.8,
+            "seed {seed}: aware LEA throughput {t_aware} unexpectedly low"
+        );
+        assert!(
+            t_obliv < 0.55,
+            "seed {seed}: oblivious LEA {t_obliv} unexpectedly high — \
+             is the scenario still discriminating?"
+        );
+    }
+}

@@ -40,15 +40,12 @@ fn single_flight_engine_reproduces_round_runner() {
     let cfg = TrafficConfig {
         jobs: rounds,
         arrivals: Arrivals::Fixed(0.0),
-        classes: vec![timely_coded::traffic::JobClass::new(
-            1.0,
-            1.0,
-            fig3_geometry(),
-        )],
+        classes: vec![timely_coded::traffic::JobClass::new(1.0, 1.0, fig3_geometry())],
         policy: Policy::AdmitAll,
         max_in_flight: 1,
         deadline_from: DeadlineFrom::ServiceStart,
         churn: timely_coded::traffic::ChurnModel::none(),
+        rejoin_speeds: timely_coded::traffic::RejoinSpeeds::Keep,
     };
     let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
 
