@@ -14,6 +14,8 @@
 //!   admission policy under spot preemption/rejoin (`lea churn`).
 //! - [`hetero_grid`] — the heterogeneous-fleet grid: fleet mix × deadline ×
 //!   admission policy with per-worker speeds (`lea hetero`).
+//! - [`shard`] — the sharded-fleet grid: shard count × routing policy ×
+//!   per-shard load × churn over the multi-cluster front-end (`lea shard`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
 pub mod churn;
@@ -24,6 +26,7 @@ pub mod fig4;
 pub mod hetero_grid;
 pub mod heterogeneous;
 pub mod report;
+pub mod shard;
 pub mod sweep;
 pub mod traffic;
 

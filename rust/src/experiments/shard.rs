@@ -1,0 +1,406 @@
+//! Sharded-fleet scenario grid (`lea shard`): shard count × routing policy
+//! × per-shard offered load × churn over the multi-cluster front-end.
+//!
+//! Every cell runs C independent Fig.-3 scenario-1 clusters (one LEA each)
+//! behind the [`crate::traffic::shard`] router. The per-shard load is held
+//! constant across the C axis — total arrivals and the total arrival rate
+//! both scale with C — so a C = 16 cell answers "does the fleet keep the
+//! single-cluster throughput at 16× the traffic?", not "what happens when
+//! 16 clusters idle". The C = 1 round-robin column doubles as the
+//! regression anchor: it is byte-identical to the unsharded engine on the
+//! same derived seeds ([`run_cell_unsharded`], pinned in
+//! `tests/determinism.rs`).
+//!
+//! Like the other grids, cells fan out across OS threads with per-cell
+//! seeds derived from `(base seed, cell index)`, so the assembled JSON is
+//! byte-identical for a given seed whatever the thread count.
+
+use super::traffic::cell_seed;
+use crate::scheduler::alloc_cache::AllocCachePolicy;
+use crate::scheduler::lea::Lea;
+use crate::scheduler::strategy::Strategy;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::churn::ChurnModel;
+use crate::sim::cluster::SimCluster;
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::traffic::{
+    run_sharded, run_traffic, FleetMetrics, Policy, RoutingPolicy, ShardConfig, TrafficConfig,
+    TrafficMetrics,
+};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// Offset applied to the base seed so shard cells never share a stream with
+/// the other grids' cells at the same index.
+const SHARD_SEED_SALT: u64 = 0x7368_6172_6473; // "shards"
+
+/// Engine-seed salt within one cell (the analog of the traffic grid's
+/// `"raff"` constant).
+const SHARD_ENGINE_SALT: u64 = 0x7368_6172_6421; // "shard!"
+
+/// The grid to sweep. `rates_per_shard` are offered loads in jobs per
+/// virtual second PER SHARD (the total rate is `rate × C`), and `jobs` on
+/// the CLI is arrivals per shard (total `jobs × C`) — per-shard pressure is
+/// the controlled variable across the C axis.
+#[derive(Clone, Debug)]
+pub struct ShardGridSpec {
+    pub shard_counts: Vec<usize>,
+    pub routings: Vec<RoutingPolicy>,
+    pub rates_per_shard: Vec<f64>,
+    /// Per-worker preemption rates (0 = fixed fleets).
+    pub churn_rates: Vec<f64>,
+    /// Mean replacement delay once preempted (seconds).
+    pub mean_downtime: f64,
+    /// Per-job relative deadline.
+    pub deadline: f64,
+    /// Admission policy inside every shard.
+    pub policy: Policy,
+    /// Dispatch-path allocation-cache policy inside every shard (the CLI's
+    /// `--cache off|exact|quantized`; exact — the byte-identity-safe
+    /// default — unless overridden).
+    pub alloc_cache: AllocCachePolicy,
+    /// Arrivals simulated per shard per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl ShardGridSpec {
+    /// Named presets for the CLI: `small` is the 12-cell acceptance grid
+    /// (C ∈ {1, 4} × 3 routings × 1 load × 2 churn rates), `wide` broadens
+    /// to 36 cells with C up to 16 and a second load level.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<ShardGridSpec, String> {
+        let (shard_counts, rates_per_shard) = match name {
+            "small" => (vec![1, 4], vec![0.6]),
+            "wide" => (vec![1, 4, 16], vec![0.6, 1.2]),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(ShardGridSpec {
+            shard_counts,
+            routings: RoutingPolicy::all().to_vec(),
+            rates_per_shard,
+            churn_rates: vec![0.0, 0.2],
+            mean_downtime: 2.0,
+            deadline: 1.0,
+            policy: Policy::EdfFeasible,
+            alloc_cache: AllocCachePolicy::default_exact(),
+            jobs,
+            seed,
+        })
+    }
+
+    /// Reject degenerate grids with a message instead of a panic deep in
+    /// the runner (the CLI calls this after applying overrides).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shard_counts.is_empty() {
+            return Err("shard-count axis is empty".into());
+        }
+        if let Some(&c) = self.shard_counts.iter().find(|&&c| c == 0) {
+            return Err(format!("shard count must be ≥ 1 (got {c})"));
+        }
+        if self.routings.is_empty() {
+            return Err("routing axis is empty".into());
+        }
+        if self.rates_per_shard.is_empty() || self.churn_rates.is_empty() {
+            return Err("rate/churn axes must be non-empty".into());
+        }
+        if self.deadline.is_nan() || self.deadline <= 0.0 {
+            return Err(format!("deadline must be positive (got {})", self.deadline));
+        }
+        Ok(())
+    }
+
+    /// Cells in canonical order (shard-count-major, then routing, then
+    /// rate, then churn) — the order of the JSON dump.
+    pub fn cells(&self) -> Vec<ShardCell> {
+        let mut out = Vec::new();
+        for &shards in &self.shard_counts {
+            for &routing in &self.routings {
+                for &rate in &self.rates_per_shard {
+                    for &churn_rate in &self.churn_rates {
+                        out.push(ShardCell {
+                            idx: out.len(),
+                            shards,
+                            routing,
+                            rate,
+                            churn_rate,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (shard count, routing, per-shard rate, churn rate) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCell {
+    pub idx: usize,
+    pub shards: usize,
+    pub routing: RoutingPolicy,
+    /// Offered load per shard (jobs/s); the cell's total is `rate × shards`.
+    pub rate: f64,
+    pub churn_rate: f64,
+}
+
+/// A cell plus its measured fleet metrics.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    pub cell: ShardCell,
+    pub metrics: FleetMetrics,
+}
+
+/// Per-shard cluster seed within one cell: shard 0 gets the cell seed
+/// itself (the byte-identity anchor against the unsharded engine), the
+/// rest decorrelated derivations.
+fn shard_cluster_seed(cell_seed: u64, shard: usize) -> u64 {
+    if shard == 0 {
+        cell_seed
+    } else {
+        super::traffic::cell_seed(cell_seed, shard)
+    }
+}
+
+/// The cell's shared traffic config (per-shard pressure scaled to C).
+fn cell_traffic(cell: &ShardCell, spec: &ShardGridSpec) -> TrafficConfig {
+    TrafficConfig::single_class(
+        spec.jobs * cell.shards as u64,
+        Arrivals::poisson(cell.rate * cell.shards as f64),
+        spec.deadline,
+        fig3_geometry(),
+        spec.policy,
+    )
+    .with_churn(ChurnModel::spot(cell.churn_rate, spec.mean_downtime))
+    .with_alloc_cache(spec.alloc_cache)
+}
+
+/// The cell's shared derived inputs: (cell seed, per-shard LEA geometry,
+/// engine config). ONE construction path for both [`run_cell`] and its
+/// unsharded reference — the byte-identity anchor compares configurations
+/// built here, never a copy.
+fn cell_setup(cell: &ShardCell, spec: &ShardGridSpec) -> (u64, LoadParams, TrafficConfig) {
+    let seed = cell_seed(spec.seed ^ SHARD_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        spec.deadline,
+    );
+    (seed, params, cell_traffic(cell, spec))
+}
+
+/// Shard `s`'s cluster for a cell with seed `seed` (shard 0 = the seed
+/// itself, the unsharded anchor).
+fn cell_cluster(seed: u64, shard: usize) -> SimCluster {
+    SimCluster::markov(
+        fig3_geometry().n,
+        fig3_scenarios()[0].chain(),
+        fig3_speeds(),
+        shard_cluster_seed(seed, shard),
+    )
+}
+
+/// Run one cell: C fresh Fig.-3 scenario-1 clusters, one fresh LEA each,
+/// and the sharded front-end with the cell's routing policy.
+pub fn run_cell(cell: &ShardCell, spec: &ShardGridSpec) -> ShardRow {
+    let (seed, params, traffic) = cell_setup(cell, spec);
+    let mut strategies: Vec<Box<dyn Strategy>> = (0..cell.shards)
+        .map(|_| Box::new(Lea::new(params)) as Box<dyn Strategy>)
+        .collect();
+    let mut clusters: Vec<SimCluster> = (0..cell.shards).map(|s| cell_cluster(seed, s)).collect();
+    let cfg = ShardConfig {
+        shards: cell.shards,
+        routing: cell.routing,
+        traffic,
+    };
+    let metrics = run_sharded(&mut strategies, &mut clusters, &cfg, seed ^ SHARD_ENGINE_SALT);
+    ShardRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// The unsharded reference for a C = 1 cell: the SAME cluster seed, LEA,
+/// traffic config and engine seed (`cell_setup`/`cell_cluster` — the
+/// construction path [`run_cell`] itself uses), run through the
+/// single-cluster [`run_traffic`] instead of the router. `None` for
+/// multi-shard cells. `tests/determinism.rs` pins
+/// `run_cell(..).metrics.shards[0]` byte-identical to this for every
+/// C = 1 round-robin cell.
+pub fn run_cell_unsharded(cell: &ShardCell, spec: &ShardGridSpec) -> Option<TrafficMetrics> {
+    if cell.shards != 1 {
+        return None;
+    }
+    let (seed, params, cfg) = cell_setup(cell, spec);
+    let mut lea = Lea::new(params);
+    let mut cluster = cell_cluster(seed, 0);
+    Some(run_traffic(&mut lea, &mut cluster, &cfg, seed ^ SHARD_ENGINE_SALT))
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared `super::fan_out` runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
+pub fn run_grid(spec: &ShardGridSpec, threads: usize) -> Vec<ShardRow> {
+    let cells = spec.cells();
+    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell; each
+/// cell carries the full [`FleetMetrics`] serialization, per-shard metrics
+/// included).
+pub fn to_json(spec: &ShardGridSpec, rows: &[ShardRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("fleet metrics serialize to an object"),
+            };
+            obj.insert("routing".into(), Json::str(r.cell.routing.name()));
+            obj.insert("rate_per_shard".into(), Json::num(r.cell.rate));
+            obj.insert("churn_rate".into(), Json::num(r.cell.churn_rate));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("shard-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs_per_shard", Json::num(spec.jobs as f64)),
+        ("deadline", Json::num(spec.deadline)),
+        ("policy", Json::str(spec.policy.name())),
+        ("alloc_cache", Json::str(spec.alloc_cache.name())),
+        ("mean_downtime", Json::num(spec.mean_downtime)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns: fleet throughput per shard
+/// count and routing policy, with the imbalance integral the router exists
+/// to shrink.
+pub fn print(rows: &[ShardRow]) {
+    bench_kit::table(
+        "Shard grid — Fig.-3 scenario-1 clusters behind a router, LEA per shard",
+        &[
+            "C", "rate/C", "churn", "timely", "goodput", "imbal", "max share", "alloc hit",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                (
+                    format!("{:<12} #{:02}", r.cell.routing.name(), r.cell.idx),
+                    vec![
+                        r.cell.shards as f64,
+                        r.cell.rate,
+                        r.cell.churn_rate,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.mean_imbalance(),
+                        m.max_routed_share(),
+                        m.alloc_hit_rate(),
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ShardGridSpec {
+        ShardGridSpec {
+            shard_counts: vec![1, 3],
+            routings: vec![RoutingPolicy::RoundRobin, RoutingPolicy::Jsq],
+            rates_per_shard: vec![0.8],
+            churn_rates: vec![0.0],
+            mean_downtime: 2.0,
+            deadline: 1.0,
+            policy: Policy::EdfFeasible,
+            alloc_cache: AllocCachePolicy::default_exact(),
+            jobs: 60,
+            seed: 19,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = ShardGridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 12);
+        assert!(small.validate().is_ok());
+        let wide = ShardGridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 36);
+        assert!(wide.cells().iter().any(|c| c.shards == 16));
+        assert!(ShardGridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_axes() {
+        let mut s = tiny_spec();
+        s.shard_counts = vec![];
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.shard_counts = vec![2, 0];
+        assert!(s.validate().unwrap_err().contains("≥ 1"));
+        let mut s = tiny_spec();
+        s.routings.clear();
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.deadline = 0.0;
+        assert!(s.validate().is_err());
+        assert!(tiny_spec().validate().is_ok());
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"experiment\":\"shard-grid\""));
+        assert!(serial.contains("\"routing\":\"jsq\""));
+        assert!(serial.contains("\"per_shard\""));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order_with_scaled_arrivals() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            // Per-shard pressure: total arrivals scale with C.
+            assert_eq!(r.metrics.arrivals(), spec.jobs * r.cell.shards as u64);
+            assert_eq!(r.metrics.shards.len(), r.cell.shards);
+            assert!(r.metrics.completed() > 0, "cell {i} completed nothing");
+        }
+    }
+
+    #[test]
+    fn single_shard_cells_match_the_unsharded_engine() {
+        // The grid-level byte-identity anchor (also pinned, over the full
+        // small preset, in tests/determinism.rs).
+        let spec = tiny_spec();
+        for cell in spec.cells() {
+            match run_cell_unsharded(&cell, &spec) {
+                None => assert!(cell.shards > 1),
+                Some(unsharded) => {
+                    let sharded = run_cell(&cell, &spec);
+                    if cell.routing == RoutingPolicy::RoundRobin {
+                        assert_eq!(
+                            sharded.metrics.shards[0].to_json().to_string(),
+                            unsharded.to_json().to_string(),
+                            "cell {} diverged from the unsharded engine",
+                            cell.idx
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -13,8 +13,11 @@
 //! - [`sim`] — a deterministic round simulator + scenario registry reproducing
 //!   Fig. 3 and the convergence study.
 //! - [`traffic`] — the event-driven multi-job engine: open-loop arrivals,
-//!   admission control, per-job allocation over idle-worker subsets, and
-//!   the elastic fleet (spot preemption/rejoin churn, `sim::churn`).
+//!   admission control, per-job allocation over idle-worker subsets, the
+//!   elastic fleet (spot preemption/rejoin churn, `sim::churn`), and the
+//!   sharded multi-cluster front-end (`traffic::shard`: C clusters behind
+//!   a round-robin / JSQ / power-of-two router, dispatch-path allocation
+//!   caching via `scheduler::alloc_cache`).
 //! - [`runtime`] — PJRT (xla crate, `pjrt` feature) loader for the
 //!   AOT-compiled JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the threaded master/worker cluster that runs real PJRT

@@ -15,6 +15,11 @@
 //!                 [--jobs N] [--seed S] [--dump churn.json]
 //! lea hetero      [--grid small|wide] [--threads T]        heterogeneous-fleet grid
 //!                 [--jobs N] [--seed S] [--dump hetero.json] [--study]
+//!                 [--mixes uniform,dual,...]
+//! lea shard       [--grid small|wide] [--threads T]        sharded multi-cluster grid
+//!                 [--jobs N] [--seed S] [--dump shard.json]
+//!                 [--shards 1,4,16] [--routing rr,jsq,po2] [--deadline D]
+//!                 [--cache off|exact|quantized]
 //! lea bench-check [--baseline DIR] [--fresh DIR]           bench-regression gate
 //!                 [--tolerance X] [--names a,b,...]
 //! lea report      [--out report.json] [--fast]             everything + JSON
@@ -23,15 +28,19 @@
 use timely_coded::exec::driver::{run_e2e, E2eConfig};
 use timely_coded::exec::master::Engine;
 use timely_coded::experiments::churn::ChurnGridSpec;
-use timely_coded::experiments::hetero_grid::HeteroGridSpec;
+use timely_coded::experiments::hetero_grid::{FleetMix, HeteroGridSpec};
+use timely_coded::experiments::shard::ShardGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
 use timely_coded::experiments::{
-    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, sweep, traffic,
+    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, sweep,
+    traffic,
 };
+use timely_coded::scheduler::alloc_cache::AllocCachePolicy;
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
 use timely_coded::scheduler::success::LoadParams;
 use timely_coded::sim::scenarios::fig3_scenarios;
+use timely_coded::traffic::RoutingPolicy;
 use timely_coded::util::bench_check;
 use timely_coded::util::cli::Args;
 
@@ -48,6 +57,16 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// The grid runners' shared `--threads` handling: default to the machine's
+/// parallelism, reject `--threads 0` with a clear error (one definition —
+/// every grid subcommand must behave identically).
+fn threads_arg(args: &Args) -> Result<usize, String> {
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    args.usize_at_least("threads", default_threads, 1)
 }
 
 fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
@@ -180,15 +199,20 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 heterogeneous::print(&res);
                 return Ok(());
             }
-            let spec = HeteroGridSpec::preset(
+            let mut spec = HeteroGridSpec::preset(
                 args.get_or("grid", "small"),
                 args.u64("jobs", 2000)?,
                 args.u64("seed", 2024)?,
             )?;
-            let default_threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4);
-            let threads = args.usize("threads", default_threads)?;
+            // `--mixes a,b,c` overrides the preset's fleet-mix axis; an
+            // empty or unknown list is a clear error, not an empty grid.
+            if let Some(items) = args.csv("mixes")? {
+                spec.mixes = items
+                    .iter()
+                    .map(|s| FleetMix::parse(s))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            let threads = threads_arg(args)?;
             let cells = spec.cells().len();
             let t0 = std::time::Instant::now();
             let rows = hetero_grid::run_grid(&spec, threads);
@@ -207,11 +231,58 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 println!("wrote {path}");
             }
         }
+        "shard" => {
+            let mut spec = ShardGridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
+                args.u64("seed", 2024)?,
+            )?;
+            // Axis overrides; validated below so `--shards 0` or an empty
+            // routing list fails loudly instead of panicking mid-grid.
+            if let Some(items) = args.csv("shards")? {
+                spec.shard_counts = items
+                    .iter()
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| format!("--shards: expected integers, got '{s}'"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            if let Some(items) = args.csv("routing")? {
+                spec.routings = items
+                    .iter()
+                    .map(|s| RoutingPolicy::parse(s))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            spec.deadline = args.f64_positive("deadline", spec.deadline)?;
+            if let Some(cache) = args.get("cache") {
+                spec.alloc_cache = AllocCachePolicy::parse(cache)?;
+            }
+            spec.validate()?;
+            let threads = threads_arg(args)?;
+            let cells = spec.cells().len();
+            let t0 = std::time::Instant::now();
+            let rows = shard::run_grid(&spec, threads);
+            shard::print(&rows);
+            let events: u64 = rows.iter().map(|r| r.metrics.events()).sum();
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "\n{cells} cells x {} jobs/shard on {threads} threads: {events} events in \
+                 {secs:.2}s ({:.0} events/s)",
+                spec.jobs,
+                events as f64 / secs.max(1e-9)
+            );
+            if let Some(path) = args.get("dump") {
+                let j = shard::to_json(&spec, &rows);
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
         "bench-check" => {
             let baseline_dir = args.get_or("baseline", "ci/bench-baselines");
             let fresh_dir = args.get_or("fresh", ".");
             let tolerance = args.f64("tolerance", 4.0)?;
-            let names_raw = args.get_or("names", "coding,traffic,churn,hetero");
+            let names_raw = args.get_or("names", "coding,traffic,churn,hetero,shard");
             let names: Vec<&str> = names_raw.split(',').filter(|s| !s.is_empty()).collect();
             let checks = bench_check::check_dirs(baseline_dir, fresh_dir, &names, tolerance)?;
             bench_check::print_report(&checks);
@@ -225,10 +296,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 args.u64("jobs", 2000)?,
                 args.u64("seed", 2024)?,
             )?;
-            let default_threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4);
-            let threads = args.usize("threads", default_threads)?;
+            let threads = threads_arg(args)?;
             let cells = spec.cells().len();
             let t0 = std::time::Instant::now();
             let rows = run_grid(&spec, threads);
@@ -253,10 +321,7 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 args.u64("jobs", 2000)?,
                 args.u64("seed", 2024)?,
             )?;
-            let default_threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4);
-            let threads = args.usize("threads", default_threads)?;
+            let threads = threads_arg(args)?;
             let cells = spec.cells().len();
             let t0 = std::time::Instant::now();
             let rows = churn::run_grid(&spec, threads);
@@ -314,8 +379,19 @@ SUBCOMMANDS
                fleet-mix (uniform|dual|spread|outliers) x deadline x
                admission-policy cells, thread-fanned
                (--grid small|wide [12|36 cells], --threads T, --jobs N,
-                --seed S, --dump hetero.json; same seed => byte-identical;
-                --study runs the pre-fleet π_g,i-spectrum chain study)
+                --seed S, --mixes uniform,dual,..., --dump hetero.json;
+                same seed => byte-identical; --study runs the pre-fleet
+                π_g,i-spectrum chain study)
+  shard        sharded multi-cluster grid: C independent clusters behind a
+               router on one global event queue — shard-count x routing
+               (round-robin|jsq|po2) x per-shard load x churn cells, with
+               fleet throughput, routing-imbalance integrals, and the
+               dispatch alloc-cache hit rate per cell
+               (--grid small|wide [12|36 cells], --threads T, --jobs N
+                per shard, --seed S, --shards 1,4,16, --routing rr,jsq,po2,
+                --deadline D, --cache off|exact|quantized, --dump
+                shard.json; same seed => byte-identical; C=1 round-robin ==
+                unsharded `lea traffic` engine byte-for-byte)
   bench-check  compare fresh BENCH_*.json smoke artifacts against the
                committed baselines in ci/bench-baselines — the CI
                bench-regression gate (--baseline DIR, --fresh DIR,

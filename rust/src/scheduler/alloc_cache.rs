@@ -1,0 +1,397 @@
+//! Memoized EA allocation for the dispatch hot path (`AllocPlanCache`).
+//!
+//! The traffic engine re-runs [`crate::scheduler::allocation::allocate_fleet`]
+//! on every dispatch, yet consecutive dispatches frequently repeat the same
+//! inputs: the p̂ profile only moves when a round resolves, the idle subset's
+//! load geometry only takes a handful of shapes, and the deadline axis is a
+//! small preset set. At million-job horizons (and with C clusters behind a
+//! router all sharing the preset geometry) recomputing the sort + censored
+//! DP per dispatch dominates the hot path. This cache memoizes the result,
+//! mirroring [`crate::coding::kernel::PlanCache`]'s bounded linear-scan LRU:
+//! capacities are small, keys are short, and the flat `Vec` keeps iteration
+//! order deterministic.
+//!
+//! The allocation is a pure function of `(kstar, ℓ_g[], ℓ_b[], p̂[])` — the
+//! deadline and the fleet subset enter *only* through the per-worker loads —
+//! so that tuple, packed into one `Vec<u64>`, is the key. Two modes
+//! ([`AllocCachePolicy`]):
+//!
+//! * **Exact** (quantization off): p̂ entries are keyed by their full f64
+//!   bit patterns. A hit can only occur on bit-identical inputs, and the
+//!   allocator is deterministic, so the cached value IS what a fresh
+//!   computation would return — byte-identical to the uncached engine,
+//!   pinned by `tests/shard_cache.rs`.
+//! * **Quantized**: p̂ entries are snapped to a uniform grid of `levels`
+//!   cells over [0, 1] and the allocation is computed FROM the snapped
+//!   profile, so every profile mapping to a key gets the same answer
+//!   regardless of which arrived first. Nearby profiles now share entries
+//!   (hit rates jump), at the cost of a slightly perturbed allocation; the
+//!   Fig.-3 acceptance bound is < 1% timely-throughput drift
+//!   (`tests/shard_cache.rs`, EXPERIMENTS.md §Sharding).
+
+use super::allocation::{allocate_fleet_with_scratch, Allocation, FleetAllocScratch};
+use super::success::FleetLoadParams;
+
+/// Default capacity for allocation-plan caches: comfortably above the
+/// (subset-shape × profile) working set the traffic presets produce while
+/// keeping the linear-scan LRU cheap.
+pub const DEFAULT_ALLOC_CACHE_CAP: usize = 128;
+
+/// Default quantization grid for [`AllocCachePolicy::Quantized`]: 64 cells
+/// over [0, 1] keeps the allocation drift well under the 1% acceptance
+/// bound while collapsing most of the estimator's per-round jitter.
+pub const DEFAULT_ALLOC_QUANT_LEVELS: u32 = 64;
+
+/// How the traffic engine memoizes EA allocations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocCachePolicy {
+    /// No cache: every dispatch recomputes (the pre-cache engine, kept for
+    /// the cache-on/off benches and as the reference the exactness tests
+    /// compare against).
+    Off,
+    /// Cache with full-bit keys: hits require bit-identical inputs, so the
+    /// engine output is byte-identical to [`AllocCachePolicy::Off`].
+    Exact { cap: usize },
+    /// Cache with p̂ snapped to `levels` grid cells: higher hit rates,
+    /// bounded allocation drift.
+    Quantized { cap: usize, levels: u32 },
+}
+
+impl AllocCachePolicy {
+    /// The engine default: exact mode at the default capacity (free wins on
+    /// repeated inputs, zero behavior change).
+    pub fn default_exact() -> Self {
+        AllocCachePolicy::Exact {
+            cap: DEFAULT_ALLOC_CACHE_CAP,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocCachePolicy::Off => "off",
+            AllocCachePolicy::Exact { .. } => "exact",
+            AllocCachePolicy::Quantized { .. } => "quantized",
+        }
+    }
+
+    /// Parse a CLI spelling: `off`, `exact`, or `quantized` (default grid).
+    pub fn parse(s: &str) -> Result<AllocCachePolicy, String> {
+        match s {
+            "off" => Ok(AllocCachePolicy::Off),
+            "exact" => Ok(AllocCachePolicy::default_exact()),
+            "quantized" | "quant" => Ok(AllocCachePolicy::Quantized {
+                cap: DEFAULT_ALLOC_CACHE_CAP,
+                levels: DEFAULT_ALLOC_QUANT_LEVELS,
+            }),
+            other => Err(format!(
+                "unknown alloc-cache policy '{other}' (off | exact | quantized)"
+            )),
+        }
+    }
+}
+
+/// Bounded LRU memo of [`allocate_fleet_with_scratch`] results, keyed by the
+/// packed `(kstar, ℓ_g[], ℓ_b[], p̂-key[])` tuple. Same structure as
+/// [`crate::coding::kernel::PlanCache`]: most-recently-used-last in a flat
+/// `Vec`, linear scan, deterministic iteration order.
+#[derive(Clone, Debug)]
+pub struct AllocPlanCache {
+    cap: usize,
+    /// 0 = exact mode (full f64 bits); otherwise the number of grid cells.
+    levels: u32,
+    entries: Vec<(Vec<u64>, Allocation)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    // Recycled per lookup (EXPERIMENTS.md §Perf rule 1).
+    key_buf: Vec<u64>,
+    ps_buf: Vec<f64>,
+    scratch: FleetAllocScratch,
+}
+
+impl AllocPlanCache {
+    /// Build from a policy; `None` for [`AllocCachePolicy::Off`].
+    pub fn from_policy(policy: AllocCachePolicy) -> Option<AllocPlanCache> {
+        match policy {
+            AllocCachePolicy::Off => None,
+            AllocCachePolicy::Exact { cap } => Some(AllocPlanCache::exact(cap)),
+            AllocCachePolicy::Quantized { cap, levels } => {
+                Some(AllocPlanCache::quantized(cap, levels))
+            }
+        }
+    }
+
+    /// Exact mode: full-bit keys, byte-identical results.
+    pub fn exact(cap: usize) -> Self {
+        AllocPlanCache::with_levels(cap, 0)
+    }
+
+    /// Quantized mode with `levels` grid cells over [0, 1] (clamped ≥ 1).
+    pub fn quantized(cap: usize, levels: u32) -> Self {
+        AllocPlanCache::with_levels(cap, levels.max(1))
+    }
+
+    fn with_levels(cap: usize, levels: u32) -> Self {
+        AllocPlanCache {
+            cap: cap.max(1),
+            levels,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            key_buf: Vec::new(),
+            ps_buf: Vec::new(),
+            scratch: FleetAllocScratch::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether lookups key on full f64 bits (⇒ byte-identical results).
+    pub fn is_exact(&self) -> bool {
+        self.levels == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Hits / (hits + misses); 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Snap a probability to the key grid (exact mode returns it unchanged;
+    /// NaN maps to 0, matching the allocator's sort-key convention so the
+    /// quantized recompute stays well-defined).
+    #[inline]
+    fn snap(&self, p: f64) -> f64 {
+        if self.levels == 0 {
+            return p;
+        }
+        let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+        let l = self.levels as f64;
+        (p * l).round() / l
+    }
+
+    /// Rebuild `key_buf` (and, in quantized mode, `ps_buf` with the snapped
+    /// profile) for this lookup.
+    fn build_key(&mut self, params: &FleetLoadParams, p_good: &[f64]) {
+        self.key_buf.clear();
+        self.key_buf.push(params.kstar as u64);
+        // Pack ℓ_g/ℓ_b pairwise; loads are ≤ r (small), two per word.
+        for i in 0..params.n() {
+            self.key_buf.push(((params.lg[i] as u64) << 32) | params.lb[i] as u64);
+        }
+        self.ps_buf.clear();
+        for &p in p_good {
+            let q = self.snap(p);
+            self.key_buf.push(q.to_bits());
+            self.ps_buf.push(q);
+        }
+    }
+
+    /// Memoized [`crate::scheduler::allocation::allocate_fleet`]: returns a
+    /// reference into the cache (callers copy out what they keep — the
+    /// engine `clone_from`s the load vector into its dispatch scratch).
+    /// In exact mode the result is bit-identical to a fresh computation; in
+    /// quantized mode it is the allocation OF THE SNAPPED PROFILE, so every
+    /// profile sharing a key gets the same answer whatever the arrival
+    /// order.
+    pub fn allocate(&mut self, params: &FleetLoadParams, p_good: &[f64]) -> &Allocation {
+        assert_eq!(p_good.len(), params.n());
+        self.build_key(params, p_good);
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == &self.key_buf) {
+            self.hits += 1;
+            // Move to back = most recently used.
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+        } else {
+            self.misses += 1;
+            let alloc = if self.levels == 0 {
+                allocate_fleet_with_scratch(params, p_good, &mut self.scratch)
+            } else {
+                allocate_fleet_with_scratch(params, &self.ps_buf, &mut self.scratch)
+            };
+            if self.entries.len() == self.cap {
+                self.entries.remove(0);
+                self.evictions += 1;
+            }
+            self.entries.push((self.key_buf.clone(), alloc));
+        }
+        &self.entries.last().expect("just pushed or moved").1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::allocation::allocate_fleet;
+    use crate::scheduler::success::LoadParams;
+    use crate::util::rng::Rng;
+
+    fn fig3_fleet(d: f64) -> FleetLoadParams {
+        FleetLoadParams::uniform(LoadParams::from_rates(15, 10, 99, 10.0, 3.0, d))
+    }
+
+    #[test]
+    fn exact_mode_hits_only_on_identical_inputs_and_matches_uncached() {
+        let mut cache = AllocPlanCache::exact(8);
+        assert!(cache.is_exact());
+        let fleet = fig3_fleet(1.0);
+        let ps: Vec<f64> = (0..15).map(|i| 0.3 + 0.04 * i as f64).collect();
+        let fresh = allocate_fleet(&fleet, &ps);
+        let a = cache.allocate(&fleet, &ps).clone();
+        assert_eq!(a, fresh);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        // Identical input: a hit, same value.
+        let b = cache.allocate(&fleet, &ps).clone();
+        assert_eq!(b, fresh);
+        assert_eq!(cache.hits(), 1);
+        // One ULP of difference: a miss, not a stale hit.
+        let mut nudged = ps.clone();
+        nudged[7] = f64::from_bits(nudged[7].to_bits() + 1);
+        let c = cache.allocate(&fleet, &nudged).clone();
+        assert_eq!(c, allocate_fleet(&fleet, &nudged));
+        assert_eq!(cache.misses(), 2);
+        // A different deadline changes ℓ_g/ℓ_b and therefore the key.
+        let fleet2 = fig3_fleet(0.8);
+        let d = cache.allocate(&fleet2, &ps).clone();
+        assert_eq!(d, allocate_fleet(&fleet2, &ps));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn exact_mode_matches_uncached_on_random_fleets() {
+        // The exactness property at unit scope; the cross-config engine
+        // byte-identity lives in tests/shard_cache.rs.
+        let mut rng = Rng::new(97);
+        let mut cache = AllocPlanCache::exact(16);
+        for trial in 0..300 {
+            let n = 3 + rng.below(10) as usize;
+            let r = 2 + rng.below(9) as usize;
+            let rates: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    let mu_g = 0.5 + rng.f64() * 11.0;
+                    (mu_g, rng.f64() * mu_g)
+                })
+                .collect();
+            let kstar = 1 + rng.below(40) as usize;
+            let d = 0.5 + rng.f64() * 1.5;
+            let params = FleetLoadParams::from_rates(r, kstar, &rates, d);
+            let ps: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let want = allocate_fleet(&params, &ps);
+            let got = cache.allocate(&params, &ps).clone();
+            assert_eq!(got, want, "trial {trial}");
+            // And again (possibly a hit — still identical).
+            let again = cache.allocate(&params, &ps).clone();
+            assert_eq!(again, want, "trial {trial} (repeat)");
+        }
+        assert!(cache.hits() >= 300, "every repeat lookup must hit");
+    }
+
+    #[test]
+    fn quantized_mode_is_arrival_order_independent() {
+        // Two profiles in the same grid cell must get the SAME allocation,
+        // whichever is seen first — the cached value is computed from the
+        // snapped profile, not the first arrival.
+        let fleet = fig3_fleet(1.0);
+        let base: Vec<f64> = (0..15).map(|i| 0.2 + 0.05 * i as f64).collect();
+        let jitter: Vec<f64> = base.iter().map(|p| p + 0.001).collect();
+        let mut ab = AllocPlanCache::quantized(8, 32);
+        let a1 = ab.allocate(&fleet, &base).clone();
+        let a2 = ab.allocate(&fleet, &jitter).clone();
+        let mut ba = AllocPlanCache::quantized(8, 32);
+        let b1 = ba.allocate(&fleet, &jitter).clone();
+        let b2 = ba.allocate(&fleet, &base).clone();
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_eq!(a1, b1, "order of first sight must not matter");
+        assert_eq!(ab.hits(), 1);
+        assert_eq!(ba.hits(), 1);
+        // The snapped allocation equals allocating the snapped profile.
+        let snapped: Vec<f64> = base.iter().map(|p| (p * 32.0).round() / 32.0).collect();
+        assert_eq!(a1, allocate_fleet(&fleet, &snapped));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_counts() {
+        let fleet = fig3_fleet(1.0);
+        let mut cache = AllocPlanCache::exact(2);
+        let mk = |v: f64| vec![v; 15];
+        cache.allocate(&fleet, &mk(0.1));
+        cache.allocate(&fleet, &mk(0.2));
+        cache.allocate(&fleet, &mk(0.1)); // refresh 0.1 to MRU
+        cache.allocate(&fleet, &mk(0.3)); // evicts 0.2
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        cache.allocate(&fleet, &mk(0.1)); // still cached
+        assert_eq!(cache.hits(), 2);
+        cache.allocate(&fleet, &mk(0.2)); // gone: a miss
+        assert_eq!(cache.misses(), 4);
+        assert!((cache.hit_rate() - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_probabilities_do_not_poison_quantized_keys() {
+        let fleet = fig3_fleet(1.0);
+        let mut cache = AllocPlanCache::quantized(4, 16);
+        let mut with_nan = vec![0.5; 15];
+        with_nan[3] = f64::NAN;
+        let mut with_zero = with_nan.clone();
+        with_zero[3] = 0.0;
+        let a = cache.allocate(&fleet, &with_nan).clone();
+        // NaN snaps to 0 ⇒ same key and same allocation as an explicit 0.
+        let b = cache.allocate(&fleet, &with_zero).clone();
+        assert_eq!(a, b);
+        assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn policy_parse_and_construction() {
+        assert_eq!(AllocCachePolicy::parse("off").unwrap(), AllocCachePolicy::Off);
+        assert!(matches!(
+            AllocCachePolicy::parse("exact").unwrap(),
+            AllocCachePolicy::Exact { .. }
+        ));
+        assert!(matches!(
+            AllocCachePolicy::parse("quantized").unwrap(),
+            AllocCachePolicy::Quantized { .. }
+        ));
+        assert!(AllocCachePolicy::parse("bogus").is_err());
+        assert!(AllocPlanCache::from_policy(AllocCachePolicy::Off).is_none());
+        let c = AllocPlanCache::from_policy(AllocCachePolicy::default_exact()).unwrap();
+        assert_eq!(c.capacity(), DEFAULT_ALLOC_CACHE_CAP);
+        for p in [
+            AllocCachePolicy::Off,
+            AllocCachePolicy::default_exact(),
+            AllocCachePolicy::Quantized { cap: 4, levels: 8 },
+        ] {
+            assert!(!p.name().is_empty());
+        }
+    }
+}

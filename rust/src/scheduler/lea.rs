@@ -136,6 +136,12 @@ impl Strategy for Lea {
         Some(self.p_good_estimates())
     }
 
+    fn p_good_profile_into(&self, out: &mut Vec<f64>) -> bool {
+        out.clear();
+        out.extend(self.estimators.iter().map(|e| e.p_good_next()));
+        true
+    }
+
     fn on_worker_join(&mut self, worker: usize) {
         if self.rejoin == RejoinPolicy::Reset {
             if let Some(e) = self.estimators.get_mut(worker) {

@@ -5,6 +5,10 @@
 //!   subset-sum, plus the ĩ-prefix linear search of Lemma 4.5.
 //! - [`allocation`] — load parameters (ℓ_g, ℓ_b of Lemma 4.4), the EA load
 //!   assignment (eq. 10) and a brute-force 2^n reference used by tests.
+//! - [`alloc_cache`] — memoized EA allocation for the dispatch hot path:
+//!   a bounded LRU keyed by (K*, per-worker loads, p̂ profile) with an
+//!   exact mode (byte-identical to uncached) and a quantized mode
+//!   (higher hit rates, bounded drift).
 //! - [`strategy`] — the `Strategy` trait shared by the simulator and the
 //!   real exec layer.
 //! - [`lea`] — Lagrange Estimate-and-Allocate (the paper's algorithm).
@@ -14,6 +18,7 @@
 //!   (known Markov model + observed previous states): the upper bound
 //!   LEA must converge to.
 
+pub mod alloc_cache;
 pub mod allocation;
 pub mod baselines;
 pub mod lea;

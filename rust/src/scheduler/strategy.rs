@@ -32,6 +32,23 @@ pub trait Strategy: Send {
         None
     }
 
+    /// Allocation-free variant of [`Strategy::p_good_profile`] for the
+    /// traffic engine's dispatch hot path: refill `out` with the profile and
+    /// return `true`, or return `false` (leaving `out` cleared) when the
+    /// strategy has no per-worker beliefs. The default delegates to
+    /// `p_good_profile`; strategies on the hot path (LEA) override it to
+    /// write straight from their estimators (EXPERIMENTS.md §Perf rule 1).
+    fn p_good_profile_into(&self, out: &mut Vec<f64>) -> bool {
+        out.clear();
+        match self.p_good_profile() {
+            Some(ps) => {
+                out.extend(ps);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Worker `worker` left the fleet (spot preemption). The elastic-fleet
     /// engine calls this when a `WorkerLeave` event fires; the slot index
     /// stays valid — a replacement will rejoin under the same id. Default:

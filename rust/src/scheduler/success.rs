@@ -9,6 +9,18 @@
 //! lets a single incremental DP serve every candidate ĩ = 0..n in O(n²)
 //! total per round.
 
+/// THE load-derivation convention: evaluations a worker at rate `mu`
+/// completes by deadline `d`, floored (a partially-finished evaluation is
+/// useless) and clamped to the `r` chunks it stores. Every site that turns
+/// a rate into a load — [`LoadParams::from_rates`],
+/// [`FleetLoadParams::from_rates`]/[`FleetLoadParams::refill_from_rates`],
+/// and the traffic engine's feasibility and routing paths — goes through
+/// this one function, so the convention cannot silently fork.
+#[inline]
+pub fn load_from_rate(mu: f64, r: usize, d: f64) -> usize {
+    ((mu * d).floor() as usize).min(r)
+}
+
 /// P(Σ Bernoulli(ps_i) ≥ a). Exact convolution DP, O(len(ps)²).
 pub fn poisson_binomial_tail(ps: &[f64], a: i64) -> f64 {
     if a <= 0 {
@@ -55,8 +67,8 @@ impl LoadParams {
     /// Floors keep loads integral (a partially-finished evaluation is useless).
     pub fn from_rates(n: usize, r: usize, kstar: usize, mu_g: f64, mu_b: f64, d: f64) -> Self {
         assert!(mu_g >= mu_b && mu_b >= 0.0 && d > 0.0);
-        let lb = ((mu_b * d).floor() as usize).min(r);
-        let lg = ((mu_g * d).floor() as usize).min(r);
+        let lb = load_from_rate(mu_b, r, d);
+        let lg = load_from_rate(mu_g, r, d);
         LoadParams::new(n, kstar, lg, lb)
     }
 
@@ -119,6 +131,19 @@ pub struct FleetLoadParams {
     uniform: Option<LoadParams>,
 }
 
+impl Default for FleetLoadParams {
+    /// The empty fleet — a placeholder for scratch slots the traffic engine
+    /// `mem::take`s and refills per dispatch ([`Self::refill_from_rates`]).
+    fn default() -> Self {
+        FleetLoadParams {
+            kstar: 0,
+            lg: Vec::new(),
+            lb: Vec::new(),
+            uniform: None,
+        }
+    }
+}
+
 impl FleetLoadParams {
     /// Build from explicit per-worker loads.
     pub fn from_loads(kstar: usize, lg: Vec<usize>, lb: Vec<usize>) -> Self {
@@ -126,20 +151,49 @@ impl FleetLoadParams {
         for (i, (&g, &b)) in lg.iter().zip(&lb).enumerate() {
             assert!(g >= b, "worker {i}: ℓ_g {g} < ℓ_b {b} is impossible");
         }
-        let uniform = match (lg.first(), lb.first()) {
-            (Some(&g0), Some(&b0))
-                if lg.iter().all(|&g| g == g0) && lb.iter().all(|&b| b == b0) =>
-            {
-                Some(LoadParams::new(lg.len(), kstar, g0, b0))
-            }
-            _ => None,
-        };
-        FleetLoadParams {
+        let mut out = FleetLoadParams {
             kstar,
             lg,
             lb,
-            uniform,
+            uniform: None,
+        };
+        out.recompute_uniform();
+        out
+    }
+
+    /// Recompute the cached homogeneous equivalent after a load edit.
+    fn recompute_uniform(&mut self) {
+        self.uniform = match (self.lg.first(), self.lb.first()) {
+            (Some(&g0), Some(&b0))
+                if self.lg.iter().all(|&g| g == g0) && self.lb.iter().all(|&b| b == b0) =>
+            {
+                Some(LoadParams::new(self.lg.len(), self.kstar, g0, b0))
+            }
+            _ => None,
+        };
+    }
+
+    /// Allocation-free rebuild in place from per-worker rates — semantics of
+    /// [`Self::from_rates`], but reusing this instance's buffers (the
+    /// traffic engine refills one scratch instance per dispatch instead of
+    /// allocating two fresh `Vec`s; EXPERIMENTS.md §Perf rule 1).
+    pub fn refill_from_rates(
+        &mut self,
+        r: usize,
+        kstar: usize,
+        rates: impl Iterator<Item = (f64, f64)>,
+        d: f64,
+    ) {
+        assert!(d > 0.0, "deadline must be positive");
+        self.kstar = kstar;
+        self.lg.clear();
+        self.lb.clear();
+        for (mu_g, mu_b) in rates {
+            assert!(mu_g >= mu_b && mu_b >= 0.0, "need μ_g ≥ μ_b ≥ 0");
+            self.lg.push(load_from_rate(mu_g, r, d));
+            self.lb.push(load_from_rate(mu_b, r, d));
         }
+        self.recompute_uniform();
     }
 
     /// Lift a homogeneous geometry into the per-worker form.
@@ -161,8 +215,8 @@ impl FleetLoadParams {
         let mut lb = Vec::with_capacity(rates.len());
         for &(mu_g, mu_b) in rates {
             assert!(mu_g >= mu_b && mu_b >= 0.0, "need μ_g ≥ μ_b ≥ 0");
-            lg.push(((mu_g * d).floor() as usize).min(r));
-            lb.push(((mu_b * d).floor() as usize).min(r));
+            lg.push(load_from_rate(mu_g, r, d));
+            lb.push(load_from_rate(mu_b, r, d));
         }
         FleetLoadParams::from_loads(kstar, lg, lb)
     }
@@ -547,6 +601,34 @@ mod tests {
         let f2 = FleetLoadParams::from_rates(10, 99, &rates, 1.0);
         assert_eq!(f2.as_uniform(), Some(p));
         assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn load_from_rate_floors_and_clamps() {
+        assert_eq!(load_from_rate(10.0, 10, 1.0), 10);
+        assert_eq!(load_from_rate(10.0, 8, 1.0), 8); // clamped to r
+        assert_eq!(load_from_rate(3.0, 10, 1.4), 4); // ⌊4.2⌋
+        assert_eq!(load_from_rate(0.5, 10, 1.4), 0); // ⌊0.7⌋
+        assert_eq!(load_from_rate(0.0, 10, 1.0), 0);
+    }
+
+    #[test]
+    fn fleet_refill_matches_from_rates() {
+        let rates = vec![(10.0, 3.0), (6.0, 2.0), (3.0, 0.5)];
+        let want = FleetLoadParams::from_rates(10, 50, &rates, 1.4);
+        let mut scratch = FleetLoadParams::default();
+        assert_eq!(scratch.n(), 0);
+        // Refill from a stale state: previous contents must not leak.
+        scratch.refill_from_rates(5, 7, vec![(4.0, 4.0); 6].into_iter(), 1.0);
+        assert_eq!(scratch.as_uniform(), Some(LoadParams::new(6, 7, 4, 4)));
+        scratch.refill_from_rates(10, 50, rates.iter().copied(), 1.4);
+        assert_eq!(scratch, want);
+        // Uniform refill re-detects the homogeneous equivalent.
+        scratch.refill_from_rates(10, 99, vec![(10.0, 3.0); 15].into_iter(), 1.0);
+        assert_eq!(
+            scratch.as_uniform(),
+            Some(LoadParams::from_rates(15, 10, 99, 10.0, 3.0, 1.0))
+        );
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!    workers (see `admission.rs` for the three policies);
 //! 2. the EA allocator runs over the SUBSET of currently idle LIVE workers,
 //!    with per-worker good-state probabilities from the shared
-//!    [`Strategy::p_good_profile`] — LEA keeps learning across overlapping
-//!    jobs;
+//!    [`Strategy::p_good_profile_into`] — LEA keeps learning across
+//!    overlapping jobs;
 //! 3. each participating worker's state process advances by its true idle
 //!    time in virtual seconds (credit CPUs accrue over it), the completion
 //!    times follow, and the worker is released at `min(finish, window end)`;
@@ -45,6 +45,22 @@
 //! as a DIFFERENT instance type, drawn from a menu via a dedicated RNG
 //! stream ([`RejoinSpeeds::Keep`], the default, consumes none).
 //!
+//! **Dispatch hot path.** The per-dispatch EA allocation is memoized by an
+//! [`AllocPlanCache`] ([`TrafficConfig::alloc_cache`]; the default exact
+//! mode is byte-identical to running uncached, quantized mode trades a
+//! bounded drift for hit rate — `tests/shard_cache.rs`), and every
+//! transient per-event buffer (idle set, p̂ profile, fleet loads, resolve
+//! reassembly) is an engine-owned scratch recycled per event
+//! (EXPERIMENTS.md §Perf rule 1).
+//!
+//! **Sharding.** The per-cluster state and event handlers live in the
+//! crate-internal `ClusterCore`, driven here by the single-cluster
+//! [`run_traffic`] loop and by the multi-cluster front-end in
+//! [`crate::traffic::shard`] (C cores behind a router on one global event
+//! queue). A `shard::run_sharded` run with one shard and round-robin
+//! routing is byte-identical to [`run_traffic`] — same handlers, same RNG
+//! streams, same event order (`tests/determinism.rs`).
+//!
 //! With `max_in_flight = 1`, `Arrivals::Fixed(0.0)` and deadlines counted
 //! from service start, the engine consumes the cluster RNG in exactly the
 //! round simulator's order and reproduces `sim::runner::run` throughput
@@ -60,9 +76,10 @@ use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::scheme::CodingScheme;
 use crate::coding::threshold::Design;
 use crate::markov::WState;
-use crate::scheduler::allocation;
-use crate::scheduler::success::FleetLoadParams;
+use crate::scheduler::alloc_cache::{AllocCachePolicy, AllocPlanCache};
+use crate::scheduler::allocation::{allocate_fleet_with_scratch, FleetAllocScratch};
 use crate::scheduler::strategy::Strategy;
+use crate::scheduler::success::{load_from_rate, FleetLoadParams};
 use crate::sim::arrivals::Arrivals;
 use crate::sim::churn::ChurnModel;
 use crate::sim::cluster::{SimCluster, Speeds};
@@ -113,6 +130,12 @@ pub struct TrafficConfig {
     /// Instance type of churn replacements; [`RejoinSpeeds::Keep`] (the
     /// default) preserves each slot's speeds.
     pub rejoin_speeds: RejoinSpeeds,
+    /// Dispatch-path EA memoization ([`AllocPlanCache`]). The default,
+    /// [`AllocCachePolicy::default_exact`], behaves identically to
+    /// [`AllocCachePolicy::Off`] — every metric except the cache's own
+    /// hit/miss counters is byte-identical (pinned by
+    /// `tests/shard_cache.rs`).
+    pub alloc_cache: AllocCachePolicy,
 }
 
 impl TrafficConfig {
@@ -133,6 +156,7 @@ impl TrafficConfig {
             deadline_from: DeadlineFrom::Arrival,
             churn: ChurnModel::none(),
             rejoin_speeds: RejoinSpeeds::Keep,
+            alloc_cache: AllocCachePolicy::default_exact(),
         }
     }
 
@@ -146,6 +170,26 @@ impl TrafficConfig {
     pub fn with_rejoin_speeds(mut self, rejoin_speeds: RejoinSpeeds) -> Self {
         self.rejoin_speeds = rejoin_speeds;
         self
+    }
+
+    /// Builder: replace the dispatch-path allocation-cache policy.
+    pub fn with_alloc_cache(mut self, alloc_cache: AllocCachePolicy) -> Self {
+        self.alloc_cache = alloc_cache;
+        self
+    }
+}
+
+/// Where a [`ClusterCore`] handler schedules its future events. The
+/// single-cluster engine passes its own [`EventQueue`]; the sharded
+/// front-end passes a sink that tags every push with the owning shard
+/// before it reaches the global queue.
+pub(crate) trait EventSink {
+    fn push(&mut self, time: f64, kind: EventKind);
+}
+
+impl EventSink for EventQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        EventQueue::push(self, time, kind);
     }
 }
 
@@ -163,6 +207,36 @@ struct WorkerSlot {
     last_release: f64,
 }
 
+/// Sample the class index for one arrival from the weighted mix.
+pub(crate) fn pick_class(rng: &mut Rng, classes: &[JobClass]) -> usize {
+    if classes.len() == 1 {
+        return 0;
+    }
+    let total: f64 = classes.iter().map(|c| c.weight).sum();
+    let mut u = rng.f64() * total;
+    for (i, c) in classes.iter().enumerate() {
+        u -= c.weight;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    classes.len() - 1
+}
+
+/// Validate a traffic config against a cluster (shared by the single- and
+/// multi-cluster entry points).
+pub(crate) fn validate_config(cfg: &TrafficConfig, cluster: &SimCluster) {
+    assert!(!cfg.classes.is_empty(), "at least one job class required");
+    cfg.churn.validate();
+    for c in &cfg.classes {
+        assert_eq!(
+            c.scheme.geometry.n,
+            cluster.n(),
+            "class geometry n must match the cluster"
+        );
+    }
+}
+
 /// Run one traffic simulation to completion and return its metrics.
 ///
 /// `strategy` is shared across all jobs (it keeps learning); `cluster`
@@ -176,53 +250,29 @@ pub fn run_traffic(
     cfg: &TrafficConfig,
     seed: u64,
 ) -> TrafficMetrics {
-    assert!(!cfg.classes.is_empty(), "at least one job class required");
-    cfg.churn.validate();
-    for c in &cfg.classes {
-        assert_eq!(
-            c.scheme.geometry.n,
-            cluster.n(),
-            "class geometry n must match the cluster"
-        );
-    }
-    let n = cluster.n();
-    let mut engine = Engine {
+    validate_config(cfg, cluster);
+    let engine = Engine {
         cfg,
-        strategy,
-        cluster,
         rng: Rng::new(seed),
-        churn_rng: Rng::new(seed ^ 0x6368_7572_6e21), // "churn!"
-        speed_rng: Rng::new(seed ^ 0x7265_7479_7065), // "retype"
         arrivals: cfg.arrivals.clone(),
         events: EventQueue::new(),
-        queue: AdmissionQueue::new(cfg.policy),
-        jobs: BTreeMap::new(),
-        services: BTreeMap::new(),
-        workers: (0..n)
-            .map(|_| WorkerSlot {
-                job: None,
-                live: true,
-                gen: 0,
-                last_release: 0.0,
-            })
-            .collect(),
-        live: n,
-        in_flight: 0,
         spawned: 0,
-        now: 0.0,
-        metrics: TrafficMetrics::new(),
-        plan_probe: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
-        probe_order: Vec::new(),
-        probe_key: Vec::new(),
+        core: ClusterCore::new(cfg, strategy, cluster, seed),
     };
     engine.run()
 }
 
-struct Engine<'a> {
+/// One cluster's worth of traffic-engine state: the admission queue, worker
+/// slots, in-flight services, churn/speed RNG streams, metrics, and every
+/// per-event scratch buffer. The single-cluster [`run_traffic`] drives one
+/// core; [`crate::traffic::shard`] drives C of them behind a router on a
+/// shared global event queue — the handlers are THIS code either way, which
+/// is what makes the one-shard round-robin configuration byte-identical to
+/// the unsharded engine.
+pub(crate) struct ClusterCore<'a> {
     cfg: &'a TrafficConfig,
     strategy: &'a mut dyn Strategy,
     cluster: &'a mut SimCluster,
-    rng: Rng,
     /// Dedicated stream for the churn process: untouched (and untouching)
     /// when churn is disabled, so fixed-fleet runs are byte-identical.
     churn_rng: Rng,
@@ -230,19 +280,15 @@ struct Engine<'a> {
     /// when a replacement actually retypes, so `Keep` runs (and all runs
     /// without churn) are byte-identical to the pre-fleet engine.
     speed_rng: Rng,
-    arrivals: Arrivals,
-    events: EventQueue,
     queue: AdmissionQueue,
-    /// Jobs alive in the system (queued or in service), by id.
-    jobs: BTreeMap<u64, Job>,
+    /// Jobs alive in this core (queued or in service), by id.
+    pub(crate) jobs: BTreeMap<u64, Job>,
     services: BTreeMap<u64, Service>,
     workers: Vec<WorkerSlot>,
     /// Count of live slots (`workers[i].live`), maintained incrementally.
     live: usize,
     in_flight: usize,
-    spawned: u64,
-    now: f64,
-    metrics: TrafficMetrics,
+    pub(crate) metrics: TrafficMetrics,
     /// Measures steady-state recurrence of the K*-fastest chunk subsets —
     /// the hit rate a master-side decode-plan cache would see under this
     /// traffic (same LRU structure, `()` values; coding::kernel).
@@ -251,19 +297,41 @@ struct Engine<'a> {
     /// per-chunk (finish time, chunk index) pairs, and the sorted key.
     probe_order: Vec<(f64, usize)>,
     probe_key: Vec<usize>,
+    /// Dispatch-path EA memo (`None` = [`AllocCachePolicy::Off`]).
+    alloc_cache: Option<AllocPlanCache>,
+    /// Allocator scratch for the uncached path.
+    alloc_scratch: FleetAllocScratch,
+    // Per-event scratch buffers, recycled instead of reallocated
+    // (EXPERIMENTS.md §Perf rule 1).
+    idle_buf: Vec<usize>,
+    profile_buf: Vec<f64>,
+    ps_buf: Vec<f64>,
+    loads_buf: Vec<usize>,
+    gaps_buf: Vec<f64>,
+    fleet_buf: FleetLoadParams,
+    loads_full: Vec<usize>,
+    completed_full: Vec<bool>,
+    observed_buf: Vec<Option<WState>>,
 }
 
-impl Engine<'_> {
+/// The single-cluster driver: the global arrival stream plus one core.
+struct Engine<'a> {
+    cfg: &'a TrafficConfig,
+    rng: Rng,
+    arrivals: Arrivals,
+    events: EventQueue,
+    spawned: u64,
+    core: ClusterCore<'a>,
+}
+
+impl<'a> Engine<'a> {
     fn run(mut self) -> TrafficMetrics {
         if self.cfg.jobs > 0 {
             let gap = self.arrivals.sample(&mut self.rng);
             self.events.push(gap.max(0.0), EventKind::Arrival);
             if self.cfg.churn.is_active() {
                 // Every slot starts live; schedule its first preemption.
-                for w in 0..self.workers.len() {
-                    let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
-                    self.events.push(up, EventKind::WorkerLeave { worker: w });
-                }
+                self.core.schedule_initial_churn(&mut self.events);
             }
         }
         while let Some(ev) = self.events.pop() {
@@ -271,7 +339,8 @@ impl Engine<'_> {
             // lifecycle ones: drop them unprocessed (no tick, no reschedule)
             // so post-traffic dead air never inflates the horizon, the
             // leave/join counts, or the live/queue time integrals.
-            if self.draining()
+            if self.spawned >= self.cfg.jobs
+                && self.core.jobs.is_empty()
                 && matches!(
                     ev.kind,
                     EventKind::WorkerLeave { .. } | EventKind::WorkerJoin { .. }
@@ -279,68 +348,149 @@ impl Engine<'_> {
             {
                 continue;
             }
-            self.metrics.tick(self.queue.len(), self.live, ev.time);
-            self.now = ev.time;
+            self.core.tick(ev.time);
             match ev.kind {
-                EventKind::Arrival => self.handle_arrival(),
-                EventKind::Release { worker, gen } => self.handle_release(worker, gen),
-                EventKind::QueueExpiry { job } => self.handle_queue_expiry(job),
-                EventKind::Resolve { job } => self.handle_resolve(job),
-                EventKind::WorkerLeave { worker } => self.handle_leave(worker),
-                EventKind::WorkerJoin { worker } => self.handle_join(worker),
+                EventKind::Arrival => self.handle_arrival(ev.time),
+                EventKind::Release { worker, gen } => {
+                    self.core.handle_release(worker, gen, ev.time, &mut self.events)
+                }
+                EventKind::QueueExpiry { job } => {
+                    self.core.handle_queue_expiry(job, ev.time, &mut self.events)
+                }
+                EventKind::Resolve { job } => {
+                    self.core.handle_resolve(job, ev.time, &mut self.events)
+                }
+                EventKind::WorkerLeave { worker } => {
+                    self.core.handle_leave(worker, ev.time, &mut self.events)
+                }
+                EventKind::WorkerJoin { worker } => {
+                    self.core.handle_join(worker, ev.time, &mut self.events)
+                }
             }
         }
-        debug_assert!(self.jobs.is_empty(), "jobs leaked: {:?}", self.jobs.keys());
-        debug_assert!(self.services.is_empty());
-        debug_assert_eq!(
-            self.metrics.arrivals,
-            self.metrics.completed
-                + self.metrics.missed_service
-                + self.metrics.dropped_at_arrival
-                + self.metrics.dropped_infeasible
-                + self.metrics.expired_in_queue
-        );
-        self.metrics
+        self.core.finish()
     }
 
-    /// All arrivals generated and every job settled: only churn lifecycle
-    /// events can remain, and the event loop drops them unprocessed — they
-    /// are post-traffic dead air, and dropping them (instead of handling
-    /// and rescheduling) both keeps them out of the metrics and lets the
-    /// queue drain.
-    fn draining(&self) -> bool {
-        self.spawned >= self.cfg.jobs && self.jobs.is_empty()
-    }
-
-    fn handle_arrival(&mut self) {
+    fn handle_arrival(&mut self, now: f64) {
         self.spawned += 1;
         let id = self.spawned;
-        let class = self.pick_class();
-        let d = self.cfg.classes[class].deadline;
+        let class = pick_class(&mut self.rng, &self.cfg.classes);
         let job = Job {
             id,
             class,
-            arrival: self.now,
-            absolute_deadline: self.now + d,
+            arrival: now,
+            absolute_deadline: now + self.cfg.classes[class].deadline,
         };
-        self.metrics.on_arrival();
-
         // Keep the arrival stream going (one pending arrival at a time).
         if self.spawned < self.cfg.jobs {
             let gap = self.arrivals.sample(&mut self.rng);
-            self.events.push(self.now + gap.max(0.0), EventKind::Arrival);
+            self.events.push(now + gap.max(0.0), EventKind::Arrival);
         }
+        self.core.admit(job, now, &mut self.events);
+    }
+}
 
+impl<'a> ClusterCore<'a> {
+    /// Build a core over borrowed strategy/cluster. `streams_seed` seeds the
+    /// core's churn and retype RNG streams — [`run_traffic`] passes its
+    /// engine seed (preserving the pre-core constants), the sharded
+    /// front-end a per-shard derivation whose shard-0 value IS the engine
+    /// seed (the byte-identity anchor).
+    pub(crate) fn new(
+        cfg: &'a TrafficConfig,
+        strategy: &'a mut dyn Strategy,
+        cluster: &'a mut SimCluster,
+        streams_seed: u64,
+    ) -> Self {
+        let n = cluster.n();
+        ClusterCore {
+            cfg,
+            strategy,
+            cluster,
+            churn_rng: Rng::new(streams_seed ^ 0x6368_7572_6e21), // "churn!"
+            speed_rng: Rng::new(streams_seed ^ 0x7265_7479_7065), // "retype"
+            queue: AdmissionQueue::new(cfg.policy),
+            jobs: BTreeMap::new(),
+            services: BTreeMap::new(),
+            workers: (0..n)
+                .map(|_| WorkerSlot {
+                    job: None,
+                    live: true,
+                    gen: 0,
+                    last_release: 0.0,
+                })
+                .collect(),
+            live: n,
+            in_flight: 0,
+            metrics: TrafficMetrics::new(),
+            plan_probe: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
+            probe_order: Vec::new(),
+            probe_key: Vec::new(),
+            alloc_cache: AllocPlanCache::from_policy(cfg.alloc_cache),
+            alloc_scratch: FleetAllocScratch::default(),
+            idle_buf: Vec::new(),
+            profile_buf: Vec::new(),
+            ps_buf: Vec::new(),
+            loads_buf: Vec::new(),
+            gaps_buf: Vec::new(),
+            fleet_buf: FleetLoadParams::default(),
+            loads_full: Vec::new(),
+            completed_full: Vec::new(),
+            observed_buf: Vec::new(),
+        }
+    }
+
+    /// Advance this core's metric integrals to `now` (call once per event
+    /// handled by this core, BEFORE the handler mutates state).
+    pub(crate) fn tick(&mut self, now: f64) {
+        self.metrics.tick(self.queue.len(), self.live, now);
+    }
+
+    /// Schedule every slot's first preemption (run start, active churn).
+    pub(crate) fn schedule_initial_churn<S: EventSink>(&mut self, sink: &mut S) {
+        for w in 0..self.workers.len() {
+            let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
+            sink.push(up, EventKind::WorkerLeave { worker: w });
+        }
+    }
+
+    /// Jobs queued plus jobs in service — the JSQ routing load signal.
+    pub(crate) fn load(&self) -> usize {
+        self.queue.len() + self.in_flight
+    }
+
+    /// Expected idle capacity Σ_idle ℓ_g(i)·p̂_i for a prospective job of
+    /// `class` arriving now — the po2 routing score (higher = better).
+    pub(crate) fn route_score(&mut self, class: &JobClass) -> f64 {
+        let d = class.deadline;
+        let r = class.scheme.geometry.r;
+        let has = self.strategy.p_good_profile_into(&mut self.profile_buf);
+        let mut score = 0.0;
+        for (w, slot) in self.workers.iter().enumerate() {
+            if slot.live && slot.job.is_none() {
+                let lg = load_from_rate(self.cluster.speeds_of(w).mu_g, r, d);
+                let p = if has { self.profile_buf[w] } else { 0.5 };
+                let p = if p.is_nan() { 0.0 } else { p };
+                score += lg as f64 * p;
+            }
+        }
+        score
+    }
+
+    /// Admit one routed arrival: queue it, schedule its expiry, try to
+    /// dispatch, and (loss system) bounce it if it could not start.
+    pub(crate) fn admit<S: EventSink>(&mut self, job: Job, now: f64, sink: &mut S) {
+        let id = job.id;
+        self.metrics.on_arrival();
         self.queue.push(&job);
         // Drop-infeasible jobs settle synchronously below — no expiry needed.
         if self.cfg.deadline_from == DeadlineFrom::Arrival
             && self.cfg.policy != Policy::DropInfeasible
         {
-            self.events
-                .push(job.absolute_deadline, EventKind::QueueExpiry { job: id });
+            sink.push(job.absolute_deadline, EventKind::QueueExpiry { job: id });
         }
         self.jobs.insert(id, job);
-        self.try_dispatch();
+        self.try_dispatch(now, sink);
 
         // The loss system bounces anything that could not start immediately:
         // capacity bounces (no idle live worker / in-flight cap) count as
@@ -358,18 +508,24 @@ impl Engine<'_> {
         }
     }
 
-    fn handle_queue_expiry(&mut self, id: u64) {
+    pub(crate) fn handle_queue_expiry<S: EventSink>(&mut self, id: u64, now: f64, sink: &mut S) {
         // Only meaningful if the job is still waiting; if it was served its
         // Resolve event (same instant, later seq) settles it, and if it was
         // dropped this event finds nothing.
         if self.queue.remove(id) {
             self.jobs.remove(&id);
             self.metrics.on_loss(JobFate::ExpiredInQueue);
-            self.try_dispatch();
+            self.try_dispatch(now, sink);
         }
     }
 
-    fn handle_release(&mut self, worker: usize, gen: u64) {
+    pub(crate) fn handle_release<S: EventSink>(
+        &mut self,
+        worker: usize,
+        gen: u64,
+        now: f64,
+        sink: &mut S,
+    ) {
         // Stale if the worker left (or left and rejoined) since this release
         // was scheduled: the slot belongs to a different incarnation whose
         // departure already settled the assignment.
@@ -377,14 +533,14 @@ impl Engine<'_> {
             return;
         }
         self.workers[worker].job = None;
-        self.workers[worker].last_release = self.now;
-        self.try_dispatch();
+        self.workers[worker].last_release = now;
+        self.try_dispatch(now, sink);
     }
 
     /// The worker is preempted: mark the slot dead, abandon any in-flight
     /// assignment (the job keeps running on the survivors), and schedule the
     /// replacement instance.
-    fn handle_leave(&mut self, worker: usize) {
+    pub(crate) fn handle_leave<S: EventSink>(&mut self, worker: usize, now: f64, sink: &mut S) {
         let slot = &mut self.workers[worker];
         debug_assert!(slot.live, "leave for a worker that is not live");
         slot.live = false;
@@ -412,22 +568,21 @@ impl Engine<'_> {
         // The replacement is always scheduled; if the run drains first, the
         // event loop drops it unprocessed.
         let down = self.cfg.churn.sample_downtime(&mut self.churn_rng);
-        self.events
-            .push(self.now + down, EventKind::WorkerJoin { worker });
+        sink.push(now + down, EventKind::WorkerJoin { worker });
         // Shrinking the LIVE fleet can flip the front job from "hold for
         // capacity" to "shed as infeasible" — re-evaluate.
-        self.try_dispatch();
+        self.try_dispatch(now, sink);
     }
 
     /// A replacement instance comes up in the slot: a NEW machine under the
     /// same id, idle from now, with a fresh state process.
-    fn handle_join(&mut self, worker: usize) {
+    pub(crate) fn handle_join<S: EventSink>(&mut self, worker: usize, now: f64, sink: &mut S) {
         let slot = &mut self.workers[worker];
         debug_assert!(!slot.live, "join for a worker that is already live");
         slot.live = true;
         slot.gen += 1;
         slot.job = None;
-        slot.last_release = self.now;
+        slot.last_release = now;
         self.live += 1;
         self.metrics.on_join();
         self.cluster.reset_worker(worker);
@@ -439,12 +594,11 @@ impl Engine<'_> {
         }
         self.strategy.on_worker_join(worker);
         let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
-        self.events
-            .push(self.now + up, EventKind::WorkerLeave { worker });
-        self.try_dispatch();
+        sink.push(now + up, EventKind::WorkerLeave { worker });
+        self.try_dispatch(now, sink);
     }
 
-    fn handle_resolve(&mut self, id: u64) {
+    pub(crate) fn handle_resolve<S: EventSink>(&mut self, id: u64, now: f64, sink: &mut S) {
         let svc = self.services.remove(&id).expect("resolve without service");
         let job = self.jobs.remove(&id).expect("resolve without job");
         let class = &self.cfg.classes[job.class];
@@ -453,13 +607,17 @@ impl Engine<'_> {
         // Reassemble full-length vectors for the exact round-simulator
         // decodability rule (zero-load workers trivially "complete";
         // preempted participants were forced incomplete at their leave).
-        let mut loads_full = vec![0usize; n];
-        let mut completed_full = vec![true; n];
+        // Scratch, not fresh Vecs: resize-after-clear refills with the
+        // neutral values.
+        self.loads_full.clear();
+        self.loads_full.resize(n, 0);
+        self.completed_full.clear();
+        self.completed_full.resize(n, true);
         for i in 0..svc.workers.len() {
-            loads_full[svc.workers[i]] = svc.loads[i];
-            completed_full[svc.workers[i]] = svc.completed[i];
+            self.loads_full[svc.workers[i]] = svc.loads[i];
+            self.completed_full[svc.workers[i]] = svc.completed[i];
         }
-        let success = class.scheme.round_success(&loads_full, &completed_full);
+        let success = class.scheme.round_success(&self.loads_full, &self.completed_full);
         if success && class.scheme.design() == Design::Lagrange {
             self.probe_plan_recurrence(&svc, &class.scheme);
         }
@@ -475,33 +633,39 @@ impl Engine<'_> {
         // or finished and then left) is censored too — the master has no
         // completion time for a machine that is gone, and the slot may
         // already host a fresh instance the old state says nothing about.
-        let mut observed: Vec<Option<WState>> = vec![None; n];
+        self.observed_buf.clear();
+        self.observed_buf.resize(n, None);
         for i in 0..svc.workers.len() {
             let w = svc.workers[i];
             if self.workers[w].gen == svc.gens[i] {
-                observed[w] = Some(svc.states[i]);
+                self.observed_buf[w] = Some(svc.states[i]);
             }
         }
-        self.strategy.observe(&observed);
+        self.strategy.observe(&self.observed_buf);
 
         self.metrics.on_resolve(success, latency);
         self.in_flight -= 1;
-        self.try_dispatch();
+        self.try_dispatch(now, sink);
     }
 
-    fn try_dispatch(&mut self) {
+    fn try_dispatch<S: EventSink>(&mut self, now: f64, sink: &mut S) {
+        // Scratch Vecs move out for the loop (disjoint from &mut self) and
+        // back in afterwards, keeping their capacity across events.
+        let mut idle = std::mem::take(&mut self.idle_buf);
+        let mut params = std::mem::take(&mut self.fleet_buf);
         loop {
             let Some(front) = self.queue.front() else { break };
             if self.cfg.max_in_flight > 0 && self.in_flight >= self.cfg.max_in_flight {
                 break;
             }
-            let idle: Vec<usize> = self
-                .workers
-                .iter()
-                .enumerate()
-                .filter(|(_, w)| w.live && w.job.is_none())
-                .map(|(i, _)| i)
-                .collect();
+            idle.clear();
+            idle.extend(
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.live && w.job.is_none())
+                    .map(|(i, _)| i),
+            );
             if idle.is_empty() {
                 break;
             }
@@ -509,7 +673,7 @@ impl Engine<'_> {
             let class = &self.cfg.classes[job.class];
             let d_eff = match self.cfg.deadline_from {
                 DeadlineFrom::ServiceStart => class.deadline,
-                DeadlineFrom::Arrival => job.absolute_deadline - self.now,
+                DeadlineFrom::Arrival => job.absolute_deadline - now,
             };
             if d_eff <= 1e-12 {
                 // Window already gone before service could start.
@@ -520,15 +684,20 @@ impl Engine<'_> {
             }
             let geo = class.scheme.geometry;
             // Per-worker load geometry over the idle subset: each worker's
-            // own speeds and the remaining window give its ℓ_g/ℓ_b.
-            let rates: Vec<(f64, f64)> = idle
-                .iter()
-                .map(|&w| {
-                    let s = self.cluster.speeds_of(w);
-                    (s.mu_g, s.mu_b)
-                })
-                .collect();
-            let params = FleetLoadParams::from_rates(geo.r, class.scheme.kstar(), &rates, d_eff);
+            // own speeds and the remaining window give its ℓ_g/ℓ_b (the
+            // fleet-params scratch is refilled in place, no fresh Vecs).
+            {
+                let cluster = &*self.cluster;
+                params.refill_from_rates(
+                    geo.r,
+                    class.scheme.kstar(),
+                    idle.iter().map(|&w| {
+                        let s = cluster.speeds_of(w);
+                        (s.mu_g, s.mu_b)
+                    }),
+                    d_eff,
+                );
+            }
             let feasible_idle = params.feasible_all();
             // Feasibility against the LIVE fleet, not the nominal n: under
             // churn a departed worker cannot save a waiting job, so holding
@@ -542,9 +711,7 @@ impl Engine<'_> {
                     .iter()
                     .enumerate()
                     .filter(|(_, slot)| slot.live)
-                    .map(|(w, _)| {
-                        ((self.cluster.speeds_of(w).mu_g * d_eff).floor() as usize).min(geo.r)
-                    })
+                    .map(|(w, _)| load_from_rate(self.cluster.speeds_of(w).mu_g, geo.r, d_eff))
                     .sum::<usize>()
                     >= class.scheme.kstar();
             match dispatch_verdict(self.cfg.policy, feasible_idle, feasible_live) {
@@ -558,49 +725,79 @@ impl Engine<'_> {
                 }
             }
             self.queue.pop_front();
-            self.dispatch(job, &idle, &params, d_eff);
+            self.dispatch(job, &idle, &params, d_eff, now, sink);
         }
+        self.idle_buf = idle;
+        self.fleet_buf = params;
     }
 
     /// Allocate over the idle live subset, advance the participants' state
     /// processes by their true idle gaps, and schedule the outcome.
-    fn dispatch(&mut self, job: Job, idle: &[usize], params: &FleetLoadParams, d_eff: f64) {
+    fn dispatch<S: EventSink>(
+        &mut self,
+        job: Job,
+        idle: &[usize],
+        params: &FleetLoadParams,
+        d_eff: f64,
+        now: f64,
+        sink: &mut S,
+    ) {
         let n = self.workers.len();
-        let profile = self
-            .strategy
-            .p_good_profile()
-            .unwrap_or_else(|| vec![0.5; n]);
-        debug_assert_eq!(profile.len(), n);
-        let ps: Vec<f64> = idle.iter().map(|&i| profile[i]).collect();
-        let alloc = allocation::allocate_fleet(params, &ps);
+        let has_profile = self.strategy.p_good_profile_into(&mut self.profile_buf);
+        if has_profile {
+            debug_assert_eq!(self.profile_buf.len(), n);
+        } else {
+            self.profile_buf.clear();
+            self.profile_buf.resize(n, 0.5);
+        }
+        self.ps_buf.clear();
+        for &i in idle {
+            let p = self.profile_buf[i];
+            self.ps_buf.push(p);
+        }
+        // EA allocation: memoized when the cache is on (exact mode returns
+        // exactly what the uncached allocator would), fresh otherwise. Only
+        // the load vector and est_success leave this block — copied into the
+        // recycled loads scratch, not cloned into a fresh Vec.
+        let est_success = if let Some(cache) = self.alloc_cache.as_mut() {
+            let alloc = cache.allocate(params, &self.ps_buf);
+            self.loads_buf.clear();
+            self.loads_buf.extend_from_slice(&alloc.loads);
+            alloc.est_success
+        } else {
+            let alloc = allocate_fleet_with_scratch(params, &self.ps_buf, &mut self.alloc_scratch);
+            self.loads_buf.clear();
+            self.loads_buf.extend_from_slice(&alloc.loads);
+            alloc.est_success
+        };
 
         // Participants: loaded workers, ascending id (idle is ascending, so
         // the shared cluster RNG is consumed deterministically).
         let mut workers_v = Vec::with_capacity(idle.len());
         let mut loads_v = Vec::with_capacity(idle.len());
         for (slot, &w) in idle.iter().enumerate() {
-            if alloc.loads[slot] > 0 {
+            if self.loads_buf[slot] > 0 {
                 workers_v.push(w);
-                loads_v.push(alloc.loads[slot]);
+                loads_v.push(self.loads_buf[slot]);
             }
         }
         if workers_v.is_empty() {
             // Nothing could be loaded (e.g. ℓ_b = 0 with no feasible prefix):
             // the service is vacuous — settle it as an immediate miss without
             // occupying workers or an in-flight slot.
-            self.metrics
-                .on_serve((self.now - job.arrival).max(0.0), alloc.est_success);
+            self.metrics.on_serve((now - job.arrival).max(0.0), est_success);
             self.metrics.on_resolve(false, d_eff);
             self.jobs.remove(&job.id);
             return;
         }
-        let gaps: Vec<f64> = workers_v
-            .iter()
-            .map(|&w| (self.now - self.workers[w].last_release).max(0.0))
-            .collect();
-        let states = self.cluster.advance_subset(&workers_v, &gaps);
+        self.gaps_buf.clear();
+        for &w in &workers_v {
+            let g = (now - self.workers[w].last_release).max(0.0);
+            self.gaps_buf.push(g);
+        }
+        let states = self.cluster.advance_subset(&workers_v, &self.gaps_buf);
 
-        let window_end = self.now + d_eff;
+        let window_end = now + d_eff;
         // The deadline-completion rule (incl. its epsilon convention) is the
         // round simulator's, via the same code path — judged against each
         // PARTICIPANT's own speeds, not positional ones.
@@ -612,7 +809,7 @@ impl Engine<'_> {
         for (i, &w) in workers_v.iter().enumerate() {
             let rate = self.cluster.rate(w, states[i]);
             let t_fin = if rate > 0.0 {
-                self.now + loads_v[i] as f64 / rate
+                now + loads_v[i] as f64 / rate
             } else {
                 f64::INFINITY
             };
@@ -620,7 +817,7 @@ impl Engine<'_> {
             gens.push(self.workers[w].gen);
             self.workers[w].job = Some(job.id);
             // Abandon unfinished work when the window closes.
-            self.events.push(
+            sink.push(
                 t_fin.min(window_end),
                 EventKind::Release {
                     worker: w,
@@ -628,10 +825,9 @@ impl Engine<'_> {
                 },
             );
         }
-        self.events.push(window_end, EventKind::Resolve { job: job.id });
+        sink.push(window_end, EventKind::Resolve { job: job.id });
 
-        self.metrics
-            .on_serve((self.now - job.arrival).max(0.0), alloc.est_success);
+        self.metrics.on_serve((now - job.arrival).max(0.0), est_success);
         self.in_flight += 1;
         let lost = vec![false; workers_v.len()];
         self.services.insert(
@@ -683,19 +879,24 @@ impl Engine<'_> {
         self.metrics.on_plan_probe(hit);
     }
 
-    fn pick_class(&mut self) -> usize {
-        if self.cfg.classes.len() == 1 {
-            return 0;
+    /// Close out the run: copy the alloc-cache counters into the metrics,
+    /// check conservation, and hand the metrics back.
+    pub(crate) fn finish(mut self) -> TrafficMetrics {
+        if let Some(cache) = &self.alloc_cache {
+            self.metrics.alloc_cache_hits = cache.hits();
+            self.metrics.alloc_cache_misses = cache.misses();
         }
-        let total: f64 = self.cfg.classes.iter().map(|c| c.weight).sum();
-        let mut u = self.rng.f64() * total;
-        for (i, c) in self.cfg.classes.iter().enumerate() {
-            u -= c.weight;
-            if u <= 0.0 {
-                return i;
-            }
-        }
-        self.cfg.classes.len() - 1
+        debug_assert!(self.jobs.is_empty(), "jobs leaked: {:?}", self.jobs.keys());
+        debug_assert!(self.services.is_empty());
+        debug_assert_eq!(
+            self.metrics.arrivals,
+            self.metrics.completed
+                + self.metrics.missed_service
+                + self.metrics.dropped_at_arrival
+                + self.metrics.dropped_infeasible
+                + self.metrics.expired_in_queue
+        );
+        self.metrics
     }
 }
 
@@ -787,6 +988,14 @@ mod tests {
                 policy.name()
             );
             assert!((0.0..=1.0).contains(&m.plan_hit_rate()));
+            // Every dispatch goes through the (default exact) alloc cache.
+            assert_eq!(
+                m.alloc_cache_hits + m.alloc_cache_misses,
+                m.served,
+                "one alloc-cache lookup per served job ({})",
+                policy.name()
+            );
+            assert!((0.0..=1.0).contains(&m.alloc_hit_rate()));
             // Fixed fleet: no churn bookkeeping moves.
             assert_eq!((m.leaves, m.joins, m.preemptions, m.work_lost), (0, 0, 0, 0));
             assert_eq!(m.min_live_workers(), 15);
@@ -799,6 +1008,34 @@ mod tests {
         let a = run_policy(Policy::EdfFeasible, 300, 5).to_json().to_string();
         let b = run_policy(Policy::EdfFeasible, 300, 5).to_json().to_string();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alloc_cache_off_and_exact_agree_on_everything_but_counters() {
+        // The exactness guarantee at engine scope: Off and Exact runs are
+        // byte-identical apart from the cache's own hit/miss counters
+        // (deeper randomized coverage lives in tests/shard_cache.rs).
+        let run_with = |policy: AllocCachePolicy| {
+            let mut lea = Lea::new(fig3_load_params());
+            let mut cl = cluster(77);
+            let cfg = overload_cfg(Policy::EdfFeasible, 400).with_alloc_cache(policy);
+            run_traffic(&mut lea, &mut cl, &cfg, 77)
+        };
+        let off = run_with(AllocCachePolicy::Off);
+        let exact = run_with(AllocCachePolicy::default_exact());
+        assert_eq!((off.alloc_cache_hits, off.alloc_cache_misses), (0, 0));
+        assert_eq!(exact.alloc_cache_hits + exact.alloc_cache_misses, exact.served);
+        let strip = |m: &TrafficMetrics| {
+            let mut j = match m.to_json() {
+                crate::util::json::Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            j.remove("alloc_cache_hits");
+            j.remove("alloc_cache_misses");
+            j.remove("alloc_hit_rate");
+            crate::util::json::Json::Obj(j).to_string()
+        };
+        assert_eq!(strip(&off), strip(&exact));
     }
 
     #[test]
@@ -875,6 +1112,7 @@ mod tests {
             deadline_from: DeadlineFrom::Arrival,
             churn: ChurnModel::none(),
             rejoin_speeds: RejoinSpeeds::Keep,
+            alloc_cache: AllocCachePolicy::default_exact(),
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);
@@ -1024,7 +1262,8 @@ mod tests {
         // White-box regression for the stale-event fix: a Release scheduled
         // for an incarnation that has since been preempted (and possibly
         // replaced) must not free the slot, and a QueueExpiry for a job
-        // already in service must not settle it.
+        // already in service must not settle it. Exercised directly on a
+        // ClusterCore with a scratch event queue as the sink.
         let cfg = TrafficConfig::single_class(
             0,
             Arrivals::Fixed(0.0),
@@ -1035,37 +1274,10 @@ mod tests {
         .with_churn(ChurnModel::spot(0.1, 0.2));
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(1);
-        let mut e = Engine {
-            cfg: &cfg,
-            strategy: &mut lea,
-            cluster: &mut cl,
-            rng: Rng::new(1),
-            churn_rng: Rng::new(2),
-            speed_rng: Rng::new(3),
-            arrivals: cfg.arrivals.clone(),
-            events: EventQueue::new(),
-            queue: AdmissionQueue::new(cfg.policy),
-            jobs: BTreeMap::new(),
-            services: BTreeMap::new(),
-            workers: (0..15)
-                .map(|_| WorkerSlot {
-                    job: None,
-                    live: true,
-                    gen: 0,
-                    last_release: 0.0,
-                })
-                .collect(),
-            live: 15,
-            in_flight: 0,
-            spawned: 0,
-            now: 0.0,
-            metrics: TrafficMetrics::new(),
-            plan_probe: PlanCache::new(DEFAULT_PLAN_CACHE_CAP),
-            probe_order: Vec::new(),
-            probe_key: Vec::new(),
-        };
+        let mut sink = EventQueue::new();
+        let mut core = ClusterCore::new(&cfg, &mut lea, &mut cl, 1);
         // Worker 3 is serving job 42; its Release (gen 0) is outstanding.
-        e.jobs.insert(
+        core.jobs.insert(
             42,
             Job {
                 id: 42,
@@ -1074,9 +1286,9 @@ mod tests {
                 absolute_deadline: 1.0,
             },
         );
-        e.in_flight = 1;
-        e.workers[3].job = Some(42);
-        e.services.insert(
+        core.in_flight = 1;
+        core.workers[3].job = Some(42);
+        core.services.insert(
             42,
             Service {
                 workers: vec![3],
@@ -1090,33 +1302,36 @@ mod tests {
             },
         );
         // Preemption at t = 0.5: the assignment is lost with the instance.
-        e.now = 0.5;
-        e.handle_leave(3);
-        assert!(!e.workers[3].live);
-        assert_eq!(e.workers[3].gen, 1);
-        assert!(e.services[&42].lost[0]);
-        assert!(!e.services[&42].completed[0]);
-        assert_eq!(e.metrics.preemptions, 1);
-        assert_eq!(e.metrics.work_lost, 10);
+        core.handle_leave(3, 0.5, &mut sink);
+        assert!(!core.workers[3].live);
+        assert_eq!(core.workers[3].gen, 1);
+        assert!(core.services[&42].lost[0]);
+        assert!(!core.services[&42].completed[0]);
+        assert_eq!(core.metrics.preemptions, 1);
+        assert_eq!(core.metrics.work_lost, 10);
         // Replacement instance at t = 0.7, immediately re-dispatched.
-        e.now = 0.7;
-        e.handle_join(3);
-        assert!(e.workers[3].live);
-        assert_eq!(e.workers[3].gen, 2);
-        e.workers[3].job = Some(77);
+        core.handle_join(3, 0.7, &mut sink);
+        assert!(core.workers[3].live);
+        assert_eq!(core.workers[3].gen, 2);
+        core.workers[3].job = Some(77);
         // The ORIGINAL gen-0 release fires at t = 0.9: stale — it must not
         // free the new incarnation's assignment.
-        e.now = 0.9;
-        e.handle_release(3, 0);
-        assert_eq!(e.workers[3].job, Some(77));
-        assert_eq!(e.workers[3].last_release, 0.7, "stale release must not touch the slot");
+        core.handle_release(3, 0, 0.9, &mut sink);
+        assert_eq!(core.workers[3].job, Some(77));
+        assert_eq!(
+            core.workers[3].last_release, 0.7,
+            "stale release must not touch the slot"
+        );
         // A current-generation release does free it.
-        e.handle_release(3, 2);
-        assert_eq!(e.workers[3].job, None);
+        core.handle_release(3, 2, 0.9, &mut sink);
+        assert_eq!(core.workers[3].job, None);
         // QueueExpiry for a job in service (not queued): a no-op.
-        e.handle_queue_expiry(42);
-        assert_eq!(e.metrics.expired_in_queue, 0);
-        assert!(e.jobs.contains_key(&42), "expiry must not settle a served job");
+        core.handle_queue_expiry(42, 0.9, &mut sink);
+        assert_eq!(core.metrics.expired_in_queue, 0);
+        assert!(
+            core.jobs.contains_key(&42),
+            "expiry must not settle a served job"
+        );
     }
 
     #[test]

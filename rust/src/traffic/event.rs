@@ -57,6 +57,10 @@ impl Eq for Event {}
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        // NOTE: `traffic::shard::ShardEvent` mirrors this exact ordering for
+        // the fleet-wide queue — the one-shard byte-identity guarantee
+        // (tests/determinism.rs) requires the two to agree; change BOTH or
+        // neither.
         other
             .time
             .total_cmp(&self.time)

@@ -73,6 +73,11 @@ pub(crate) struct Service {
     /// never arrive (`completed` is forced false) and its state is censored
     /// at the observation phase — the master saw no completion time.
     pub lost: Vec<bool>,
+    /// Each participant's slot lifecycle generation at dispatch time. At
+    /// resolve, a participant whose slot generation has since moved on
+    /// (its instance departed, possibly replaced) is censored — the master
+    /// has no completion time for a machine that is gone.
+    pub gens: Vec<u64>,
     /// `service start + d_eff` — when the round is evaluated.
     pub window_end: f64,
 }

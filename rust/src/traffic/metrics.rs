@@ -30,6 +30,14 @@ pub struct TrafficMetrics {
     pub plan_probe_hits: u64,
     /// Probe misses (first sight of a subset, or evicted since).
     pub plan_probe_misses: u64,
+    /// Dispatch-path allocation-plan cache hits
+    /// ([`crate::scheduler::alloc_cache::AllocPlanCache`]).
+    pub alloc_cache_hits: u64,
+    /// Dispatch-path allocation-plan cache misses (each one a fresh EA
+    /// computation). With the cache ON, hits + misses = dispatches; with
+    /// [`crate::scheduler::alloc_cache::AllocCachePolicy::Off`] BOTH
+    /// counters stay 0 — there is no cache to count lookups against.
+    pub alloc_cache_misses: u64,
     /// Virtual time when the last event fired.
     pub horizon: f64,
     /// Peak admission-queue depth.
@@ -71,6 +79,8 @@ impl Default for TrafficMetrics {
             events: 0,
             plan_probe_hits: 0,
             plan_probe_misses: 0,
+            alloc_cache_hits: 0,
+            alloc_cache_misses: 0,
             horizon: 0.0,
             queue_max: 0,
             leaves: 0,
@@ -227,6 +237,15 @@ impl TrafficMetrics {
         ratio(self.plan_probe_hits, self.plan_probe_hits + self.plan_probe_misses)
     }
 
+    /// Fraction of dispatches served from the allocation-plan cache (0 when
+    /// the cache is off or nothing dispatched).
+    pub fn alloc_hit_rate(&self) -> f64 {
+        ratio(
+            self.alloc_cache_hits,
+            self.alloc_cache_hits + self.alloc_cache_misses,
+        )
+    }
+
     pub fn mean_queue_depth(&self) -> f64 {
         if self.horizon > 0.0 {
             self.queue_area / self.horizon
@@ -300,11 +319,22 @@ impl TrafficMetrics {
                 Json::num(self.plan_probe_misses as f64),
             ),
             ("plan_hit_rate", num(self.plan_hit_rate())),
+            (
+                "alloc_cache_hits",
+                Json::num(self.alloc_cache_hits as f64),
+            ),
+            (
+                "alloc_cache_misses",
+                Json::num(self.alloc_cache_misses as f64),
+            ),
+            ("alloc_hit_rate", num(self.alloc_hit_rate())),
         ])
     }
 }
 
-fn ratio(num: u64, den: u64) -> f64 {
+/// num/den with a 0 denominator mapping to 0 — the rate convention every
+/// traffic metric (per-shard AND fleet-level, `traffic::shard`) shares.
+pub(crate) fn ratio(num: u64, den: u64) -> f64 {
     if den == 0 {
         0.0
     } else {

@@ -23,19 +23,27 @@
 //! - [`metrics`] — deadline-miss rate, goodput, queue depth, churn
 //!   accounting (leaves/joins, work lost to preemption, live-fleet
 //!   integral), and p50/p95/p99 latency via the O(1)-memory P² sketch.
+//! - [`shard`] — the multi-cluster front-end: C independent clusters (one
+//!   [`crate::traffic::engine`] core each) behind a router on a single
+//!   global event queue, with round-robin / join-shortest-queue /
+//!   power-of-two-choices routing and fleet-wide metrics. One shard with
+//!   round-robin routing is byte-identical to the unsharded engine.
 //!
 //! The parallel scenario-grid harnesses live in
-//! [`crate::experiments::traffic`] (`lea traffic`) and
-//! [`crate::experiments::churn`] (`lea churn`).
+//! [`crate::experiments::traffic`] (`lea traffic`),
+//! [`crate::experiments::churn`] (`lea churn`) and
+//! [`crate::experiments::shard`] (`lea shard`).
 
 pub mod admission;
 pub mod engine;
 pub mod event;
 pub mod job;
 pub mod metrics;
+pub mod shard;
 
 pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
 pub use engine::{run_traffic, DeadlineFrom, RejoinSpeeds, TrafficConfig};
 pub use job::{JobClass, JobFate};
 pub use metrics::TrafficMetrics;
+pub use shard::{run_sharded, FleetMetrics, RoutingPolicy, ShardConfig};

@@ -1,0 +1,771 @@
+//! Sharded multi-cluster front-end: C independent coded-computing clusters
+//! behind a router.
+//!
+//! The ROADMAP's production setting is many LEA clusters serving one heavy
+//! job stream, not one master with n workers. This module routes the
+//! open-loop arrival stream of [`super::engine`] across C per-cluster
+//! engine cores — each with its own [`SimCluster`], strategy instance,
+//! churn process, admission queue, and allocation-plan cache — on ONE
+//! global virtual-time event queue, so cross-shard event ordering is exact
+//! (a shard whose round resolves at t = 3.1 observes it before another
+//! shard's t = 3.2 arrival, exactly as a real fleet would).
+//!
+//! Routing policies ([`RoutingPolicy`]):
+//!
+//! * **round-robin** — cyclic, state-blind; the determinism anchor. With
+//!   C = 1 every arrival routes to shard 0 and the run is byte-identical
+//!   to [`super::engine::run_traffic`] — same handlers (the shared
+//!   per-cluster core), same RNG streams, same event sequence
+//!   (`tests/determinism.rs`).
+//! * **jsq** — join-shortest-queue over queued + in-flight jobs
+//!   (ties → lowest shard id).
+//! * **po2** — power-of-two-choices: sample two distinct shards from a
+//!   dedicated routing RNG stream and send the job to the one with the
+//!   higher estimated success capacity (Σ ℓ_g(i)·p̂_i over its idle live
+//!   workers — the strategy's own beliefs, so a shard whose workers have
+//!   gone bad attracts less traffic). The classic two-choices result:
+//!   near-JSQ balance at O(1) probing cost.
+//!
+//! Fleet-wide accounting lives in [`FleetMetrics`]: per-shard
+//! [`TrafficMetrics`] (bytes unchanged from the unsharded engine),
+//! aggregate timely throughput/goodput over the whole fleet, per-shard
+//! routed-job counts, and the routing-imbalance integral
+//! ∫ (max_s load_s − min_s load_s) dt — the quantity JSQ/po2 exist to
+//! shrink. The scenario-grid harness is [`crate::experiments::shard`]
+//! (`lea shard`), the hot-path figures `benches/shard.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::engine::{pick_class, validate_config, ClusterCore, EventSink, TrafficConfig};
+use super::event::EventKind;
+use super::job::{Job, JobClass};
+use super::metrics::{ratio, TrafficMetrics};
+use crate::scheduler::strategy::Strategy;
+use crate::sim::cluster::SimCluster;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// How the front-end picks a shard for each arriving job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cyclic assignment, blind to shard state.
+    RoundRobin,
+    /// Join-shortest-queue over queued + in-flight jobs.
+    Jsq,
+    /// Power-of-two-choices over estimated success capacity.
+    PowerOfTwo,
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::Jsq => "jsq",
+            RoutingPolicy::PowerOfTwo => "po2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoutingPolicy, String> {
+        match s {
+            "round-robin" | "rr" => Ok(RoutingPolicy::RoundRobin),
+            "jsq" => Ok(RoutingPolicy::Jsq),
+            "po2" | "power-of-two" => Ok(RoutingPolicy::PowerOfTwo),
+            other => Err(format!(
+                "unknown routing policy '{other}' (round-robin | jsq | po2)"
+            )),
+        }
+    }
+
+    pub fn all() -> [RoutingPolicy; 3] {
+        [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::Jsq,
+            RoutingPolicy::PowerOfTwo,
+        ]
+    }
+}
+
+/// Configuration of one sharded run: the per-shard traffic config (its
+/// `jobs` field is the TOTAL arrival count across the fleet) plus the shard
+/// count and routing policy.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of clusters behind the router (≥ 1).
+    pub shards: usize,
+    pub routing: RoutingPolicy,
+    /// Shared per-shard engine config; `traffic.jobs` = total arrivals.
+    pub traffic: TrafficConfig,
+}
+
+impl ShardConfig {
+    /// Reject degenerate setups with a message instead of a panic deep in
+    /// the run (the CLI calls this before building clusters).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shard count must be ≥ 1 (got 0)".into());
+        }
+        if self.traffic.classes.is_empty() {
+            return Err("at least one job class required".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-shard stream-seed derivation (SplitMix64 mix, same constants as the
+/// grid runners' `cell_seed`). Shard 0 gets the base seed UNCHANGED — that
+/// is what makes the one-shard configuration consume the exact RNG streams
+/// of the unsharded engine; shards 1.. get decorrelated derivations.
+fn shard_stream_seed(base: u64, shard: usize) -> u64 {
+    if shard == 0 {
+        return base;
+    }
+    let mut z = base ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Shard tag for global arrival events (routed at fire time, so they have
+/// no owner when scheduled).
+const ROUTER: usize = usize::MAX;
+
+/// A scheduled event in the global fleet queue: [`EventKind`] plus the
+/// owning shard. Ordering is `(time, seq)` exactly as in
+/// [`super::event::EventQueue`] — the global `seq` preserves cross-shard
+/// scheduling order, and with C = 1 reproduces the unsharded sequence.
+#[derive(Clone, Copy, Debug)]
+struct ShardEvent {
+    time: f64,
+    seq: u64,
+    shard: usize,
+    kind: EventKind,
+}
+
+impl PartialEq for ShardEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for ShardEvent {}
+
+impl Ord for ShardEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for ShardEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The fleet's future: one deterministic min-heap across every shard.
+#[derive(Debug, Default)]
+struct ShardEventQueue {
+    heap: BinaryHeap<ShardEvent>,
+    seq: u64,
+}
+
+impl ShardEventQueue {
+    fn new() -> Self {
+        ShardEventQueue::default()
+    }
+
+    fn push(&mut self, shard: usize, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "event time must be finite: {time}");
+        let e = ShardEvent {
+            time,
+            seq: self.seq,
+            shard,
+            kind,
+        };
+        self.seq += 1;
+        self.heap.push(e);
+    }
+
+    fn pop(&mut self) -> Option<ShardEvent> {
+        self.heap.pop()
+    }
+}
+
+/// Event sink a [`ClusterCore`] handler writes through: tags every push
+/// with the owning shard before it reaches the global queue.
+struct ShardSink<'q> {
+    q: &'q mut ShardEventQueue,
+    shard: usize,
+}
+
+impl EventSink for ShardSink<'_> {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        self.q.push(self.shard, time, kind);
+    }
+}
+
+/// Tracks the routing-imbalance integral ∫ (max_s load_s − min_s load_s) dt
+/// with the same pre-event convention as [`TrafficMetrics::tick`]: the load
+/// spread passed at time t held since the previous event.
+struct ImbalanceMeter {
+    last_time: f64,
+    area: f64,
+    horizon: f64,
+}
+
+impl ImbalanceMeter {
+    fn new() -> Self {
+        ImbalanceMeter {
+            last_time: 0.0,
+            area: 0.0,
+            horizon: 0.0,
+        }
+    }
+
+    fn tick(&mut self, cores: &[ClusterCore], now: f64) {
+        let dt = (now - self.last_time).max(0.0);
+        if cores.len() > 1 && dt > 0.0 {
+            let mut mn = usize::MAX;
+            let mut mx = 0usize;
+            for c in cores {
+                let l = c.load();
+                mn = mn.min(l);
+                mx = mx.max(l);
+            }
+            self.area += (mx - mn) as f64 * dt;
+        }
+        self.last_time = now;
+        self.horizon = self.horizon.max(now);
+    }
+}
+
+/// Aggregated outcome of one sharded run: every shard's full
+/// [`TrafficMetrics`] (bytes unchanged from the unsharded engine) plus the
+/// fleet-level routing figures.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    /// Per-shard metrics, shard-indexed.
+    pub shards: Vec<TrafficMetrics>,
+    /// Jobs routed to each shard.
+    pub routed: Vec<u64>,
+    /// Virtual time when the fleet's last event fired.
+    pub horizon: f64,
+    /// ∫ (max_s load_s − min_s load_s) dt over the run (0 at C = 1).
+    pub imbalance_area: f64,
+}
+
+impl FleetMetrics {
+    fn sum(&self, f: impl Fn(&TrafficMetrics) -> u64) -> u64 {
+        self.shards.iter().map(f).sum()
+    }
+
+    pub fn arrivals(&self) -> u64 {
+        self.sum(|m| m.arrivals)
+    }
+
+    pub fn served(&self) -> u64 {
+        self.sum(|m| m.served)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.sum(|m| m.completed)
+    }
+
+    pub fn events(&self) -> u64 {
+        self.sum(|m| m.events)
+    }
+
+    pub fn lost(&self) -> u64 {
+        self.sum(|m| m.dropped_at_arrival + m.dropped_infeasible + m.expired_in_queue)
+    }
+
+    /// Definition 2.1 over the whole fleet: completions per arrival.
+    pub fn timely_throughput(&self) -> f64 {
+        ratio(self.completed(), self.arrivals())
+    }
+
+    /// Completions per served job, fleet-wide.
+    pub fn goodput(&self) -> f64 {
+        ratio(self.completed(), self.served())
+    }
+
+    /// Time-averaged load spread max − min across shards (0 at C = 1).
+    pub fn mean_imbalance(&self) -> f64 {
+        if self.horizon > 0.0 {
+            self.imbalance_area / self.horizon
+        } else {
+            0.0
+        }
+    }
+
+    /// Largest per-shard share of the routed jobs (1/C when perfectly
+    /// balanced, → 1 when one shard takes everything).
+    pub fn max_routed_share(&self) -> f64 {
+        let total: u64 = self.routed.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.routed
+            .iter()
+            .map(|&r| r as f64 / total as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Fleet-wide dispatch-cache hit rate.
+    pub fn alloc_hit_rate(&self) -> f64 {
+        ratio(
+            self.sum(|m| m.alloc_cache_hits),
+            self.sum(|m| m.alloc_cache_hits + m.alloc_cache_misses),
+        )
+    }
+
+    /// Serialize: fleet aggregates first, then the routed counts and every
+    /// shard's full metrics object (deterministic key order throughout).
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| Json::num(if x.is_finite() { x } else { 0.0 });
+        Json::obj(vec![
+            ("shards", Json::num(self.shards.len() as f64)),
+            ("arrivals", Json::num(self.arrivals() as f64)),
+            ("served", Json::num(self.served() as f64)),
+            ("completed", Json::num(self.completed() as f64)),
+            ("lost", Json::num(self.lost() as f64)),
+            ("events", Json::num(self.events() as f64)),
+            ("horizon", num(self.horizon)),
+            ("timely_throughput", num(self.timely_throughput())),
+            ("goodput", num(self.goodput())),
+            ("mean_imbalance", num(self.mean_imbalance())),
+            ("max_routed_share", num(self.max_routed_share())),
+            ("alloc_hit_rate", num(self.alloc_hit_rate())),
+            (
+                "routed",
+                Json::Arr(self.routed.iter().map(|&r| Json::num(r as f64)).collect()),
+            ),
+            (
+                "per_shard",
+                Json::Arr(self.shards.iter().map(|m| m.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Pick the shard for one arriving job. Only [`RoutingPolicy::PowerOfTwo`]
+/// consumes the routing RNG (and only at C ≥ 2), so round-robin and JSQ
+/// runs are byte-stable against its presence.
+fn route(
+    policy: RoutingPolicy,
+    cores: &mut [ClusterCore],
+    class: &JobClass,
+    route_rng: &mut Rng,
+    rr_next: &mut usize,
+) -> usize {
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            let s = *rr_next;
+            *rr_next = (*rr_next + 1) % cores.len();
+            s
+        }
+        RoutingPolicy::Jsq => {
+            let mut best = 0usize;
+            let mut best_load = usize::MAX;
+            for (s, c) in cores.iter().enumerate() {
+                let l = c.load();
+                if l < best_load {
+                    best = s;
+                    best_load = l;
+                }
+            }
+            best
+        }
+        RoutingPolicy::PowerOfTwo => {
+            let c = cores.len();
+            if c == 1 {
+                return 0;
+            }
+            // Two distinct shards, uniformly.
+            let a = route_rng.below(c as u64) as usize;
+            let mut b = route_rng.below(c as u64 - 1) as usize;
+            if b >= a {
+                b += 1;
+            }
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let score_lo = cores[lo].route_score(class);
+            let score_hi = cores[hi].route_score(class);
+            // Higher estimated success capacity wins; ties → lighter load,
+            // then the lower shard id — a deterministic total order.
+            if score_hi > score_lo + 1e-12 {
+                hi
+            } else if score_lo > score_hi + 1e-12 {
+                lo
+            } else if cores[hi].load() < cores[lo].load() {
+                hi
+            } else {
+                lo
+            }
+        }
+    }
+}
+
+/// Run one sharded traffic simulation to completion.
+///
+/// `strategies[s]`/`clusters[s]` belong to shard s (one learning strategy
+/// per cluster — shards do NOT share estimators, matching a fleet of
+/// independent masters). `seed` drives the global arrival stream exactly as
+/// in [`super::engine::run_traffic`]; po2 routing draws from a dedicated
+/// stream, and each shard's churn/retype streams derive from
+/// `shard_stream_seed` (shard 0 = the unsharded streams).
+pub fn run_sharded(
+    strategies: &mut [Box<dyn Strategy>],
+    clusters: &mut [SimCluster],
+    cfg: &ShardConfig,
+    seed: u64,
+) -> FleetMetrics {
+    cfg.validate().expect("invalid shard config");
+    assert_eq!(clusters.len(), cfg.shards, "one cluster per shard required");
+    assert_eq!(strategies.len(), cfg.shards, "one strategy per shard required");
+    let tcfg = &cfg.traffic;
+    for cluster in clusters.iter() {
+        validate_config(tcfg, cluster);
+    }
+    let mut cores: Vec<ClusterCore> = strategies
+        .iter_mut()
+        .zip(clusters.iter_mut())
+        .enumerate()
+        .map(|(s, (strategy, cluster))| {
+            ClusterCore::new(tcfg, &mut **strategy, cluster, shard_stream_seed(seed, s))
+        })
+        .collect();
+
+    let mut rng = Rng::new(seed);
+    let mut route_rng = Rng::new(seed ^ 0x726f_7574_6532); // "route2"
+    let mut arrivals = tcfg.arrivals.clone();
+    let mut events = ShardEventQueue::new();
+    let mut spawned = 0u64;
+    let mut rr_next = 0usize;
+    let mut routed = vec![0u64; cores.len()];
+    let mut imbalance = ImbalanceMeter::new();
+
+    if tcfg.jobs > 0 {
+        let gap = arrivals.sample(&mut rng);
+        events.push(ROUTER, gap.max(0.0), EventKind::Arrival);
+        if tcfg.churn.is_active() {
+            // Every slot of every shard starts live; first preemptions in
+            // shard order (matches the unsharded schedule at C = 1).
+            for (s, core) in cores.iter_mut().enumerate() {
+                let mut sink = ShardSink {
+                    q: &mut events,
+                    shard: s,
+                };
+                core.schedule_initial_churn(&mut sink);
+            }
+        }
+    }
+
+    while let Some(ev) = events.pop() {
+        // Per-shard drain: once every arrival is settled fleet-wide and the
+        // owning shard is idle, its churn lifecycle events are post-traffic
+        // dead air — drop them unprocessed (no tick, no reschedule).
+        if matches!(
+            ev.kind,
+            EventKind::WorkerLeave { .. } | EventKind::WorkerJoin { .. }
+        ) && spawned >= tcfg.jobs
+            && cores[ev.shard].jobs.is_empty()
+        {
+            continue;
+        }
+        imbalance.tick(&cores, ev.time);
+        match ev.kind {
+            EventKind::Arrival => {
+                spawned += 1;
+                let id = spawned;
+                let class = pick_class(&mut rng, &tcfg.classes);
+                let job = Job {
+                    id,
+                    class,
+                    arrival: ev.time,
+                    absolute_deadline: ev.time + tcfg.classes[class].deadline,
+                };
+                // Keep the arrival stream going BEFORE admission, so the
+                // event seq order matches the unsharded engine exactly.
+                if spawned < tcfg.jobs {
+                    let gap = arrivals.sample(&mut rng);
+                    events.push(ROUTER, ev.time + gap.max(0.0), EventKind::Arrival);
+                }
+                let s = route(
+                    cfg.routing,
+                    &mut cores,
+                    &tcfg.classes[class],
+                    &mut route_rng,
+                    &mut rr_next,
+                );
+                routed[s] += 1;
+                cores[s].tick(ev.time);
+                let mut sink = ShardSink {
+                    q: &mut events,
+                    shard: s,
+                };
+                cores[s].admit(job, ev.time, &mut sink);
+            }
+            kind => {
+                let s = ev.shard;
+                cores[s].tick(ev.time);
+                let mut sink = ShardSink {
+                    q: &mut events,
+                    shard: s,
+                };
+                match kind {
+                    EventKind::Release { worker, gen } => {
+                        cores[s].handle_release(worker, gen, ev.time, &mut sink)
+                    }
+                    EventKind::QueueExpiry { job } => {
+                        cores[s].handle_queue_expiry(job, ev.time, &mut sink)
+                    }
+                    EventKind::Resolve { job } => {
+                        cores[s].handle_resolve(job, ev.time, &mut sink)
+                    }
+                    EventKind::WorkerLeave { worker } => {
+                        cores[s].handle_leave(worker, ev.time, &mut sink)
+                    }
+                    EventKind::WorkerJoin { worker } => {
+                        cores[s].handle_join(worker, ev.time, &mut sink)
+                    }
+                    EventKind::Arrival => unreachable!("arrivals carry the router tag"),
+                }
+            }
+        }
+    }
+
+    FleetMetrics {
+        shards: cores.into_iter().map(ClusterCore::finish).collect(),
+        routed,
+        horizon: imbalance.horizon,
+        imbalance_area: imbalance.area,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::TwoState;
+    use crate::scheduler::lea::Lea;
+    use crate::sim::arrivals::Arrivals;
+    use crate::sim::churn::ChurnModel;
+    use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
+    use crate::traffic::engine::run_traffic;
+    use crate::traffic::Policy;
+
+    fn cluster(seed: u64) -> SimCluster {
+        SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
+    }
+
+    fn fleet(shards: usize, routing: RoutingPolicy, jobs: u64, rate: f64) -> ShardConfig {
+        ShardConfig {
+            shards,
+            routing,
+            traffic: TrafficConfig::single_class(
+                jobs,
+                Arrivals::poisson(rate),
+                1.0,
+                fig3_geometry(),
+                Policy::EdfFeasible,
+            ),
+        }
+    }
+
+    fn run(cfg: &ShardConfig, seed: u64) -> FleetMetrics {
+        let mut strategies: Vec<Box<dyn Strategy>> = (0..cfg.shards)
+            .map(|_| Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>)
+            .collect();
+        let mut clusters: Vec<SimCluster> = (0..cfg.shards)
+            .map(|s| cluster(shard_stream_seed(seed, s)))
+            .collect();
+        run_sharded(&mut strategies, &mut clusters, cfg, seed)
+    }
+
+    #[test]
+    fn one_shard_round_robin_is_byte_identical_to_unsharded() {
+        // The tentpole acceptance anchor at engine scope (the grid-level
+        // check lives in tests/determinism.rs): one shard + round-robin
+        // must reproduce run_traffic byte-for-byte — same cluster seed,
+        // same engine seed, same streams.
+        for (jobs, rate, policy) in [
+            (300, 2.0, Policy::AdmitAll),
+            (300, 0.8, Policy::EdfFeasible),
+            (200, 1.3, Policy::DropInfeasible),
+        ] {
+            let cfg = ShardConfig {
+                shards: 1,
+                routing: RoutingPolicy::RoundRobin,
+                traffic: TrafficConfig::single_class(
+                    jobs,
+                    Arrivals::poisson(rate),
+                    1.0,
+                    fig3_geometry(),
+                    policy,
+                ),
+            };
+            let sharded = run(&cfg, 99);
+            let mut lea = Lea::new(fig3_load_params());
+            let mut cl = cluster(99);
+            let unsharded = run_traffic(&mut lea, &mut cl, &cfg.traffic, 99);
+            assert_eq!(
+                sharded.shards[0].to_json().to_string(),
+                unsharded.to_json().to_string(),
+                "{} diverged",
+                policy.name()
+            );
+            assert_eq!(sharded.routed, vec![jobs]);
+            assert_eq!(sharded.imbalance_area, 0.0);
+            assert!((sharded.timely_throughput() - unsharded.timely_throughput()).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn one_shard_byte_identity_survives_churn() {
+        let traffic = TrafficConfig::single_class(
+            250,
+            Arrivals::poisson(0.6),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        )
+        .with_churn(ChurnModel::spot(0.3, 2.0));
+        let cfg = ShardConfig {
+            shards: 1,
+            routing: RoutingPolicy::RoundRobin,
+            traffic,
+        };
+        let sharded = run(&cfg, 41);
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(41);
+        let unsharded = run_traffic(&mut lea, &mut cl, &cfg.traffic, 41);
+        assert_eq!(
+            sharded.shards[0].to_json().to_string(),
+            unsharded.to_json().to_string()
+        );
+        assert!(sharded.shards[0].leaves > 0, "churn must actually run");
+    }
+
+    #[test]
+    fn fleet_conserves_jobs_across_shards() {
+        for routing in RoutingPolicy::all() {
+            let m = run(&fleet(4, routing, 800, 3.0), 7);
+            assert_eq!(m.arrivals(), 800, "{}", routing.name());
+            assert_eq!(m.routed.iter().sum::<u64>(), 800);
+            for (s, shard) in m.shards.iter().enumerate() {
+                assert_eq!(
+                    shard.arrivals,
+                    shard.completed
+                        + shard.missed_service
+                        + shard.dropped_at_arrival
+                        + shard.dropped_infeasible
+                        + shard.expired_in_queue,
+                    "conservation failed in shard {s} under {}",
+                    routing.name()
+                );
+            }
+            assert_eq!(m.arrivals(), m.completed() + m.lost() + m.sum(|x| x.missed_service));
+            assert!(m.completed() > 0, "{}", routing.name());
+            assert!(m.horizon > 0.0);
+            assert!((0.0..=1.0).contains(&m.timely_throughput()));
+            assert!(m.mean_imbalance() >= 0.0);
+            // Every shard sees traffic under every policy at this load.
+            assert!(m.routed.iter().all(|&r| r > 0), "{}", routing.name());
+        }
+    }
+
+    #[test]
+    fn same_seed_same_bytes_across_policies() {
+        for routing in RoutingPolicy::all() {
+            let cfg = fleet(3, routing, 400, 2.0);
+            let a = run(&cfg, 13).to_json().to_string();
+            let b = run(&cfg, 13).to_json().to_string();
+            assert_eq!(a, b, "{} not seed-pure", routing.name());
+            let c = run(&cfg, 14).to_json().to_string();
+            assert_ne!(a, c, "{} ignores the seed", routing.name());
+        }
+    }
+
+    #[test]
+    fn round_robin_routes_evenly_by_count() {
+        let m = run(&fleet(4, RoutingPolicy::RoundRobin, 801, 3.0), 5);
+        let max = *m.routed.iter().max().unwrap();
+        let min = *m.routed.iter().min().unwrap();
+        assert!(max - min <= 1, "rr routed {:?}", m.routed);
+        assert!((m.max_routed_share() - 201.0 / 801.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jsq_balances_load_at_least_as_well_as_round_robin() {
+        // Bursty arrivals make blind round-robin pile jobs onto busy
+        // shards; JSQ reacts to the actual backlog. The integral is the
+        // figure of merit the router exists to shrink.
+        let mut rr = fleet(4, RoutingPolicy::RoundRobin, 1200, 4.0);
+        rr.traffic.arrivals = Arrivals::bursty(6.0, 0.05, 5.0);
+        let mut jsq = rr.clone();
+        jsq.routing = RoutingPolicy::Jsq;
+        let m_rr = run(&rr, 21);
+        let m_jsq = run(&jsq, 21);
+        assert!(
+            m_jsq.mean_imbalance() <= m_rr.mean_imbalance() + 0.25,
+            "jsq {} vs rr {}",
+            m_jsq.mean_imbalance(),
+            m_rr.mean_imbalance()
+        );
+    }
+
+    #[test]
+    fn po2_differs_from_round_robin_and_stays_balanced() {
+        let rr = run(&fleet(4, RoutingPolicy::RoundRobin, 600, 3.0), 33);
+        let po2 = run(&fleet(4, RoutingPolicy::PowerOfTwo, 600, 3.0), 33);
+        assert_ne!(
+            rr.to_json().to_string(),
+            po2.to_json().to_string(),
+            "po2 must actually route differently"
+        );
+        // Two-choices keeps every shard in play.
+        assert!(po2.routed.iter().all(|&r| r > 0), "po2 routed {:?}", po2.routed);
+        assert!(po2.max_routed_share() < 0.6);
+    }
+
+    #[test]
+    fn shard_stream_seeds_are_distinct_and_anchor_shard_zero() {
+        assert_eq!(shard_stream_seed(42, 0), 42);
+        let seeds: Vec<u64> = (0..64).map(|s| shard_stream_seed(42, s)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "shard count")]
+    fn zero_shards_panics_with_a_clear_message() {
+        let cfg = fleet(0, RoutingPolicy::RoundRobin, 10, 1.0);
+        let _ = run_sharded(&mut [], &mut [], &cfg, 1);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_inputs() {
+        assert!(fleet(0, RoutingPolicy::Jsq, 10, 1.0).validate().is_err());
+        let mut no_classes = fleet(2, RoutingPolicy::Jsq, 10, 1.0);
+        no_classes.traffic.classes.clear();
+        assert!(no_classes.validate().is_err());
+        assert!(fleet(2, RoutingPolicy::Jsq, 10, 1.0).validate().is_ok());
+    }
+
+    #[test]
+    fn routing_policy_parse_roundtrip() {
+        for p in RoutingPolicy::all() {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            RoutingPolicy::parse("rr").unwrap(),
+            RoutingPolicy::RoundRobin
+        );
+        assert!(RoutingPolicy::parse("bogus").is_err());
+    }
+}

@@ -87,6 +87,55 @@ impl Args {
                 .map_err(|_| format!("--{name}: expected number, got '{v}'")),
         }
     }
+
+    /// Like [`Args::usize`] but rejects values below `min` with a clear
+    /// error. Degenerate inputs (`--threads 0`, `--shards 0`) otherwise
+    /// surface as silent clamps or panics deep in the grid runners.
+    pub fn usize_at_least(
+        &self,
+        name: &str,
+        default: usize,
+        min: usize,
+    ) -> Result<usize, String> {
+        let v = self.usize(name, default)?;
+        if v < min {
+            return Err(format!("--{name}: must be ≥ {min} (got {v})"));
+        }
+        Ok(v)
+    }
+
+    /// Like [`Args::f64`] but requires a strictly positive value (NaN and
+    /// non-numeric input are rejected too).
+    pub fn f64_positive(&self, name: &str, default: f64) -> Result<f64, String> {
+        let v = self.f64(name, default)?;
+        if v.is_nan() || v <= 0.0 {
+            return Err(format!("--{name}: must be > 0 (got {v})"));
+        }
+        Ok(v)
+    }
+
+    /// Parse `--name a,b,c` into its non-empty items. `Ok(None)` when the
+    /// option is absent; an explicitly EMPTY list (`--name ""`, `--name ,`)
+    /// is an error — the grid runners would otherwise accept an axis with
+    /// zero values and silently produce an empty grid.
+    pub fn csv(&self, name: &str) -> Result<Option<Vec<String>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => {
+                let items: Vec<String> = raw
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if items.is_empty() {
+                    return Err(format!(
+                        "--{name}: expected a non-empty comma-separated list, got '{raw}'"
+                    ));
+                }
+                Ok(Some(items))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +182,51 @@ mod tests {
         let a = args(&["run", "--fast", "--n", "3"]);
         assert!(a.flag("fast"));
         assert_eq!(a.usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn usize_at_least_rejects_degenerate_values_with_a_clear_message() {
+        let a = args(&["shard", "--threads", "0", "--shards", "4"]);
+        let err = a.usize_at_least("threads", 8, 1).unwrap_err();
+        assert!(err.contains("--threads"), "{err}");
+        assert!(err.contains("≥ 1"), "{err}");
+        assert_eq!(a.usize_at_least("shards", 1, 1).unwrap(), 4);
+        // Defaults are not validated away: absent option takes the default.
+        assert_eq!(a.usize_at_least("jobs", 2000, 1).unwrap(), 2000);
+        // Non-numeric input still reports the parse error.
+        let b = args(&["shard", "--threads", "lots"]);
+        assert!(b.usize_at_least("threads", 8, 1).is_err());
+    }
+
+    #[test]
+    fn f64_positive_rejects_zero_negative_and_nan() {
+        for bad in ["0", "-1.5", "NaN"] {
+            let a = args(&["sweep", "--deadline", bad]);
+            assert!(
+                a.f64_positive("deadline", 1.0).is_err(),
+                "'{bad}' should be rejected"
+            );
+        }
+        let a = args(&["sweep", "--deadline", "0.8"]);
+        assert_eq!(a.f64_positive("deadline", 1.0).unwrap(), 0.8);
+        assert_eq!(a.f64_positive("other", 2.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn csv_lists_parse_and_empty_lists_error() {
+        let a = args(&["hetero", "--mixes", "uniform, dual,spread"]);
+        assert_eq!(
+            a.csv("mixes").unwrap().unwrap(),
+            vec!["uniform", "dual", "spread"]
+        );
+        assert_eq!(a.csv("absent").unwrap(), None);
+        for empty in ["", ",", " , "] {
+            let b = Args::parse(vec![
+                "hetero".to_string(),
+                format!("--mixes={empty}"),
+            ])
+            .unwrap();
+            assert!(b.csv("mixes").is_err(), "'{empty}' should be rejected");
+        }
     }
 }

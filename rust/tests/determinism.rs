@@ -16,13 +16,14 @@
 
 use timely_coded::experiments::churn::{self, ChurnGridSpec};
 use timely_coded::experiments::hetero_grid::{self, HeteroGridSpec};
+use timely_coded::experiments::shard::{self, ShardGridSpec};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
 use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::churn::ChurnModel;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::traffic::{run_traffic, Policy, RoutingPolicy, TrafficConfig};
 
 /// Layer 2: the engine itself (with and without churn) is seed-pure.
 #[test]
@@ -124,6 +125,69 @@ fn hetero_grid_dump_is_byte_identical_twice_and_across_threads() {
     }
     assert!(serial.contains("\"mix\":\"uniform\""));
     assert!(serial.contains("\"mix\":\"spread\""));
+}
+
+/// Layer 3d: the `lea shard` grid — shard count × routing × load × churn
+/// cells over the multi-cluster front-end — byte-identical across reruns
+/// and thread counts, with multi-shard cells actually routing everywhere.
+#[test]
+fn shard_grid_dump_is_byte_identical_twice_and_across_threads() {
+    let spec = ShardGridSpec::preset("small", 120, 916).expect("preset");
+    assert!(spec.cells().len() >= 12, "acceptance grid too small");
+    let serial_rows = shard::run_grid(&spec, 1);
+    let serial = shard::to_json(&spec, &serial_rows).to_string();
+    let serial_again = shard::to_json(&spec, &shard::run_grid(&spec, 1)).to_string();
+    let threaded = shard::to_json(&spec, &shard::run_grid(&spec, 5)).to_string();
+    assert_eq!(serial, serial_again, "rerun changed the shard dump");
+    assert_eq!(serial, threaded, "thread count changed the shard dump");
+    // A different seed actually changes the data.
+    let spec2 = ShardGridSpec::preset("small", 120, 917).expect("preset");
+    let other = shard::to_json(&spec2, &shard::run_grid(&spec2, 5)).to_string();
+    assert_ne!(serial, other);
+    // Parseable, with cell coordinates, per-shard metrics, and routing
+    // figures present; multi-shard cells route to every shard.
+    let parsed = timely_coded::util::json::Json::parse(&serial).expect("valid json");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 12);
+    for c in cells {
+        assert!(c.get("routing").is_some());
+        assert!(c.get("churn_rate").is_some());
+        assert!(c.get("timely_throughput").is_some());
+        assert!(c.get("mean_imbalance").is_some());
+        let shards = c.get("shards").unwrap().as_f64().unwrap() as usize;
+        assert!(c.get("per_shard").unwrap().as_arr().unwrap().len() == shards);
+    }
+    for row in &serial_rows {
+        assert!(row.metrics.routed.iter().all(|&r| r > 0), "idle shard");
+    }
+}
+
+/// The tentpole acceptance criterion: every C = 1 round-robin cell of the
+/// shard grid is byte-identical to the unsharded traffic engine run with
+/// the same derived seeds and the same preset config — the router and the
+/// global event queue add NOTHING observable at one shard.
+#[test]
+fn shard_grid_single_shard_round_robin_matches_unsharded_engine() {
+    let spec = ShardGridSpec::preset("small", 200, 77).expect("preset");
+    let rows = shard::run_grid(&spec, 2);
+    let mut anchors = 0;
+    for row in rows
+        .iter()
+        .filter(|r| r.cell.shards == 1 && r.cell.routing == RoutingPolicy::RoundRobin)
+    {
+        anchors += 1;
+        let unsharded = shard::run_cell_unsharded(&row.cell, &spec)
+            .expect("C = 1 cell must have an unsharded reference");
+        assert_eq!(
+            row.metrics.shards[0].to_json().to_string(),
+            unsharded.to_json().to_string(),
+            "cell {}: sharded C=1 diverged from the unsharded engine",
+            row.cell.idx
+        );
+        assert_eq!(row.metrics.routed, vec![row.metrics.shards[0].arrivals]);
+        assert_eq!(row.metrics.imbalance_area, 0.0);
+    }
+    assert_eq!(anchors, 2, "small preset has 2 rate-0/churn C=1 rr cells");
 }
 
 /// The churn-0 column of the churn grid must reproduce a genuinely

@@ -46,6 +46,7 @@ fn single_flight_engine_reproduces_round_runner() {
         deadline_from: DeadlineFrom::ServiceStart,
         churn: timely_coded::traffic::ChurnModel::none(),
         rejoin_speeds: timely_coded::traffic::RejoinSpeeds::Keep,
+        alloc_cache: timely_coded::scheduler::alloc_cache::AllocCachePolicy::default_exact(),
     };
     let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
 

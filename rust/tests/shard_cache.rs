@@ -1,0 +1,186 @@
+//! Acceptance suite for the dispatch-path allocation cache and the sharded
+//! front-end's use of it:
+//!
+//! 1. **Exactness** — `AllocPlanCache` with quantization disabled returns
+//!    bit-identical allocations to the uncached allocator across
+//!    randomized fleets/deadlines, and an engine run with the exact cache
+//!    is byte-identical to an uncached run (modulo the cache's own
+//!    hit/miss counters, which the uncached run leaves at zero).
+//! 2. **Bounded drift** — quantized mode moves simulated timely throughput
+//!    by < 1% absolute on the Fig.-3 preset (EXPERIMENTS.md §Sharding).
+//! 3. **Effectiveness** — quantization strictly raises the hit rate over
+//!    exact keys on the engine's own dispatch stream.
+
+use timely_coded::scheduler::alloc_cache::{AllocCachePolicy, AllocPlanCache};
+use timely_coded::scheduler::allocation::allocate_fleet;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::success::FleetLoadParams;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use timely_coded::util::json::Json;
+use timely_coded::util::rng::Rng;
+
+/// Serialize metrics with the cache's own counters stripped — the only
+/// fields allowed to differ between cache-off and exact-cache runs.
+fn bytes_sans_cache_counters(m: &TrafficMetrics) -> String {
+    let mut obj = match m.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("metrics serialize to an object"),
+    };
+    obj.remove("alloc_cache_hits");
+    obj.remove("alloc_cache_misses");
+    obj.remove("alloc_hit_rate");
+    Json::Obj(obj).to_string()
+}
+
+fn run_fig3(
+    policy: Policy,
+    cache: AllocCachePolicy,
+    rate: f64,
+    jobs: u64,
+    seed: u64,
+) -> TrafficMetrics {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
+    let mut lea = Lea::new(fig3_load_params());
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(rate),
+        1.0,
+        fig3_geometry(),
+        policy,
+    )
+    .with_alloc_cache(cache);
+    run_traffic(&mut lea, &mut cluster, &cfg, seed)
+}
+
+/// Property: exact-mode cache lookups are bit-identical to the uncached
+/// allocator on randomized heterogeneous fleets, deadlines and profiles —
+/// including repeat lookups answered from the cache, and after evictions.
+#[test]
+fn exact_cache_matches_uncached_allocation_on_random_fleets() {
+    let mut rng = Rng::new(2024);
+    // A small capacity so evictions (and re-derivations) are exercised too.
+    let mut cache = AllocPlanCache::exact(8);
+    let mut kept: Vec<(FleetLoadParams, Vec<f64>)> = Vec::new();
+    for trial in 0..400 {
+        let n = 3 + rng.below(12) as usize;
+        let r = 2 + rng.below(9) as usize;
+        let rates: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let mu_g = 0.5 + rng.f64() * 11.5;
+                (mu_g, rng.f64() * mu_g)
+            })
+            .collect();
+        let max_tot: usize = rates.iter().map(|&(g, _)| (g.floor() as usize).min(r)).sum();
+        let kstar = 1 + rng.below(max_tot.max(1) as u64 + 3) as usize;
+        let d = 0.4 + rng.f64() * 1.6;
+        let params = FleetLoadParams::from_rates(r, kstar, &rates, d);
+        let ps: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let want = allocate_fleet(&params, &ps);
+        let got = cache.allocate(&params, &ps).clone();
+        assert_eq!(got, want, "trial {trial}: cached diverged from uncached");
+        kept.push((params, ps));
+        // Revisit an arbitrary earlier input: whether it hits or was
+        // evicted and recomputed, the answer must be identical.
+        let back = rng.below(kept.len() as u64) as usize;
+        let (old_params, old_ps) = &kept[back];
+        let again = cache.allocate(old_params, old_ps).clone();
+        assert_eq!(
+            again,
+            allocate_fleet(old_params, old_ps),
+            "trial {trial}: revisit of input {back} diverged"
+        );
+    }
+    assert!(cache.hits() > 0, "the revisit loop must produce some hits");
+    assert!(cache.evictions() > 0, "cap 8 over 400 inputs must evict");
+}
+
+/// Engine-level exactness: a cached-exact run is byte-identical to an
+/// uncached run for every admission policy, with and without queueing
+/// pressure — only the cache counters themselves may differ.
+#[test]
+fn exact_cache_engine_runs_are_byte_identical_to_uncached() {
+    for policy in Policy::all() {
+        for rate in [0.5, 2.5] {
+            let off = run_fig3(policy, AllocCachePolicy::Off, rate, 500, 31);
+            let exact = run_fig3(policy, AllocCachePolicy::default_exact(), rate, 500, 31);
+            assert_eq!(
+                bytes_sans_cache_counters(&off),
+                bytes_sans_cache_counters(&exact),
+                "{} rate {rate}: exact cache changed engine behavior",
+                policy.name()
+            );
+            assert_eq!((off.alloc_cache_hits, off.alloc_cache_misses), (0, 0));
+            assert_eq!(
+                exact.alloc_cache_hits + exact.alloc_cache_misses,
+                exact.served,
+                "one lookup per dispatch"
+            );
+        }
+    }
+}
+
+/// The quantized acceptance bound on the Fig.-3 preset: < 1% absolute
+/// drift in MEAN timely throughput over the (policy × load) grid, with a
+/// loose per-cell sanity bound — once a single allocation crosses a
+/// decision boundary the two trajectories decouple, so an individual
+/// 2000-job cell carries ~0.5% sampling noise on top of the (much smaller)
+/// systematic quantization effect. Quantization must also raise the hit
+/// rate over exact keys.
+#[test]
+fn quantized_cache_drifts_throughput_below_one_percent_on_fig3() {
+    let quantized = AllocCachePolicy::Quantized {
+        cap: 128,
+        levels: 64,
+    };
+    let mut exact_hits = 0u64;
+    let mut quant_hits = 0u64;
+    let mut lookups = 0u64;
+    let mut off_sum = 0.0;
+    let mut quant_sum = 0.0;
+    let mut cells = 0.0;
+    for policy in Policy::all() {
+        for rate in [0.6, 1.3] {
+            let off = run_fig3(policy, AllocCachePolicy::Off, rate, 2000, 77);
+            let exact = run_fig3(policy, AllocCachePolicy::default_exact(), rate, 2000, 77);
+            let quant = run_fig3(policy, quantized, rate, 2000, 77);
+            let drift = (quant.timely_throughput() - off.timely_throughput()).abs();
+            assert!(
+                drift < 0.03,
+                "{} rate {rate}: per-cell quantized drift {drift} is beyond noise \
+                 (off {}, quantized {})",
+                policy.name(),
+                off.timely_throughput(),
+                quant.timely_throughput()
+            );
+            off_sum += off.timely_throughput();
+            quant_sum += quant.timely_throughput();
+            cells += 1.0;
+            // Conservation still holds under the quantized allocation.
+            assert_eq!(
+                quant.arrivals,
+                quant.completed
+                    + quant.missed_service
+                    + quant.dropped_at_arrival
+                    + quant.dropped_infeasible
+                    + quant.expired_in_queue
+            );
+            exact_hits += exact.alloc_cache_hits;
+            quant_hits += quant.alloc_cache_hits;
+            lookups += exact.alloc_cache_hits + exact.alloc_cache_misses;
+        }
+    }
+    let mean_drift = ((quant_sum - off_sum) / cells).abs();
+    assert!(
+        mean_drift < 0.01,
+        "mean quantized drift {mean_drift} >= 1% over the Fig.-3 preset"
+    );
+    assert!(lookups > 0);
+    assert!(
+        quant_hits > exact_hits,
+        "quantization should raise the dispatch hit rate ({quant_hits} vs {exact_hits})"
+    );
+}
