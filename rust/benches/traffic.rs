@@ -7,11 +7,13 @@
 use std::time::Instant;
 
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
+use timely_coded::obs::profile::{self, ProfileReport};
+use timely_coded::obs::trace::{TraceSink, DEFAULT_RING_CAP};
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::traffic::{run_traffic, run_traffic_traced, Policy, TrafficConfig};
 use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
@@ -31,8 +33,36 @@ fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
     (m.events as f64 / secs, m.events)
 }
 
+/// Events/s of one engine run with the given sink constructor — best of
+/// `reps` (wall-clock noise on shared CI runners otherwise dominates the
+/// few-percent overhead this measures).
+fn sink_events_per_sec(jobs: u64, reps: usize, make_sink: impl Fn() -> TraceSink) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..reps {
+        let scenario = fig3_scenarios()[0];
+        let mut cluster =
+            SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+        let mut lea = Lea::new(fig3_load_params());
+        let cfg = TrafficConfig::single_class(
+            jobs,
+            Arrivals::poisson(2.0),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        );
+        let t0 = Instant::now();
+        let (m, _sink) = run_traffic_traced(&mut lea, &mut cluster, &cfg, 7, make_sink());
+        let secs = t0.elapsed().as_secs_f64();
+        best = best.max(m.events as f64 / secs);
+    }
+    best
+}
+
 fn main() {
     let mut log = BenchLog::new();
+    // Hot-path wall-clock profiling ships in the artifact's "profile" key;
+    // it never touches metrics, so enabling it here is safe for baselines.
+    profile::set_enabled(true);
     let jobs: u64 = if smoke_mode() { 2_000 } else { 30_000 };
 
     // ---- raw engine throughput per policy ----
@@ -87,5 +117,20 @@ fn main() {
         &scale_rows,
     );
 
+    // ---- observability overhead: TraceSink::Off vs RingRecorder ----
+    // The acceptance bar is ≤ 5% events/s regression with the recorder on.
+    let reps = if smoke_mode() { 1 } else { 2 };
+    let eps_off = sink_events_per_sec(jobs, reps, || TraceSink::Off);
+    let eps_ring = sink_events_per_sec(jobs, reps, || TraceSink::ring(DEFAULT_RING_CAP));
+    let overhead_pct = (eps_off - eps_ring) / eps_off * 100.0;
+    println!(
+        "bench traffic_obs  off {eps_off:>12.0} events/s  ring {eps_ring:>12.0} events/s  \
+         overhead {overhead_pct:>5.2}%"
+    );
+    log.note("events_per_sec_sink_off", eps_off);
+    log.note("events_per_sec_sink_ring", eps_ring);
+    log.note("obs_overhead_pct", overhead_pct);
+
+    log.set_profile(ProfileReport::capture().to_json());
     log.write("BENCH_traffic.json");
 }

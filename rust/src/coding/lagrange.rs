@@ -25,6 +25,7 @@
 use super::field::CodeField;
 use super::kernel::{self, PlanCache};
 use super::poly;
+use crate::obs::profile::{HotPath, ScopedTimer};
 use crate::util::matrix::Mat;
 
 /// LRU cache of per-round decode plans: sorted received-index set → `W`.
@@ -97,12 +98,14 @@ impl<F: CodeField> LagrangeCode<F> {
     /// Encode `k` data chunks stacked as the rows of a `(k × dim)` matrix
     /// into `nr` encoded rows: one blocked GEMM against the cached generator.
     pub fn encode_mat(&self, data: &Mat<F>) -> Mat<F> {
+        let _t = ScopedTimer::start(HotPath::Encode);
         assert_eq!(data.rows, self.k, "expected k={} chunk rows", self.k);
         kernel::gemm(&self.gen, data)
     }
 
     /// [`Self::encode_mat`] into a caller-owned output buffer (no allocation).
     pub fn encode_into(&self, data: &Mat<F>, out: &mut Mat<F>) {
+        let _t = ScopedTimer::start(HotPath::Encode);
         assert_eq!(data.rows, self.k, "expected k={} chunk rows", self.k);
         kernel::gemm_into(&self.gen, data, out);
     }
@@ -231,6 +234,7 @@ impl<F: CodeField> LagrangeCode<F> {
         received: &[(usize, Vec<F>)],
         deg_f: usize,
     ) -> Result<Vec<Vec<F>>, String> {
+        let _t = ScopedTimer::start(HotPath::Decode);
         let kstar = self.kstar(deg_f);
         let pick = self.select_distinct(received, kstar)?;
         let (idx, r) = self.gather(received, &pick);
@@ -249,6 +253,7 @@ impl<F: CodeField> LagrangeCode<F> {
         received: &[(usize, Vec<F>)],
         deg_f: usize,
     ) -> Result<Mat<F>, String> {
+        let _t = ScopedTimer::start(HotPath::Decode);
         let kstar = self.kstar(deg_f);
         let mut pick = self.select_distinct(received, kstar)?;
         // Unstable sort (no merge-buffer allocation, §Perf rule 7): the

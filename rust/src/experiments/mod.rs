@@ -16,6 +16,8 @@
 //!   admission policy with per-worker speeds (`lea hetero`).
 //! - [`shard`] — the sharded-fleet grid: shard count × routing policy ×
 //!   per-shard load × churn over the multi-cluster front-end (`lea shard`).
+//! - [`trace`] — re-run one traffic-grid cell with the trace recorder on
+//!   and export a Perfetto-compatible `.trace.json` (`lea trace`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
 pub mod churn;
@@ -28,6 +30,7 @@ pub mod heterogeneous;
 pub mod report;
 pub mod shard;
 pub mod sweep;
+pub mod trace;
 pub mod traffic;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -1,0 +1,149 @@
+//! `lea trace` — re-run ONE traffic-grid cell with the trace recorder on
+//! and export a Chrome-trace-event / Perfetto `.trace.json`.
+//!
+//! The traced run goes through the SAME construction path as the grid
+//! ([`super::traffic::cell_setup`]) and the sink never consumes RNG, so the
+//! cell's metrics are byte-identical to what `lea traffic` reported for it
+//! (with the default `--probe-every 1`; a sparser probe cadence changes
+//! only the `calib_*` fields). Open the export at `ui.perfetto.dev` or
+//! `chrome://tracing`: jobs are async spans on the "jobs" thread, each
+//! worker is its own track with per-round `X` spans, and counter tracks
+//! show queue depth and live workers over virtual time.
+
+use super::traffic::{cell_setup, GridCell, GridSpec};
+use crate::obs::chrome::chrome_trace;
+use crate::obs::trace::{TraceRecord, TraceSink};
+use crate::traffic::{run_traffic_traced, TrafficMetrics};
+use crate::util::json::Json;
+
+/// One traced cell: the grid cell, its (unchanged) metrics, and the
+/// recorded lifecycle records.
+#[derive(Clone, Debug)]
+pub struct TraceReport {
+    pub cell: GridCell,
+    pub metrics: TrafficMetrics,
+    pub records: Vec<TraceRecord>,
+    /// Records evicted by the bounded ring (oldest-first). Non-zero means
+    /// the export covers only the run's tail — raise `--ring`.
+    pub dropped: u64,
+}
+
+impl TraceReport {
+    /// The Chrome-trace-event document ([`chrome_trace`]).
+    pub fn to_chrome_json(&self) -> Json {
+        chrome_trace(&self.records)
+    }
+
+    /// Human summary printed by the CLI before the export path.
+    pub fn print(&self) {
+        let m = &self.metrics;
+        println!(
+            "trace cell #{:02}: rate {} deadline {} policy {}",
+            self.cell.idx,
+            self.cell.rate,
+            self.cell.deadline,
+            self.cell.policy.name()
+        );
+        println!(
+            "  arrivals {}  completed {}  miss_rate {:.4}  mean_latency {:.4}",
+            m.arrivals,
+            m.completed,
+            m.miss_rate(),
+            m.mean_latency()
+        );
+        println!(
+            "  calibration: {} samples  mean |p̂ − 1{{good}}| {:.4}  good hit {:.4}  bad hit {:.4}",
+            m.calib_samples,
+            m.calib_mean_abs_error(),
+            m.calib_good_hit_rate(),
+            m.calib_bad_hit_rate()
+        );
+        println!(
+            "  {} trace records ({} evicted by the ring)",
+            self.records.len(),
+            self.dropped
+        );
+    }
+}
+
+/// Re-run grid cell `cell_idx` of `spec` with a bounded ring recorder.
+/// `probe_every` thins the calibration probes (1 = every dispatch, the
+/// grid's own cadence); `ring_cap` bounds recorder memory.
+pub fn run_cell_traced(
+    spec: &GridSpec,
+    cell_idx: usize,
+    probe_every: usize,
+    ring_cap: usize,
+) -> Result<TraceReport, String> {
+    let cells = spec.cells();
+    let cell = *cells.get(cell_idx).ok_or_else(|| {
+        format!(
+            "--cell {cell_idx} out of range (grid has {} cells)",
+            cells.len()
+        )
+    })?;
+    let (mut cluster, mut lea, cfg, engine_seed) = cell_setup(&cell, spec.jobs, spec.seed);
+    let cfg = cfg.with_probe_every(probe_every);
+    let (metrics, sink) =
+        run_traffic_traced(&mut lea, &mut cluster, &cfg, engine_seed, TraceSink::ring(ring_cap));
+    let (records, dropped) = match sink {
+        TraceSink::Ring(ring) => ring.into_parts(),
+        _ => unreachable!("a ring sink goes in, a ring sink comes out"),
+    };
+    Ok(TraceReport {
+        cell,
+        metrics,
+        records,
+        dropped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::DEFAULT_RING_CAP;
+    use crate::traffic::Policy;
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            rates: vec![0.9],
+            deadlines: vec![1.0],
+            policies: Policy::all().to_vec(),
+            jobs: 120,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn traced_cell_reproduces_the_grid_cells_metrics_bytes() {
+        let spec = tiny_spec();
+        let plain = super::super::traffic::run_cell(&spec.cells()[0], spec.jobs, spec.seed);
+        let traced = run_cell_traced(&spec, 0, 1, DEFAULT_RING_CAP).unwrap();
+        assert_eq!(
+            traced.metrics.to_json().to_string(),
+            plain.metrics.to_json().to_string(),
+            "recording must not perturb the run"
+        );
+        assert!(!traced.records.is_empty(), "a 120-job run leaves records");
+        assert_eq!(traced.dropped, 0, "default ring holds a tiny run whole");
+    }
+
+    #[test]
+    fn out_of_range_cell_is_a_clear_error() {
+        let spec = tiny_spec();
+        let err = run_cell_traced(&spec, 999, 1, 64).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("999"), "{err}");
+    }
+
+    #[test]
+    fn tiny_ring_evicts_but_still_exports() {
+        let spec = tiny_spec();
+        let traced = run_cell_traced(&spec, 0, 1, 16).unwrap();
+        assert!(traced.dropped > 0, "a 16-slot ring must evict");
+        assert_eq!(traced.records.len(), 16);
+        let doc = traced.to_chrome_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+    }
+}

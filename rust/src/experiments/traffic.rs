@@ -94,12 +94,19 @@ pub(crate) fn cell_seed(base: u64, idx: usize) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA, and the
-/// event engine with arrival-relative deadlines.
-pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
+/// Build one cell's inputs: a fresh Fig.-3 scenario-1 cluster, a fresh LEA,
+/// the engine config, and the engine seed. ONE construction path shared by
+/// [`run_cell`] and the trace harness ([`super::trace`]) — any divergence
+/// here would silently break the "trace run replays the grid cell"
+/// guarantee, so both go through this function.
+pub(crate) fn cell_setup(
+    cell: &GridCell,
+    jobs: u64,
+    base_seed: u64,
+) -> (SimCluster, Lea, TrafficConfig, u64) {
     let seed = cell_seed(base_seed, cell.idx);
     let scenario = fig3_scenarios()[0];
-    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
+    let cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
     let geo = fig3_geometry();
     let params = LoadParams::from_rates(
         geo.n,
@@ -109,7 +116,7 @@ pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
         fig3_speeds().mu_b,
         cell.deadline,
     );
-    let mut lea = Lea::new(params);
+    let lea = Lea::new(params);
     let cfg = TrafficConfig::single_class(
         jobs,
         Arrivals::poisson(cell.rate),
@@ -117,7 +124,14 @@ pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
         geo,
         cell.policy,
     );
-    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x7261_6666); // "raff"
+    (cluster, lea, cfg, seed ^ 0x7261_6666) // "raff"
+}
+
+/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA, and the
+/// event engine with arrival-relative deadlines.
+pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
+    let (mut cluster, mut lea, cfg, engine_seed) = cell_setup(cell, jobs, base_seed);
+    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, engine_seed);
     GridRow {
         cell: *cell,
         metrics,

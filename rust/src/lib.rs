@@ -22,6 +22,9 @@
 //!   AOT-compiled JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the threaded master/worker cluster that runs real PJRT
 //!   computations under simulated worker states (Fig. 4 analog).
+//! - [`obs`] — deterministic observability: virtual-time trace records and
+//!   sinks (`lea trace` → Perfetto-compatible `.trace.json`), plus
+//!   wall-clock hot-path profiling for `BENCH_*.json` artifacts.
 //! - [`experiments`] — one harness per paper table/figure.
 
 pub mod util;
@@ -30,6 +33,7 @@ pub mod coding;
 pub mod markov;
 pub mod scheduler;
 pub mod sim;
+pub mod obs;
 pub mod traffic;
 pub mod runtime;
 pub mod exec;

@@ -11,6 +11,9 @@
 //! lea e2e         [--rounds N] [--native] [--strategy lea] real PJRT cluster run
 //! lea traffic     [--grid small|wide] [--threads T]        parallel traffic grid
 //!                 [--jobs N] [--seed S] [--dump grid.json]
+//! lea trace       [--grid small|wide] [--cell I]           traced grid-cell re-run
+//!                 [--jobs N] [--seed S] [--probe-every K]
+//!                 [--ring CAP] [--trace cell.trace.json]
 //! lea churn       [--grid small|wide] [--threads T]        elastic-fleet grid
 //!                 [--jobs N] [--seed S] [--dump churn.json]
 //! lea hetero      [--grid small|wide] [--threads T]        heterogeneous-fleet grid
@@ -32,9 +35,11 @@ use timely_coded::experiments::hetero_grid::{FleetMix, HeteroGridSpec};
 use timely_coded::experiments::shard::ShardGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
 use timely_coded::experiments::{
-    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, sweep,
+    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, sweep, trace,
     traffic,
 };
+use timely_coded::obs::trace::DEFAULT_RING_CAP;
+use timely_coded::obs::write_chrome_trace;
 use timely_coded::scheduler::alloc_cache::AllocCachePolicy;
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
@@ -315,6 +320,24 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 println!("wrote {path}");
             }
         }
+        "trace" => {
+            let spec = GridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
+                args.u64("seed", 2024)?,
+            )?;
+            let cell = args.usize("cell", 0)?;
+            let probe_every = args.usize_at_least("probe-every", 1, 1)?;
+            let ring = args.usize_at_least("ring", DEFAULT_RING_CAP, 1)?;
+            // Validate the export path BEFORE the run, not after.
+            let out = args
+                .out_path("trace")?
+                .unwrap_or_else(|| "cell.trace.json".to_string());
+            let rep = trace::run_cell_traced(&spec, cell, probe_every, ring)?;
+            rep.print();
+            write_chrome_trace(&rep.records, &out).map_err(|e| e.to_string())?;
+            println!("wrote {out} (open at ui.perfetto.dev or chrome://tracing)");
+        }
         "churn" => {
             let spec = ChurnGridSpec::preset(
                 args.get_or("grid", "small"),
@@ -402,6 +425,13 @@ SUBCOMMANDS
                threads: arrival-rate x deadline x admission-policy cells
                (--grid small|wide, --threads T, --jobs N-per-cell, --seed S,
                 --dump grid.json; same seed => byte-identical JSON)
+  trace        re-run ONE traffic-grid cell with the trace recorder on and
+               export a Chrome-trace-event/Perfetto .trace.json: jobs as
+               async spans, per-worker round tracks, queue-depth and
+               live-worker counters — metrics stay byte-identical to the
+               grid's (--grid small|wide, --cell I, --jobs N, --seed S,
+               --probe-every K [calibration cadence, default 1], --ring CAP
+               [recorder bound], --trace cell.trace.json)
   churn        elastic-fleet grid: spot preemption/rejoin churn over the
                traffic engine — churn-rate x rejoin-policy (reset|carryover)
                x admission-policy cells, reporting throughput vs churn,

@@ -1,0 +1,431 @@
+//! Chrome-trace-event export: captured records → a `.trace.json` that
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` load directly.
+//!
+//! Mapping (the Trace Event Format's JSON-object-format):
+//! - each shard is a PROCESS (`pid` = shard id);
+//! - `tid 0` is the shard's "jobs" track: jobs are async spans (`b` at
+//!   admit, `e` at resolve or loss, keyed by `id` = job id) with an async
+//!   instant (`n`) at dispatch; queue depth and live workers are counter
+//!   (`C`) events on the same process;
+//! - worker `w` is thread `w + 1`: its scheduled computation spans are
+//!   complete (`X`) events with `dur`, churn shows as instant (`i`) events;
+//! - `M` metadata events name every process and thread.
+//!
+//! Timestamps are virtual seconds scaled to the format's microseconds.
+//! Events are stably sorted by timestamp (metadata first), so per-track
+//! `ts` sequences are monotone — pinned in `tests/trace_export.rs`.
+
+use std::collections::BTreeSet;
+
+use super::trace::TraceRecord;
+use crate::util::json::Json;
+
+/// Trace-event timestamps are microseconds; the simulator runs in seconds.
+const US_PER_SEC: f64 = 1e6;
+/// The per-shard jobs/counters track; worker `w` lives on tid `w + 1`.
+const JOB_TID: usize = 0;
+
+fn event(
+    ph: &str,
+    name: &str,
+    pid: usize,
+    tid: usize,
+    ts_us: f64,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::str(ph)),
+        ("name", Json::str(name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("ts", Json::num(ts_us)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn async_extra(job: u64, args: Vec<(&str, Json)>) -> Vec<(&str, Json)> {
+    vec![
+        ("cat", Json::str("job")),
+        ("id", Json::str(&job.to_string())),
+        ("args", Json::obj(args)),
+    ]
+}
+
+/// Every (process, thread) track a record set touches.
+fn tracks(records: &[TraceRecord]) -> BTreeSet<(usize, usize)> {
+    let mut tracks = BTreeSet::new();
+    for r in records {
+        let tid = match *r {
+            TraceRecord::WorkerSpan { worker, .. }
+            | TraceRecord::WorkerLeave { worker, .. }
+            | TraceRecord::WorkerJoin { worker, .. } => worker + 1,
+            _ => JOB_TID,
+        };
+        tracks.insert((r.shard(), tid));
+        // Counters and async spans render under the process's tid 0 track.
+        tracks.insert((r.shard(), JOB_TID));
+    }
+    tracks
+}
+
+/// Build the full Chrome-trace JSON document for a captured record set.
+pub fn chrome_trace(records: &[TraceRecord]) -> Json {
+    // (sort key, event): metadata sorts before everything, then stable
+    // timestamp order — emission order breaks ties deterministically.
+    let mut events: Vec<(f64, Json)> = Vec::new();
+
+    let tracks = tracks(records);
+    let pids: BTreeSet<usize> = tracks.iter().map(|&(p, _)| p).collect();
+    for &p in &pids {
+        let name = format!("shard {p}");
+        events.push((
+            f64::NEG_INFINITY,
+            event(
+                "M",
+                "process_name",
+                p,
+                JOB_TID,
+                0.0,
+                vec![("args", Json::obj(vec![("name", Json::str(&name))]))],
+            ),
+        ));
+    }
+    for &(p, t) in &tracks {
+        let name = if t == JOB_TID {
+            "jobs".to_string()
+        } else {
+            format!("worker {}", t - 1)
+        };
+        events.push((
+            f64::NEG_INFINITY,
+            event(
+                "M",
+                "thread_name",
+                p,
+                t,
+                0.0,
+                vec![("args", Json::obj(vec![("name", Json::str(&name))]))],
+            ),
+        ));
+    }
+
+    for r in records {
+        emit(r, &mut events);
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "traceEvents",
+            Json::Arr(events.into_iter().map(|(_, e)| e).collect()),
+        ),
+    ])
+}
+
+fn emit(r: &TraceRecord, events: &mut Vec<(f64, Json)>) {
+    match *r {
+        TraceRecord::JobAdmit {
+            t,
+            shard,
+            job,
+            class,
+            deadline,
+        } => events.push((
+            t,
+            event(
+                "b",
+                "job",
+                shard,
+                JOB_TID,
+                t * US_PER_SEC,
+                async_extra(
+                    job,
+                    vec![
+                        ("job", Json::num(job as f64)),
+                        ("class", Json::num(class as f64)),
+                        ("deadline", Json::num(deadline)),
+                    ],
+                ),
+            ),
+        )),
+        TraceRecord::JobDispatch {
+            t,
+            shard,
+            job,
+            workers,
+            window_end,
+            est_success,
+        } => events.push((
+            t,
+            event(
+                "n",
+                "dispatch",
+                shard,
+                JOB_TID,
+                t * US_PER_SEC,
+                async_extra(
+                    job,
+                    vec![
+                        ("workers", Json::num(workers as f64)),
+                        ("window_end", Json::num(window_end)),
+                        ("est_success", Json::num(est_success)),
+                    ],
+                ),
+            ),
+        )),
+        TraceRecord::JobResolve {
+            t,
+            shard,
+            job,
+            success,
+            latency,
+            slack,
+        } => events.push((
+            t,
+            event(
+                "e",
+                "job",
+                shard,
+                JOB_TID,
+                t * US_PER_SEC,
+                async_extra(
+                    job,
+                    vec![
+                        ("success", Json::Bool(success)),
+                        ("latency", Json::num(latency)),
+                        ("slack", Json::num(slack)),
+                    ],
+                ),
+            ),
+        )),
+        TraceRecord::JobLost {
+            t,
+            shard,
+            job,
+            fate,
+        } => events.push((
+            t,
+            event(
+                "e",
+                "job",
+                shard,
+                JOB_TID,
+                t * US_PER_SEC,
+                async_extra(job, vec![("fate", Json::str(fate))]),
+            ),
+        )),
+        TraceRecord::WorkerSpan {
+            start,
+            end,
+            shard,
+            worker,
+            gen,
+            job,
+            load,
+            completed,
+        } => events.push((
+            start,
+            event(
+                "X",
+                &format!("job {job}"),
+                shard,
+                worker + 1,
+                start * US_PER_SEC,
+                vec![
+                    ("dur", Json::num((end - start).max(0.0) * US_PER_SEC)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("job", Json::num(job as f64)),
+                            ("gen", Json::num(gen as f64)),
+                            ("load", Json::num(load as f64)),
+                            ("completed", Json::Bool(completed)),
+                        ]),
+                    ),
+                ],
+            ),
+        )),
+        TraceRecord::WorkerLeave {
+            t,
+            shard,
+            worker,
+            gen,
+        } => events.push((
+            t,
+            event(
+                "i",
+                "leave",
+                shard,
+                worker + 1,
+                t * US_PER_SEC,
+                vec![
+                    ("s", Json::str("t")),
+                    ("args", Json::obj(vec![("gen", Json::num(gen as f64))])),
+                ],
+            ),
+        )),
+        TraceRecord::WorkerJoin {
+            t,
+            shard,
+            worker,
+            gen,
+        } => events.push((
+            t,
+            event(
+                "i",
+                "join",
+                shard,
+                worker + 1,
+                t * US_PER_SEC,
+                vec![
+                    ("s", Json::str("t")),
+                    ("args", Json::obj(vec![("gen", Json::num(gen as f64))])),
+                ],
+            ),
+        )),
+        TraceRecord::Counter {
+            t,
+            shard,
+            queue,
+            live,
+        } => {
+            events.push((
+                t,
+                event(
+                    "C",
+                    "queue_depth",
+                    shard,
+                    JOB_TID,
+                    t * US_PER_SEC,
+                    vec![("args", Json::obj(vec![("queue", Json::num(queue as f64))]))],
+                ),
+            ));
+            events.push((
+                t,
+                event(
+                    "C",
+                    "live_workers",
+                    shard,
+                    JOB_TID,
+                    t * US_PER_SEC,
+                    vec![("args", Json::obj(vec![("live", Json::num(live as f64))]))],
+                ),
+            ));
+        }
+    }
+}
+
+/// Write the export to `path` as a single JSON document.
+pub fn write_chrome_trace(records: &[TraceRecord], path: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace(records)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceRecord> {
+        vec![
+            TraceRecord::JobAdmit {
+                t: 0.0,
+                shard: 0,
+                job: 1,
+                class: 0,
+                deadline: 1.0,
+            },
+            TraceRecord::Counter {
+                t: 0.0,
+                shard: 0,
+                queue: 1,
+                live: 15,
+            },
+            TraceRecord::JobDispatch {
+                t: 0.1,
+                shard: 0,
+                job: 1,
+                workers: 2,
+                window_end: 1.1,
+                est_success: 0.9,
+            },
+            TraceRecord::WorkerSpan {
+                start: 0.1,
+                end: 0.7,
+                shard: 0,
+                worker: 3,
+                gen: 0,
+                job: 1,
+                load: 4,
+                completed: true,
+            },
+            TraceRecord::WorkerLeave {
+                t: 0.4,
+                shard: 0,
+                worker: 3,
+                gen: 1,
+            },
+            TraceRecord::JobResolve {
+                t: 1.1,
+                shard: 0,
+                job: 1,
+                success: true,
+                latency: 0.8,
+                slack: 0.2,
+            },
+        ]
+    }
+
+    #[test]
+    fn export_has_required_keys_and_monotone_timestamps() {
+        let doc = chrome_trace(&sample());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let mut last = f64::NEG_INFINITY;
+        for e in events {
+            for key in ["ph", "ts", "pid", "tid", "name"] {
+                assert!(e.get(key).is_some(), "missing {key}: {e}");
+            }
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last, "global sort broken: {ts} after {last}");
+            last = ts;
+        }
+        // Metadata leads, and both counter tracks are present.
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("C"))
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"queue_depth") && names.contains(&"live_workers"));
+    }
+
+    #[test]
+    fn async_job_events_carry_cat_and_id() {
+        let doc = chrome_trace(&sample());
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        for ph in ["b", "n", "e"] {
+            let e = events
+                .iter()
+                .find(|e| e.get("ph").unwrap().as_str() == Some(ph))
+                .unwrap_or_else(|| panic!("no '{ph}' event"));
+            assert_eq!(e.get("cat").unwrap().as_str(), Some("job"));
+            assert_eq!(e.get("id").unwrap().as_str(), Some("1"));
+        }
+        // Worker spans carry a duration in microseconds.
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .expect("no span");
+        let dur = x.get("dur").unwrap().as_f64().unwrap();
+        assert!((dur - 0.6 * US_PER_SEC).abs() < 1e-6);
+        assert_eq!(x.get("tid").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn empty_record_set_exports_an_empty_document() {
+        let doc = chrome_trace(&[]);
+        assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+        assert!(doc.to_string().contains("\"traceEvents\":[]"));
+    }
+}

@@ -1,0 +1,37 @@
+//! Deterministic observability: trace records, recorders, and profilers.
+//!
+//! The engine can only be *explained* if it can be observed: why does a grid
+//! cell lose — estimator miscalibration, queueing, or infeasible deadlines?
+//! This module answers that without perturbing a single byte of the
+//! simulation:
+//!
+//! - [`trace`] — virtual-time [`trace::TraceRecord`]s for the full job
+//!   lifecycle (admit → dispatch → per-worker completions → resolve/loss)
+//!   plus fleet lifecycle and queue/live counters, behind a
+//!   [`trace::TraceSink`] with static enum dispatch. The default
+//!   [`trace::TraceSink::Off`] is byte-identical to the untraced engine
+//!   (pinned in `tests/determinism.rs`); the bounded
+//!   [`trace::RingRecorder`] and the streaming [`trace::StreamWriter`]
+//!   capture without feedback into the simulation.
+//! - [`chrome`] — export captured records as a Chrome-trace-event JSON
+//!   (`.trace.json`) loadable in Perfetto (<https://ui.perfetto.dev>) or
+//!   `chrome://tracing`: shards as processes, jobs as async spans, workers
+//!   as complete-event tracks, queue depth and live workers as counters.
+//!   Driven by `lea trace`.
+//! - [`profile`] — wall-clock scoped timers around the host hot paths (EA
+//!   allocation, the Poisson-binomial DP, encode/decode GEMMs, the event
+//!   loop), aggregated into a [`profile::ProfileReport`]. Wall-clock time
+//!   NEVER enters metrics or grid JSON — reports land only in `BENCH_*.json`
+//!   artifacts, so determinism is untouched.
+//!
+//! Estimator-calibration probes (p̂ vs the true Markov state at dispatch)
+//! live in the engine itself and surface through
+//! [`crate::traffic::TrafficMetrics`]; see `TrafficConfig::probe_every`.
+
+pub mod chrome;
+pub mod profile;
+pub mod trace;
+
+pub use chrome::{chrome_trace, write_chrome_trace};
+pub use profile::{HotPath, ProfileReport, ScopedTimer};
+pub use trace::{RingRecorder, StreamWriter, TraceRecord, TraceSink};

@@ -1,0 +1,226 @@
+//! Wall-clock scoped timers for the host hot paths.
+//!
+//! Process-global relaxed atomics keyed by [`HotPath`]: disabled (the
+//! default) a timer is a single relaxed load — cheap enough to leave in the
+//! simulation hot loops permanently. Enabled, each scope adds one
+//! `Instant` pair and two relaxed `fetch_add`s.
+//!
+//! Wall-clock numbers NEVER enter metrics or grid JSON (those stay pure
+//! functions of config and seed); a [`ProfileReport`] is only embedded in
+//! `BENCH_*.json` artifacts via [`crate::util::bench_kit::BenchLog`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// The instrumented host hot paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HotPath {
+    /// EA load allocation over the fleet (`allocate_fleet_with_scratch`).
+    EaAlloc = 0,
+    /// The Poisson-binomial tail convolution DP.
+    SuccessDp = 1,
+    /// Lagrange encode GEMMs.
+    Encode = 2,
+    /// Lagrange decode (weights + GEMM).
+    Decode = 3,
+    /// One whole engine event loop (inclusive of the nested paths above).
+    EventLoop = 4,
+}
+
+const N_PATHS: usize = 5;
+const ALL_PATHS: [HotPath; N_PATHS] = [
+    HotPath::EaAlloc,
+    HotPath::SuccessDp,
+    HotPath::Encode,
+    HotPath::Decode,
+    HotPath::EventLoop,
+];
+
+impl HotPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            HotPath::EaAlloc => "ea_alloc",
+            HotPath::SuccessDp => "success_dp",
+            HotPath::Encode => "encode",
+            HotPath::Decode => "decode",
+            HotPath::EventLoop => "event_loop",
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static COUNTS: [AtomicU64; N_PATHS] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+static TOTAL_NS: [AtomicU64; N_PATHS] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Turn profiling on or off process-wide (off by default).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Zero all accumulated counters.
+pub fn reset() {
+    for i in 0..N_PATHS {
+        COUNTS[i].store(0, Ordering::Relaxed);
+        TOTAL_NS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// RAII scope timer: records `(count += 1, total_ns += elapsed)` for its
+/// path on drop — or nothing at all while profiling is disabled.
+#[must_use = "the timer records on drop; binding it to _t keeps the scope"]
+pub struct ScopedTimer {
+    start: Option<(HotPath, Instant)>,
+}
+
+impl ScopedTimer {
+    #[inline]
+    pub fn start(path: HotPath) -> ScopedTimer {
+        let start = if ENABLED.load(Ordering::Relaxed) {
+            Some((path, Instant::now()))
+        } else {
+            None
+        };
+        ScopedTimer { start }
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        if let Some((path, t0)) = self.start.take() {
+            let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            COUNTS[path as usize].fetch_add(1, Ordering::Relaxed);
+            TOTAL_NS[path as usize].fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One hot path's accumulated figures.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileEntry {
+    pub path: HotPath,
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+impl ProfileEntry {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+}
+
+/// Snapshot of every hot path's counters.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    pub entries: Vec<ProfileEntry>,
+}
+
+impl ProfileReport {
+    /// Snapshot the process-global counters (does not reset them).
+    pub fn capture() -> ProfileReport {
+        ProfileReport {
+            entries: ALL_PATHS
+                .iter()
+                .map(|&path| ProfileEntry {
+                    path,
+                    count: COUNTS[path as usize].load(Ordering::Relaxed),
+                    total_ns: TOTAL_NS[path as usize].load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+
+    /// `{path: {count, total_ns, mean_ns}}` — the `BenchLog` "profile" key.
+    pub fn to_json(&self) -> Json {
+        Json::obj(
+            self.entries
+                .iter()
+                .map(|e| {
+                    (
+                        e.path.name(),
+                        Json::obj(vec![
+                            ("count", Json::num(e.count as f64)),
+                            ("total_ns", Json::num(e.total_ns as f64)),
+                            ("mean_ns", Json::num(e.mean_ns())),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_of(path: HotPath) -> u64 {
+        ProfileReport::capture()
+            .entries
+            .iter()
+            .find(|e| e.path == path)
+            .unwrap()
+            .count
+    }
+
+    /// One sequential test owns the global switch: other tests in this
+    /// binary run timers (the engine hooks) but never flip ENABLED, so
+    /// while it is off nothing records; once enabled, counts can only grow
+    /// (assertions use ≥ — parallel tests may add their own samples).
+    #[test]
+    fn scoped_timer_respects_the_enable_switch() {
+        set_enabled(false);
+        let before = count_of(HotPath::Decode);
+        {
+            let _t = ScopedTimer::start(HotPath::Decode);
+        }
+        assert_eq!(count_of(HotPath::Decode), before, "disabled timer recorded");
+
+        set_enabled(true);
+        assert!(enabled());
+        {
+            let _t = ScopedTimer::start(HotPath::Decode);
+        }
+        set_enabled(false);
+        assert!(count_of(HotPath::Decode) >= before + 1, "enabled timer lost");
+    }
+
+    #[test]
+    fn report_covers_every_path_with_valid_json() {
+        let report = ProfileReport::capture();
+        assert_eq!(report.entries.len(), N_PATHS);
+        let j = report.to_json();
+        for path in ALL_PATHS {
+            let entry = j.get(path.name()).expect("path key");
+            assert!(entry.get("count").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(entry.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        let empty = ProfileEntry {
+            path: HotPath::Encode,
+            count: 0,
+            total_ns: 0,
+        };
+        assert_eq!(empty.mean_ns(), 0.0);
+    }
+}

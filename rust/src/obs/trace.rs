@@ -1,0 +1,490 @@
+//! Trace records and sinks: the engine's deterministic flight recorder.
+//!
+//! Every record carries VIRTUAL time (the simulation clock, seconds) — never
+//! wall clock — so a trace is a pure function of (config, seed) exactly like
+//! the metrics. The engine emits records only behind
+//! [`TraceSink::is_on`] guards; with the default [`TraceSink::Off`] the
+//! instrumented code never allocates, formats, or branches into recording,
+//! and its output is byte-identical to the untraced engine (pinned in
+//! `tests/determinism.rs`).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use crate::util::json::Json;
+
+/// Default capacity of the bounded ring recorder (records, not bytes).
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// One observation of the engine, stamped with virtual time.
+///
+/// Job lifecycle: [`JobAdmit`](TraceRecord::JobAdmit) →
+/// [`JobDispatch`](TraceRecord::JobDispatch) (with one
+/// [`WorkerSpan`](TraceRecord::WorkerSpan) per participant) →
+/// [`JobResolve`](TraceRecord::JobResolve), or a terminal
+/// [`JobLost`](TraceRecord::JobLost) if the job never reaches service.
+/// Fleet lifecycle: [`WorkerLeave`](TraceRecord::WorkerLeave) /
+/// [`WorkerJoin`](TraceRecord::WorkerJoin). Gauges:
+/// [`Counter`](TraceRecord::Counter) at every event-queue tick.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceRecord {
+    /// A job entered the admission queue.
+    JobAdmit {
+        t: f64,
+        shard: usize,
+        job: u64,
+        class: usize,
+        /// Absolute deadline (arrival + class deadline).
+        deadline: f64,
+    },
+    /// A job left the queue and was allocated onto workers.
+    JobDispatch {
+        t: f64,
+        shard: usize,
+        job: u64,
+        /// Participants given load > 0 (0 = vacuous dispatch, instant miss).
+        workers: usize,
+        /// When the round will be evaluated (dispatch + effective deadline).
+        window_end: f64,
+        /// The strategy's estimated success probability for the allocation.
+        est_success: f64,
+    },
+    /// One participant's scheduled computation span for one job.
+    ///
+    /// Emitted at dispatch: `end` is the scheduled release
+    /// (`min(finish, window_end)`). A worker preempted mid-span departs
+    /// earlier than its span shows; the matching
+    /// [`WorkerLeave`](TraceRecord::WorkerLeave) marks the true cut.
+    WorkerSpan {
+        start: f64,
+        end: f64,
+        shard: usize,
+        worker: usize,
+        /// The worker slot's lifecycle generation at dispatch.
+        gen: u64,
+        job: u64,
+        /// Evaluations assigned.
+        load: usize,
+        /// Whether the full load completes inside the window.
+        completed: bool,
+    },
+    /// A served job's round was evaluated.
+    JobResolve {
+        t: f64,
+        shard: usize,
+        job: u64,
+        success: bool,
+        /// Arrival → decode (success) or arrival → window end (miss).
+        latency: f64,
+        /// Deadline slack: `absolute_deadline − (arrival + latency)`.
+        /// Positive = finished early; ≤ 0 = missed or exactly met.
+        slack: f64,
+    },
+    /// A job left the system without being served.
+    JobLost {
+        t: f64,
+        shard: usize,
+        job: u64,
+        /// [`crate::traffic::JobFate::name`] of the loss.
+        fate: &'static str,
+    },
+    /// A worker instance departed (preempting any in-flight assignment).
+    WorkerLeave {
+        t: f64,
+        shard: usize,
+        worker: usize,
+        /// Slot generation AFTER the departure bump.
+        gen: u64,
+    },
+    /// A fresh instance came up on a worker slot.
+    WorkerJoin {
+        t: f64,
+        shard: usize,
+        worker: usize,
+        gen: u64,
+    },
+    /// Queue-depth / live-fleet gauges, sampled at every event tick.
+    Counter {
+        t: f64,
+        shard: usize,
+        queue: usize,
+        live: usize,
+    },
+}
+
+impl TraceRecord {
+    /// The record's primary virtual timestamp (span records: their start).
+    pub fn time(&self) -> f64 {
+        match *self {
+            TraceRecord::JobAdmit { t, .. }
+            | TraceRecord::JobDispatch { t, .. }
+            | TraceRecord::JobResolve { t, .. }
+            | TraceRecord::JobLost { t, .. }
+            | TraceRecord::WorkerLeave { t, .. }
+            | TraceRecord::WorkerJoin { t, .. }
+            | TraceRecord::Counter { t, .. } => t,
+            TraceRecord::WorkerSpan { start, .. } => start,
+        }
+    }
+
+    /// The shard this record belongs to (unsharded engine: 0).
+    pub fn shard(&self) -> usize {
+        match *self {
+            TraceRecord::JobAdmit { shard, .. }
+            | TraceRecord::JobDispatch { shard, .. }
+            | TraceRecord::JobResolve { shard, .. }
+            | TraceRecord::JobLost { shard, .. }
+            | TraceRecord::WorkerLeave { shard, .. }
+            | TraceRecord::WorkerJoin { shard, .. }
+            | TraceRecord::Counter { shard, .. }
+            | TraceRecord::WorkerSpan { shard, .. } => shard,
+        }
+    }
+
+    /// Tagged-object serialization (the `StreamWriter` JSONL schema).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TraceRecord::JobAdmit {
+                t,
+                shard,
+                job,
+                class,
+                deadline,
+            } => Json::obj(vec![
+                ("kind", Json::str("job_admit")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("class", Json::num(class as f64)),
+                ("deadline", Json::num(deadline)),
+            ]),
+            TraceRecord::JobDispatch {
+                t,
+                shard,
+                job,
+                workers,
+                window_end,
+                est_success,
+            } => Json::obj(vec![
+                ("kind", Json::str("job_dispatch")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("workers", Json::num(workers as f64)),
+                ("window_end", Json::num(window_end)),
+                ("est_success", Json::num(est_success)),
+            ]),
+            TraceRecord::WorkerSpan {
+                start,
+                end,
+                shard,
+                worker,
+                gen,
+                job,
+                load,
+                completed,
+            } => Json::obj(vec![
+                ("kind", Json::str("worker_span")),
+                ("start", Json::num(start)),
+                ("end", Json::num(end)),
+                ("shard", Json::num(shard as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("gen", Json::num(gen as f64)),
+                ("job", Json::num(job as f64)),
+                ("load", Json::num(load as f64)),
+                ("completed", Json::Bool(completed)),
+            ]),
+            TraceRecord::JobResolve {
+                t,
+                shard,
+                job,
+                success,
+                latency,
+                slack,
+            } => Json::obj(vec![
+                ("kind", Json::str("job_resolve")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("success", Json::Bool(success)),
+                ("latency", Json::num(latency)),
+                ("slack", Json::num(slack)),
+            ]),
+            TraceRecord::JobLost {
+                t,
+                shard,
+                job,
+                fate,
+            } => Json::obj(vec![
+                ("kind", Json::str("job_lost")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("fate", Json::str(fate)),
+            ]),
+            TraceRecord::WorkerLeave {
+                t,
+                shard,
+                worker,
+                gen,
+            } => Json::obj(vec![
+                ("kind", Json::str("worker_leave")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("gen", Json::num(gen as f64)),
+            ]),
+            TraceRecord::WorkerJoin {
+                t,
+                shard,
+                worker,
+                gen,
+            } => Json::obj(vec![
+                ("kind", Json::str("worker_join")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("gen", Json::num(gen as f64)),
+            ]),
+            TraceRecord::Counter {
+                t,
+                shard,
+                queue,
+                live,
+            } => Json::obj(vec![
+                ("kind", Json::str("counter")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("queue", Json::num(queue as f64)),
+                ("live", Json::num(live as f64)),
+            ]),
+        }
+    }
+}
+
+/// Bounded in-memory recorder: keeps the newest `cap` records, counting
+/// (not silently hiding) evictions.
+#[derive(Debug)]
+pub struct RingRecorder {
+    cap: usize,
+    records: VecDeque<TraceRecord>,
+    dropped: u64,
+}
+
+impl RingRecorder {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "ring capacity must be ≥ 1");
+        RingRecorder {
+            cap,
+            records: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        while self.records.len() >= self.cap {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        self.records.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Oldest records evicted to respect the bound (0 = complete trace).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn records(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.records.iter()
+    }
+
+    /// Consume into (records oldest-first, eviction count).
+    pub fn into_parts(self) -> (Vec<TraceRecord>, u64) {
+        (self.records.into_iter().collect(), self.dropped)
+    }
+}
+
+/// Streaming JSONL writer: one [`TraceRecord::to_json`] object per line.
+///
+/// For runs too long for any ring: records go straight to disk and memory
+/// stays O(1). Write errors are counted, not propagated — a full disk must
+/// not change the simulation's behavior mid-run.
+#[derive(Debug)]
+pub struct StreamWriter {
+    out: BufWriter<File>,
+    path: String,
+    written: u64,
+    io_errors: u64,
+}
+
+impl StreamWriter {
+    pub fn create(path: &str) -> std::io::Result<StreamWriter> {
+        Ok(StreamWriter {
+            out: BufWriter::new(File::create(path)?),
+            path: path.to_string(),
+            written: 0,
+            io_errors: 0,
+        })
+    }
+
+    pub fn push(&mut self, rec: &TraceRecord) {
+        if writeln!(self.out, "{}", rec.to_json()).is_ok() {
+            self.written += 1;
+        } else {
+            self.io_errors += 1;
+        }
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush and report `(path, records written, io errors)`.
+    pub fn finish(mut self) -> std::io::Result<(String, u64, u64)> {
+        self.out.flush()?;
+        Ok((self.path.clone(), self.written, self.io_errors))
+    }
+}
+
+/// Where trace records go. Static enum dispatch: the `Off` arm is a no-op
+/// the optimizer erases, and every emission site is additionally guarded by
+/// [`TraceSink::is_on`] so record CONSTRUCTION is skipped too.
+#[derive(Debug, Default)]
+pub enum TraceSink {
+    /// No recording (the default — zero overhead, byte-identical engine).
+    #[default]
+    Off,
+    /// Bounded in-memory ring (the `lea trace` recorder).
+    Ring(RingRecorder),
+    /// Streaming JSONL file writer.
+    Stream(StreamWriter),
+}
+
+impl TraceSink {
+    /// A ring sink with the given capacity.
+    pub fn ring(cap: usize) -> TraceSink {
+        TraceSink::Ring(RingRecorder::new(cap))
+    }
+
+    /// A streaming sink writing JSONL to `path`.
+    pub fn stream(path: &str) -> std::io::Result<TraceSink> {
+        Ok(TraceSink::Stream(StreamWriter::create(path)?))
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        !matches!(self, TraceSink::Off)
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        match self {
+            TraceSink::Off => {}
+            TraceSink::Ring(r) => r.push(rec),
+            TraceSink::Stream(w) => w.push(&rec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counter(t: f64) -> TraceRecord {
+        TraceRecord::Counter {
+            t,
+            shard: 0,
+            queue: 1,
+            live: 15,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_records_and_counts_evictions() {
+        let mut ring = RingRecorder::new(3);
+        assert!(ring.is_empty());
+        for i in 0..5 {
+            ring.push(counter(i as f64));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let times: Vec<f64> = ring.records().map(TraceRecord::time).collect();
+        assert_eq!(times, vec![2.0, 3.0, 4.0]);
+        let (records, dropped) = ring.into_parts();
+        assert_eq!(records.len(), 3);
+        assert_eq!(dropped, 2);
+    }
+
+    #[test]
+    fn off_sink_ignores_pushes_and_reports_off() {
+        let mut sink = TraceSink::default();
+        assert!(!sink.is_on());
+        sink.push(counter(1.0));
+        assert!(matches!(sink, TraceSink::Off));
+        assert!(TraceSink::ring(8).is_on());
+    }
+
+    #[test]
+    fn records_serialize_with_kind_tags() {
+        let rec = TraceRecord::JobResolve {
+            t: 2.5,
+            shard: 1,
+            job: 7,
+            success: true,
+            latency: 0.5,
+            slack: 0.25,
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("job_resolve"));
+        assert_eq!(j.get("job").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("success").unwrap().as_bool(), Some(true));
+        assert_eq!(rec.time(), 2.5);
+        assert_eq!(rec.shard(), 1);
+        // Spans stamp their start.
+        let span = TraceRecord::WorkerSpan {
+            start: 1.0,
+            end: 2.0,
+            shard: 2,
+            worker: 4,
+            gen: 3,
+            job: 9,
+            load: 6,
+            completed: false,
+        };
+        assert_eq!(span.time(), 1.0);
+        assert_eq!(span.shard(), 2);
+        assert_eq!(span.to_json().get("kind").unwrap().as_str(), Some("worker_span"));
+    }
+
+    #[test]
+    fn stream_writer_emits_parseable_jsonl() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir().join("timely_coded_obs_stream_test.jsonl");
+        let path = path.to_string_lossy().into_owned();
+        let mut sink = TraceSink::stream(&path).expect("create stream");
+        assert!(sink.is_on());
+        sink.push(counter(0.0));
+        sink.push(counter(1.0));
+        let TraceSink::Stream(w) = sink else {
+            panic!("stream sink expected")
+        };
+        let (p, written, io_errors) = w.finish().expect("flush");
+        assert_eq!((written, io_errors), (2, 0));
+        let body = std::fs::read_to_string(&p).expect("read back");
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).expect("valid jsonl line");
+            assert_eq!(j.get("kind").unwrap().as_str(), Some("counter"));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -18,6 +18,7 @@ use super::success::{
     best_prefix_scratch, fleet_success_probability, poisson_binomial_tail, FleetDp,
     FleetLoadParams, LoadParams, PrefixScratch,
 };
+use crate::obs::profile::{HotPath, ScopedTimer};
 
 /// A concrete per-worker load assignment for one round.
 #[derive(Clone, Debug, PartialEq)]
@@ -167,6 +168,7 @@ pub fn allocate_fleet_with_scratch(
     p_good: &[f64],
     scratch: &mut FleetAllocScratch,
 ) -> Allocation {
+    let _t = ScopedTimer::start(HotPath::EaAlloc);
     assert_eq!(p_good.len(), params.n());
     if let Some(u) = params.as_uniform() {
         return allocate_with_scratch(&u, p_good, &mut scratch.homog);

@@ -23,6 +23,7 @@ pub fn load_from_rate(mu: f64, r: usize, d: f64) -> usize {
 
 /// P(Σ Bernoulli(ps_i) ≥ a). Exact convolution DP, O(len(ps)²).
 pub fn poisson_binomial_tail(ps: &[f64], a: i64) -> f64 {
+    let _t = crate::obs::profile::ScopedTimer::start(crate::obs::profile::HotPath::SuccessDp);
     if a <= 0 {
         return 1.0;
     }

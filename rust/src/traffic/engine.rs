@@ -76,6 +76,8 @@ use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::scheme::CodingScheme;
 use crate::coding::threshold::Design;
 use crate::markov::WState;
+use crate::obs::profile::{HotPath, ScopedTimer};
+use crate::obs::trace::{TraceRecord, TraceSink};
 use crate::scheduler::alloc_cache::{AllocCachePolicy, AllocPlanCache};
 use crate::scheduler::allocation::{allocate_fleet_with_scratch, FleetAllocScratch};
 use crate::scheduler::strategy::Strategy;
@@ -136,6 +138,13 @@ pub struct TrafficConfig {
     /// hit/miss counters is byte-identical (pinned by
     /// `tests/shard_cache.rs`).
     pub alloc_cache: AllocCachePolicy,
+    /// Estimator-calibration probe cadence: on every `probe_every`-th
+    /// dispatch, compare the strategy's p̂ against the true Markov state of
+    /// each PARTICIPANT (whose state the dispatch advances anyway — the
+    /// probe reads already-computed values and consumes no extra RNG, so it
+    /// never perturbs the run). 1 (the default) probes every dispatch;
+    /// must be ≥ 1.
+    pub probe_every: usize,
 }
 
 impl TrafficConfig {
@@ -157,6 +166,7 @@ impl TrafficConfig {
             churn: ChurnModel::none(),
             rejoin_speeds: RejoinSpeeds::Keep,
             alloc_cache: AllocCachePolicy::default_exact(),
+            probe_every: 1,
         }
     }
 
@@ -175,6 +185,12 @@ impl TrafficConfig {
     /// Builder: replace the dispatch-path allocation-cache policy.
     pub fn with_alloc_cache(mut self, alloc_cache: AllocCachePolicy) -> Self {
         self.alloc_cache = alloc_cache;
+        self
+    }
+
+    /// Builder: replace the calibration-probe cadence (must be ≥ 1).
+    pub fn with_probe_every(mut self, probe_every: usize) -> Self {
+        self.probe_every = probe_every;
         self
     }
 }
@@ -227,6 +243,7 @@ pub(crate) fn pick_class(rng: &mut Rng, classes: &[JobClass]) -> usize {
 /// multi-cluster entry points).
 pub(crate) fn validate_config(cfg: &TrafficConfig, cluster: &SimCluster) {
     assert!(!cfg.classes.is_empty(), "at least one job class required");
+    assert!(cfg.probe_every >= 1, "probe_every must be ≥ 1");
     cfg.churn.validate();
     for c in &cfg.classes {
         assert_eq!(
@@ -250,6 +267,21 @@ pub fn run_traffic(
     cfg: &TrafficConfig,
     seed: u64,
 ) -> TrafficMetrics {
+    run_traffic_traced(strategy, cluster, cfg, seed, TraceSink::Off).0
+}
+
+/// [`run_traffic`] with a [`TraceSink`] attached: the sink records the full
+/// job/fleet lifecycle without feeding back into the simulation — the
+/// returned metrics are byte-identical to the untraced run with any sink
+/// (pinned in `tests/determinism.rs`). The sink comes back with whatever it
+/// captured.
+pub fn run_traffic_traced(
+    strategy: &mut dyn Strategy,
+    cluster: &mut SimCluster,
+    cfg: &TrafficConfig,
+    seed: u64,
+    trace: TraceSink,
+) -> (TrafficMetrics, TraceSink) {
     validate_config(cfg, cluster);
     let engine = Engine {
         cfg,
@@ -257,7 +289,7 @@ pub fn run_traffic(
         arrivals: cfg.arrivals.clone(),
         events: EventQueue::new(),
         spawned: 0,
-        core: ClusterCore::new(cfg, strategy, cluster, seed),
+        core: ClusterCore::new(cfg, strategy, cluster, seed).with_trace(trace),
     };
     engine.run()
 }
@@ -312,6 +344,14 @@ pub(crate) struct ClusterCore<'a> {
     loads_full: Vec<usize>,
     completed_full: Vec<bool>,
     observed_buf: Vec<Option<WState>>,
+    /// Lifecycle recorder ([`TraceSink::Off`] by default — every emission
+    /// site is guarded by `is_on`, so the untraced engine never constructs
+    /// a record and stays byte-identical).
+    trace: TraceSink,
+    /// This core's shard id in trace records (0 for the unsharded engine).
+    shard: usize,
+    /// Dispatches so far — drives the `probe_every` calibration cadence.
+    dispatches: u64,
 }
 
 /// The single-cluster driver: the global arrival stream plus one core.
@@ -325,7 +365,8 @@ struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    fn run(mut self) -> TrafficMetrics {
+    fn run(mut self) -> (TrafficMetrics, TraceSink) {
+        let _loop_timer = ScopedTimer::start(HotPath::EventLoop);
         if self.cfg.jobs > 0 {
             let gap = self.arrivals.sample(&mut self.rng);
             self.events.push(gap.max(0.0), EventKind::Arrival);
@@ -368,7 +409,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        self.core.finish()
+        self.core.finish_with_trace()
     }
 
     fn handle_arrival(&mut self, now: f64) {
@@ -437,13 +478,37 @@ impl<'a> ClusterCore<'a> {
             loads_full: Vec::new(),
             completed_full: Vec::new(),
             observed_buf: Vec::new(),
+            trace: TraceSink::Off,
+            shard: 0,
+            dispatches: 0,
         }
+    }
+
+    /// Builder: tag this core's trace records with a shard id (the sharded
+    /// front-end maps cores to Perfetto processes this way).
+    pub(crate) fn with_shard(mut self, shard: usize) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// Builder: attach a recording trace sink (default: [`TraceSink::Off`]).
+    pub(crate) fn with_trace(mut self, trace: TraceSink) -> Self {
+        self.trace = trace;
+        self
     }
 
     /// Advance this core's metric integrals to `now` (call once per event
     /// handled by this core, BEFORE the handler mutates state).
     pub(crate) fn tick(&mut self, now: f64) {
         self.metrics.tick(self.queue.len(), self.live, now);
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::Counter {
+                t: now,
+                shard: self.shard,
+                queue: self.queue.len(),
+                live: self.live,
+            });
+        }
     }
 
     /// Schedule every slot's first preemption (run start, active churn).
@@ -482,6 +547,15 @@ impl<'a> ClusterCore<'a> {
     pub(crate) fn admit<S: EventSink>(&mut self, job: Job, now: f64, sink: &mut S) {
         let id = job.id;
         self.metrics.on_arrival();
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::JobAdmit {
+                t: now,
+                shard: self.shard,
+                job: id,
+                class: job.class,
+                deadline: job.absolute_deadline,
+            });
+        }
         self.queue.push(&job);
         // Drop-infeasible jobs settle synchronously below — no expiry needed.
         if self.cfg.deadline_from == DeadlineFrom::Arrival
@@ -500,10 +574,24 @@ impl<'a> ClusterCore<'a> {
             let capacity_blocked = (self.cfg.max_in_flight > 0
                 && self.in_flight >= self.cfg.max_in_flight)
                 || self.workers.iter().all(|w| !w.live || w.job.is_some());
-            self.metrics.on_loss(if capacity_blocked {
+            let fate = if capacity_blocked {
                 JobFate::DroppedAtArrival
             } else {
                 JobFate::DroppedInfeasible
+            };
+            self.metrics.on_loss(fate);
+            self.trace_lost(id, fate, now);
+        }
+    }
+
+    /// Record a terminal loss in the trace (no-op with the sink off).
+    fn trace_lost(&mut self, job: u64, fate: JobFate, t: f64) {
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::JobLost {
+                t,
+                shard: self.shard,
+                job,
+                fate: fate.name(),
             });
         }
     }
@@ -515,6 +603,7 @@ impl<'a> ClusterCore<'a> {
         if self.queue.remove(id) {
             self.jobs.remove(&id);
             self.metrics.on_loss(JobFate::ExpiredInQueue);
+            self.trace_lost(id, JobFate::ExpiredInQueue, now);
             self.try_dispatch(now, sink);
         }
     }
@@ -565,6 +654,14 @@ impl<'a> ClusterCore<'a> {
             self.metrics.on_preemption(svc.loads[i]);
         }
         self.strategy.on_worker_leave(worker);
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::WorkerLeave {
+                t: now,
+                shard: self.shard,
+                worker,
+                gen: self.workers[worker].gen,
+            });
+        }
         // The replacement is always scheduled; if the run drains first, the
         // event loop drops it unprocessed.
         let down = self.cfg.churn.sample_downtime(&mut self.churn_rng);
@@ -593,6 +690,14 @@ impl<'a> ClusterCore<'a> {
             }
         }
         self.strategy.on_worker_join(worker);
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::WorkerJoin {
+                t: now,
+                shard: self.shard,
+                worker,
+                gen: self.workers[worker].gen,
+            });
+        }
         let up = self.cfg.churn.sample_uptime(&mut self.churn_rng);
         sink.push(now + up, EventKind::WorkerLeave { worker });
         self.try_dispatch(now, sink);
@@ -644,6 +749,16 @@ impl<'a> ClusterCore<'a> {
         self.strategy.observe(&self.observed_buf);
 
         self.metrics.on_resolve(success, latency);
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::JobResolve {
+                t: now,
+                shard: self.shard,
+                job: id,
+                success,
+                latency,
+                slack: job.absolute_deadline - (job.arrival + latency),
+            });
+        }
         self.in_flight -= 1;
         self.try_dispatch(now, sink);
     }
@@ -680,6 +795,7 @@ impl<'a> ClusterCore<'a> {
                 self.queue.remove(front);
                 self.jobs.remove(&front);
                 self.metrics.on_loss(JobFate::ExpiredInQueue);
+                self.trace_lost(front, JobFate::ExpiredInQueue, now);
                 continue;
             }
             let geo = class.scheme.geometry;
@@ -721,6 +837,7 @@ impl<'a> ClusterCore<'a> {
                     self.queue.remove(front);
                     self.jobs.remove(&front);
                     self.metrics.on_loss(JobFate::DroppedInfeasible);
+                    self.trace_lost(front, JobFate::DroppedInfeasible, now);
                     continue;
                 }
             }
@@ -787,6 +904,24 @@ impl<'a> ClusterCore<'a> {
             // occupying workers or an in-flight slot.
             self.metrics.on_serve((now - job.arrival).max(0.0), est_success);
             self.metrics.on_resolve(false, d_eff);
+            if self.trace.is_on() {
+                self.trace.push(TraceRecord::JobDispatch {
+                    t: now,
+                    shard: self.shard,
+                    job: job.id,
+                    workers: 0,
+                    window_end: now + d_eff,
+                    est_success,
+                });
+                self.trace.push(TraceRecord::JobResolve {
+                    t: now,
+                    shard: self.shard,
+                    job: job.id,
+                    success: false,
+                    latency: d_eff,
+                    slack: job.absolute_deadline - (job.arrival + d_eff),
+                });
+            }
             self.jobs.remove(&job.id);
             return;
         }
@@ -796,6 +931,18 @@ impl<'a> ClusterCore<'a> {
             self.gaps_buf.push(g);
         }
         let states = self.cluster.advance_subset(&workers_v, &self.gaps_buf);
+
+        // Estimator-calibration probe: p̂ vs the true state each participant
+        // was just advanced to. Both are already computed — the probe is a
+        // pure read (no RNG, no state change), so probed and unprobed runs
+        // are byte-identical in everything but the calib_* counters.
+        self.dispatches += 1;
+        if (self.dispatches - 1) % self.cfg.probe_every as u64 == 0 {
+            for (i, &w) in workers_v.iter().enumerate() {
+                self.metrics
+                    .on_calibration(self.profile_buf[w], states[i].is_good());
+            }
+        }
 
         let window_end = now + d_eff;
         // The deadline-completion rule (incl. its epsilon convention) is the
@@ -826,6 +973,32 @@ impl<'a> ClusterCore<'a> {
             );
         }
         sink.push(window_end, EventKind::Resolve { job: job.id });
+
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::JobDispatch {
+                t: now,
+                shard: self.shard,
+                job: job.id,
+                workers: workers_v.len(),
+                window_end,
+                est_success,
+            });
+            // Per-worker computation spans, known in full at dispatch time
+            // (`end` is the scheduled release; a mid-span preemption shows
+            // as a WorkerLeave cutting the span short).
+            for i in 0..workers_v.len() {
+                self.trace.push(TraceRecord::WorkerSpan {
+                    start: now,
+                    end: finish[i].min(window_end),
+                    shard: self.shard,
+                    worker: workers_v[i],
+                    gen: gens[i],
+                    job: job.id,
+                    load: loads_v[i],
+                    completed: completed[i],
+                });
+            }
+        }
 
         self.metrics.on_serve((now - job.arrival).max(0.0), est_success);
         self.in_flight += 1;
@@ -881,7 +1054,13 @@ impl<'a> ClusterCore<'a> {
 
     /// Close out the run: copy the alloc-cache counters into the metrics,
     /// check conservation, and hand the metrics back.
-    pub(crate) fn finish(mut self) -> TrafficMetrics {
+    pub(crate) fn finish(self) -> TrafficMetrics {
+        self.finish_with_trace().0
+    }
+
+    /// [`finish`](Self::finish), also handing back the trace sink with
+    /// everything it recorded.
+    pub(crate) fn finish_with_trace(mut self) -> (TrafficMetrics, TraceSink) {
         if let Some(cache) = &self.alloc_cache {
             self.metrics.alloc_cache_hits = cache.hits();
             self.metrics.alloc_cache_misses = cache.misses();
@@ -896,7 +1075,8 @@ impl<'a> ClusterCore<'a> {
                 + self.metrics.dropped_infeasible
                 + self.metrics.expired_in_queue
         );
-        self.metrics
+        let trace = std::mem::take(&mut self.trace);
+        (self.metrics, trace)
     }
 }
 
@@ -1000,7 +1180,46 @@ mod tests {
             assert_eq!((m.leaves, m.joins, m.preemptions, m.work_lost), (0, 0, 0, 0));
             assert_eq!(m.min_live_workers(), 15);
             assert!((m.mean_live_workers() - 15.0).abs() < 1e-9);
+            // probe_every = 1 probes every participant of every dispatch.
+            assert!(m.calib_samples > 0, "{}", policy.name());
+            assert_eq!(m.calib_good_obs + m.calib_bad_obs, m.calib_samples);
+            assert!((0.0..=1.0).contains(&m.calib_mean_abs_error()));
         }
+    }
+
+    /// The probe cadence thins samples without touching anything else: a
+    /// probe_every = 3 run is byte-identical to the default except for the
+    /// calib_* counters, and collects roughly a third of the samples.
+    #[test]
+    fn probe_cadence_thins_calibration_without_perturbing_the_run() {
+        let run_with = |probe_every: usize| {
+            let mut lea = Lea::new(fig3_load_params());
+            let mut cl = cluster(21);
+            let cfg = overload_cfg(Policy::EdfFeasible, 400).with_probe_every(probe_every);
+            run_traffic(&mut lea, &mut cl, &cfg, 21)
+        };
+        let dense = run_with(1);
+        let sparse = run_with(3);
+        assert!(dense.calib_samples > sparse.calib_samples);
+        assert!(sparse.calib_samples > 0);
+        let strip = |m: &TrafficMetrics| {
+            let mut j = match m.to_json() {
+                crate::util::json::Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            for key in [
+                "calib_samples",
+                "calib_good_obs",
+                "calib_bad_obs",
+                "calib_mean_abs_error",
+                "calib_good_hit_rate",
+                "calib_bad_hit_rate",
+            ] {
+                j.remove(key);
+            }
+            crate::util::json::Json::Obj(j).to_string()
+        };
+        assert_eq!(strip(&dense), strip(&sparse), "probe cadence leaked");
     }
 
     #[test]
@@ -1113,6 +1332,7 @@ mod tests {
             churn: ChurnModel::none(),
             rejoin_speeds: RejoinSpeeds::Keep,
             alloc_cache: AllocCachePolicy::default_exact(),
+            probe_every: 1,
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);

@@ -43,6 +43,19 @@ pub enum JobFate {
     ExpiredInQueue,
 }
 
+impl JobFate {
+    /// Stable snake_case label (trace records and JSON artifacts).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobFate::Completed => "completed",
+            JobFate::Missed => "missed",
+            JobFate::DroppedAtArrival => "dropped_at_arrival",
+            JobFate::DroppedInfeasible => "dropped_infeasible",
+            JobFate::ExpiredInQueue => "expired_in_queue",
+        }
+    }
+}
+
 /// One request moving through the system.
 #[derive(Clone, Debug)]
 pub(crate) struct Job {

@@ -53,6 +53,22 @@ pub struct TrafficMetrics {
     pub work_lost: u64,
     /// Minimum live-fleet size observed at any event.
     pub live_min: usize,
+    /// Estimator-calibration probe samples: one per (probed dispatch,
+    /// participant) pair — the strategy's p̂ for that worker compared
+    /// against the true Markov state the simulator advanced it to. Probes
+    /// read values the dispatch computes anyway, so they consume no extra
+    /// RNG and never perturb the run (cadence: `TrafficConfig::probe_every`).
+    pub calib_samples: u64,
+    /// Probed participants whose true state was Good.
+    pub calib_good_obs: u64,
+    /// ... of which the estimator predicted Good (p̂ ≥ 0.5).
+    pub calib_good_hits: u64,
+    /// Probed participants whose true state was Bad.
+    pub calib_bad_obs: u64,
+    /// ... of which the estimator predicted Bad (p̂ < 0.5).
+    pub calib_bad_hits: u64,
+    /// Σ |p̂ − 𝟙{good}| over probe samples (the Brier-style L1 error).
+    calib_abs_err: f64,
     latency_mean: Welford,
     latency_p50: P2Quantile,
     latency_p95: P2Quantile,
@@ -88,6 +104,12 @@ impl Default for TrafficMetrics {
             preemptions: 0,
             work_lost: 0,
             live_min: usize::MAX,
+            calib_samples: 0,
+            calib_good_obs: 0,
+            calib_good_hits: 0,
+            calib_bad_obs: 0,
+            calib_bad_hits: 0,
+            calib_abs_err: 0.0,
             latency_mean: Welford::default(),
             latency_p50: P2Quantile::new(0.50),
             latency_p95: P2Quantile::new(0.95),
@@ -158,6 +180,32 @@ impl TrafficMetrics {
         }
     }
 
+    /// One calibration probe sample: the strategy's p̂ for a dispatch
+    /// participant vs the true state it was advanced to. Non-finite p̂
+    /// (a strategy with no profile) counts as the uninformative 0.5.
+    pub(crate) fn on_calibration(&mut self, p_hat: f64, good: bool) {
+        let p = if p_hat.is_finite() {
+            p_hat.clamp(0.0, 1.0)
+        } else {
+            0.5
+        };
+        self.calib_samples += 1;
+        let truth = if good { 1.0 } else { 0.0 };
+        self.calib_abs_err += (p - truth).abs();
+        let predicted_good = p >= 0.5;
+        if good {
+            self.calib_good_obs += 1;
+            if predicted_good {
+                self.calib_good_hits += 1;
+            }
+        } else {
+            self.calib_bad_obs += 1;
+            if !predicted_good {
+                self.calib_bad_hits += 1;
+            }
+        }
+    }
+
     pub(crate) fn on_plan_probe(&mut self, hit: bool) {
         if hit {
             self.plan_probe_hits += 1;
@@ -206,28 +254,79 @@ impl TrafficMetrics {
         )
     }
 
+    // Latency/wait accessors guard the zero-sample case EXPLICITLY (the P²
+    // sketch reports NaN before its first observation, and relying on the
+    // serializer to launder NaN hid the hole from every non-JSON caller): a
+    // cell that resolves zero jobs — extreme churn plus drop-infeasible
+    // admission — reports 0.0 everywhere. Pinned in
+    // `zero_sample_accessors_return_zero_not_nan`.
+
+    /// Mean latency over completed jobs (0 when none completed).
     pub fn mean_latency(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
         self.latency_mean.mean()
     }
 
     pub fn latency_p50(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
         self.latency_p50.value()
     }
 
     pub fn latency_p95(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
         self.latency_p95.value()
     }
 
     pub fn latency_p99(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
         self.latency_p99.value()
     }
 
+    /// Mean queue wait over served jobs (0 when nothing was served).
     pub fn mean_wait(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
         self.wait_mean.mean()
     }
 
+    /// Mean estimated success probability over dispatches (0 when nothing
+    /// was dispatched with a finite estimate).
     pub fn mean_est_success(&self) -> f64 {
+        if self.est_success.count() == 0 {
+            return 0.0;
+        }
         self.est_success.mean()
+    }
+
+    /// Mean |p̂ − 𝟙{good}| over calibration probe samples: 0 = perfectly
+    /// calibrated AND confident, 0.5 ≈ uninformative, → 1 = confidently
+    /// wrong. 0 when nothing was probed.
+    pub fn calib_mean_abs_error(&self) -> f64 {
+        if self.calib_samples == 0 {
+            return 0.0;
+        }
+        self.calib_abs_err / self.calib_samples as f64
+    }
+
+    /// Fraction of truly-Good probed participants the estimator called Good
+    /// (p̂ ≥ 0.5); 0 when no Good participant was probed.
+    pub fn calib_good_hit_rate(&self) -> f64 {
+        ratio(self.calib_good_hits, self.calib_good_obs)
+    }
+
+    /// Fraction of truly-Bad probed participants the estimator called Bad
+    /// (p̂ < 0.5); 0 when no Bad participant was probed.
+    pub fn calib_bad_hit_rate(&self) -> f64 {
+        ratio(self.calib_bad_hits, self.calib_bad_obs)
     }
 
     /// Fraction of probed (successful Lagrange) rounds whose K*-subset
@@ -328,6 +427,18 @@ impl TrafficMetrics {
                 Json::num(self.alloc_cache_misses as f64),
             ),
             ("alloc_hit_rate", num(self.alloc_hit_rate())),
+            ("calib_samples", Json::num(self.calib_samples as f64)),
+            ("calib_good_obs", Json::num(self.calib_good_obs as f64)),
+            ("calib_bad_obs", Json::num(self.calib_bad_obs as f64)),
+            (
+                "calib_mean_abs_error",
+                num(self.calib_mean_abs_error()),
+            ),
+            (
+                "calib_good_hit_rate",
+                num(self.calib_good_hit_rate()),
+            ),
+            ("calib_bad_hit_rate", num(self.calib_bad_hit_rate())),
         ])
     }
 }
@@ -416,5 +527,65 @@ mod tests {
         assert_eq!(j.get("arrivals").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("latency_p99").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("goodput").unwrap().as_f64(), Some(0.0));
+    }
+
+    /// The zero-sample guard: a cell that resolves NOTHING (all drops, or
+    /// no arrivals at all) must report 0.0 — not NaN — from every ratio and
+    /// mean accessor, straight from the accessor, not just after JSON
+    /// laundering.
+    #[test]
+    fn zero_sample_accessors_return_zero_not_nan() {
+        let mut m = TrafficMetrics::new();
+        // Arrivals that all die before service: still zero resolved.
+        for _ in 0..3 {
+            m.on_arrival();
+            m.on_loss(JobFate::DroppedInfeasible);
+        }
+        for v in [
+            m.mean_latency(),
+            m.latency_p50(),
+            m.latency_p95(),
+            m.latency_p99(),
+            m.mean_wait(),
+            m.mean_est_success(),
+            m.timely_throughput(),
+            m.goodput(),
+            m.plan_hit_rate(),
+            m.alloc_hit_rate(),
+            m.calib_mean_abs_error(),
+            m.calib_good_hit_rate(),
+            m.calib_bad_hit_rate(),
+            m.mean_queue_depth(),
+            m.mean_live_workers(),
+        ] {
+            assert!(!v.is_nan(), "zero-sample accessor leaked NaN");
+            assert_eq!(v, 0.0);
+        }
+        // miss_rate saturates at 1 when every arrival is lost.
+        assert_eq!(m.miss_rate(), 1.0);
+        assert_eq!(TrafficMetrics::new().miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn calibration_probe_counters_and_rates() {
+        let mut m = TrafficMetrics::new();
+        m.on_calibration(0.9, true); // confident, right
+        m.on_calibration(0.2, true); // wrong about a Good worker
+        m.on_calibration(0.1, false); // confident, right
+        m.on_calibration(f64::NAN, false); // no profile → 0.5 → "Good" guess
+        assert_eq!(m.calib_samples, 4);
+        assert_eq!((m.calib_good_obs, m.calib_good_hits), (2, 1));
+        assert_eq!((m.calib_bad_obs, m.calib_bad_hits), (2, 1));
+        assert_eq!(m.calib_good_hit_rate(), 0.5);
+        assert_eq!(m.calib_bad_hit_rate(), 0.5);
+        // |0.9−1| + |0.2−1| + |0.1−0| + |0.5−0| = 0.1 + 0.8 + 0.1 + 0.5
+        assert!((m.calib_mean_abs_error() - 1.5 / 4.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("calib_samples").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            j.get("calib_mean_abs_error").unwrap().as_f64(),
+            Some(0.375)
+        );
+        assert_eq!(j.get("calib_good_hit_rate").unwrap().as_f64(), Some(0.5));
     }
 }

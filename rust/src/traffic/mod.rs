@@ -22,7 +22,8 @@
 //!   assignments, rejoining slots come up as fresh instances.
 //! - [`metrics`] — deadline-miss rate, goodput, queue depth, churn
 //!   accounting (leaves/joins, work lost to preemption, live-fleet
-//!   integral), and p50/p95/p99 latency via the O(1)-memory P² sketch.
+//!   integral), estimator-calibration probes (p̂ vs true Markov state at
+//!   dispatch), and p50/p95/p99 latency via the O(1)-memory P² sketch.
 //! - [`shard`] — the multi-cluster front-end: C independent clusters (one
 //!   [`crate::traffic::engine`] core each) behind a router on a single
 //!   global event queue, with round-robin / join-shortest-queue /
@@ -43,7 +44,7 @@ pub mod shard;
 
 pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
-pub use engine::{run_traffic, DeadlineFrom, RejoinSpeeds, TrafficConfig};
+pub use engine::{run_traffic, run_traffic_traced, DeadlineFrom, RejoinSpeeds, TrafficConfig};
 pub use job::{JobClass, JobFate};
 pub use metrics::TrafficMetrics;
 pub use shard::{run_sharded, FleetMetrics, RoutingPolicy, ShardConfig};

@@ -41,6 +41,7 @@ use super::engine::{pick_class, validate_config, ClusterCore, EventSink, Traffic
 use super::event::EventKind;
 use super::job::{Job, JobClass};
 use super::metrics::{ratio, TrafficMetrics};
+use crate::obs::profile::{HotPath, ScopedTimer};
 use crate::scheduler::strategy::Strategy;
 use crate::sim::cluster::SimCluster;
 use crate::util::json::Json;
@@ -426,6 +427,7 @@ pub fn run_sharded(
     cfg.validate().expect("invalid shard config");
     assert_eq!(clusters.len(), cfg.shards, "one cluster per shard required");
     assert_eq!(strategies.len(), cfg.shards, "one strategy per shard required");
+    let _loop_timer = ScopedTimer::start(HotPath::EventLoop);
     let tcfg = &cfg.traffic;
     for cluster in clusters.iter() {
         validate_config(tcfg, cluster);
@@ -436,6 +438,7 @@ pub fn run_sharded(
         .enumerate()
         .map(|(s, (strategy, cluster))| {
             ClusterCore::new(tcfg, &mut **strategy, cluster, shard_stream_seed(seed, s))
+                .with_shard(s)
         })
         .collect();
 

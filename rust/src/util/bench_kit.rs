@@ -33,6 +33,7 @@ pub fn budget(samples: usize, batch: u64) -> (usize, u64) {
 pub struct BenchLog {
     results: Vec<BenchResult>,
     notes: Vec<(String, f64)>,
+    profile: Option<Json>,
 }
 
 impl BenchLog {
@@ -47,6 +48,13 @@ impl BenchLog {
     /// Record a derived figure (a speedup ratio, an events/s rate, …).
     pub fn note(&mut self, key: &str, value: f64) {
         self.notes.push((key.to_string(), value));
+    }
+
+    /// Attach a hot-path profile snapshot
+    /// ([`crate::obs::ProfileReport::to_json`]) — emitted under a
+    /// `"profile"` key when present.
+    pub fn set_profile(&mut self, profile: Json) {
+        self.profile = Some(profile);
     }
 
     pub fn to_json(&self) -> Json {
@@ -70,11 +78,15 @@ impl BenchLog {
                 .map(|(k, v)| (k.clone(), Json::num(*v)))
                 .collect(),
         );
-        Json::obj(vec![
+        let mut fields = vec![
             ("smoke", Json::Bool(smoke_mode())),
             ("cases", cases),
             ("notes", notes),
-        ])
+        ];
+        if let Some(profile) = &self.profile {
+            fields.push(("profile", profile.clone()));
+        }
+        Json::obj(fields)
     }
 
     /// Write the artifact, reporting where it landed.
@@ -203,5 +215,17 @@ mod tests {
         // Round-trips through the writer's format.
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn profile_key_appears_only_when_set() {
+        let mut log = BenchLog::new();
+        assert!(log.to_json().get("profile").is_none());
+        log.set_profile(Json::obj(vec![("encode", Json::num(1.0))]));
+        let j = log.to_json();
+        assert_eq!(
+            j.get("profile").unwrap().get("encode").unwrap().as_f64(),
+            Some(1.0)
+        );
     }
 }

@@ -114,6 +114,36 @@ impl Args {
         Ok(v)
     }
 
+    /// Validate `--name <path>` as a writable output-file path. `Ok(None)`
+    /// when the option is absent. Rejects empty/whitespace paths, paths whose
+    /// parent directory does not exist, and paths that name an existing
+    /// directory — all of which would otherwise surface as an I/O error only
+    /// AFTER a long trace run has completed.
+    pub fn out_path(&self, name: &str) -> Result<Option<String>, String> {
+        let Some(raw) = self.get(name) else {
+            return Ok(None);
+        };
+        let trimmed = raw.trim();
+        if trimmed.is_empty() {
+            return Err(format!("--{name}: expected a non-empty path"));
+        }
+        let path = std::path::Path::new(trimmed);
+        if path.is_dir() {
+            return Err(format!(
+                "--{name}: '{trimmed}' is a directory, expected a file path"
+            ));
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() && !parent.is_dir() {
+                return Err(format!(
+                    "--{name}: parent directory '{}' does not exist",
+                    parent.display()
+                ));
+            }
+        }
+        Ok(Some(trimmed.to_string()))
+    }
+
     /// Parse `--name a,b,c` into its non-empty items. `Ok(None)` when the
     /// option is absent; an explicitly EMPTY list (`--name ""`, `--name ,`)
     /// is an error — the grid runners would otherwise accept an axis with
@@ -210,6 +240,37 @@ mod tests {
         let a = args(&["sweep", "--deadline", "0.8"]);
         assert_eq!(a.f64_positive("deadline", 1.0).unwrap(), 0.8);
         assert_eq!(a.f64_positive("other", 2.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn out_path_validates_writability_up_front() {
+        // Absent → None (the caller's "no trace file" default).
+        assert_eq!(args(&["trace"]).out_path("trace").unwrap(), None);
+        // Plain filename in the cwd is fine.
+        assert_eq!(
+            args(&["trace", "--trace", "cell.trace.json"])
+                .out_path("trace")
+                .unwrap(),
+            Some("cell.trace.json".to_string())
+        );
+        // Empty / whitespace-only paths are rejected.
+        for empty in ["", "   "] {
+            let a = Args::parse(vec!["trace".to_string(), format!("--trace={empty}")]).unwrap();
+            assert!(a.out_path("trace").is_err(), "'{empty}' should be rejected");
+        }
+        // Nonexistent parent directory is rejected up front.
+        let a = args(&["trace", "--trace", "/no/such/dir/out.trace.json"]);
+        let err = a.out_path("trace").unwrap_err();
+        assert!(err.contains("does not exist"), "{err}");
+        // An existing directory is not a file path.
+        let tmp = std::env::temp_dir();
+        let a = Args::parse(vec![
+            "trace".to_string(),
+            format!("--trace={}", tmp.display()),
+        ])
+        .unwrap();
+        let err = a.out_path("trace").unwrap_err();
+        assert!(err.contains("directory"), "{err}");
     }
 
     #[test]

@@ -18,12 +18,13 @@ use timely_coded::experiments::churn::{self, ChurnGridSpec};
 use timely_coded::experiments::hetero_grid::{self, HeteroGridSpec};
 use timely_coded::experiments::shard::{self, ShardGridSpec};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
+use timely_coded::obs::trace::TraceSink;
 use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::churn::ChurnModel;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, Policy, RoutingPolicy, TrafficConfig};
+use timely_coded::traffic::{run_traffic, run_traffic_traced, Policy, RoutingPolicy, TrafficConfig};
 
 /// Layer 2: the engine itself (with and without churn) is seed-pure.
 #[test]
@@ -50,6 +51,59 @@ fn engine_run_is_a_pure_function_of_config_and_seed() {
         let b = run_once();
         assert_eq!(a, b, "engine not seed-pure (churn {:?})", churn.leave_rate);
     }
+}
+
+/// Layer 2b (PR 6 acceptance): the trace sink is metrically invisible.
+/// The same engine run with `TraceSink::Off` (the `run_traffic` default)
+/// and with a live `RingRecorder` must produce byte-identical metrics —
+/// recording reads engine state but never consumes RNG or mutates it.
+#[test]
+fn trace_sink_choice_never_changes_the_metrics_bytes() {
+    let run_with = |sink: TraceSink| {
+        let scenario = fig3_scenarios()[0];
+        let mut cluster =
+            SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 55);
+        let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Reset);
+        let cfg = TrafficConfig::single_class(
+            400,
+            Arrivals::poisson(0.8),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        )
+        .with_churn(ChurnModel::spot(0.25, 2.0));
+        run_traffic_traced(&mut lea, &mut cluster, &cfg, 55, sink)
+    };
+    let (m_off, _) = run_with(TraceSink::Off);
+    let (m_ring, sink) = run_with(TraceSink::ring(1 << 16));
+    assert_eq!(
+        m_off.to_json().to_string(),
+        m_ring.to_json().to_string(),
+        "recording perturbed the run"
+    );
+    let TraceSink::Ring(ring) = sink else {
+        panic!("ring sink must come back as a ring");
+    };
+    assert!(!ring.is_empty(), "a 400-job run must leave trace records");
+    assert_eq!(ring.dropped(), 0, "64k ring must hold a 400-job run whole");
+
+    // And the plain `run_traffic` entry point (sink Off internally) agrees.
+    let plain = {
+        let scenario = fig3_scenarios()[0];
+        let mut cluster =
+            SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 55);
+        let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Reset);
+        let cfg = TrafficConfig::single_class(
+            400,
+            Arrivals::poisson(0.8),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        )
+        .with_churn(ChurnModel::spot(0.25, 2.0));
+        run_traffic(&mut lea, &mut cluster, &cfg, 55)
+    };
+    assert_eq!(plain.to_json().to_string(), m_off.to_json().to_string());
 }
 
 /// Layer 3a: the `lea traffic` grid, run twice and at 1 vs N threads.

@@ -47,6 +47,7 @@ fn single_flight_engine_reproduces_round_runner() {
         churn: timely_coded::traffic::ChurnModel::none(),
         rejoin_speeds: timely_coded::traffic::RejoinSpeeds::Keep,
         alloc_cache: timely_coded::scheduler::alloc_cache::AllocCachePolicy::default_exact(),
+        probe_every: 1,
     };
     let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
 

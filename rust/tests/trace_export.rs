@@ -1,0 +1,111 @@
+//! Golden structural suite for the `lea trace` export path: the Chrome
+//! trace-event document must stay loadable by Perfetto / `chrome://tracing`
+//! (valid JSON, `ph`/`ts`/`pid`/`tid` on every event, per-track monotone
+//! timestamps), and the traced re-run must reproduce the grid cell's
+//! metrics byte-for-byte.
+
+use std::collections::BTreeMap;
+
+use timely_coded::experiments::trace::run_cell_traced;
+use timely_coded::experiments::traffic::{run_cell, GridSpec};
+use timely_coded::obs::trace::DEFAULT_RING_CAP;
+use timely_coded::obs::write_chrome_trace;
+use timely_coded::traffic::Policy;
+use timely_coded::util::json::Json;
+
+fn spec() -> GridSpec {
+    GridSpec {
+        rates: vec![1.3],
+        deadlines: vec![1.0],
+        policies: Policy::all().to_vec(),
+        jobs: 200,
+        seed: 404,
+    }
+}
+
+#[test]
+fn exported_trace_is_structurally_loadable() {
+    let rep = run_cell_traced(&spec(), 0, 1, DEFAULT_RING_CAP).expect("cell 0 exists");
+    // Through the FILE path, exactly as the CLI writes it.
+    let path = std::env::temp_dir().join("timely_coded_trace_export_test.trace.json");
+    let path = path.to_str().expect("utf-8 temp path");
+    write_chrome_trace(&rep.records, path).expect("trace written");
+    let raw = std::fs::read_to_string(path).expect("trace read back");
+    std::fs::remove_file(path).ok();
+    let doc = Json::parse(&raw).expect("export must be valid JSON");
+
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "a 200-job cell exports events");
+
+    // Every event carries the four keys Perfetto requires, and per-track
+    // (pid, tid) timestamps are monotone non-decreasing.
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut phases: BTreeMap<String, u64> = BTreeMap::new();
+    for ev in events {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .expect("event has ph")
+            .to_string();
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("event has ts");
+        let pid = ev.get("pid").and_then(Json::as_f64).expect("event has pid") as u64;
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("event has tid") as u64;
+        assert!(ts >= 0.0, "virtual time never goes negative");
+        let prev = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+        assert!(
+            ts >= *prev,
+            "track ({pid},{tid}): ts {ts} went backwards past {prev}"
+        );
+        *prev = ts;
+        *phases.entry(ph).or_insert(0) += 1;
+    }
+    // The document exercises the full vocabulary: async job spans (b/e),
+    // worker round spans (X), counters (C), and track metadata (M).
+    for ph in ["b", "e", "X", "C", "M"] {
+        assert!(phases.contains_key(ph), "phase '{ph}' missing: {phases:?}");
+    }
+    // Async job events carry the correlation id and category.
+    let job_ev = events
+        .iter()
+        .find(|e| e.get("ph").and_then(Json::as_str) == Some("b"))
+        .expect("at least one job-admit span");
+    assert_eq!(job_ev.get("cat").and_then(Json::as_str), Some("job"));
+    assert!(job_ev.get("id").is_some(), "async spans need an id");
+}
+
+#[test]
+fn traced_rerun_reproduces_the_grid_cell_and_carries_calibration() {
+    let spec = spec();
+    let plain = run_cell(&spec.cells()[1], spec.jobs, spec.seed);
+    let traced = run_cell_traced(&spec, 1, 1, DEFAULT_RING_CAP).expect("cell 1 exists");
+    assert_eq!(
+        traced.metrics.to_json().to_string(),
+        plain.metrics.to_json().to_string(),
+        "the traced re-run must BE the grid cell"
+    );
+    // The grid JSON gained the per-cell estimator-calibration fields.
+    let m = traced.metrics.to_json();
+    for key in [
+        "calib_samples",
+        "calib_good_obs",
+        "calib_bad_obs",
+        "calib_mean_abs_error",
+        "calib_good_hit_rate",
+        "calib_bad_hit_rate",
+    ] {
+        assert!(m.get(key).is_some(), "metrics JSON lost '{key}'");
+    }
+    assert!(
+        m.get("calib_samples").unwrap().as_f64().unwrap() > 0.0,
+        "a 200-job dispatching cell must probe"
+    );
+    let err = m.get("calib_mean_abs_error").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&err), "|p̂ − 1{{good}}| ∈ [0,1]: {err}");
+}
