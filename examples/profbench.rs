@@ -7,6 +7,10 @@
 //!
 //! See EXPERIMENTS.md §Perf for the measured iteration log.
 
+// lint:allow-file(R1): profiling harness — wall-clock throughput measurement
+// is its whole purpose; results never feed back into any simulation.
+#![allow(clippy::disallowed_methods)]
+
 use timely_coded::scheduler::lea::Lea;
 use timely_coded::sim::runner::{run, RunConfig};
 use timely_coded::sim::scenarios::{fig3_cluster, fig3_load_params, fig3_scenarios, fig3_scheme};

@@ -5,6 +5,10 @@
 //! bench-smoke job and gated by `lea bench-check`); set `BENCH_SMOKE=1` for
 //! a fast validity run.
 
+// Benches are wall-clock by definition (R1 exempts rust/benches/);
+// the clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use timely_coded::experiments::hetero_grid::{run_grid, FleetMix, HeteroGridSpec};

@@ -7,6 +7,10 @@
 //! and gated by `lea bench-check`); set `BENCH_SMOKE=1` for a fast
 //! validity run.
 
+// Benches are wall-clock by definition (R1 exempts rust/benches/);
+// the clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use timely_coded::scheduler::alloc_cache::{AllocCachePolicy, AllocPlanCache};

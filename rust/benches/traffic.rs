@@ -4,6 +4,10 @@
 //! `BENCH_traffic.json` (uploaded by the CI bench-smoke job); set
 //! `BENCH_SMOKE=1` for a fast validity run.
 
+// Benches are wall-clock by definition (R1 exempts rust/benches/);
+// the clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use timely_coded::experiments::traffic::{run_grid, GridSpec};

@@ -38,16 +38,20 @@ use crate::util::rng::Rng;
 #[cfg(feature = "pjrt")]
 struct SendExe(Executable);
 #[cfg(feature = "pjrt")]
+#[allow(unsafe_code)]
 unsafe impl Send for SendExe {}
 #[cfg(feature = "pjrt")]
+#[allow(unsafe_code)]
 unsafe impl Sync for SendExe {}
 
 /// Same justification as [`SendExe`] for the client that owns them.
 #[cfg(feature = "pjrt")]
 struct SendRuntime(#[allow(dead_code)] Runtime);
 #[cfg(feature = "pjrt")]
+#[allow(unsafe_code)]
 unsafe impl Send for SendRuntime {}
 #[cfg(feature = "pjrt")]
+#[allow(unsafe_code)]
 unsafe impl Sync for SendRuntime {}
 
 /// Compute engine shared by master and workers: PJRT artifacts (behind the

@@ -3,6 +3,9 @@
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+// Real-execution engine: measures actual gradient compute time on a live
+// thread pool; never on a simulator path (sim time stays virtual).
+// lint:allow(R1): wall-clock telemetry by design in the real-execution worker
 use std::time::Instant;
 
 use super::master::Engine;
@@ -43,10 +46,18 @@ impl Worker {
     }
 
     /// Compute one round: ℓ evaluations over the first ℓ stored chunks.
+    ///
+    /// `compute_secs` is genuinely wall-clock (it reports how long the real
+    /// gradient evaluation took); round outcomes and `finish_virtual` stay
+    /// purely virtual, so determinism of results is unaffected.
+    #[allow(clippy::disallowed_methods)]
     pub fn execute_round(&mut self, engine: &Engine, task: &RoundTask) -> RoundReply {
         let state = self.process.next_state(&mut self.rng, task.gap_secs);
         let w = MatF32::from_vec(task.input.len(), 1, task.input.clone());
 
+        // Reported as `compute_secs` telemetry and used for opt-in wallclock
+        // throttling, never as sim time.
+        // lint:allow(R1): wall-clock compute timing is this engine's purpose
         let t0 = Instant::now();
         let mut payloads = Vec::with_capacity(task.load);
         for slot in 0..task.load.min(self.chunks.len()) {

@@ -28,6 +28,10 @@
 //! lea report      [--out report.json] [--fast]             everything + JSON
 //! ```
 
+// CLI territory: wall-clock run timers for operator feedback and process
+// exit codes are this binary's job (R1 exempts main.rs for the same reason).
+#![allow(clippy::disallowed_methods, clippy::exit)]
+
 use timely_coded::exec::driver::{run_e2e, E2eConfig};
 use timely_coded::exec::master::Engine;
 use timely_coded::experiments::churn::ChurnGridSpec;

@@ -9,6 +9,10 @@
 //! functions of config and seed); a [`ProfileReport`] is only embedded in
 //! `BENCH_*.json` artifacts via [`crate::util::bench_kit::BenchLog`].
 
+// Wall-clock measurement is this module's purpose (R1 exempts it); the
+// clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
 

@@ -85,6 +85,7 @@ use crate::scheduler::success::{load_from_rate, FleetLoadParams};
 use crate::sim::arrivals::Arrivals;
 use crate::sim::churn::ChurnModel;
 use crate::sim::cluster::{SimCluster, Speeds};
+use crate::traffic::invariants;
 use crate::util::rng::Rng;
 
 /// What a job's deadline is measured from.
@@ -290,6 +291,7 @@ pub fn run_traffic_traced(
         events: EventQueue::new(),
         spawned: 0,
         core: ClusterCore::new(cfg, strategy, cluster, seed).with_trace(trace),
+        order: invariants::QueueOrder::new(),
     };
     engine.run()
 }
@@ -362,6 +364,8 @@ struct Engine<'a> {
     events: EventQueue,
     spawned: u64,
     core: ClusterCore<'a>,
+    /// Debug-build event-order monotonicity check (zero-sized in release).
+    order: invariants::QueueOrder,
 }
 
 impl<'a> Engine<'a> {
@@ -376,6 +380,7 @@ impl<'a> Engine<'a> {
             }
         }
         while let Some(ev) = self.events.pop() {
+            self.order.observe(ev.time, ev.seq);
             // Once every arrival is settled, the only events left are churn
             // lifecycle ones: drop them unprocessed (no tick, no reschedule)
             // so post-traffic dead air never inflates the horizon, the
@@ -618,6 +623,7 @@ impl<'a> ClusterCore<'a> {
         // Stale if the worker left (or left and rejoined) since this release
         // was scheduled: the slot belongs to a different incarnation whose
         // departure already settled the assignment.
+        invariants::release_gen_fresh(self.workers[worker].gen, gen);
         if self.workers[worker].gen != gen {
             return;
         }
@@ -1061,6 +1067,16 @@ impl<'a> ClusterCore<'a> {
     /// [`finish`](Self::finish), also handing back the trace sink with
     /// everything it recorded.
     pub(crate) fn finish_with_trace(mut self) -> (TrafficMetrics, TraceSink) {
+        // Frontier point: dormant streams must not have advanced, or the
+        // byte-identity guarantees (fixed fleet vs churn engine, Keep vs
+        // Sample rejoin) documented on the stream fields are already gone.
+        invariants::stream_quiet("churn", &self.churn_rng, self.cfg.churn.is_active());
+        invariants::stream_quiet(
+            "retype",
+            &self.speed_rng,
+            self.cfg.churn.is_active()
+                && matches!(&self.cfg.rejoin_speeds, RejoinSpeeds::Sample(m) if !m.is_empty()),
+        );
         if let Some(cache) = &self.alloc_cache {
             self.metrics.alloc_cache_hits = cache.hits();
             self.metrics.alloc_cache_misses = cache.misses();

@@ -1,0 +1,158 @@
+//! Run-time determinism invariants — the dynamic twin of the static pass in
+//! `xtask lint` (EXPERIMENTS.md §Static analysis).
+//!
+//! The static rules prove the *sources* of nondeterminism are absent
+//! (wall-clock, hash iteration, ambient RNG); this module asserts the
+//! *consequences* hold while the engine runs:
+//!
+//! * **Event-queue monotonicity** ([`QueueOrder`]): events pop in
+//!   nondecreasing `(time, seq)` order — the exact ordering contract
+//!   `EventQueue` and `ShardEventQueue` promise (and `tests/determinism.rs`
+//!   pins byte-for-byte).
+//! * **Generation freshness** ([`release_gen_fresh`]): a `Release` event
+//!   never carries a generation from the future — its tag was stamped at
+//!   scheduling time, and slot generations only grow.
+//! * **Stream quiescence** ([`stream_quiet`]): an RNG stream whose feature
+//!   is disabled made zero draws — the byte-identity guarantees (fixed-fleet
+//!   runs vs the churn engine, rr/jsq routing vs po2) depend on dormant
+//!   streams staying untouched.
+//!
+//! Every check compiles to nothing in release builds: the checks are
+//! `debug_assert!`-based, [`QueueOrder`]'s state lives behind
+//! `#[cfg(debug_assertions)]`, and `Rng::draw_count` only counts in debug
+//! builds. A future parallel shard runtime (ROADMAP: frontier-merged
+//! metrics) must preserve exactly these invariants at its merge barriers —
+//! which is why they are asserted here rather than only documented.
+
+use crate::util::rng::Rng;
+
+/// Asserts that a stream of popped events is sorted by `(time, seq)`.
+///
+/// Zero-sized (and every call a no-op) in release builds.
+#[derive(Debug, Default)]
+pub struct QueueOrder {
+    #[cfg(debug_assertions)]
+    last: Option<(f64, u64)>,
+}
+
+impl QueueOrder {
+    pub fn new() -> Self {
+        QueueOrder::default()
+    }
+
+    /// Record one popped event; panics (debug builds) if it fired before —
+    /// or at the same `(time, seq)` as — its predecessor.
+    #[inline]
+    pub fn observe(&mut self, time: f64, seq: u64) {
+        #[cfg(debug_assertions)]
+        {
+            if let Some((lt, ls)) = self.last {
+                let ordered = time > lt || (time == lt && seq > ls);
+                debug_assert!(
+                    ordered,
+                    "event queue popped out of order: ({time}, {seq}) after ({lt}, {ls})"
+                );
+            }
+            self.last = Some((time, seq));
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = (time, seq);
+        }
+    }
+}
+
+/// A `Release` event's generation tag must not outrun its worker slot:
+/// tags are stamped from the slot at scheduling time and slot generations
+/// only ever grow, so `event_gen > slot_gen` means a corrupted tag or a
+/// slot rollback. (Staleness — `event_gen < slot_gen` — is legal; the
+/// handler drops those.)
+#[inline]
+pub fn release_gen_fresh(slot_gen: u64, event_gen: u64) {
+    debug_assert!(
+        event_gen <= slot_gen,
+        "release carries generation {event_gen} from the future (slot is at {slot_gen})"
+    );
+}
+
+/// A dormant RNG stream must have made zero draws by the time the engine
+/// reaches a frontier point (run end). `active` is whether the stream's
+/// feature was enabled for the run; the check only constrains inactive
+/// streams (an active stream may legitimately draw zero times).
+///
+/// No-op in release builds, where `draw_count` is not maintained.
+#[inline]
+pub fn stream_quiet(name: &str, rng: &Rng, active: bool) {
+    if cfg!(debug_assertions) && !active {
+        debug_assert_eq!(
+            rng.draw_count(),
+            0,
+            "RNG stream `{name}` drew {} time(s) but its feature is disabled — \
+             this breaks the byte-identity guarantee for runs without it",
+            rng.draw_count()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_order_accepts_sorted_streams() {
+        let mut q = QueueOrder::new();
+        q.observe(0.0, 0);
+        q.observe(0.0, 3); // same time, later seq: fine
+        q.observe(1.5, 1); // later time, smaller seq: fine
+        q.observe(2.0, 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of order")]
+    fn queue_order_rejects_time_regression() {
+        let mut q = QueueOrder::new();
+        q.observe(2.0, 0);
+        q.observe(1.0, 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of order")]
+    fn queue_order_rejects_seq_regression_at_equal_time() {
+        let mut q = QueueOrder::new();
+        q.observe(1.0, 5);
+        q.observe(1.0, 4);
+    }
+
+    #[test]
+    fn release_gen_accepts_stale_and_current() {
+        release_gen_fresh(3, 3); // current incarnation
+        release_gen_fresh(3, 1); // stale: handler's problem, not a bug
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "from the future")]
+    fn release_gen_rejects_future_generations() {
+        release_gen_fresh(2, 3);
+    }
+
+    #[test]
+    fn quiet_streams_pass() {
+        let rng = Rng::new(7);
+        stream_quiet("churn", &rng, false); // untouched + inactive: ok
+        let mut active = Rng::new(8);
+        let _ = active.next_u64();
+        stream_quiet("retype", &active, true); // drawn + active: ok
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "feature is disabled")]
+    fn dormant_stream_that_drew_fails() {
+        let mut rng = Rng::new(9);
+        let _ = rng.next_u64();
+        stream_quiet("route2", &rng, false);
+    }
+}

@@ -24,6 +24,10 @@
 //!   accounting (leaves/joins, work lost to preemption, live-fleet
 //!   integral), estimator-calibration probes (p̂ vs true Markov state at
 //!   dispatch), and p50/p95/p99 latency via the O(1)-memory P² sketch.
+//! - [`invariants`] — run-time determinism checks (event-order
+//!   monotonicity, generation freshness, RNG stream quiescence), the
+//!   dynamic twin of the `xtask lint` static pass; compiled out in release
+//!   builds.
 //! - [`shard`] — the multi-cluster front-end: C independent clusters (one
 //!   [`crate::traffic::engine`] core each) behind a router on a single
 //!   global event queue, with round-robin / join-shortest-queue /
@@ -38,6 +42,7 @@
 pub mod admission;
 pub mod engine;
 pub mod event;
+pub mod invariants;
 pub mod job;
 pub mod metrics;
 pub mod shard;

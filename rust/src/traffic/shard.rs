@@ -39,6 +39,7 @@ use std::collections::BinaryHeap;
 
 use super::engine::{pick_class, validate_config, ClusterCore, EventSink, TrafficConfig};
 use super::event::EventKind;
+use super::invariants;
 use super::job::{Job, JobClass};
 use super::metrics::{ratio, TrafficMetrics};
 use crate::obs::profile::{HotPath, ScopedTimer};
@@ -227,7 +228,7 @@ impl ImbalanceMeter {
         }
     }
 
-    fn tick(&mut self, cores: &[ClusterCore], now: f64) {
+    fn tick(&mut self, cores: &[ClusterCore<'_>], now: f64) {
         let dt = (now - self.last_time).max(0.0);
         if cores.len() > 1 && dt > 0.0 {
             let mut mn = usize::MAX;
@@ -358,7 +359,7 @@ impl FleetMetrics {
 /// runs are byte-stable against its presence.
 fn route(
     policy: RoutingPolicy,
-    cores: &mut [ClusterCore],
+    cores: &mut [ClusterCore<'_>],
     class: &JobClass,
     route_rng: &mut Rng,
     rr_next: &mut usize,
@@ -432,7 +433,7 @@ pub fn run_sharded(
     for cluster in clusters.iter() {
         validate_config(tcfg, cluster);
     }
-    let mut cores: Vec<ClusterCore> = strategies
+    let mut cores: Vec<ClusterCore<'_>> = strategies
         .iter_mut()
         .zip(clusters.iter_mut())
         .enumerate()
@@ -450,6 +451,7 @@ pub fn run_sharded(
     let mut rr_next = 0usize;
     let mut routed = vec![0u64; cores.len()];
     let mut imbalance = ImbalanceMeter::new();
+    let mut order = invariants::QueueOrder::new();
 
     if tcfg.jobs > 0 {
         let gap = arrivals.sample(&mut rng);
@@ -468,6 +470,7 @@ pub fn run_sharded(
     }
 
     while let Some(ev) = events.pop() {
+        order.observe(ev.time, ev.seq);
         // Per-shard drain: once every arrival is settled fleet-wide and the
         // owning shard is idle, its churn lifecycle events are post-traffic
         // dead air — drop them unprocessed (no tick, no reschedule).
@@ -541,6 +544,14 @@ pub fn run_sharded(
         }
     }
 
+    // Frontier point: the routing stream belongs to po2 alone — rr/jsq runs
+    // must not have advanced it (their byte-stability against its presence
+    // is documented on `route`).
+    invariants::stream_quiet(
+        "route2",
+        &route_rng,
+        matches!(cfg.routing, RoutingPolicy::PowerOfTwo) && cfg.shards > 1,
+    );
     FleetMetrics {
         shards: cores.into_iter().map(ClusterCore::finish).collect(),
         routed,

@@ -6,9 +6,15 @@
 //! xoshiro256++ 1.0 (public domain reference implementation).
 
 /// xoshiro256++ PRNG with SplitMix64 seeding.
+///
+/// Debug builds additionally count draws (`draw_count`) so the
+/// `traffic::invariants` checks can assert which streams advanced; release
+/// builds carry no counter and pay nothing.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
+    #[cfg(debug_assertions)]
+    draws: u64,
 }
 
 #[inline]
@@ -30,7 +36,11 @@ impl Rng {
             splitmix64(&mut sm),
             splitmix64(&mut sm),
         ];
-        Rng { s }
+        Rng {
+            s,
+            #[cfg(debug_assertions)]
+            draws: 0,
+        }
     }
 
     /// Derive an independent child stream (for per-worker generators).
@@ -40,6 +50,10 @@ impl Rng {
 
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        #[cfg(debug_assertions)]
+        {
+            self.draws += 1;
+        }
         let s = &mut self.s;
         let result = s[0]
             .wrapping_add(s[3])
@@ -102,6 +116,20 @@ impl Rng {
             let j = self.below(i as u64 + 1) as usize;
             xs.swap(i, j);
         }
+    }
+
+    /// Number of `next_u64` draws made by this stream so far.
+    ///
+    /// Debug builds only — release builds carry no counter and always
+    /// report 0, so callers must gate comparisons on `cfg!(debug_assertions)`
+    /// (`traffic::invariants` does).
+    #[inline]
+    pub fn draw_count(&self) -> u64 {
+        #[cfg(debug_assertions)]
+        let n = self.draws;
+        #[cfg(not(debug_assertions))]
+        let n = 0;
+        n
     }
 
     /// Sample `m` distinct indices from 0..n (partial Fisher–Yates).
@@ -213,6 +241,21 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.01, "mean={mean}");
         assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn draw_count_tracks_every_draw() {
+        let mut r = Rng::new(3);
+        assert_eq!(r.draw_count(), 0);
+        let _ = r.next_u64();
+        let _ = r.f64();
+        let _ = r.bernoulli(0.5);
+        assert_eq!(r.draw_count(), 3);
+        // A fork draws once from the parent; the child starts fresh.
+        let child = r.fork(0);
+        assert_eq!(r.draw_count(), 4);
+        assert_eq!(child.draw_count(), 0);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Comment/string-stripping lexer for the rule engine.
+//!
+//! [`strip`] turns Rust source into the same number of lines with every
+//! comment and string/char literal blanked to spaces, so the line-oriented
+//! rules in [`crate::rules`] can match tokens without tripping over
+//! `"HashMap"` in a log message or `Instant` in a doc comment. Handled
+//! explicitly: nested block comments, raw strings with arbitrary `#` counts
+//! (`r"…"`, `r#"…"#`, `br##"…"##`), escaped char literals (`'\''`,
+//! `'\u{41}'`), and the char-literal/lifetime ambiguity (`'a'` vs `&'a`).
+//!
+//! Comment *text* is kept per line (never emitted as code) so the
+//! `lint:allow` annotations can be parsed from it.
+
+/// One parsed `lint:allow` / `lint:allow-file` annotation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-based line the annotation sits on.
+    pub line: usize,
+    /// Rule ids listed inside the parentheses, e.g. `["R1", "R4"]`.
+    pub rules: Vec<String>,
+    /// Whether a non-empty `: reason` followed the closing paren.
+    pub has_reason: bool,
+    /// `lint:allow-file(...)`: suppresses the listed rules anywhere in the
+    /// file instead of on the annotated/next line only.
+    pub file_wide: bool,
+}
+
+/// The lexer's output: blanked code lines plus the comment annotations.
+#[derive(Debug)]
+pub struct Stripped {
+    /// Source lines with comments and string/char literals replaced by
+    /// spaces; same line count as the input.
+    pub lines: Vec<String>,
+    /// Every `lint:allow` annotation found in comment text.
+    pub allows: Vec<Allow>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Match a raw-string opener `(b|c)?r#*"` at `i`; returns the number of
+/// `#`s and the total opener length (chars up to and including the quote).
+/// Never matches right after an identifier char (that would be a raw
+/// identifier like `r#fn`, or plain code).
+fn raw_string_open(chars: &[char], i: usize, prev_ident: bool) -> Option<(usize, usize)> {
+    if prev_ident {
+        return None;
+    }
+    let mut j = i;
+    if j < chars.len() && (chars[j] == 'b' || chars[j] == 'c') {
+        j += 1;
+    }
+    if j >= chars.len() || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some((hashes, j - i + 1))
+    } else {
+        None
+    }
+}
+
+/// Strip comments and string/char literals from `source`.
+pub fn strip(source: &str) -> Stripped {
+    let chars: Vec<char> = source.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(source.len());
+    // Comment text per (0-based) line, for annotation parsing.
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut line = 0usize;
+    let mut prev_ident = false;
+    let mut i = 0usize;
+
+    // Blank one char: newlines survive (they delimit lines), everything
+    // else becomes a space. `comment` additionally records the char.
+    macro_rules! blank {
+        ($comment:expr) => {{
+            if chars[i] == '\n' {
+                out.push('\n');
+                line += 1;
+                comments.push(String::new());
+            } else {
+                out.push(' ');
+                if $comment {
+                    comments[line].push(chars[i]);
+                }
+            }
+            i += 1;
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            // Line comment — record text until the newline (exclusive).
+            while i < n && chars[i] != '\n' {
+                blank!(true);
+            }
+            prev_ident = false;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // Block comment, nesting-aware.
+            let mut depth = 0usize;
+            while i < n {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    blank!(true);
+                    blank!(true);
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    blank!(true);
+                    blank!(true);
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank!(true);
+                }
+            }
+            prev_ident = false;
+        } else if let Some((hashes, open_len)) = raw_string_open(&chars, i, prev_ident) {
+            for _ in 0..open_len {
+                blank!(false);
+            }
+            // Scan for `"` followed by `hashes` hashes.
+            while i < n {
+                if chars[i] == '"'
+                    && i + hashes < n
+                    && chars[i + 1..=i + hashes].iter().all(|&h| h == '#')
+                {
+                    for _ in 0..=hashes {
+                        blank!(false);
+                    }
+                    break;
+                }
+                blank!(false);
+            }
+            prev_ident = false;
+        } else if c == '"' {
+            blank!(false);
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    blank!(false);
+                    blank!(false);
+                } else if chars[i] == '"' {
+                    blank!(false);
+                    break;
+                } else {
+                    blank!(false);
+                }
+            }
+            prev_ident = false;
+        } else if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // Escaped char literal: quote, backslash, the escaped char,
+                // then anything up to the closing quote (covers `'\u{41}'`).
+                blank!(false);
+                blank!(false);
+                if i < n {
+                    blank!(false);
+                }
+                let mut guard = 0;
+                while i < n && chars[i] != '\'' && guard < 16 {
+                    blank!(false);
+                    guard += 1;
+                }
+                if i < n && chars[i] == '\'' {
+                    blank!(false);
+                }
+                prev_ident = false;
+            } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                // Plain char literal 'X'.
+                blank!(false);
+                blank!(false);
+                blank!(false);
+                prev_ident = false;
+            } else {
+                // Lifetime (or a stray quote): code, not a literal.
+                out.push('\'');
+                i += 1;
+                prev_ident = false;
+            }
+        } else {
+            if c == '\n' {
+                out.push('\n');
+                line += 1;
+                comments.push(String::new());
+            } else {
+                out.push(c);
+            }
+            prev_ident = is_ident(c);
+            i += 1;
+        }
+    }
+
+    let lines: Vec<String> = out.split('\n').map(str::to_string).collect();
+    let mut allows = Vec::new();
+    for (idx, text) in comments.iter().enumerate() {
+        parse_allows(text, idx + 1, &mut allows);
+    }
+    Stripped { lines, allows }
+}
+
+/// Parse every `lint:allow(...)` / `lint:allow-file(...)` in one line's
+/// comment text.
+fn parse_allows(text: &str, line: usize, out: &mut Vec<Allow>) {
+    let mut rest = text;
+    while let Some(pos) = rest.find("lint:allow") {
+        let after = &rest[pos + "lint:allow".len()..];
+        let (file_wide, after) = match after.strip_prefix("-file") {
+            Some(a) => (true, a),
+            None => (false, after),
+        };
+        let Some(body) = after.strip_prefix('(') else {
+            rest = &rest[pos + "lint:allow".len()..];
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            rest = &rest[pos + "lint:allow".len()..];
+            continue;
+        };
+        let rules: Vec<String> = body[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let tail = &body[close + 1..];
+        let has_reason = tail.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+        out.push(Allow {
+            line,
+            rules,
+            has_reason,
+            file_wide,
+        });
+        rest = &body[close + 1..];
+    }
+}
+
+/// Mark lines belonging to `#[cfg(test)]` / `#[test]` items (the attribute
+/// line through the end of the item's brace block). Braces inside strings
+/// and comments are already stripped, so plain counting is exact.
+pub fn test_mask(lines: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let l = &lines[i];
+        let is_test_attr = l.contains("#[cfg(test)]")
+            || l.contains("#[cfg(all(test")
+            || l.contains("#[test]");
+        if !is_test_attr {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            mask[j] = true;
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if opened && depth == 0 {
+                break;
+            }
+            // A braceless item (`#[cfg(test)] use …;`) ends at the `;`.
+            if !opened && lines[j].trim_end().ends_with(';') {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stripped_text(src: &str) -> String {
+        strip(src).lines.join("\n")
+    }
+
+    #[test]
+    fn line_comments_are_blanked() {
+        let s = stripped_text("let x = 1; // Instant::now()\nlet y = 2;");
+        assert!(!s.contains("Instant"));
+        assert!(s.contains("let x = 1;"));
+        assert!(s.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_blanked() {
+        let s = stripped_text("a /* one /* two */ still comment */ b");
+        assert!(!s.contains("one"));
+        assert!(!s.contains("still"));
+        assert!(s.contains('a') && s.contains('b'));
+    }
+
+    #[test]
+    fn strings_are_blanked_including_escapes() {
+        let s = stripped_text(r#"let m = "HashMap \" Instant"; let k = 1;"#);
+        assert!(!s.contains("HashMap"));
+        assert!(!s.contains("Instant"));
+        assert!(s.contains("let k = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let s = stripped_text(r####"let m = r#"HashMap "quoted" Instant"#; let k = 1;"####);
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("let k = 1;"));
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_raw_strings() {
+        let s = stripped_text("let r#fn = 1; let after = 2;");
+        assert!(s.contains("r#fn"));
+        assert!(s.contains("after"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_count() {
+        let src = "let s = \"one\ntwo HashMap\nthree\";\nlet k = 1;";
+        let st = strip(src);
+        assert_eq!(st.lines.len(), 4);
+        assert!(!st.lines.join("\n").contains("HashMap"));
+        assert!(st.lines[3].contains("let k = 1;"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = stripped_text("let c = 'x'; let q = '\\''; fn f<'a>(v: &'a str) {}");
+        assert!(!s.contains('x'), "char literal content must be blanked: {s}");
+        assert!(s.contains("<'a>"), "lifetime must survive: {s}");
+        assert!(s.contains("&'a str"));
+    }
+
+    #[test]
+    fn unicode_escape_char_literal() {
+        let s = stripped_text("let c = '\\u{41}'; let k = 1;");
+        assert!(s.contains("let k = 1;"));
+        assert!(!s.contains("41"));
+    }
+
+    #[test]
+    fn allow_annotations_are_parsed() {
+        let st = strip(
+            "// lint:allow(R1): wall-clock throttling is opt-in\nlet t = Instant::now();\n",
+        );
+        assert_eq!(st.allows.len(), 1);
+        let a = &st.allows[0];
+        assert_eq!(a.line, 1);
+        assert_eq!(a.rules, vec!["R1".to_string()]);
+        assert!(a.has_reason);
+        assert!(!a.file_wide);
+    }
+
+    #[test]
+    fn allow_file_and_multi_rule_and_missing_reason() {
+        let st = strip("// lint:allow-file(R1, R4): profiling example\n// lint:allow(R2)\n");
+        assert_eq!(st.allows.len(), 2);
+        assert!(st.allows[0].file_wide);
+        assert_eq!(st.allows[0].rules, vec!["R1".to_string(), "R4".to_string()]);
+        assert!(st.allows[0].has_reason);
+        assert!(!st.allows[1].has_reason);
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_blocks() {
+        let src =
+            "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn tail() {}\n";
+        let st = strip(src);
+        let mask = test_mask(&st.lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn test_mask_stops_at_braceless_items() {
+        let src = "#[cfg(test)]\nuse crate::testkit;\nfn lib() {}\n";
+        let st = strip(src);
+        let mask = test_mask(&st.lines);
+        assert_eq!(mask, vec![true, true, false, false]);
+    }
+}

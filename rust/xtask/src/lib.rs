@@ -1,0 +1,34 @@
+//! Determinism lint engine — a hand-rolled static-analysis pass over the
+//! repo's Rust sources.
+//!
+//! Every number this repo reports rests on runs being bit-reproducible:
+//! the byte-identical grid dumps (`tests/determinism.rs`), the exact-mode
+//! allocation cache, the statistical suites' seeded gaps. This crate makes
+//! that a *checkable invariant* instead of a convention: a comment/string
+//! stripping lexer ([`lexer`]) feeds a line-oriented rule engine ([`rules`])
+//! that enforces the five determinism rules R1–R5 with per-module scoping,
+//! and [`scan`] walks the tree and aggregates the report for the CI `lint`
+//! job (`cargo run -p xtask -- lint`).
+//!
+//! The dynamic twin of this pass lives in `timely_coded`'s
+//! `traffic::invariants` module: the same invariants, asserted at run time
+//! under `debug_assertions`.
+//!
+//! Rule summary (authoritative table in EXPERIMENTS.md §Static analysis):
+//!
+//! | id | severity | invariant |
+//! |----|----------|-----------|
+//! | R1 | error | no `Instant`/`SystemTime` outside the wall-clock modules |
+//! | R2 | error | no `HashMap`/`HashSet` iteration or struct fields in the deterministic modules |
+//! | R3 | error | no ambient randomness — all RNG through `util::rng` seeded streams |
+//! | R4 | warn  | no `unwrap`/`expect`/`panic!` in library code (ratchet) |
+//! | R5 | error | no float reduction over hash-map iterators |
+//!
+//! Violations are suppressible only via an inline
+//! `// lint:allow(<rule>): <reason>` (same line or the line above) or a
+//! file-wide `// lint:allow-file(<rule>): <reason>`; the scanner counts
+//! every suppression and reports unused or reason-less annotations.
+
+pub mod lexer;
+pub mod rules;
+pub mod scan;

@@ -1,0 +1,122 @@
+//! `cargo run -p xtask -- <command>` — repo automation CLI.
+//!
+//! Commands:
+//!
+//! * `lint` — run the determinism static-analysis pass over the tree.
+//!   Exit 0 when clean, 1 on any error-severity finding (or any warning
+//!   with `--deny-warnings`, or more warnings than `--max-warnings N`),
+//!   2 on usage/IO problems.
+//! * `rules` — print the rule table (IDs, severities, scoping).
+//!
+//! `--root <dir>` overrides the repo root; the default is resolved from
+//! this crate's manifest directory, so the pass works regardless of the
+//! invoking working directory (CI runs with `working-directory: rust`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::scan::{render, render_rules, scan_tree};
+
+const USAGE: &str = "usage: cargo run -p xtask -- <command>
+
+commands:
+  lint [--root <dir>] [--deny-warnings] [--max-warnings <n>]
+        run the determinism lint pass (exit 1 on errors)
+  rules list the lint rules and their scoping
+  help  print this message
+";
+
+fn default_root() -> PathBuf {
+    // xtask lives at <repo>/rust/xtask — two levels up is the repo root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+struct LintOpts {
+    root: PathBuf,
+    deny_warnings: bool,
+    max_warnings: Option<usize>,
+}
+
+fn parse_lint_opts(args: &[String]) -> Result<LintOpts, String> {
+    let mut opts = LintOpts {
+        root: default_root(),
+        deny_warnings: false,
+        max_warnings: None,
+    };
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => {
+                let v = it.next().ok_or("--root needs a directory argument")?;
+                opts.root = PathBuf::from(v);
+            }
+            "--deny-warnings" => opts.deny_warnings = true,
+            "--max-warnings" => {
+                let v = it.next().ok_or("--max-warnings needs a number")?;
+                let n = v
+                    .parse::<usize>()
+                    .map_err(|_| format!("--max-warnings: not a number: {v}"))?;
+                opts.max_warnings = Some(n);
+            }
+            other => return Err(format!("unknown lint option: {other}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let opts = match parse_lint_opts(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match scan_tree(&opts.root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask lint: scan failed under {}: {e}", opts.root.display());
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", render(&report));
+
+    let mut failed = report.errors() > 0;
+    if opts.deny_warnings && report.warnings() > 0 {
+        eprintln!("xtask lint: failing on warnings (--deny-warnings)");
+        failed = true;
+    }
+    if let Some(max) = opts.max_warnings {
+        if report.warnings() > max {
+            eprintln!(
+                "xtask lint: {} warning(s) exceed the ratchet budget of {max}",
+                report.warnings()
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(&args[1..]),
+        Some("rules") => {
+            print!("{}", render_rules());
+            ExitCode::SUCCESS
+        }
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}`\n\n{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}

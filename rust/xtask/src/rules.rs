@@ -1,0 +1,667 @@
+//! The determinism rules R1–R5: per-module scoping, stable IDs, and the
+//! `lint:allow` suppression protocol.
+//!
+//! All matching runs over [`crate::lexer::strip`]ped lines, so string and
+//! comment contents never trigger a rule. Paths are repo-root-relative with
+//! `/` separators — scoping is a pure function of that path, which is what
+//! lets the fixture tests exercise every scope without touching the tree.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{strip, test_mask, Allow};
+
+/// Finding severity. `Error` fails the build; `Warn` is reported (and
+/// counted against `--max-warnings`, if set) but does not fail by default —
+/// the R4 ratchet (EXPERIMENTS.md §Static analysis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+        }
+    }
+}
+
+/// One rule's identity card (the table `xtask rules` prints).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+    pub scope: &'static str,
+}
+
+/// The stable rule registry. `LINT` is the meta-rule for malformed or
+/// unused `lint:allow` annotations.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "R1",
+        severity: Severity::Error,
+        summary: "no Instant/SystemTime — wall-clock reads break bit-reproducibility",
+        scope: "everywhere except obs/profile.rs, util/bench_kit.rs, main.rs, rust/benches/",
+    },
+    RuleInfo {
+        id: "R2",
+        severity: Severity::Error,
+        summary: "no HashMap/HashSet iteration or struct fields — use BTreeMap or a sorted Vec",
+        scope: "rust/src/{sim, traffic, scheduler, coding, markov}/",
+    },
+    RuleInfo {
+        id: "R3",
+        severity: Severity::Error,
+        summary: "no ambient RNG (thread_rng/OsRng/from_entropy/RandomState) — use util::rng",
+        scope: "everywhere",
+    },
+    RuleInfo {
+        id: "R4",
+        severity: Severity::Warn,
+        summary: "no unwrap()/expect()/panic! in library code (warn during the ratchet)",
+        scope: "rust/src/ minus CLI/bench/experiments/testkit modules and #[cfg(test)]",
+    },
+    RuleInfo {
+        id: "R5",
+        severity: Severity::Error,
+        summary: "no float reduction over hash iterators — accumulation order varies",
+        scope: "everywhere",
+    },
+];
+
+/// Meta-rule id for annotation problems (missing reason, unknown rule id,
+/// unused allow).
+pub const META_RULE: &str = "LINT";
+
+/// One reported violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// One suppressed violation (an allow annotation that fired).
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Everything the scanner learned about one file.
+#[derive(Debug, Default)]
+pub struct FileOutcome {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    pub lines: usize,
+}
+
+// ---------------------------------------------------------------- scoping
+
+const DETERMINISTIC_DIRS: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/traffic/",
+    "rust/src/scheduler/",
+    "rust/src/coding/",
+    "rust/src/markov/",
+];
+
+const R1_EXEMPT_FILES: &[&str] = &[
+    "rust/src/obs/profile.rs",
+    "rust/src/util/bench_kit.rs",
+    "rust/src/main.rs",
+];
+const R1_EXEMPT_DIRS: &[&str] = &["rust/benches/"];
+
+const R4_SCOPE_DIR: &str = "rust/src/";
+const R4_EXEMPT_FILES: &[&str] = &[
+    "rust/src/main.rs",
+    "rust/src/util/cli.rs",
+    "rust/src/util/bench_kit.rs",
+    "rust/src/util/bench_check.rs",
+];
+const R4_EXEMPT_DIRS: &[&str] = &["rust/src/experiments/", "rust/src/testkit/"];
+
+fn in_any_dir(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+fn r1_applies(rel: &str) -> bool {
+    !R1_EXEMPT_FILES.contains(&rel) && !in_any_dir(rel, R1_EXEMPT_DIRS)
+}
+
+fn r2_applies(rel: &str) -> bool {
+    in_any_dir(rel, DETERMINISTIC_DIRS)
+}
+
+fn r4_applies(rel: &str) -> bool {
+    rel.starts_with(R4_SCOPE_DIR)
+        && !R4_EXEMPT_FILES.contains(&rel)
+        && !in_any_dir(rel, R4_EXEMPT_DIRS)
+}
+
+// ----------------------------------------------------------- token helpers
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Word-boundary substring search: `needle` not adjacent to ident chars.
+fn has_word(line: &str, needle: &str) -> bool {
+    find_word(line, needle).is_some()
+}
+
+fn find_word(line: &str, needle: &str) -> Option<usize> {
+    let mut start = 0usize;
+    while let Some(pos) = line[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = !line[..at].chars().next_back().is_some_and(ident_char);
+        let after_ok = !line[at + needle.len()..].chars().next().is_some_and(ident_char);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + needle.len();
+    }
+    None
+}
+
+/// Hash-iteration method suffixes: `NAME.<one of these>` is iteration.
+const ITER_METHODS: &[&str] = &[
+    "iter()",
+    "iter_mut()",
+    "into_iter()",
+    "keys()",
+    "into_keys()",
+    "values()",
+    "values_mut()",
+    "into_values()",
+    "drain(",
+];
+
+const HASH_TYPES: &[&str] = &["HashMap", "HashSet"];
+
+/// Ambient-randomness tokens (R3): anything that seeds from the
+/// environment instead of a `util::rng` stream.
+const AMBIENT_RNG: &[&str] = &[
+    "from_entropy",
+    "thread_rng",
+    "ThreadRng",
+    "OsRng",
+    "getrandom",
+    "RandomState",
+    "rand_core",
+];
+
+/// Collect identifiers bound to a hash-map/set type anywhere in the file:
+/// `let [mut] NAME = HashMap::new()`, `NAME: HashMap<…>` (fields, params,
+/// let-with-type). A tiny symbol table, but enough to catch iteration over
+/// a binding declared lines earlier.
+fn hash_bound_names(lines: &[String]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for l in lines {
+        if !HASH_TYPES.iter().any(|t| l.contains(t)) {
+            continue;
+        }
+        if let Some(pos) = find_word(l, "let") {
+            let rest = l[pos + 3..].trim_start();
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+            let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+            if !name.is_empty() {
+                names.insert(name);
+            }
+        }
+        for t in HASH_TYPES {
+            let mut start = 0usize;
+            while let Some(pos) = l[start..].find(t) {
+                let at = start + pos;
+                if let Some(name) = binding_before(l, at) {
+                    names.insert(name);
+                }
+                start = at + t.len();
+            }
+        }
+    }
+    names
+}
+
+/// For a type token at byte `at`, recover the `name:` binding before it
+/// (skipping `&`/`&mut` and `std::collections::` path prefixes), if any.
+fn binding_before(l: &str, at: usize) -> Option<String> {
+    let mut before = l[..at].trim_end();
+    for p in ["std::collections::", "collections::", "std::"] {
+        before = before.strip_suffix(p).unwrap_or(before);
+    }
+    let mut before = before.trim_end();
+    before = before.strip_suffix("&mut").unwrap_or(before);
+    before = before.strip_suffix('&').unwrap_or(before);
+    let before = before.trim_end();
+    let before = before.strip_suffix(':')?;
+    if before.ends_with(':') {
+        return None; // `path::HashMap`, not a binding
+    }
+    let tail: Vec<char> = before.chars().rev().take_while(|&c| ident_char(c)).collect();
+    if tail.is_empty() {
+        return None;
+    }
+    Some(tail.into_iter().rev().collect())
+}
+
+/// Does `line` iterate a hash container? True when a known hash-bound name
+/// (or a literal `HashMap`/`HashSet` expression on the same line) is
+/// followed by an iteration method, or a `for … in` loops over one.
+fn hash_iteration(line: &str, names: &BTreeSet<String>) -> bool {
+    for m in ITER_METHODS {
+        let mut start = 0usize;
+        while let Some(pos) = line[start..].find(&format!(".{m}")) {
+            let at = start + pos;
+            let receiver: String = line[..at]
+                .chars()
+                .rev()
+                .take_while(|&c| ident_char(c))
+                .collect();
+            let receiver: String = receiver.chars().rev().collect();
+            if names.contains(&receiver) {
+                return true;
+            }
+            // Direct expression: `HashMap::new().iter()` and friends.
+            if HASH_TYPES.iter().any(|t| has_word(&line[..at], t)) {
+                return true;
+            }
+            start = at + 1;
+        }
+    }
+    if let Some(pos) = find_word(line, "in") {
+        let rest = line[pos + 2..].trim_start();
+        let rest = rest.strip_prefix("&mut ").unwrap_or(rest);
+        let rest = rest.strip_prefix('&').unwrap_or(rest);
+        let name: String = rest.chars().take_while(|&c| ident_char(c)).collect();
+        if names.contains(&name) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Integer turbofish (`.sum::<usize>()` etc): a reduction whose order
+/// cannot perturb the result. Anything float-typed or untyped stays flagged.
+fn integer_reduction(line: &str) -> bool {
+    const INT: &[&str] = &[
+        "::<u8>", "::<u16>", "::<u32>", "::<u64>", "::<u128>", "::<usize>", "::<i8>", "::<i16>",
+        "::<i32>", "::<i64>", "::<i128>", "::<isize>",
+    ];
+    INT.iter().any(|t| line.contains(t))
+        && !line.contains("::<f64>")
+        && !line.contains("::<f32>")
+}
+
+const REDUCTIONS: &[&str] = &[".sum", ".fold(", ".product"];
+
+// ---------------------------------------------------------------- lint_file
+
+/// Lint one file. `rel` is the repo-root-relative path with `/` separators
+/// (it alone decides rule scoping, so fixtures can impersonate any module).
+pub fn lint_file(rel: &str, source: &str) -> FileOutcome {
+    let stripped = strip(source);
+    let lines = &stripped.lines;
+    let tests = test_mask(lines);
+    let names = hash_bound_names(lines);
+    let mut raw: Vec<Finding> = Vec::new();
+
+    // Struct-field tracking for R2: depth of the enclosing struct block.
+    let mut struct_depth = 0usize;
+    let mut struct_pending = false;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+
+        // R1 — wall-clock types.
+        if r1_applies(rel) {
+            for t in ["Instant", "SystemTime"] {
+                if has_word(line, t) {
+                    raw.push(Finding {
+                        rule: "R1",
+                        severity: Severity::Error,
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{t}` is wall-clock — sim-reachable code must use virtual time \
+                             (exempt: obs::profile, util::bench_kit, benches, main.rs)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // R2 — hash-order dependence in the deterministic modules.
+        if r2_applies(rel) {
+            if hash_iteration(line, &names) {
+                raw.push(Finding {
+                    rule: "R2",
+                    severity: Severity::Error,
+                    file: rel.to_string(),
+                    line: lineno,
+                    message: "HashMap/HashSet iteration order is nondeterministic — use BTreeMap \
+                              or a sorted Vec"
+                        .to_string(),
+                });
+            }
+            if struct_depth > 0 {
+                for t in HASH_TYPES {
+                    if let Some(at) = find_word(line, t) {
+                        if binding_before(line, at).is_some() {
+                            raw.push(Finding {
+                                rule: "R2",
+                                severity: Severity::Error,
+                                file: rel.to_string(),
+                                line: lineno,
+                                message: format!(
+                                    "struct field of type `{t}` in a deterministic module — \
+                                     use BTreeMap or a sorted Vec"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // R3 — ambient randomness, everywhere.
+        for t in AMBIENT_RNG {
+            if has_word(line, t) {
+                raw.push(Finding {
+                    rule: "R3",
+                    severity: Severity::Error,
+                    file: rel.to_string(),
+                    line: lineno,
+                    message: format!(
+                        "`{t}` draws ambient randomness — construct RNGs via util::rng seeded \
+                         streams (Rng::new / fork)"
+                    ),
+                });
+            }
+        }
+
+        // R4 — panics in library code (warn; ratchet).
+        if r4_applies(rel) && !tests[idx] {
+            let pats = [(".unwrap()", "unwrap()"), (".expect(", "expect()"), ("panic!", "panic!")];
+            for (t, what) in pats {
+                if line.contains(t) {
+                    raw.push(Finding {
+                        rule: "R4",
+                        severity: Severity::Warn,
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{what}` in library code — return util::error::Result or justify \
+                             with lint:allow(R4)"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // R5 — float reduction over a hash iterator, everywhere.
+        if REDUCTIONS.iter().any(|r| line.contains(r))
+            && hash_iteration(line, &names)
+            && !integer_reduction(line)
+        {
+            raw.push(Finding {
+                rule: "R5",
+                severity: Severity::Error,
+                file: rel.to_string(),
+                line: lineno,
+                message: "float reduction over a hash-map iterator — accumulation order is \
+                          nondeterministic; sort the keys first"
+                    .to_string(),
+            });
+        }
+
+        // Maintain the struct-region tracker (after the checks so a field
+        // on the `struct Foo {` line itself still counts).
+        if has_word(line, "struct") && !line.contains(';') {
+            struct_pending = true;
+        }
+        if struct_pending || struct_depth > 0 {
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        struct_depth += 1;
+                        struct_pending = false;
+                    }
+                    '}' => {
+                        struct_depth = struct_depth.saturating_sub(1);
+                    }
+                    _ => {}
+                }
+            }
+            if line.contains(';') && struct_depth == 0 {
+                struct_pending = false; // `struct Foo;` / tuple struct
+            }
+        }
+    }
+
+    apply_allows(rel, raw, &stripped.allows)
+}
+
+/// Resolve `lint:allow` annotations against the raw findings: suppress
+/// matches, then report annotation problems (missing reason, unknown rule,
+/// unused allow) as findings of the `LINT` meta-rule.
+fn apply_allows(rel: &str, raw: Vec<Finding>, allows: &[Allow]) -> FileOutcome {
+    let known: BTreeSet<&str> = RULES.iter().map(|r| r.id).collect();
+    let mut used = vec![false; allows.len()];
+    let mut out = FileOutcome::default();
+
+    for f in raw {
+        let mut hit = None;
+        for (i, a) in allows.iter().enumerate() {
+            let covers_line = a.file_wide || a.line == f.line || a.line + 1 == f.line;
+            if covers_line && a.has_reason && a.rules.iter().any(|r| r == f.rule) {
+                hit = Some(i);
+                break;
+            }
+        }
+        match hit {
+            Some(i) => {
+                used[i] = true;
+                out.suppressed.push(Suppressed {
+                    rule: f.rule,
+                    file: f.file,
+                    line: f.line,
+                });
+            }
+            None => out.findings.push(f),
+        }
+    }
+
+    for (i, a) in allows.iter().enumerate() {
+        if !a.has_reason {
+            out.findings.push(Finding {
+                rule: META_RULE,
+                severity: Severity::Error,
+                file: rel.to_string(),
+                line: a.line,
+                message: "lint:allow without a reason — write `lint:allow(<rule>): <reason>`"
+                    .to_string(),
+            });
+            continue;
+        }
+        if let Some(bad) = a.rules.iter().find(|r| !known.contains(r.as_str())) {
+            out.findings.push(Finding {
+                rule: META_RULE,
+                severity: Severity::Error,
+                file: rel.to_string(),
+                line: a.line,
+                message: format!("lint:allow references unknown rule `{bad}`"),
+            });
+            continue;
+        }
+        if !used[i] {
+            out.findings.push(Finding {
+                rule: META_RULE,
+                severity: Severity::Warn,
+                file: rel.to_string(),
+                line: a.line,
+                message: format!(
+                    "unused lint:allow({}) — nothing to suppress here; remove it",
+                    a.rules.join(", ")
+                ),
+            });
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn errors(o: &FileOutcome) -> usize {
+        o.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    #[test]
+    fn r1_fires_in_traffic_but_not_in_benches() {
+        let src = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+        let o = lint_file("rust/src/traffic/engine.rs", src);
+        assert_eq!(errors(&o), 2);
+        assert!(o.findings.iter().all(|f| f.rule == "R1"));
+        let o = lint_file("rust/benches/traffic.rs", src);
+        assert_eq!(errors(&o), 0);
+        let o = lint_file("rust/src/obs/profile.rs", src);
+        assert_eq!(errors(&o), 0);
+    }
+
+    #[test]
+    fn r2_catches_iteration_and_fields_only_in_scope() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S {\n    map: HashMap<u32, f64>,\n}\n\
+                   fn f(m: &HashMap<u32, f64>) -> usize {\n\
+                       let mut c = 0;\n\
+                       for (k, _) in m.iter() { c += k; }\n\
+                       c as usize\n\
+                   }\n";
+        let o = lint_file("rust/src/scheduler/lea.rs", src);
+        assert!(
+            o.findings.iter().any(|f| f.rule == "R2" && f.line == 3),
+            "field finding missing: {:?}",
+            o.findings
+        );
+        assert!(
+            o.findings.iter().any(|f| f.rule == "R2" && f.line == 7),
+            "iteration finding missing: {:?}",
+            o.findings
+        );
+        // Same source in a non-deterministic module: R2 out of scope.
+        let o = lint_file("rust/src/util/json.rs", src);
+        assert!(o.findings.iter().all(|f| f.rule != "R2"));
+    }
+
+    #[test]
+    fn r2_allows_btreemap_and_plain_lookup() {
+        let src = "use std::collections::BTreeMap;\n\
+                   struct S {\n    map: BTreeMap<u32, f64>,\n}\n\
+                   fn f(m: &std::collections::HashMap<u32, f64>) -> f64 {\n\
+                       *m.get(&3).unwrap_or(&0.0)\n\
+                   }\n";
+        let o = lint_file("rust/src/sim/runner.rs", src);
+        assert!(o.findings.iter().all(|f| f.rule != "R2"), "{:?}", o.findings);
+    }
+
+    #[test]
+    fn r3_flags_ambient_randomness_everywhere() {
+        let src = "fn f() { let r = rand::rngs::OsRng; let s = RandomState::new(); }\n";
+        let o = lint_file("rust/tests/integration_sim.rs", src);
+        assert_eq!(errors(&o), 2);
+        assert!(o.findings.iter().all(|f| f.rule == "R3"));
+    }
+
+    #[test]
+    fn r4_warns_outside_tests_and_exempt_modules() {
+        let src = "fn lib(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        let o = lint_file("rust/src/coding/lagrange.rs", src);
+        let warns: Vec<_> = o.findings.iter().filter(|f| f.rule == "R4").collect();
+        assert_eq!(warns.len(), 1, "{:?}", o.findings);
+        assert_eq!(warns[0].line, 1);
+        assert_eq!(warns[0].severity, Severity::Warn);
+        // CLI territory is exempt.
+        let o = lint_file("rust/src/main.rs", src);
+        assert!(o.findings.iter().all(|f| f.rule != "R4"));
+    }
+
+    #[test]
+    fn r5_flags_float_reductions_over_hash_iterators() {
+        let src = "fn f(m: &std::collections::HashMap<u32, f64>) -> f64 {\n\
+                       m.values().sum::<f64>()\n\
+                   }\n\
+                   fn g(m: &std::collections::HashMap<u32, usize>) -> usize {\n\
+                       m.values().sum::<usize>()\n\
+                   }\n";
+        let o = lint_file("rust/src/util/stats.rs", src);
+        let r5: Vec<_> = o.findings.iter().filter(|f| f.rule == "R5").collect();
+        assert_eq!(r5.len(), 1, "{:?}", o.findings);
+        assert_eq!(r5[0].line, 2);
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_counted() {
+        let src = "// lint:allow(R1): wall-clock sleep throttling is opt-in and off sim paths\n\
+                   use std::time::Instant;\n";
+        let o = lint_file("rust/src/exec/worker.rs", src);
+        assert_eq!(errors(&o), 0, "{:?}", o.findings);
+        assert_eq!(o.suppressed.len(), 1);
+        assert_eq!(o.suppressed[0].rule, "R1");
+    }
+
+    #[test]
+    fn allow_without_reason_is_an_error() {
+        let src = "// lint:allow(R1)\nuse std::time::Instant;\n";
+        let o = lint_file("rust/src/exec/worker.rs", src);
+        // The R1 finding survives AND the annotation itself is an error.
+        assert!(o.findings.iter().any(|f| f.rule == "R1"));
+        assert!(o
+            .findings
+            .iter()
+            .any(|f| f.rule == META_RULE && f.severity == Severity::Error));
+    }
+
+    #[test]
+    fn unused_allow_is_a_warning() {
+        let src = "// lint:allow(R1): no longer needed\nfn f() {}\n";
+        let o = lint_file("rust/src/sim/runner.rs", src);
+        assert!(o
+            .findings
+            .iter()
+            .any(|f| f.rule == META_RULE && f.severity == Severity::Warn));
+    }
+
+    #[test]
+    fn allow_file_covers_the_whole_file() {
+        let src = "// lint:allow-file(R1): profiling harness is wall-clock by design\n\
+                   fn a() { let t = std::time::Instant::now(); }\n\
+                   fn b() { let t = std::time::Instant::now(); }\n";
+        let o = lint_file("examples/profbench.rs", src);
+        assert_eq!(errors(&o), 0, "{:?}", o.findings);
+        assert_eq!(o.suppressed.len(), 2);
+    }
+
+    #[test]
+    fn strings_and_comments_never_trigger() {
+        let src = "fn f() -> &'static str {\n\
+                       // Instant::now() would be wrong here\n\
+                       /* HashMap.iter() too /* nested */ */\n\
+                       \"Instant SystemTime HashMap thread_rng\"\n\
+                   }\n";
+        let o = lint_file("rust/src/traffic/engine.rs", src);
+        assert_eq!(o.findings.len(), 0, "{:?}", o.findings);
+    }
+}

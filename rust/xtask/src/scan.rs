@@ -1,0 +1,189 @@
+//! Tree walker and report aggregation for the determinism lint pass.
+//!
+//! Walks the scanned roots in sorted order (the report itself is
+//! deterministic), lints every `.rs` file via [`crate::rules::lint_file`],
+//! and renders a `file:line: severity[RULE] message` report plus per-rule
+//! totals and the suppression ledger.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::rules::{lint_file, Finding, Severity, Suppressed, RULES};
+
+/// Directories scanned, relative to the repo root. Fixture trees under
+/// `xtask/tests/fixtures` are deliberately not listed — they hold seeded
+/// true-positives.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Aggregated result of linting the whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+    pub files: usize,
+    pub lines: usize,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warn)
+            .count()
+    }
+}
+
+/// Collect every `.rs` file under `dir`, recursively, in sorted order.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every scanned root under `repo_root`. Missing roots are skipped
+/// (the walker never invents scope), unreadable files are hard errors.
+pub fn scan_tree(repo_root: &Path) -> io::Result<Report> {
+    let mut report = Report::default();
+    for root in SCAN_ROOTS {
+        let dir = repo_root.join(root);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        rust_files(&dir, &mut files)?;
+        for path in files {
+            let rel = path
+                .strip_prefix(repo_root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let source = fs::read_to_string(&path)?;
+            let outcome = lint_file(&rel, &source);
+            report.files += 1;
+            report.lines += source.lines().count();
+            report.findings.extend(outcome.findings);
+            report.suppressed.extend(outcome.suppressed);
+        }
+    }
+    // Deterministic ordering regardless of walk interleaving.
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+        .suppressed
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+/// Render the human-facing report to a string (one write keeps CI logs
+/// uninterleaved).
+pub fn render(report: &Report) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "{}:{}: {}[{}] {}\n",
+            f.file,
+            f.line,
+            f.severity.name(),
+            f.rule,
+            f.message
+        ));
+    }
+    if !report.findings.is_empty() {
+        out.push('\n');
+    }
+
+    out.push_str(&format!(
+        "xtask lint: {} files, {} lines scanned\n",
+        report.files, report.lines
+    ));
+    for rule in RULES {
+        let errs = report
+            .findings
+            .iter()
+            .filter(|f| f.rule == rule.id && f.severity == Severity::Error)
+            .count();
+        let warns = report
+            .findings
+            .iter()
+            .filter(|f| f.rule == rule.id && f.severity == Severity::Warn)
+            .count();
+        let supp = report.suppressed.iter().filter(|s| s.rule == rule.id).count();
+        if errs + warns + supp > 0 {
+            out.push_str(&format!(
+                "  {}: {} error(s), {} warning(s), {} suppressed\n",
+                rule.id, errs, warns, supp
+            ));
+        }
+    }
+    if !report.suppressed.is_empty() {
+        out.push_str("  suppressions in effect:\n");
+        for s in &report.suppressed {
+            out.push_str(&format!("    {}:{} lint:allow({})\n", s.file, s.line, s.rule));
+        }
+    }
+    out.push_str(&format!(
+        "  total: {} error(s), {} warning(s), {} suppressed\n",
+        report.errors(),
+        report.warnings(),
+        report.suppressed.len()
+    ));
+    out
+}
+
+/// Render the `xtask rules` table.
+pub fn render_rules() -> String {
+    let mut out =
+        String::from("Determinism lint rules (suppress with `// lint:allow(<id>): <reason>`):\n\n");
+    for r in RULES {
+        out.push_str(&format!("{} [{}]\n", r.id, r.severity.name()));
+        out.push_str(&format!("  {}\n", r.summary));
+        out.push_str(&format!("  scope: {}\n\n", r.scope));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_roots_are_sorted_and_stable() {
+        // The walk order is part of the report contract.
+        let mut sorted = SCAN_ROOTS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted.len(), SCAN_ROOTS.len());
+    }
+
+    #[test]
+    fn render_reports_totals() {
+        let report = Report::default();
+        let text = render(&report);
+        assert!(text.contains("total: 0 error(s), 0 warning(s), 0 suppressed"));
+    }
+
+    #[test]
+    fn rules_table_lists_all_ids() {
+        let text = render_rules();
+        for id in ["R1", "R2", "R3", "R4", "R5"] {
+            assert!(text.contains(id), "missing {id} in rules table");
+        }
+    }
+}

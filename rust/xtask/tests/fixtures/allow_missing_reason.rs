@@ -1,0 +1,8 @@
+// Fixture: an allow without a reason is itself an error AND suppresses
+// nothing.
+// lint:allow(R1)
+use std::time::Instant;
+
+pub fn timed() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,9 @@
+// Fixture: a justified lint:allow suppresses the finding (same line and
+// line-above forms).
+// lint:allow(R1): this fixture exercises the suppression path
+use std::time::Instant;
+
+pub fn timed() -> f64 {
+    let t0 = Instant::now(); // lint:allow(R1): second form, same line
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,9 @@
+// Fixture: R1 true positive — wall-clock types on a sim-reachable path.
+use std::time::Instant;
+
+pub fn handle_event() -> f64 {
+    let t0 = Instant::now();
+    let later = std::time::SystemTime::now();
+    let _ = later;
+    t0.elapsed().as_secs_f64()
+}

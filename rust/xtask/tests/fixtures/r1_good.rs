@@ -1,0 +1,4 @@
+// Fixture: R1 true negative — virtual time only.
+pub fn handle_event(now: f64, gap: f64) -> f64 {
+    now + gap.max(0.0)
+}

@@ -1,0 +1,28 @@
+// Fixture: R2 true positives — a hash-typed struct field and three
+// iteration forms over hash containers.
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+pub struct Scoreboard {
+    pub by_worker: HashMap<usize, f64>,
+}
+
+pub fn total(m: &HashMap<usize, u64>) -> u64 {
+    let mut acc = 0;
+    for (_, v) in m.iter() {
+        acc += v;
+    }
+    acc
+}
+
+pub fn drain_all(s: &mut HashSet<u64>) -> usize {
+    let mut n = 0;
+    for _ in s.drain() {
+        n += 1;
+    }
+    n
+}
+
+pub fn collect_keys(lookup: HashMap<u64, u64>) -> Vec<u64> {
+    lookup.into_keys().collect()
+}

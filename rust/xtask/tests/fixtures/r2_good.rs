@@ -1,0 +1,15 @@
+// Fixture: R2 true negative — ordered containers iterate deterministically,
+// and point lookups into a hash map (no iteration) are fine too.
+use std::collections::BTreeMap;
+
+pub struct Scoreboard {
+    pub by_worker: BTreeMap<usize, f64>,
+}
+
+pub fn total(m: &BTreeMap<usize, u64>) -> u64 {
+    m.values().sum()
+}
+
+pub fn lookup(table: &std::collections::HashMap<usize, u64>, k: usize) -> Option<u64> {
+    table.get(&k).copied()
+}

@@ -1,0 +1,13 @@
+// Fixture: R3 true positives — ambient randomness in several shapes.
+pub fn seed_me() -> u64 {
+    let mut rng = rand::thread_rng();
+    let other = rand::rngs::OsRng;
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = (other, state);
+    rng.gen()
+}
+
+pub fn entropy_seeded() -> u64 {
+    let rng = SmallRng::from_entropy();
+    rng.next_u64()
+}

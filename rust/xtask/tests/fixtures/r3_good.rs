@@ -1,0 +1,8 @@
+// Fixture: R3 true negative — seeded streams through util::rng only.
+use crate::util::rng::Rng;
+
+pub fn seeded(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed ^ 0x6368_7572_6e21);
+    let mut child = rng.fork(7);
+    child.next_u64()
+}

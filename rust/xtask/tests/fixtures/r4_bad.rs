@@ -1,0 +1,22 @@
+// Fixture: R4 — unwrap/expect/panic in library code warn; the same calls
+// inside #[cfg(test)] are exempt.
+pub fn risky(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+pub fn message(x: Option<u32>) -> u32 {
+    x.expect("must be set")
+}
+
+pub fn boom() {
+    panic!("library code must not panic");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

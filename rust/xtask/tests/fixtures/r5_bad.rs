@@ -1,0 +1,20 @@
+// Fixture: R5 true positive — float reduction over hash-map iterators
+// (plus an integer-turbofish reduction that must NOT fire).
+use std::collections::HashMap;
+
+pub fn mean_load(m: &HashMap<usize, f64>) -> f64 {
+    let total = m.values().sum::<f64>();
+    total / m.len() as f64
+}
+
+pub fn folded(m: &HashMap<usize, f64>) -> f64 {
+    m.values().fold(0.0, |a, b| a + b)
+}
+
+pub fn count(m: &HashMap<usize, u64>) -> usize {
+    m.values().len()
+}
+
+pub fn int_total(m: &HashMap<usize, u64>) -> u64 {
+    m.values().sum::<u64>()
+}

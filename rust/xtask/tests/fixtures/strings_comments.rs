@@ -1,0 +1,17 @@
+// Fixture: rule tokens inside strings and comments must never fire.
+// Instant::now() in a line comment.
+/* HashMap iteration in a block comment /* nested: thread_rng() */ still
+   inside the outer comment. */
+
+pub fn decoys() -> (&'static str, String, char) {
+    let plain = "Instant::now() and SystemTime::now() and OsRng";
+    let escaped = "quote \" then thread_rng() and from_entropy()";
+    let raw = r#"HashMap.iter() "quoted" RandomState"#;
+    let rawer = r##"nested r#"Instant"# hash guards"##;
+    let lifetime_not_char: &'static str = plain;
+    let ch = 'I';
+    let escaped_quote = '\'';
+    let unicode = '\u{41}';
+    let _ = (escaped, raw, rawer, escaped_quote, unicode);
+    (lifetime_not_char, String::from("SystemTime"), ch)
+}

@@ -1,0 +1,227 @@
+//! Fixture-based acceptance tests for the determinism lint pass: every
+//! rule's true positive fails, every true negative passes, suppression and
+//! lexer edge cases behave. Fixtures live under `tests/fixtures/` and are
+//! fed to [`xtask::rules::lint_file`] under synthetic repo-relative paths,
+//! which is what decides rule scoping — the same snippet can impersonate a
+//! deterministic module, a bench, or CLI territory.
+
+use xtask::rules::{lint_file, Severity, META_RULE};
+use xtask::scan::{render, Report};
+
+/// A sim-reachable path: every rule in scope (the acceptance criterion's
+/// "deliberately injected Instant::now() in traffic/engine.rs").
+const TRAFFIC: &str = "rust/src/traffic/engine.rs";
+
+fn error_rules(rel: &str, src: &str) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> = lint_file(rel, src)
+        .findings
+        .into_iter()
+        .filter(|f| f.severity == Severity::Error)
+        .map(|f| f.rule)
+        .collect();
+    rules.dedup();
+    rules
+}
+
+#[test]
+fn r1_true_positive_fails_in_traffic() {
+    let src = include_str!("fixtures/r1_bad.rs");
+    let rules = error_rules(TRAFFIC, src);
+    assert_eq!(rules, vec!["R1"], "expected only R1 errors: {rules:?}");
+}
+
+#[test]
+fn r1_true_positive_carries_file_and_line() {
+    let src = include_str!("fixtures/r1_bad.rs");
+    let outcome = lint_file(TRAFFIC, src);
+    let first = &outcome.findings[0];
+    assert_eq!(first.file, TRAFFIC);
+    assert_eq!(first.line, 2, "first finding is the `use` line");
+}
+
+#[test]
+fn r1_same_source_passes_in_exempt_scopes() {
+    let src = include_str!("fixtures/r1_bad.rs");
+    for rel in [
+        "rust/benches/traffic.rs",
+        "rust/src/obs/profile.rs",
+        "rust/src/util/bench_kit.rs",
+        "rust/src/main.rs",
+    ] {
+        assert!(
+            error_rules(rel, src).is_empty(),
+            "R1 must be exempt under {rel}"
+        );
+    }
+}
+
+#[test]
+fn r1_true_negative_passes() {
+    let src = include_str!("fixtures/r1_good.rs");
+    assert!(lint_file(TRAFFIC, src).findings.is_empty());
+}
+
+#[test]
+fn r2_true_positive_fails_in_deterministic_modules() {
+    let src = include_str!("fixtures/r2_bad.rs");
+    for rel in [
+        "rust/src/sim/runner.rs",
+        "rust/src/traffic/engine.rs",
+        "rust/src/scheduler/lea.rs",
+        "rust/src/coding/lagrange.rs",
+        "rust/src/markov/chain.rs",
+    ] {
+        let rules = error_rules(rel, src);
+        assert_eq!(rules, vec!["R2"], "expected R2 errors under {rel}: {rules:?}");
+    }
+    // Field + three iteration forms.
+    let outcome = lint_file("rust/src/sim/runner.rs", src);
+    assert!(outcome.findings.len() >= 4, "{:?}", outcome.findings);
+}
+
+#[test]
+fn r2_out_of_scope_module_is_not_checked() {
+    let src = include_str!("fixtures/r2_bad.rs");
+    let outcome = lint_file("rust/src/util/json.rs", src);
+    assert!(
+        outcome.findings.iter().all(|f| f.rule != "R2"),
+        "R2 must not apply outside the deterministic modules"
+    );
+}
+
+#[test]
+fn r2_true_negative_passes() {
+    let src = include_str!("fixtures/r2_good.rs");
+    let outcome = lint_file("rust/src/sim/runner.rs", src);
+    assert!(outcome.findings.is_empty(), "{:?}", outcome.findings);
+}
+
+#[test]
+fn r3_true_positive_fails_everywhere() {
+    let src = include_str!("fixtures/r3_bad.rs");
+    for rel in [
+        TRAFFIC,
+        "rust/src/util/stats.rs",
+        "rust/tests/integration_sim.rs",
+        "rust/benches/traffic.rs",
+        "examples/quickstart.rs",
+    ] {
+        let rules = error_rules(rel, src);
+        assert_eq!(rules, vec!["R3"], "expected R3 errors under {rel}: {rules:?}");
+    }
+    let outcome = lint_file(TRAFFIC, src);
+    let r3 = outcome.findings.iter().filter(|f| f.rule == "R3").count();
+    assert_eq!(r3, 4, "thread_rng, OsRng, RandomState, from_entropy");
+}
+
+#[test]
+fn r3_true_negative_passes() {
+    let src = include_str!("fixtures/r3_good.rs");
+    assert!(lint_file(TRAFFIC, src).findings.is_empty());
+}
+
+#[test]
+fn r4_warns_in_library_code_but_not_tests_or_cli() {
+    let src = include_str!("fixtures/r4_bad.rs");
+    let outcome = lint_file("rust/src/coding/lagrange.rs", src);
+    let warns: Vec<_> = outcome.findings.iter().filter(|f| f.rule == "R4").collect();
+    assert_eq!(warns.len(), 3, "unwrap + expect + panic!: {warns:?}");
+    assert!(warns.iter().all(|f| f.severity == Severity::Warn));
+    // The unwrap inside #[cfg(test)] must not be among them.
+    assert!(warns.iter().all(|f| f.line < 15), "{warns:?}");
+    // CLI/bench territory is exempt entirely.
+    for rel in [
+        "rust/src/main.rs",
+        "rust/src/util/cli.rs",
+        "rust/src/util/bench_kit.rs",
+        "rust/src/experiments/traffic.rs",
+        "rust/tests/integration_sim.rs",
+    ] {
+        assert!(
+            lint_file(rel, src).findings.iter().all(|f| f.rule != "R4"),
+            "R4 must be exempt under {rel}"
+        );
+    }
+}
+
+#[test]
+fn r5_flags_float_reductions_only() {
+    let src = include_str!("fixtures/r5_bad.rs");
+    let outcome = lint_file("rust/src/util/stats.rs", src);
+    let r5: Vec<_> = outcome.findings.iter().filter(|f| f.rule == "R5").collect();
+    assert_eq!(r5.len(), 2, "sum::<f64> and fold, not the integer sum: {r5:?}");
+}
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let src = include_str!("fixtures/allow_ok.rs");
+    let outcome = lint_file(TRAFFIC, src);
+    assert!(
+        outcome.findings.is_empty(),
+        "both R1 sites are annotated: {:?}",
+        outcome.findings
+    );
+    assert_eq!(outcome.suppressed.len(), 2);
+    assert!(outcome.suppressed.iter().all(|s| s.rule == "R1"));
+}
+
+#[test]
+fn allow_without_reason_rejects_and_suppresses_nothing() {
+    let src = include_str!("fixtures/allow_missing_reason.rs");
+    let outcome = lint_file(TRAFFIC, src);
+    assert!(
+        outcome.findings.iter().any(|f| f.rule == "R1"),
+        "the violation must survive a reason-less allow"
+    );
+    assert!(
+        outcome
+            .findings
+            .iter()
+            .any(|f| f.rule == META_RULE && f.severity == Severity::Error),
+        "the annotation itself must be an error"
+    );
+    assert!(outcome.suppressed.is_empty());
+}
+
+#[test]
+fn lexer_edge_cases_produce_no_findings() {
+    let src = include_str!("fixtures/strings_comments.rs");
+    let outcome = lint_file(TRAFFIC, src);
+    assert!(outcome.findings.is_empty(), "{:?}", outcome.findings);
+}
+
+#[test]
+fn report_rendering_includes_rule_ids_and_locations() {
+    let src = include_str!("fixtures/r1_bad.rs");
+    let outcome = lint_file(TRAFFIC, src);
+    let report = Report {
+        findings: outcome.findings,
+        suppressed: outcome.suppressed,
+        files: 1,
+        lines: src.lines().count(),
+    };
+    let text = render(&report);
+    assert!(text.contains("rust/src/traffic/engine.rs:2: error[R1]"), "{text}");
+    assert!(text.contains("R1:"), "per-rule summary missing: {text}");
+}
+
+#[test]
+fn scan_tree_walks_a_synthetic_repo() {
+    // Build a small tree under the target dir (always writable during
+    // tests), lint it, and clean up.
+    let base = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("lint_scan_fixture");
+    let src_dir = base.join("rust/src/traffic");
+    std::fs::create_dir_all(&src_dir).unwrap();
+    std::fs::write(src_dir.join("engine.rs"), include_str!("fixtures/r1_bad.rs")).unwrap();
+    std::fs::write(src_dir.join("clean.rs"), include_str!("fixtures/r1_good.rs")).unwrap();
+
+    let report = xtask::scan::scan_tree(&base).unwrap();
+    assert_eq!(report.files, 2);
+    assert_eq!(report.errors(), 3, "{:?}", report.findings);
+    assert!(report
+        .findings
+        .iter()
+        .all(|f| f.file == "rust/src/traffic/engine.rs"));
+
+    std::fs::remove_dir_all(&base).unwrap();
+}
