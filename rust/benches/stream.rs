@@ -1,0 +1,90 @@
+//! Streaming-rounds benchmarks: events/s of the traffic engine with each
+//! participant's load split into R coded sub-batches, against the atomic
+//! R = 1 path — the streaming-overhead figure (`stream_slowdown_r4/r8`
+//! notes) — at the overloaded Fig.-3 operating point under both slack
+//! policies. Figures land in `BENCH_stream.json` (uploaded by the CI
+//! bench-smoke job and gated by `lea bench-check`); set `BENCH_SMOKE=1`
+//! for a fast validity run.
+
+// Benches are wall-clock by definition (R1 exempts rust/benches/);
+// the clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{run_traffic, Policy, SlackPolicy, TrafficConfig};
+use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
+
+/// One engine run at the overloaded operating point (2 jobs/s against a
+/// deadline-1 Fig.-3 scenario-1 cluster): events/s plus the run's event
+/// count and timely throughput for the table.
+fn stream_events_per_sec(rounds: usize, slack: SlackPolicy, jobs: u64) -> (f64, u64, f64) {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut lea = Lea::new(fig3_load_params());
+    let cfg = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(2.0),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+    .with_rounds(rounds)
+    .with_slack_policy(slack);
+    let t0 = Instant::now();
+    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let secs = t0.elapsed().as_secs_f64();
+    (m.events as f64 / secs, m.events, m.timely_throughput())
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+    let jobs: u64 = if smoke_mode() { 2_000 } else { 20_000 };
+
+    // ---- streamed engine throughput per round count and slack policy ----
+    // R = 1 is the atomic reference; the extra RoundComplete events make
+    // the streamed runs strictly busier, so events/s is the fair axis.
+    let mut rows = Vec::new();
+    let mut release_eps = Vec::new();
+    for rounds in [1usize, 2, 4, 8] {
+        for slack in SlackPolicy::all() {
+            let (eps, events, timely) = stream_events_per_sec(rounds, slack, jobs);
+            println!(
+                "bench stream_engine r={rounds} {:<8} {events:>8} events  {eps:>12.0} events/s  \
+                 timely {timely:.3}",
+                slack.name()
+            );
+            log.note(&format!("events_per_sec_r{rounds}_{}", slack.name()), eps);
+            if slack == SlackPolicy::Release {
+                release_eps.push(eps);
+            }
+            rows.push((
+                format!("r={rounds} {}", slack.name()),
+                vec![events as f64, eps, timely],
+            ));
+        }
+    }
+    table(
+        &format!("Streamed traffic engine ({}k jobs, Fig.-3 scenario 1, EDF)", jobs / 1000),
+        &["events", "events/s", "timely"],
+        &rows,
+    );
+
+    // The headline overhead ratios: how much event-loop throughput the
+    // round split costs relative to the atomic engine (release policy —
+    // squeeze adds re-dispatch work on top).
+    let slowdown_r4 = release_eps[0] / release_eps[2];
+    let slowdown_r8 = release_eps[0] / release_eps[3];
+    println!("bench stream slowdown r4 {slowdown_r4:.2}x  r8 {slowdown_r8:.2}x (vs atomic)");
+    log.note("stream_slowdown_r4", slowdown_r4);
+    log.note("stream_slowdown_r8", slowdown_r8);
+    for s in [slowdown_r4, slowdown_r8] {
+        assert!(s.is_finite() && s > 0.0, "degenerate slowdown {s}");
+    }
+
+    log.write("BENCH_stream.json");
+}

@@ -59,6 +59,15 @@ impl CodingScheme {
         self.kstar_override.unwrap_or_else(|| self.geometry.kstar())
     }
 
+    /// Counting semantics: every evaluated chunk is distinct, so decodability
+    /// is "any K* chunks" (Lagrange, or an explicit [`CodingScheme::counting`]
+    /// threshold). Streaming rounds (`traffic::engine`) require this — a
+    /// partial prefix of a worker's chunks then contributes exactly its
+    /// length toward K*, independent of which other workers finish.
+    pub fn is_counting(&self) -> bool {
+        self.repetition.is_none()
+    }
+
     /// The encoded chunk indices stored by worker `i` (strided: {i, i+n, …}).
     pub fn worker_chunks(&self, i: usize) -> Vec<usize> {
         assert!(i < self.geometry.n);
@@ -192,6 +201,16 @@ mod tests {
     fn overload_panics() {
         let s = CodingScheme::for_geometry(geo(4, 5, 10, 2));
         let _ = s.assigned_chunks(1, 6);
+    }
+
+    #[test]
+    fn counting_predicate_tracks_the_design() {
+        let lagrange = CodingScheme::for_geometry(geo(3, 4, 4, 2));
+        assert!(lagrange.is_counting());
+        let explicit = CodingScheme::counting(geo(3, 2, 4, 2), 3);
+        assert!(explicit.is_counting());
+        let repetition = CodingScheme::for_geometry(geo(3, 2, 4, 2));
+        assert!(!repetition.is_counting());
     }
 
     #[test]

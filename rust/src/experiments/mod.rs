@@ -16,6 +16,8 @@
 //!   admission policy with per-worker speeds (`lea hetero`).
 //! - [`shard`] — the sharded-fleet grid: shard count × routing policy ×
 //!   per-shard load × churn over the multi-cluster front-end (`lea shard`).
+//! - [`stream`] — the streaming-rounds grid: rounds per participant ×
+//!   slack policy × load × deadline over the traffic engine (`lea stream`).
 //! - [`trace`] — re-run one traffic-grid cell with the trace recorder on
 //!   and export a Perfetto-compatible `.trace.json` (`lea trace`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
@@ -29,6 +31,7 @@ pub mod hetero_grid;
 pub mod heterogeneous;
 pub mod report;
 pub mod shard;
+pub mod stream;
 pub mod sweep;
 pub mod trace;
 pub mod traffic;

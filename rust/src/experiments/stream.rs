@@ -1,0 +1,383 @@
+//! Streaming-rounds scenario grid (`lea stream`): rounds per participant ×
+//! slack policy × offered load × deadline over the single-cluster traffic
+//! engine.
+//!
+//! Every cell runs the Fig.-3 scenario-1 cluster with a fresh LEA and a
+//! single-class Poisson stream whose load is split into the cell's round
+//! count ([`crate::traffic::JobClass`]`::rounds`). The `rounds = 1` column
+//! is the regression anchor: it is byte-identical to the atomic engine on
+//! the same derived seeds ([`run_cell_atomic`], pinned in
+//! `tests/determinism.rs`), so every streaming effect in the dump is
+//! attributable to the round split, never to seed drift.
+//!
+//! Like the other grids, cells fan out across OS threads with per-cell
+//! seeds derived from `(base seed, cell index)`, so the assembled JSON is
+//! byte-identical for a given seed whatever the thread count.
+
+use super::traffic::cell_seed;
+use crate::scheduler::lea::Lea;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::SimCluster;
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::traffic::{run_traffic, Policy, SlackPolicy, TrafficConfig, TrafficMetrics};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// Offset applied to the base seed so stream cells never share a stream
+/// with the other grids' cells at the same index.
+const STREAM_SEED_SALT: u64 = 0x7374_7265_616d; // "stream"
+
+/// Engine-seed salt within one cell (the analog of the traffic grid's
+/// `"raff"` constant).
+const STREAM_ENGINE_SALT: u64 = 0x726f_756e_6473; // "rounds"
+
+/// The grid to sweep. `rates` are offered loads in jobs per virtual
+/// second; the round axis streams every class's load through that many
+/// coded sub-batches (1 = atomic).
+#[derive(Clone, Debug)]
+pub struct StreamGridSpec {
+    pub rounds: Vec<usize>,
+    pub slack: Vec<SlackPolicy>,
+    pub rates: Vec<f64>,
+    /// Per-job relative deadlines.
+    pub deadlines: Vec<f64>,
+    /// Admission policy in every cell.
+    pub policy: Policy,
+    /// Arrivals simulated per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl StreamGridSpec {
+    /// Named presets for the CLI: `small` is the 12-cell acceptance grid
+    /// (rounds ∈ {1, 2, 4} × both slack policies × 2 loads × 1 deadline),
+    /// `wide` broadens to 48 cells with rounds up to 8, a third load level
+    /// and a second deadline.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<StreamGridSpec, String> {
+        let (rounds, rates, deadlines) = match name {
+            "small" => (vec![1, 2, 4], vec![0.9, 2.0], vec![1.0]),
+            "wide" => (vec![1, 2, 4, 8], vec![0.6, 1.3, 2.6], vec![1.0, 1.4]),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(StreamGridSpec {
+            rounds,
+            slack: SlackPolicy::all().to_vec(),
+            rates,
+            deadlines,
+            policy: Policy::EdfFeasible,
+            jobs,
+            seed,
+        })
+    }
+
+    /// Reject degenerate grids with a message instead of a panic deep in
+    /// the runner (the CLI calls this after applying overrides).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rounds.is_empty() {
+            return Err("rounds axis is empty".into());
+        }
+        if let Some(&r) = self.rounds.iter().find(|&&r| r == 0) {
+            return Err(format!("rounds must be ≥ 1 (got {r})"));
+        }
+        if self.slack.is_empty() {
+            return Err("slack-policy axis is empty".into());
+        }
+        if self.rates.is_empty() || self.deadlines.is_empty() {
+            return Err("rate/deadline axes must be non-empty".into());
+        }
+        if let Some(&d) = self
+            .deadlines
+            .iter()
+            .find(|&&d| d.is_nan() || d <= 0.0 || d.is_infinite())
+        {
+            return Err(format!("deadline must be finite and positive (got {d})"));
+        }
+        Ok(())
+    }
+
+    /// Cells in canonical order (rounds-major, then slack policy, then
+    /// rate, then deadline) — the order of the JSON dump.
+    pub fn cells(&self) -> Vec<StreamCell> {
+        let mut out = Vec::new();
+        for &rounds in &self.rounds {
+            for &slack in &self.slack {
+                for &rate in &self.rates {
+                    for &deadline in &self.deadlines {
+                        out.push(StreamCell {
+                            idx: out.len(),
+                            rounds,
+                            slack,
+                            rate,
+                            deadline,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (rounds, slack policy, rate, deadline) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamCell {
+    pub idx: usize,
+    pub rounds: usize,
+    pub slack: SlackPolicy,
+    /// Offered load (jobs/s).
+    pub rate: f64,
+    /// Relative deadline (seconds).
+    pub deadline: f64,
+}
+
+/// A cell plus its measured traffic metrics.
+#[derive(Clone, Debug)]
+pub struct StreamRow {
+    pub cell: StreamCell,
+    pub metrics: TrafficMetrics,
+}
+
+/// The cell's shared derived inputs: (cell seed, LEA geometry, engine
+/// config). ONE construction path for both [`run_cell`] and its atomic
+/// reference — the byte-identity anchor compares configurations built
+/// here, never a copy.
+fn cell_setup(cell: &StreamCell, spec: &StreamGridSpec) -> (u64, LoadParams, TrafficConfig) {
+    let seed = cell_seed(spec.seed ^ STREAM_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        cell.deadline,
+    );
+    let cfg = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(cell.rate),
+        cell.deadline,
+        geo,
+        spec.policy,
+    )
+    .with_rounds(cell.rounds)
+    .with_slack_policy(cell.slack);
+    (seed, params, cfg)
+}
+
+/// The cell's Fig.-3 scenario-1 cluster.
+fn cell_cluster(seed: u64) -> SimCluster {
+    SimCluster::markov(
+        fig3_geometry().n,
+        fig3_scenarios()[0].chain(),
+        fig3_speeds(),
+        seed,
+    )
+}
+
+/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA, and the
+/// traffic engine with the cell's round count and slack policy.
+pub fn run_cell(cell: &StreamCell, spec: &StreamGridSpec) -> StreamRow {
+    let (seed, params, cfg) = cell_setup(cell, spec);
+    let mut lea = Lea::new(params);
+    let mut cluster = cell_cluster(seed);
+    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ STREAM_ENGINE_SALT);
+    StreamRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// The atomic reference for a rounds = 1 cell: the SAME cluster seed, LEA,
+/// arrival stream and engine seed, but with a config that never mentions
+/// streaming (no `with_rounds`, no `with_slack_policy`). `None` for
+/// multi-round cells. `tests/determinism.rs` pins `run_cell(..)` byte-
+/// identical to this for every rounds = 1 cell of the small preset —
+/// whatever the cell's slack policy, since slack is only consulted for
+/// rounds > 1.
+pub fn run_cell_atomic(cell: &StreamCell, spec: &StreamGridSpec) -> Option<TrafficMetrics> {
+    if cell.rounds != 1 {
+        return None;
+    }
+    let seed = cell_seed(spec.seed ^ STREAM_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        cell.deadline,
+    );
+    let cfg = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(cell.rate),
+        cell.deadline,
+        geo,
+        spec.policy,
+    );
+    let mut lea = Lea::new(params);
+    let mut cluster = cell_cluster(seed);
+    Some(run_traffic(&mut lea, &mut cluster, &cfg, seed ^ STREAM_ENGINE_SALT))
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared `super::fan_out` runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
+pub fn run_grid(spec: &StreamGridSpec, threads: usize) -> Vec<StreamRow> {
+    let cells = spec.cells();
+    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell; each
+/// cell carries the full [`TrafficMetrics`] serialization, the streaming
+/// counters included).
+pub fn to_json(spec: &StreamGridSpec, rows: &[StreamRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("traffic metrics serialize to an object"),
+            };
+            obj.insert("rounds".into(), Json::num(r.cell.rounds as f64));
+            obj.insert("slack".into(), Json::str(r.cell.slack.name()));
+            obj.insert("rate".into(), Json::num(r.cell.rate));
+            obj.insert("deadline".into(), Json::num(r.cell.deadline));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("stream-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs", Json::num(spec.jobs as f64)),
+        ("policy", Json::str(spec.policy.name())),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns: timely throughput and
+/// goodput per round count and slack policy, with the streaming-only
+/// counters (early resolves, slack releases, squeezed chunks) that stay
+/// zero on the atomic column.
+pub fn print(rows: &[StreamRow]) {
+    bench_kit::table(
+        "Stream grid — Fig.-3 scenario-1 cluster, LEA, streamed coded rounds",
+        &[
+            "rounds", "rate", "d", "timely", "goodput", "early", "released", "squeezed",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                (
+                    format!("{:<8} #{:02}", r.cell.slack.name(), r.cell.idx),
+                    vec![
+                        r.cell.rounds as f64,
+                        r.cell.rate,
+                        r.cell.deadline,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.early_resolve_rate(),
+                        m.slack_releases as f64,
+                        m.squeeze_chunks as f64,
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> StreamGridSpec {
+        StreamGridSpec {
+            rounds: vec![1, 4],
+            slack: vec![SlackPolicy::Release, SlackPolicy::Squeeze],
+            rates: vec![2.0],
+            deadlines: vec![1.0],
+            policy: Policy::EdfFeasible,
+            jobs: 150,
+            seed: 23,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = StreamGridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 12);
+        assert!(small.validate().is_ok());
+        let wide = StreamGridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 48);
+        assert!(wide.cells().iter().any(|c| c.rounds == 8));
+        assert!(StreamGridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_axes() {
+        let mut s = tiny_spec();
+        s.rounds = vec![];
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.rounds = vec![2, 0];
+        assert!(s.validate().unwrap_err().contains("≥ 1"));
+        let mut s = tiny_spec();
+        s.slack.clear();
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.deadlines = vec![0.0];
+        assert!(s.validate().is_err());
+        assert!(tiny_spec().validate().is_ok());
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"experiment\":\"stream-grid\""));
+        assert!(serial.contains("\"slack\":\"squeeze\""));
+        assert!(serial.contains("\"early_resolves\""));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order_and_stream_cells_stream() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            assert_eq!(r.metrics.arrivals, spec.jobs);
+            assert!(r.metrics.completed > 0, "cell {i} completed nothing");
+            if r.cell.rounds == 1 {
+                assert_eq!(r.metrics.rounds_completed, 0, "atomic cell {i} streamed");
+            } else {
+                assert!(r.metrics.rounds_completed > 0, "cell {i} never streamed");
+            }
+        }
+    }
+
+    #[test]
+    fn single_round_cells_match_the_atomic_engine() {
+        // The grid-level byte-identity anchor (also pinned, over the full
+        // small preset, in tests/determinism.rs).
+        let spec = tiny_spec();
+        for cell in spec.cells() {
+            match run_cell_atomic(&cell, &spec) {
+                None => assert!(cell.rounds > 1),
+                Some(atomic) => {
+                    let streamed = run_cell(&cell, &spec);
+                    assert_eq!(
+                        streamed.metrics.to_json().to_string(),
+                        atomic.to_json().to_string(),
+                        "cell {} diverged from the atomic engine",
+                        cell.idx
+                    );
+                }
+            }
+        }
+    }
+}

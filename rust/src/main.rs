@@ -23,6 +23,9 @@
 //!                 [--jobs N] [--seed S] [--dump shard.json]
 //!                 [--shards 1,4,16] [--routing rr,jsq,po2] [--deadline D]
 //!                 [--cache off|exact|quantized]
+//! lea stream      [--grid small|wide] [--threads T]        streaming-rounds grid
+//!                 [--jobs N] [--seed S] [--dump stream.json]
+//!                 [--round-counts 1,2,4] [--slack release,squeeze]
 //! lea bench-check [--baseline DIR] [--fresh DIR]           bench-regression gate
 //!                 [--tolerance X] [--names a,b,...]
 //! lea report      [--out report.json] [--fast]             everything + JSON
@@ -37,10 +40,11 @@ use timely_coded::exec::master::Engine;
 use timely_coded::experiments::churn::ChurnGridSpec;
 use timely_coded::experiments::hetero_grid::{FleetMix, HeteroGridSpec};
 use timely_coded::experiments::shard::ShardGridSpec;
+use timely_coded::experiments::stream::StreamGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
 use timely_coded::experiments::{
-    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, sweep, trace,
-    traffic,
+    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, stream, sweep,
+    trace, traffic,
 };
 use timely_coded::obs::trace::DEFAULT_RING_CAP;
 use timely_coded::obs::write_chrome_trace;
@@ -49,7 +53,7 @@ use timely_coded::scheduler::lea::Lea;
 use timely_coded::scheduler::static_strategy::StaticStrategy;
 use timely_coded::scheduler::success::LoadParams;
 use timely_coded::sim::scenarios::fig3_scenarios;
-use timely_coded::traffic::RoutingPolicy;
+use timely_coded::traffic::{RoutingPolicy, SlackPolicy};
 use timely_coded::util::bench_check;
 use timely_coded::util::cli::Args;
 
@@ -287,11 +291,54 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 println!("wrote {path}");
             }
         }
+        "stream" => {
+            let mut spec = StreamGridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
+                args.u64("seed", 2024)?,
+            )?;
+            // Axis overrides; validated below so `--round-counts 0` or an
+            // empty slack list fails loudly instead of panicking mid-grid.
+            if let Some(items) = args.csv("round-counts")? {
+                spec.rounds = items
+                    .iter()
+                    .map(|s| {
+                        s.parse::<usize>()
+                            .map_err(|_| format!("--round-counts: expected integers, got '{s}'"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            if let Some(items) = args.csv("slack")? {
+                spec.slack = items
+                    .iter()
+                    .map(|s| SlackPolicy::parse(s))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            spec.validate()?;
+            let threads = threads_arg(args)?;
+            let cells = spec.cells().len();
+            let t0 = std::time::Instant::now();
+            let rows = stream::run_grid(&spec, threads);
+            stream::print(&rows);
+            let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "\n{cells} cells x {} jobs on {threads} threads: {events} events in {secs:.2}s \
+                 ({:.0} events/s)",
+                spec.jobs,
+                events as f64 / secs.max(1e-9)
+            );
+            if let Some(path) = args.get("dump") {
+                let j = stream::to_json(&spec, &rows);
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
         "bench-check" => {
             let baseline_dir = args.get_or("baseline", "ci/bench-baselines");
             let fresh_dir = args.get_or("fresh", ".");
             let tolerance = args.f64("tolerance", 4.0)?;
-            let names_raw = args.get_or("names", "coding,traffic,churn,hetero,shard");
+            let names_raw = args.get_or("names", "coding,traffic,churn,hetero,shard,stream");
             let names: Vec<&str> = names_raw.split(',').filter(|s| !s.is_empty()).collect();
             let checks = bench_check::check_dirs(baseline_dir, fresh_dir, &names, tolerance)?;
             bench_check::print_report(&checks);
@@ -419,6 +466,15 @@ SUBCOMMANDS
                 --deadline D, --cache off|exact|quantized, --dump
                 shard.json; same seed => byte-identical; C=1 round-robin ==
                 unsharded `lea traffic` engine byte-for-byte)
+  stream       streaming-rounds grid: each participant's load split into
+               coded sub-batches over the traffic engine — rounds x
+               slack-policy (release|squeeze) x load x deadline cells, with
+               early-resolve rate, slack releases, and squeezed chunks per
+               cell
+               (--grid small|wide [12|48 cells], --threads T, --jobs N,
+                --seed S, --round-counts 1,2,4, --slack release,squeeze,
+                --dump stream.json; same seed => byte-identical; rounds=1 ==
+                atomic `lea traffic` engine byte-for-byte)
   bench-check  compare fresh BENCH_*.json smoke artifacts against the
                committed baselines in ci/bench-baselines — the CI
                bench-regression gate (--baseline DIR, --fresh DIR,

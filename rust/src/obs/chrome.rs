@@ -58,6 +58,7 @@ fn tracks(records: &[TraceRecord]) -> BTreeSet<(usize, usize)> {
     for r in records {
         let tid = match *r {
             TraceRecord::WorkerSpan { worker, .. }
+            | TraceRecord::RoundSpan { worker, .. }
             | TraceRecord::WorkerLeave { worker, .. }
             | TraceRecord::WorkerJoin { worker, .. } => worker + 1,
             _ => JOB_TID,
@@ -247,6 +248,37 @@ fn emit(r: &TraceRecord, events: &mut Vec<(f64, Json)>) {
                 ],
             ),
         )),
+        TraceRecord::RoundSpan {
+            start,
+            end,
+            shard,
+            worker,
+            gen,
+            job,
+            part,
+            load,
+        } => events.push((
+            start,
+            event(
+                "X",
+                &format!("job {job} r{part}"),
+                shard,
+                worker + 1,
+                start * US_PER_SEC,
+                vec![
+                    ("dur", Json::num((end - start).max(0.0) * US_PER_SEC)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("job", Json::num(job as f64)),
+                            ("gen", Json::num(gen as f64)),
+                            ("part", Json::num(part as f64)),
+                            ("load", Json::num(load as f64)),
+                        ]),
+                    ),
+                ],
+            ),
+        )),
         TraceRecord::WorkerLeave {
             t,
             shard,
@@ -359,6 +391,16 @@ mod tests {
                 load: 4,
                 completed: true,
             },
+            TraceRecord::RoundSpan {
+                start: 0.1,
+                end: 0.4,
+                shard: 0,
+                worker: 3,
+                gen: 0,
+                job: 1,
+                part: 0,
+                load: 2,
+            },
             TraceRecord::WorkerLeave {
                 t: 0.4,
                 shard: 0,
@@ -420,6 +462,16 @@ mod tests {
         let dur = x.get("dur").unwrap().as_f64().unwrap();
         assert!((dur - 0.6 * US_PER_SEC).abs() < 1e-6);
         assert_eq!(x.get("tid").unwrap().as_usize(), Some(4));
+        // Round spans render as complete events on the worker's track,
+        // named after the job and participant index.
+        let r = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("job 1 r0"))
+            .expect("no round span");
+        assert_eq!(r.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(r.get("tid").unwrap().as_usize(), Some(4));
+        let rdur = r.get("dur").unwrap().as_f64().unwrap();
+        assert!((rdur - 0.3 * US_PER_SEC).abs() < 1e-6);
     }
 
     #[test]

@@ -69,6 +69,26 @@ pub enum TraceRecord {
         /// Whether the full load completes inside the window.
         completed: bool,
     },
+    /// One streamed coded sub-batch landing at the master
+    /// (`JobClass::rounds > 1` only; atomic services emit no round spans).
+    ///
+    /// Emitted when the round's results arrive: `end` is the arrival
+    /// instant, `start` is back-computed from the participant's rate, so
+    /// consecutive rounds of one participant tile its
+    /// [`WorkerSpan`](TraceRecord::WorkerSpan).
+    RoundSpan {
+        start: f64,
+        end: f64,
+        shard: usize,
+        worker: usize,
+        /// The worker slot's lifecycle generation at dispatch.
+        gen: u64,
+        job: u64,
+        /// Participant index within the job's service.
+        part: usize,
+        /// Chunks this round delivered.
+        load: usize,
+    },
     /// A served job's round was evaluated.
     JobResolve {
         t: f64,
@@ -124,7 +144,7 @@ impl TraceRecord {
             | TraceRecord::WorkerLeave { t, .. }
             | TraceRecord::WorkerJoin { t, .. }
             | TraceRecord::Counter { t, .. } => t,
-            TraceRecord::WorkerSpan { start, .. } => start,
+            TraceRecord::WorkerSpan { start, .. } | TraceRecord::RoundSpan { start, .. } => start,
         }
     }
 
@@ -138,7 +158,8 @@ impl TraceRecord {
             | TraceRecord::WorkerLeave { shard, .. }
             | TraceRecord::WorkerJoin { shard, .. }
             | TraceRecord::Counter { shard, .. }
-            | TraceRecord::WorkerSpan { shard, .. } => shard,
+            | TraceRecord::WorkerSpan { shard, .. }
+            | TraceRecord::RoundSpan { shard, .. } => shard,
         }
     }
 
@@ -194,6 +215,26 @@ impl TraceRecord {
                 ("job", Json::num(job as f64)),
                 ("load", Json::num(load as f64)),
                 ("completed", Json::Bool(completed)),
+            ]),
+            TraceRecord::RoundSpan {
+                start,
+                end,
+                shard,
+                worker,
+                gen,
+                job,
+                part,
+                load,
+            } => Json::obj(vec![
+                ("kind", Json::str("round_span")),
+                ("start", Json::num(start)),
+                ("end", Json::num(end)),
+                ("shard", Json::num(shard as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("gen", Json::num(gen as f64)),
+                ("job", Json::num(job as f64)),
+                ("part", Json::num(part as f64)),
+                ("load", Json::num(load as f64)),
             ]),
             TraceRecord::JobResolve {
                 t,
@@ -462,6 +503,23 @@ mod tests {
         assert_eq!(span.time(), 1.0);
         assert_eq!(span.shard(), 2);
         assert_eq!(span.to_json().get("kind").unwrap().as_str(), Some("worker_span"));
+        // Round spans stamp their start and tag the participant index.
+        let round = TraceRecord::RoundSpan {
+            start: 1.5,
+            end: 1.75,
+            shard: 1,
+            worker: 4,
+            gen: 3,
+            job: 9,
+            part: 2,
+            load: 3,
+        };
+        assert_eq!(round.time(), 1.5);
+        assert_eq!(round.shard(), 1);
+        let j = round.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("round_span"));
+        assert_eq!(j.get("part").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("load").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

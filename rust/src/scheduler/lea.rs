@@ -152,6 +152,14 @@ impl Strategy for Lea {
         // `tick_unobserved` calls, so the prediction has already decayed
         // toward the estimated stationary distribution.
     }
+
+    fn on_slack(&mut self, worker: usize, slack: f64) -> bool {
+        // Within a service window the worker's speed is fixed by its
+        // dispatch-time state, and the engine only offers squeezes that fit
+        // the remaining window — so accept any genuine offer. Reject only
+        // degenerate ones: a slot LEA does not track, or zero slack.
+        worker < self.estimators.len() && slack > 0.0
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +248,15 @@ mod tests {
         assert!(carry.p_good_estimates()[3] > 0.9);
         // Out-of-range ids are ignored, not a panic.
         reset.on_worker_join(999);
+    }
+
+    #[test]
+    fn slack_offers_are_accepted_for_tracked_slots_only() {
+        let mut lea = Lea::new(fig3_params());
+        assert!(lea.on_slack(0, 0.25));
+        assert!(lea.on_slack(14, 1e-6));
+        assert!(!lea.on_slack(15, 0.25)); // untracked slot
+        assert!(!lea.on_slack(3, 0.0)); // no slack to reuse
     }
 
     #[test]

@@ -60,6 +60,18 @@ pub trait Strategy: Send {
     /// one — see `scheduler::lea::RejoinPolicy` for LEA's two answers.
     /// Default: no-op.
     fn on_worker_join(&mut self, _worker: usize) {}
+
+    /// Streaming engine only (`JobClass::rounds > 1`, slack policy
+    /// `squeeze`): worker `worker` finished every round of its assignment
+    /// with `slack` seconds of window left. Return `true` to let the engine
+    /// speculatively squeeze one extra coded round onto it (re-executing
+    /// the laggiest participant's undelivered work from this worker's own
+    /// stored chunks), `false` to veto — the engine then releases the
+    /// worker to the queue instead (work-conserving fallback). Default:
+    /// accept — a worker that produced slack just demonstrated it is fast.
+    fn on_slack(&mut self, _worker: usize, _slack: f64) -> bool {
+        true
+    }
 }
 
 /// Convenience: full observability (the paper's setting).

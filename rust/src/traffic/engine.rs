@@ -70,7 +70,7 @@ use std::collections::BTreeMap;
 
 use super::admission::{dispatch_verdict, AdmissionQueue, DispatchVerdict, Policy};
 use super::event::{EventKind, EventQueue};
-use super::job::{Job, JobClass, JobFate, Service};
+use super::job::{Job, JobClass, JobFate, Service, StreamState};
 use super::metrics::TrafficMetrics;
 use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::scheme::CodingScheme;
@@ -114,6 +114,45 @@ pub enum RejoinSpeeds {
     Sample(Vec<Speeds>),
 }
 
+/// What a streaming participant does when it finishes every round of its
+/// assignment with window slack left (`JobClass::rounds > 1` only — atomic
+/// services release at their finish time as always, so this policy is
+/// unobservable on rounds=1 runs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlackPolicy {
+    /// Work-conserving (the default): release the worker immediately so it
+    /// can serve the next queued job.
+    Release,
+    /// Slack squeeze: consult [`Strategy::on_slack`] and, if accepted,
+    /// speculatively squeeze one extra coded round onto the worker —
+    /// re-executing the laggiest participant's undelivered chunks from this
+    /// worker's OWN stored codewords (strided placement keeps them distinct,
+    /// so every delivered chunk still counts toward K*). Falls back to
+    /// releasing when the squeeze is vetoed or nothing useful fits.
+    Squeeze,
+}
+
+impl SlackPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlackPolicy::Release => "release",
+            SlackPolicy::Squeeze => "squeeze",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SlackPolicy, String> {
+        match s {
+            "release" => Ok(SlackPolicy::Release),
+            "squeeze" => Ok(SlackPolicy::Squeeze),
+            other => Err(format!("unknown slack policy '{other}' (release | squeeze)")),
+        }
+    }
+
+    pub fn all() -> [SlackPolicy; 2] {
+        [SlackPolicy::Release, SlackPolicy::Squeeze]
+    }
+}
+
 /// Configuration of one traffic run.
 #[derive(Clone, Debug)]
 pub struct TrafficConfig {
@@ -146,6 +185,10 @@ pub struct TrafficConfig {
     /// never perturbs the run). 1 (the default) probes every dispatch;
     /// must be ≥ 1.
     pub probe_every: usize,
+    /// What streaming participants do with leftover window slack
+    /// ([`SlackPolicy::Release`] by default; only consulted for classes
+    /// with `rounds > 1`).
+    pub slack: SlackPolicy,
 }
 
 impl TrafficConfig {
@@ -168,6 +211,7 @@ impl TrafficConfig {
             rejoin_speeds: RejoinSpeeds::Keep,
             alloc_cache: AllocCachePolicy::default_exact(),
             probe_every: 1,
+            slack: SlackPolicy::Release,
         }
     }
 
@@ -192,6 +236,21 @@ impl TrafficConfig {
     /// Builder: replace the calibration-probe cadence (must be ≥ 1).
     pub fn with_probe_every(mut self, probe_every: usize) -> Self {
         self.probe_every = probe_every;
+        self
+    }
+
+    /// Builder: replace the streaming slack policy.
+    pub fn with_slack_policy(mut self, slack: SlackPolicy) -> Self {
+        self.slack = slack;
+        self
+    }
+
+    /// Builder: stream every class's load through `rounds` coded
+    /// sub-batches ([`JobClass::with_rounds`] per class; 1 = atomic).
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        for c in &mut self.classes {
+            c.rounds = rounds;
+        }
         self
     }
 }
@@ -246,13 +305,35 @@ pub(crate) fn validate_config(cfg: &TrafficConfig, cluster: &SimCluster) {
     assert!(!cfg.classes.is_empty(), "at least one job class required");
     assert!(cfg.probe_every >= 1, "probe_every must be ≥ 1");
     cfg.churn.validate();
+    let mut weight_sum = 0.0;
     for c in &cfg.classes {
         assert_eq!(
             c.scheme.geometry.n,
             cluster.n(),
             "class geometry n must match the cluster"
         );
+        // A non-finite weight would poison `pick_class`: with a NaN total
+        // every `u <= 0.0` comparison is false and ALL arrivals silently
+        // route to the last class. Reject it here, where struct-literal
+        // configs (which bypass `JobClass::new`) also pass through.
+        assert!(
+            c.weight.is_finite() && c.weight > 0.0,
+            "class weight must be finite and positive: {}",
+            c.weight
+        );
+        weight_sum += c.weight;
+        assert!(c.rounds >= 1, "class rounds must be ≥ 1");
+        assert!(
+            c.rounds == 1 || c.scheme.is_counting(),
+            "streaming rounds require a counting scheme (Lagrange or an \
+             explicit counting threshold): repetition chunks are not pairwise \
+             distinct, so partial rounds cannot be credited toward K*"
+        );
     }
+    assert!(
+        weight_sum.is_finite() && weight_sum > 0.0,
+        "class weights must have a finite positive sum: {weight_sum}"
+    );
 }
 
 /// Run one traffic simulation to completion and return its metrics.
@@ -406,6 +487,9 @@ impl<'a> Engine<'a> {
                 EventKind::Resolve { job } => {
                     self.core.handle_resolve(job, ev.time, &mut self.events)
                 }
+                EventKind::RoundComplete { job, part } => {
+                    self.core.handle_round(job, part, ev.time, &mut self.events)
+                }
                 EventKind::WorkerLeave { worker } => {
                     self.core.handle_leave(worker, ev.time, &mut self.events)
                 }
@@ -535,6 +619,17 @@ impl<'a> ClusterCore<'a> {
         let d = class.deadline;
         let r = class.scheme.geometry.r;
         let has = self.strategy.p_good_profile_into(&mut self.profile_buf);
+        // Same p̂ handling as the dispatch path: a full-length profile when
+        // the strategy has one (asserted — a short profile would silently
+        // score a worker with a neighbour's belief), the uninformative 0.5
+        // otherwise, and NaN entries demoted to 0.0 rather than propagated.
+        if has {
+            debug_assert_eq!(
+                self.profile_buf.len(),
+                self.workers.len(),
+                "p̂ profile length must match the fleet"
+            );
+        }
         let mut score = 0.0;
         for (w, slot) in self.workers.iter().enumerate() {
             if slot.live && slot.job.is_none() {
@@ -569,6 +664,15 @@ impl<'a> ClusterCore<'a> {
             sink.push(job.absolute_deadline, EventKind::QueueExpiry { job: id });
         }
         self.jobs.insert(id, job);
+        // Snapshot the capacity predicate BEFORE dispatching: try_dispatch
+        // mutates the very state the classification reads (serving a job
+        // fills worker slots and bumps in_flight), so reading it afterwards
+        // could blame "capacity" for a bounce into a fleet the dispatch call
+        // itself just filled. Only computed for the loss system — the O(n)
+        // scan stays off the other policies' hot path.
+        let capacity_blocked = self.cfg.policy == Policy::DropInfeasible
+            && ((self.cfg.max_in_flight > 0 && self.in_flight >= self.cfg.max_in_flight)
+                || self.workers.iter().all(|w| !w.live || w.job.is_some()));
         self.try_dispatch(now, sink);
 
         // The loss system bounces anything that could not start immediately:
@@ -576,9 +680,6 @@ impl<'a> ClusterCore<'a> {
         // dropped-at-arrival, feasibility rejections as dropped-infeasible.
         if self.cfg.policy == Policy::DropInfeasible && self.queue.remove(id) {
             self.jobs.remove(&id);
-            let capacity_blocked = (self.cfg.max_in_flight > 0
-                && self.in_flight >= self.cfg.max_in_flight)
-                || self.workers.iter().all(|w| !w.live || w.job.is_some());
             let fate = if capacity_blocked {
                 JobFate::DroppedAtArrival
             } else {
@@ -655,9 +756,15 @@ impl<'a> ClusterCore<'a> {
             debug_assert!(!svc.lost[i], "double preemption of one assignment");
             svc.lost[i] = true;
             // Its results never arrive; success is re-evaluated against K*
-            // over the survivors at the window's end.
+            // over the survivors at the window's end. A streamed participant
+            // already banked its delivered rounds — only the undelivered
+            // remainder is lost with the instance.
             svc.completed[i] = false;
-            self.metrics.on_preemption(svc.loads[i]);
+            let lost_work = match svc.stream.as_deref() {
+                Some(st) => svc.loads[i] - st.done[i],
+                None => svc.loads[i],
+            };
+            self.metrics.on_preemption(lost_work);
         }
         self.strategy.on_worker_leave(worker);
         if self.trace.is_on() {
@@ -710,10 +817,61 @@ impl<'a> ClusterCore<'a> {
     }
 
     pub(crate) fn handle_resolve<S: EventSink>(&mut self, id: u64, now: f64, sink: &mut S) {
-        let svc = self.services.remove(&id).expect("resolve without service");
+        // A streaming job may have resolved early — K* chunks in hand before
+        // the window closed — leaving this window-end Resolve stale.
+        let Some(svc) = self.services.remove(&id) else {
+            debug_assert!(
+                !self.jobs.contains_key(&id),
+                "service gone but job {id} still alive"
+            );
+            return;
+        };
         let job = self.jobs.remove(&id).expect("resolve without job");
         let class = &self.cfg.classes[job.class];
         let n = self.workers.len();
+
+        if let Some(st) = svc.stream.as_deref() {
+            // Streaming evaluation: counting semantics over everything that
+            // arrived. Rounds are only scheduled when they fit the window,
+            // so an in-flight round's results are in by now — but a round
+            // landing exactly AT the window's end fires after this Resolve
+            // (same instant, later seq), so credit it from `pending` here.
+            // A preempted participant's in-flight round died with its
+            // instance and is excluded.
+            let delivered: usize = st.delivered
+                + (0..svc.workers.len())
+                    .filter(|&i| !svc.lost[i])
+                    .map(|i| st.pending[i])
+                    .sum::<usize>();
+            let success = delivered >= st.kstar;
+            // Had K* arrived strictly inside the window the job would have
+            // resolved early; reaching this handler means the decode completes
+            // at the window's end (or not at all).
+            let latency = svc.window_end - job.arrival;
+            self.observed_buf.clear();
+            self.observed_buf.resize(n, None);
+            for i in 0..svc.workers.len() {
+                let w = svc.workers[i];
+                if self.workers[w].gen == svc.gens[i] || st.revealed[i] {
+                    self.observed_buf[w] = Some(svc.states[i]);
+                }
+            }
+            self.strategy.observe(&self.observed_buf);
+            self.metrics.on_resolve(success, latency);
+            if self.trace.is_on() {
+                self.trace.push(TraceRecord::JobResolve {
+                    t: now,
+                    shard: self.shard,
+                    job: id,
+                    success,
+                    latency,
+                    slack: job.absolute_deadline - (job.arrival + latency),
+                });
+            }
+            self.in_flight -= 1;
+            self.try_dispatch(now, sink);
+            return;
+        }
 
         // Reassemble full-length vectors for the exact round-simulator
         // decodability rule (zero-load workers trivially "complete";
@@ -761,6 +919,246 @@ impl<'a> ClusterCore<'a> {
                 shard: self.shard,
                 job: id,
                 success,
+                latency,
+                slack: job.absolute_deadline - (job.arrival + latency),
+            });
+        }
+        self.in_flight -= 1;
+        self.try_dispatch(now, sink);
+    }
+
+    /// Schedule participant `part`'s next coded sub-batch, or determine that
+    /// it has none left (returns whether a round was scheduled). Round sizes
+    /// split the remaining load as evenly as the remaining round budget
+    /// allows (⌈·/·⌉: a 10-chunk assignment over 4 rounds streams as
+    /// 3+3+2+2), and finish times are cumulative from the dispatch instant —
+    /// splitting never changes WHEN chunks are done, only when the master
+    /// finds out, so the last round's finish equals the atomic `t_fin`
+    /// bit-for-bit. A round that cannot finish inside the window (the round
+    /// simulator's epsilon rule) is not scheduled: the participant stalls,
+    /// its delivered prefix stands, and its slot waits for the window-end
+    /// Release exactly like an atomic incomplete worker.
+    fn schedule_next_round<S: EventSink>(
+        st: &mut StreamState,
+        part: usize,
+        job: u64,
+        rate: f64,
+        window_end: f64,
+        sink: &mut S,
+    ) -> bool {
+        if st.rounds_left[part] == 0 || st.sched_left[part] == 0 {
+            return false;
+        }
+        if rate <= 0.0 {
+            st.rounds_left[part] = 0;
+            return false;
+        }
+        debug_assert_eq!(st.pending[part], 0, "round already in flight");
+        let size = st.sched_left[part].div_ceil(st.rounds_left[part]);
+        let cum = st.done[part] + size;
+        let d_eff = window_end - st.start;
+        // Same epsilon convention as `SimCluster` completion checks.
+        if cum as f64 > rate * d_eff * (1.0 + 1e-9) {
+            st.rounds_left[part] = 0;
+            return false;
+        }
+        st.pending[part] = size;
+        st.sched_left[part] -= size;
+        st.rounds_left[part] -= 1;
+        let finish = st.start + cum as f64 / rate;
+        sink.push(finish.min(window_end), EventKind::RoundComplete { job, part });
+        true
+    }
+
+    /// A streaming participant's in-flight round lands at the master: credit
+    /// its chunks, resolve the job early if they reach K*, otherwise keep
+    /// the participant streaming — or, when it just delivered its last
+    /// round, hand its remaining window slack to the configured
+    /// [`SlackPolicy`].
+    pub(crate) fn handle_round<S: EventSink>(
+        &mut self,
+        id: u64,
+        part: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        /// What to do once the service borrow is released.
+        enum After {
+            Nothing,
+            EarlyResolve,
+            Redispatch,
+        }
+        let after = {
+            let Some(svc) = self.services.get_mut(&id) else {
+                // The job resolved early while this round was in flight.
+                return;
+            };
+            let Some(st) = svc.stream.as_deref_mut() else {
+                debug_assert!(false, "round event for an atomic service");
+                return;
+            };
+            // A preempted participant's results never arrive.
+            if svc.lost[part] || st.pending[part] == 0 {
+                return;
+            }
+            let w = svc.workers[part];
+            let load = st.pending[part];
+            st.pending[part] = 0;
+            st.done[part] += load;
+            st.delivered += load;
+            st.revealed[part] = true;
+            self.metrics.on_round(load);
+            let rate = self.cluster.rate(w, svc.states[part]);
+            if self.trace.is_on() {
+                let span_start = if rate > 0.0 {
+                    (now - load as f64 / rate).max(st.start)
+                } else {
+                    st.start
+                };
+                self.trace.push(TraceRecord::RoundSpan {
+                    start: span_start,
+                    end: now,
+                    shard: self.shard,
+                    worker: w,
+                    gen: svc.gens[part],
+                    job: id,
+                    part,
+                    load,
+                });
+            }
+            if st.delivered >= st.kstar {
+                After::EarlyResolve
+            } else if Self::schedule_next_round(st, part, id, rate, svc.window_end, sink) {
+                After::Nothing
+            } else if st.sched_left[part] > 0 {
+                // Stalled: the next round cannot fit the window. The slot
+                // stays held until the window-end Release, matching the
+                // atomic engine's treatment of an incomplete worker.
+                After::Nothing
+            } else {
+                // The participant delivered its whole assignment with window
+                // slack left — the slack policy decides what the slot does.
+                debug_assert!(!st.released[part], "slack offered twice");
+                let slack = svc.window_end - now;
+                let mut squeezed = false;
+                if self.cfg.slack == SlackPolicy::Squeeze {
+                    // The laggiest other participant's at-risk chunks: still
+                    // unscheduled, plus any in-flight round that died with a
+                    // preempted instance.
+                    let lag = (0..svc.workers.len())
+                        .filter(|&j| j != part)
+                        .map(|j| st.sched_left[j] + if svc.lost[j] { st.pending[j] } else { 0 })
+                        .max()
+                        .unwrap_or(0);
+                    // The squeeze re-executes rows from this worker's OWN
+                    // stored codeword (strided placement holds r rows), so it
+                    // is capped by the rows not already in its assignment,
+                    // by what the job still needs, and by what fits the
+                    // remaining window from a cumulative start.
+                    let r = self.cfg.classes[self.jobs[&id].class].scheme.geometry.r;
+                    let d_eff = svc.window_end - st.start;
+                    let cap_fit = ((rate * d_eff * (1.0 + 1e-9)).floor() as usize)
+                        .saturating_sub(st.done[part]);
+                    let extra = lag
+                        .min(r.saturating_sub(svc.loads[part]))
+                        .min(st.kstar - st.delivered)
+                        .min(cap_fit);
+                    if extra > 0 && self.strategy.on_slack(w, slack) {
+                        svc.loads[part] += extra;
+                        st.pending[part] = extra;
+                        let finish = st.start + (st.done[part] + extra) as f64 / rate;
+                        sink.push(
+                            finish.min(svc.window_end),
+                            EventKind::RoundComplete { job: id, part },
+                        );
+                        self.metrics.on_squeeze(extra);
+                        squeezed = true;
+                    }
+                }
+                if squeezed {
+                    After::Nothing
+                } else {
+                    // Work-conserving fallback: free the slot now instead of
+                    // at the window's end. Bumping the gen turns the
+                    // outstanding window-end Release stale
+                    // (`handle_release` ignores it); `revealed` keeps the
+                    // participant observable at resolve regardless.
+                    st.released[part] = true;
+                    let slot = &mut self.workers[w];
+                    slot.job = None;
+                    slot.gen += 1;
+                    slot.last_release = now;
+                    self.metrics.on_slack_release();
+                    After::Redispatch
+                }
+            }
+        };
+        match after {
+            After::Nothing => {}
+            After::EarlyResolve => self.resolve_early(id, now, sink),
+            After::Redispatch => self.try_dispatch(now, sink),
+        }
+    }
+
+    /// The streamed results reached K* mid-window: settle the job NOW
+    /// instead of at the window-end Resolve (which will find no service and
+    /// return). Everything the window-end path does happens here —
+    /// observation, metrics, trace, freeing slots, re-dispatch — just
+    /// earlier, with success known by construction.
+    fn resolve_early<S: EventSink>(&mut self, id: u64, now: f64, sink: &mut S) {
+        // The caller (handle_round) just verified service, job and stream
+        // all exist; a miss here is a logic bug, not a runtime condition.
+        let Some(svc) = self.services.remove(&id) else {
+            debug_assert!(false, "early resolve without service");
+            return;
+        };
+        let Some(job) = self.jobs.remove(&id) else {
+            debug_assert!(false, "early resolve without job");
+            return;
+        };
+        let Some(st) = svc.stream.as_deref() else {
+            debug_assert!(false, "early resolve without stream");
+            return;
+        };
+        debug_assert!(st.delivered >= st.kstar);
+        debug_assert!(
+            now <= svc.window_end * (1.0 + 1e-9) + 1e-12,
+            "early resolve after the window: {now} > {}",
+            svc.window_end
+        );
+        let n = self.workers.len();
+        // Observation phase, BEFORE the slots are freed below: every
+        // participant that delivered a round revealed its dispatch-time
+        // state through the round's timing (`revealed` covers slots whose
+        // gen an early slack release has already moved).
+        self.observed_buf.clear();
+        self.observed_buf.resize(n, None);
+        for i in 0..svc.workers.len() {
+            let w = svc.workers[i];
+            if self.workers[w].gen == svc.gens[i] || st.revealed[i] {
+                self.observed_buf[w] = Some(svc.states[i]);
+            }
+        }
+        self.strategy.observe(&self.observed_buf);
+        // Free every slot still held by this job; the gen bump turns the
+        // outstanding window-end Releases (and any still-in-flight round's
+        // staleness, via the service lookup) inert.
+        for &w in &svc.workers {
+            if self.workers[w].job == Some(id) {
+                self.workers[w].job = None;
+                self.workers[w].gen += 1;
+                self.workers[w].last_release = now;
+            }
+        }
+        let latency = now - job.arrival;
+        self.metrics.on_resolve(true, latency);
+        self.metrics.on_early_resolve();
+        if self.trace.is_on() {
+            self.trace.push(TraceRecord::JobResolve {
+                t: now,
+                shard: self.shard,
+                job: id,
+                success: true,
                 latency,
                 slack: job.absolute_deadline - (job.arrival + latency),
             });
@@ -866,6 +1264,9 @@ impl<'a> ClusterCore<'a> {
         sink: &mut S,
     ) {
         let n = self.workers.len();
+        let rounds = self.cfg.classes[job.class].rounds;
+        let kstar = self.cfg.classes[job.class].scheme.kstar();
+        let streaming = rounds > 1;
         let has_profile = self.strategy.p_good_profile_into(&mut self.profile_buf);
         if has_profile {
             debug_assert_eq!(self.profile_buf.len(), n);
@@ -969,9 +1370,18 @@ impl<'a> ClusterCore<'a> {
             finish.push(t_fin);
             gens.push(self.workers[w].gen);
             self.workers[w].job = Some(job.id);
-            // Abandon unfinished work when the window closes.
+            // Abandon unfinished work when the window closes. A streaming
+            // participant holds its slot for the whole window by default:
+            // the slack policy frees (or squeezes) it the moment its LAST
+            // round lands — an early release bumps the slot gen, turning
+            // this window-end Release into the stale fallback.
+            let release_at = if streaming {
+                window_end
+            } else {
+                t_fin.min(window_end)
+            };
             sink.push(
-                t_fin.min(window_end),
+                release_at,
                 EventKind::Release {
                     worker: w,
                     gen: self.workers[w].gen,
@@ -979,6 +1389,30 @@ impl<'a> ClusterCore<'a> {
             );
         }
         sink.push(window_end, EventKind::Resolve { job: job.id });
+        // Streaming: split each participant's load into coded sub-batches
+        // and schedule the first. Pushed AFTER the window-end Resolve so a
+        // round landing exactly at the window's end fires after it (same
+        // instant, later seq) and is credited through `pending` at resolve.
+        let stream = if streaming {
+            let mut st = StreamState {
+                start: now,
+                kstar,
+                delivered: 0,
+                done: vec![0; workers_v.len()],
+                pending: vec![0; workers_v.len()],
+                sched_left: loads_v.clone(),
+                rounds_left: vec![rounds; workers_v.len()],
+                revealed: vec![false; workers_v.len()],
+                released: vec![false; workers_v.len()],
+            };
+            for (i, &w) in workers_v.iter().enumerate() {
+                let rate = self.cluster.rate(w, states[i]);
+                Self::schedule_next_round(&mut st, i, job.id, rate, window_end, sink);
+            }
+            Some(Box::new(st))
+        } else {
+            None
+        };
 
         if self.trace.is_on() {
             self.trace.push(TraceRecord::JobDispatch {
@@ -1020,6 +1454,7 @@ impl<'a> ClusterCore<'a> {
                 lost,
                 gens,
                 window_end,
+                stream,
             },
         );
     }
@@ -1349,6 +1784,7 @@ mod tests {
             rejoin_speeds: RejoinSpeeds::Keep,
             alloc_cache: AllocCachePolicy::default_exact(),
             probe_every: 1,
+            slack: SlackPolicy::Release,
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);
@@ -1535,6 +1971,7 @@ mod tests {
                 lost: vec![false],
                 gens: vec![0],
                 window_end: 1.0,
+                stream: None,
             },
         );
         // Preemption at t = 0.5: the assignment is lost with the instance.
@@ -1668,5 +2105,278 @@ mod tests {
             m.dropped_infeasible > 0,
             "live-N feasibility must shed jobs"
         );
+    }
+
+    fn stream_cfg(rounds: usize, slack: SlackPolicy, rate: f64, jobs: u64) -> TrafficConfig {
+        TrafficConfig::single_class(
+            jobs,
+            Arrivals::poisson(rate),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        )
+        .with_rounds(rounds)
+        .with_slack_policy(slack)
+    }
+
+    fn run_stream(cfg: &TrafficConfig, seed: u64) -> TrafficMetrics {
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(seed);
+        run_traffic(&mut lea, &mut cl, cfg, seed ^ 0xA5)
+    }
+
+    #[test]
+    fn rounds_one_is_byte_identical_to_the_atomic_engine() {
+        // The tentpole's compatibility anchor: rounds = 1 (even with a
+        // non-default slack policy) must schedule no round events, consume
+        // no extra RNG, and reproduce the atomic engine byte for byte.
+        let atomic = run_stream(&overload_cfg(Policy::EdfFeasible, 400), 19);
+        let one = run_stream(
+            &overload_cfg(Policy::EdfFeasible, 400)
+                .with_rounds(1)
+                .with_slack_policy(SlackPolicy::Squeeze),
+            19,
+        );
+        assert_eq!(atomic.to_json().to_string(), one.to_json().to_string());
+        assert_eq!(one.rounds_completed, 0);
+        assert_eq!(one.early_resolves, 0);
+        assert_eq!(one.slack_releases + one.squeezes, 0);
+    }
+
+    #[test]
+    fn streaming_credits_rounds_and_resolves_early() {
+        let m = run_stream(&stream_cfg(4, SlackPolicy::Release, 2.0, 600), 33);
+        assert_eq!(m.arrivals, 600);
+        assert_eq!(
+            m.arrivals,
+            m.completed
+                + m.missed_service
+                + m.dropped_at_arrival
+                + m.dropped_infeasible
+                + m.expired_in_queue,
+            "conservation failed under streaming"
+        );
+        assert!(m.rounds_completed > 0, "no rounds landed");
+        assert!(m.round_chunks >= m.rounds_completed, "rounds carry ≥ 1 chunk");
+        assert!(m.early_resolves > 0, "overshooting allocations must resolve early");
+        assert!(m.early_resolves <= m.completed);
+        assert!((0.0..=1.0).contains(&m.early_resolve_rate()));
+        assert!(m.slack_releases > 0, "finished participants must be freed");
+        // Early resolution happens strictly inside the window, never past
+        // the deadline: every recorded latency stays ≤ d.
+        assert!(m.latency_p99() <= 1.0 + 1e-9, "p99 {}", m.latency_p99());
+    }
+
+    #[test]
+    fn slack_policies_diverge_and_squeeze_credits_extra_chunks() {
+        let rel = run_stream(&stream_cfg(4, SlackPolicy::Release, 2.0, 600), 47);
+        let sq = run_stream(&stream_cfg(4, SlackPolicy::Squeeze, 2.0, 600), 47);
+        assert!(rel.slack_releases > 0);
+        assert_eq!((rel.squeezes, rel.squeeze_chunks), (0, 0));
+        // Fig.-3 loads are a 10/3 mix, so expected-bad participants that
+        // come up GOOD finish their 3 rows early with 7 spare — squeezes
+        // must fire.
+        assert!(sq.squeezes > 0, "no squeeze ever accepted");
+        assert!(sq.squeeze_chunks >= sq.squeezes);
+        assert_ne!(
+            rel.to_json().to_string(),
+            sq.to_json().to_string(),
+            "the slack policy must be observable"
+        );
+    }
+
+    #[test]
+    fn streaming_under_churn_conserves_jobs() {
+        // Preemptions interleaved with round completions: lost in-flight
+        // rounds must be excluded, delivered prefixes must stay banked, and
+        // only the undelivered remainder counts as lost work.
+        for slack in SlackPolicy::all() {
+            let cfg = stream_cfg(4, slack, 0.6, 500).with_churn(ChurnModel::spot(0.4, 2.0));
+            let m = run_stream(&cfg, 77);
+            assert_eq!(m.arrivals, 500, "{}", slack.name());
+            assert_eq!(
+                m.arrivals,
+                m.completed
+                    + m.missed_service
+                    + m.dropped_at_arrival
+                    + m.dropped_infeasible
+                    + m.expired_in_queue,
+                "conservation failed for {}",
+                slack.name()
+            );
+            assert!(m.preemptions > 0, "{}", slack.name());
+            assert!(m.rounds_completed > 0, "{}", slack.name());
+        }
+    }
+
+    #[test]
+    fn round_schedule_splits_ceil_first_and_stalls_when_rounds_stop_fitting() {
+        // White-box: 10 chunks over 4 rounds at rate 4 from t = 2 stream as
+        // 3+3+2+2 with cumulative finishes 2.75/3.5/4.0/4.5 (exact binary).
+        let fresh = || StreamState {
+            start: 2.0,
+            kstar: 99,
+            delivered: 0,
+            done: vec![0],
+            pending: vec![0],
+            sched_left: vec![10],
+            rounds_left: vec![4],
+            revealed: vec![false],
+            released: vec![false],
+        };
+        let mut st = fresh();
+        let mut q = EventQueue::new();
+        let mut sizes = Vec::new();
+        let mut times = Vec::new();
+        while ClusterCore::schedule_next_round(&mut st, 0, 1, 4.0, 4.5, &mut q) {
+            sizes.push(st.pending[0]);
+            let ev = q.pop().unwrap();
+            assert_eq!(ev.kind, EventKind::RoundComplete { job: 1, part: 0 });
+            times.push(ev.time);
+            st.done[0] += st.pending[0];
+            st.pending[0] = 0;
+        }
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(times, vec![2.75, 3.5, 4.0, 4.5]);
+        assert_eq!((st.sched_left[0], st.rounds_left[0]), (0, 0));
+        // A shorter window (capacity 8 < 10) stalls after the third round:
+        // the delivered prefix stands, the remainder is never scheduled.
+        let mut st = fresh();
+        let mut delivered = 0;
+        while ClusterCore::schedule_next_round(&mut st, 0, 1, 4.0, 4.0, &mut q) {
+            delivered += st.pending[0];
+            q.pop().unwrap();
+            st.done[0] += st.pending[0];
+            st.pending[0] = 0;
+        }
+        assert_eq!(delivered, 8);
+        assert_eq!((st.sched_left[0], st.rounds_left[0]), (2, 0), "stall zeroes the budget");
+        // A dead worker schedules nothing.
+        let mut st = fresh();
+        assert!(!ClusterCore::schedule_next_round(&mut st, 0, 1, 0.0, 4.5, &mut q));
+        assert_eq!(st.rounds_left[0], 0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn loss_bounces_classify_from_pre_dispatch_state() {
+        // Regression for the bounce classifier reading worker/in-flight
+        // state AFTER try_dispatch mutated it: the capacity predicate is
+        // snapshotted at arrival. Both boundary fates, exercised white-box.
+        let cfg = TrafficConfig::single_class(
+            0,
+            Arrivals::Fixed(0.0),
+            1.0,
+            fig3_geometry(),
+            Policy::DropInfeasible,
+        );
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(2);
+        let mut sink = EventQueue::new();
+        let mut core = ClusterCore::new(&cfg, &mut lea, &mut cl, 2);
+        // Arrival into a fully busy fleet: a capacity bounce.
+        for w in 0..15 {
+            core.workers[w].job = Some(900);
+        }
+        core.admit(
+            Job {
+                id: 1,
+                class: 0,
+                arrival: 0.0,
+                absolute_deadline: 1.0,
+            },
+            0.0,
+            &mut sink,
+        );
+        assert_eq!(
+            (core.metrics.dropped_at_arrival, core.metrics.dropped_infeasible),
+            (1, 0),
+            "a full fleet is a capacity bounce"
+        );
+        for w in 0..15 {
+            core.workers[w].job = None;
+        }
+        // A window too short for any feasible allocation, into an idle
+        // fleet: a feasibility bounce (ℓ_g = ⌊10·0.05⌋ = 0 on every worker).
+        core.admit(
+            Job {
+                id: 2,
+                class: 0,
+                arrival: 0.0,
+                absolute_deadline: 0.05,
+            },
+            0.0,
+            &mut sink,
+        );
+        assert_eq!(
+            (core.metrics.dropped_at_arrival, core.metrics.dropped_infeasible),
+            (1, 1),
+            "an idle-but-infeasible fleet is a feasibility bounce"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn nan_class_weights_are_rejected() {
+        let mut cfg = overload_cfg(Policy::AdmitAll, 10);
+        cfg.classes[0].weight = f64::NAN;
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(3);
+        run_traffic(&mut lea, &mut cl, &cfg, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite positive sum")]
+    fn overflowing_weight_sums_are_rejected() {
+        let mut cfg = overload_cfg(Policy::AdmitAll, 10);
+        cfg.classes = vec![
+            JobClass::new(f64::MAX, 1.0, fig3_geometry()),
+            JobClass::new(f64::MAX, 1.5, fig3_geometry()),
+        ];
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(3);
+        run_traffic(&mut lea, &mut cl, &cfg, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "rounds must be ≥ 1")]
+    fn zero_rounds_is_rejected() {
+        let mut cfg = overload_cfg(Policy::AdmitAll, 10);
+        cfg.classes[0].rounds = 0;
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(3);
+        run_traffic(&mut lea, &mut cl, &cfg, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "counting scheme")]
+    fn streaming_on_a_repetition_scheme_is_rejected() {
+        // nr = 15 < k·deg f − 1 = 19 ⇒ eq. (9) prescribes repetition, whose
+        // replicated chunks cannot be credited round by round.
+        let geo = crate::coding::threshold::Geometry {
+            n: 15,
+            r: 1,
+            k: 4,
+            deg_f: 5,
+        };
+        let cfg = TrafficConfig::single_class(
+            10,
+            Arrivals::poisson(1.0),
+            1.0,
+            geo,
+            Policy::AdmitAll,
+        )
+        .with_rounds(2);
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(3);
+        run_traffic(&mut lea, &mut cl, &cfg, 3);
+    }
+
+    #[test]
+    fn slack_policy_parse_roundtrip() {
+        for p in SlackPolicy::all() {
+            assert_eq!(SlackPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SlackPolicy::parse("bogus").is_err());
     }
 }

@@ -31,6 +31,12 @@ pub enum EventKind {
     QueueExpiry { job: u64 },
     /// A served job's deadline window closes: evaluate success, free state.
     Resolve { job: u64 },
+    /// A streaming participant's in-flight coded round finishes and its
+    /// chunks arrive at the master (`JobClass::rounds > 1` only). `part`
+    /// indexes into the service's participant vectors. Stale once the job
+    /// resolved (early or at the window's end) or the participant was
+    /// preempted — the handler validates against the live service table.
+    RoundComplete { job: u64, part: usize },
     /// The worker is preempted: it leaves the fleet, abandoning any
     /// in-flight assignment (the job continues on the survivors).
     WorkerLeave { worker: usize },

@@ -14,6 +14,15 @@ pub struct JobClass {
     pub deadline: f64,
     /// Coding scheme (placement + decodability + K*).
     pub scheme: CodingScheme,
+    /// Coded sub-batches each participant's load is streamed through.
+    /// `1` (the default) is the paper's atomic service: one batch per
+    /// worker, evaluated at the window's end. Above 1 the engine splits
+    /// each participant's load into this many rounds, credits chunks as
+    /// rounds complete, and resolves the job early once K* have arrived
+    /// (`traffic::engine`, EXPERIMENTS.md §Streaming). Requires a
+    /// counting-semantics scheme (`CodingScheme::is_counting`) — enforced
+    /// by `validate_config`.
+    pub rounds: usize,
 }
 
 impl JobClass {
@@ -24,7 +33,16 @@ impl JobClass {
             weight,
             deadline,
             scheme: CodingScheme::for_geometry(geometry),
+            rounds: 1,
         }
+    }
+
+    /// Builder: stream each participant's load through `rounds` coded
+    /// sub-batches (1 = atomic, byte-identical to the seed engine).
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        assert!(rounds >= 1, "rounds must be at least 1");
+        self.rounds = rounds;
+        self
     }
 }
 
@@ -93,4 +111,40 @@ pub(crate) struct Service {
     pub gens: Vec<u64>,
     /// `service start + d_eff` — when the round is evaluated.
     pub window_end: f64,
+    /// Per-round streaming state, present iff the job's class has
+    /// `rounds > 1`. Boxed so the atomic path (`None`) pays one pointer.
+    pub stream: Option<Box<StreamState>>,
+}
+
+/// Streaming book-keeping for a service whose class streams its load
+/// through coded rounds (`JobClass::rounds > 1`). All per-participant
+/// vectors are aligned with `Service::workers`.
+#[derive(Clone, Debug)]
+pub(crate) struct StreamState {
+    /// Service start (dispatch time); round finishes are computed
+    /// cumulatively from here so the last round's finish equals the atomic
+    /// engine's `t_fin` bit-for-bit.
+    pub start: f64,
+    /// Recovery threshold: the job resolves early once `delivered` reaches
+    /// this many distinct chunks.
+    pub kstar: usize,
+    /// Distinct chunks delivered so far across all participants.
+    pub delivered: usize,
+    /// Chunks delivered per participant.
+    pub done: Vec<usize>,
+    /// Load of each participant's in-flight round (0 = none in flight).
+    pub pending: Vec<usize>,
+    /// Scheduled load not yet dispatched as a round, per participant.
+    pub sched_left: Vec<usize>,
+    /// Rounds not yet dispatched per participant (the in-flight round, if
+    /// any, is already excluded). Zeroed when a participant stalls — its
+    /// next round cannot finish inside the window.
+    pub rounds_left: Vec<usize>,
+    /// Participant delivered at least one round: its dispatch-time state is
+    /// observable at resolve even if its slot generation has moved on
+    /// (early release, early resolve) — the master timed a completion.
+    pub revealed: Vec<bool>,
+    /// Participant was released before the window's end by the
+    /// work-conserving slack policy.
+    pub released: Vec<bool>,
 }

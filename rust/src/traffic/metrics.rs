@@ -67,6 +67,24 @@ pub struct TrafficMetrics {
     pub calib_bad_obs: u64,
     /// ... of which the estimator predicted Bad (p̂ < 0.5).
     pub calib_bad_hits: u64,
+    /// Streaming coded rounds credited to the master — one per completed
+    /// per-participant sub-batch (`JobClass::rounds > 1` services only;
+    /// every streaming counter below stays 0 on atomic runs, which is part
+    /// of the rounds=1 byte-identity guarantee in `tests/determinism.rs`).
+    pub rounds_completed: u64,
+    /// Chunks those rounds delivered.
+    pub round_chunks: u64,
+    /// Jobs resolved BEFORE their window's end — the K*-th distinct chunk
+    /// arrived mid-window and the engine settled the job immediately.
+    pub early_resolves: u64,
+    /// Workers freed before the window's end by the work-conserving slack
+    /// policy ([`crate::traffic::SlackPolicy::Release`]).
+    pub slack_releases: u64,
+    /// Speculative extra rounds squeezed onto slack workers
+    /// ([`crate::traffic::SlackPolicy::Squeeze`]).
+    pub squeezes: u64,
+    /// Extra chunks those squeezes re-executed.
+    pub squeeze_chunks: u64,
     /// Σ |p̂ − 𝟙{good}| over probe samples (the Brier-style L1 error).
     calib_abs_err: f64,
     latency_mean: Welford,
@@ -109,6 +127,12 @@ impl Default for TrafficMetrics {
             calib_good_hits: 0,
             calib_bad_obs: 0,
             calib_bad_hits: 0,
+            rounds_completed: 0,
+            round_chunks: 0,
+            early_resolves: 0,
+            slack_releases: 0,
+            squeezes: 0,
+            squeeze_chunks: 0,
             calib_abs_err: 0.0,
             latency_mean: Welford::default(),
             latency_p50: P2Quantile::new(0.50),
@@ -204,6 +228,31 @@ impl TrafficMetrics {
                 self.calib_bad_hits += 1;
             }
         }
+    }
+
+    /// A streaming participant's coded round completed, delivering `load`
+    /// chunks to the master.
+    pub(crate) fn on_round(&mut self, load: usize) {
+        self.rounds_completed += 1;
+        self.round_chunks += load as u64;
+    }
+
+    /// A job reached K* distinct chunks mid-window and resolved early.
+    pub(crate) fn on_early_resolve(&mut self) {
+        self.early_resolves += 1;
+    }
+
+    /// A streaming participant finished all its rounds and was released
+    /// before the window's end (work-conserving slack policy).
+    pub(crate) fn on_slack_release(&mut self) {
+        self.slack_releases += 1;
+    }
+
+    /// A speculative extra round of `extra` chunks was squeezed onto a
+    /// slack worker.
+    pub(crate) fn on_squeeze(&mut self, extra: usize) {
+        self.squeezes += 1;
+        self.squeeze_chunks += extra as u64;
     }
 
     pub(crate) fn on_plan_probe(&mut self, hit: bool) {
@@ -336,6 +385,12 @@ impl TrafficMetrics {
         ratio(self.plan_probe_hits, self.plan_probe_hits + self.plan_probe_misses)
     }
 
+    /// Fraction of completions that resolved before their window's end (0
+    /// for atomic runs, where every success waits for the window).
+    pub fn early_resolve_rate(&self) -> f64 {
+        ratio(self.early_resolves, self.completed)
+    }
+
     /// Fraction of dispatches served from the allocation-plan cache (0 when
     /// the cache is off or nothing dispatched).
     pub fn alloc_hit_rate(&self) -> f64 {
@@ -439,6 +494,16 @@ impl TrafficMetrics {
                 num(self.calib_good_hit_rate()),
             ),
             ("calib_bad_hit_rate", num(self.calib_bad_hit_rate())),
+            (
+                "rounds_completed",
+                Json::num(self.rounds_completed as f64),
+            ),
+            ("round_chunks", Json::num(self.round_chunks as f64)),
+            ("early_resolves", Json::num(self.early_resolves as f64)),
+            ("early_resolve_rate", num(self.early_resolve_rate())),
+            ("slack_releases", Json::num(self.slack_releases as f64)),
+            ("squeezes", Json::num(self.squeezes as f64)),
+            ("squeeze_chunks", Json::num(self.squeeze_chunks as f64)),
         ])
     }
 }
@@ -564,6 +629,32 @@ mod tests {
         // miss_rate saturates at 1 when every arrival is lost.
         assert_eq!(m.miss_rate(), 1.0);
         assert_eq!(TrafficMetrics::new().miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn streaming_counters_accumulate_and_serialize() {
+        let mut m = TrafficMetrics::new();
+        // Atomic runs never touch the streaming handlers: all zeros.
+        assert_eq!(m.early_resolve_rate(), 0.0);
+        let j = m.to_json();
+        assert_eq!(j.get("rounds_completed").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("early_resolve_rate").unwrap().as_f64(), Some(0.0));
+        m.on_round(5);
+        m.on_round(3);
+        m.on_squeeze(2);
+        m.on_slack_release();
+        m.on_early_resolve();
+        m.on_resolve(true, 0.4);
+        m.on_resolve(true, 0.9);
+        assert_eq!((m.rounds_completed, m.round_chunks), (2, 8));
+        assert_eq!((m.squeezes, m.squeeze_chunks), (1, 2));
+        assert_eq!(m.slack_releases, 1);
+        assert_eq!(m.early_resolves, 1);
+        assert_eq!(m.early_resolve_rate(), 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("round_chunks").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("early_resolve_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("squeeze_chunks").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

@@ -19,7 +19,14 @@
 //!   advanced by true elapsed virtual time, and the elastic-fleet
 //!   lifecycle (`WorkerLeave`/`WorkerJoin` driven by
 //!   [`crate::sim::churn::ChurnModel`]): preemptions abandon in-flight
-//!   assignments, rejoining slots come up as fresh instances.
+//!   assignments, rejoining slots come up as fresh instances. With
+//!   [`JobClass`]`::rounds > 1` each participant's load streams through
+//!   coded sub-batches (`RoundComplete` events): the job resolves EARLY the
+//!   moment K* distinct chunks have arrived, and a participant finishing
+//!   with window slack is either released to the queue or squeezed onto the
+//!   laggiest unfinished round ([`SlackPolicy`],
+//!   [`crate::scheduler::strategy::Strategy::on_slack`]).
+//!   `rounds = 1` is byte-identical to the atomic engine.
 //! - [`metrics`] — deadline-miss rate, goodput, queue depth, churn
 //!   accounting (leaves/joins, work lost to preemption, live-fleet
 //!   integral), estimator-calibration probes (p̂ vs true Markov state at
@@ -49,7 +56,9 @@ pub mod shard;
 
 pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
-pub use engine::{run_traffic, run_traffic_traced, DeadlineFrom, RejoinSpeeds, TrafficConfig};
+pub use engine::{
+    run_traffic, run_traffic_traced, DeadlineFrom, RejoinSpeeds, SlackPolicy, TrafficConfig,
+};
 pub use job::{JobClass, JobFate};
 pub use metrics::TrafficMetrics;
 pub use shard::{run_sharded, FleetMetrics, RoutingPolicy, ShardConfig};

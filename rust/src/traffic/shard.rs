@@ -532,6 +532,9 @@ pub fn run_sharded(
                     EventKind::Resolve { job } => {
                         cores[s].handle_resolve(job, ev.time, &mut sink)
                     }
+                    EventKind::RoundComplete { job, part } => {
+                        cores[s].handle_round(job, part, ev.time, &mut sink)
+                    }
                     EventKind::WorkerLeave { worker } => {
                         cores[s].handle_leave(worker, ev.time, &mut sink)
                     }

@@ -17,14 +17,19 @@
 use timely_coded::experiments::churn::{self, ChurnGridSpec};
 use timely_coded::experiments::hetero_grid::{self, HeteroGridSpec};
 use timely_coded::experiments::shard::{self, ShardGridSpec};
+use timely_coded::experiments::stream::{self, StreamGridSpec};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
 use timely_coded::obs::trace::TraceSink;
 use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
+use timely_coded::scheduler::strategy::Strategy;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::churn::ChurnModel;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, run_traffic_traced, Policy, RoutingPolicy, TrafficConfig};
+use timely_coded::traffic::{
+    run_sharded, run_traffic, run_traffic_traced, Policy, RoutingPolicy, ShardConfig, SlackPolicy,
+    TrafficConfig,
+};
 
 /// Layer 2: the engine itself (with and without churn) is seed-pure.
 #[test]
@@ -242,6 +247,118 @@ fn shard_grid_single_shard_round_robin_matches_unsharded_engine() {
         assert_eq!(row.metrics.imbalance_area, 0.0);
     }
     assert_eq!(anchors, 2, "small preset has 2 rate-0/churn C=1 rr cells");
+}
+
+/// Layer 3e: the `lea stream` grid — rounds × slack policy × load ×
+/// deadline cells over the streaming traffic engine — byte-identical
+/// across reruns and thread counts, with the multi-round cells actually
+/// streaming.
+#[test]
+fn stream_grid_dump_is_byte_identical_twice_and_across_threads() {
+    let spec = StreamGridSpec::preset("small", 150, 918).expect("preset");
+    assert!(spec.cells().len() >= 12, "acceptance grid too small");
+    let serial_rows = stream::run_grid(&spec, 1);
+    let serial = stream::to_json(&spec, &serial_rows).to_string();
+    let serial_again = stream::to_json(&spec, &stream::run_grid(&spec, 1)).to_string();
+    let threaded = stream::to_json(&spec, &stream::run_grid(&spec, 5)).to_string();
+    assert_eq!(serial, serial_again, "rerun changed the stream dump");
+    assert_eq!(serial, threaded, "thread count changed the stream dump");
+    // A different seed actually changes the data.
+    let spec2 = StreamGridSpec::preset("small", 150, 919).expect("preset");
+    let other = stream::to_json(&spec2, &stream::run_grid(&spec2, 5)).to_string();
+    assert_ne!(serial, other);
+    // Parseable, with cell coordinates and the streaming counters present.
+    let parsed = timely_coded::util::json::Json::parse(&serial).expect("valid json");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 12);
+    for c in cells {
+        assert!(c.get("rounds").is_some());
+        assert!(c.get("slack").is_some());
+        assert!(c.get("deadline").is_some());
+        assert!(c.get("timely_throughput").is_some());
+        assert!(c.get("rounds_completed").is_some());
+        assert!(c.get("early_resolve_rate").is_some());
+    }
+    // The multi-round cells exercise real streaming, not just the anchor.
+    assert!(serial_rows.iter().any(|r| r.metrics.rounds_completed > 0));
+}
+
+/// The streaming acceptance criterion: every rounds = 1 cell of the stream
+/// grid — whatever its slack policy — is byte-identical to the atomic
+/// traffic engine run with the same derived seeds and a config that never
+/// mentions streaming. Splitting a load into ONE round adds NOTHING
+/// observable: no events, no RNG draws, no metric deltas.
+#[test]
+fn stream_grid_single_round_cells_match_the_atomic_engine() {
+    let spec = StreamGridSpec::preset("small", 200, 78).expect("preset");
+    let rows = stream::run_grid(&spec, 2);
+    let mut anchors = 0;
+    for row in rows.iter().filter(|r| r.cell.rounds == 1) {
+        anchors += 1;
+        let atomic = stream::run_cell_atomic(&row.cell, &spec)
+            .expect("rounds = 1 cell must have an atomic reference");
+        assert_eq!(
+            row.metrics.to_json().to_string(),
+            atomic.to_json().to_string(),
+            "cell {}: rounds=1 ({}) diverged from the atomic engine",
+            row.cell.idx,
+            row.cell.slack.name()
+        );
+        assert_eq!(row.metrics.rounds_completed, 0);
+        assert_eq!(row.metrics.early_resolves, 0);
+        assert_eq!(row.metrics.slack_releases, 0);
+    }
+    assert_eq!(anchors, 4, "small preset has 4 rounds=1 cells");
+}
+
+/// And the same identity through the sharded front-end: one shard with
+/// round-robin routing, the traffic config set to rounds = 1 with the
+/// squeeze policy armed, must match the unsharded engine run with a plain
+/// atomic config bit-for-bit — streaming's `RoundComplete` arm in the
+/// router's event loop stays quiescent at one round exactly like the
+/// unsharded engine's.
+#[test]
+fn sharded_single_shard_streaming_rounds_one_matches_atomic_unsharded() {
+    let scenario = fig3_scenarios()[0];
+    let atomic_cfg = TrafficConfig::single_class(
+        300,
+        Arrivals::poisson(0.9),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    );
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 56);
+    let mut lea = Lea::new(fig3_load_params());
+    let unsharded = run_traffic(&mut lea, &mut cluster, &atomic_cfg, 56);
+
+    let stream_cfg = TrafficConfig::single_class(
+        300,
+        Arrivals::poisson(0.9),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+    .with_rounds(1)
+    .with_slack_policy(SlackPolicy::Squeeze);
+    let mut strategies: Vec<Box<dyn Strategy>> =
+        vec![Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>];
+    let mut clusters = vec![SimCluster::markov(
+        fig3_geometry().n,
+        scenario.chain(),
+        fig3_speeds(),
+        56,
+    )];
+    let cfg = ShardConfig {
+        shards: 1,
+        routing: RoutingPolicy::RoundRobin,
+        traffic: stream_cfg,
+    };
+    let fleet = run_sharded(&mut strategies, &mut clusters, &cfg, 56);
+    assert_eq!(
+        fleet.shards[0].to_json().to_string(),
+        unsharded.to_json().to_string(),
+        "one-shard streaming rounds=1 diverged from the atomic unsharded engine"
+    );
 }
 
 /// The churn-0 column of the churn grid must reproduce a genuinely
