@@ -16,7 +16,8 @@ use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::churn::ChurnModel;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::traffic::{Backend, Policy, Runner, Topology, TrafficConfig};
 use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(churn: ChurnModel, jobs: u64) -> (f64, u64, u64) {
@@ -30,9 +31,14 @@ fn engine_events_per_sec(churn: ChurnModel, jobs: u64) -> (f64, u64, u64) {
         fig3_geometry(),
         Policy::EdfFeasible,
     )
-    .with_churn(churn);
+    .into_builder()
+    .churn(churn)
+    .build()
+    .expect("bench config is valid");
     let t0 = Instant::now();
-    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let m = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, 7, &mut TraceSink::Off)
+        .expect("bench config is valid");
     let secs = t0.elapsed().as_secs_f64();
     (m.events as f64 / secs, m.events, m.leaves)
 }

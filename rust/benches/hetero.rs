@@ -18,7 +18,8 @@ use timely_coded::scheduler::success::FleetLoadParams;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_scenarios};
-use timely_coded::traffic::{run_traffic, Policy, TrafficConfig};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::traffic::{Backend, Policy, Runner, Topology, TrafficConfig};
 use timely_coded::util::bench_kit::{bench, black_box, budget, smoke_mode, table, BenchLog};
 use timely_coded::util::rng::Rng;
 
@@ -83,7 +84,9 @@ fn engine_events_per_sec(mix: FleetMix, jobs: u64) -> (f64, u64) {
         Policy::EdfFeasible,
     );
     let t0 = Instant::now();
-    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let m = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, 7, &mut TraceSink::Off)
+        .expect("bench config is valid");
     let secs = t0.elapsed().as_secs_f64();
     (m.events as f64 / secs, m.events)
 }

@@ -1,8 +1,10 @@
 //! Sharded-fleet benchmarks: the dispatch-path allocation cache
 //! (`scheduler::alloc_cache::AllocPlanCache`) hit path vs a full EA
 //! recompute — the ≥ 3x acceptance figure, recorded as the
-//! `dispatch_path_speedup_c16` note — plus end-to-end `run_sharded` jobs/s
-//! at C ∈ {1, 4, 16} with the cache on (exact and quantized) vs off.
+//! `dispatch_path_speedup_c16` note — plus end-to-end fleet jobs/s through
+//! `traffic::Runner` at C ∈ {1, 4, 16} with the cache on (exact and
+//! quantized) vs off, and the parallel-backend scaling grid
+//! (C × threads ∈ {1, 4, 16} events/s, `events_per_sec_c*_t*` notes).
 //! Figures land in `BENCH_shard.json` (uploaded by the CI bench-smoke job
 //! and gated by `lea bench-check`); set `BENCH_SMOKE=1` for a fast
 //! validity run.
@@ -21,7 +23,10 @@ use timely_coded::scheduler::success::FleetLoadParams;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_sharded, Policy, RoutingPolicy, ShardConfig, TrafficConfig};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::traffic::{
+    Backend, Policy, RoutingPolicy, Runner, Topology, TrafficConfig,
+};
 use timely_coded::util::bench_kit::{bench, black_box, budget, smoke_mode, table, BenchLog};
 
 /// A rotation of distinct p̂ profiles (all within one cache's capacity, so
@@ -44,11 +49,15 @@ fn dual_fleet() -> FleetLoadParams {
     FleetLoadParams::from_rates(10, fig3_geometry().kstar(), &rates, 1.0)
 }
 
-fn sharded_jobs_per_sec(
+/// One end-to-end fleet run on an explicit backend: (jobs/s, events/s,
+/// events). Both backends produce the same bytes, so the figures measure
+/// wall-clock only.
+fn sharded_run(
     shards: usize,
     cache: AllocCachePolicy,
+    backend: Backend,
     jobs_per_shard: u64,
-) -> (f64, u64) {
+) -> (f64, f64, u64) {
     let scenario = fig3_scenarios()[0];
     let geo = fig3_geometry();
     let mut strategies: Vec<Box<dyn Strategy>> = (0..shards)
@@ -58,22 +67,43 @@ fn sharded_jobs_per_sec(
         .map(|s| SimCluster::markov(geo.n, scenario.chain(), fig3_speeds(), 99 + s as u64))
         .collect();
     let total_jobs = jobs_per_shard * shards as u64;
-    let cfg = ShardConfig {
-        shards,
-        routing: RoutingPolicy::Jsq,
-        traffic: TrafficConfig::single_class(
-            total_jobs,
-            Arrivals::poisson(0.8 * shards as f64),
-            1.0,
-            geo,
-            Policy::EdfFeasible,
-        )
-        .with_alloc_cache(cache),
-    };
+    let cfg = TrafficConfig::single_class(
+        total_jobs,
+        Arrivals::poisson(0.8 * shards as f64),
+        1.0,
+        geo,
+        Policy::EdfFeasible,
+    )
+    .into_builder()
+    .alloc_cache(cache)
+    .build()
+    .expect("bench config is valid");
+    let runner = Runner::new(
+        Topology::Sharded {
+            shards,
+            routing: RoutingPolicy::Jsq,
+        },
+        backend,
+    );
     let t0 = Instant::now();
-    let m = run_sharded(&mut strategies, &mut clusters, &cfg, 7);
+    let m = runner
+        .run(&mut strategies, &mut clusters, &cfg, 7, &mut TraceSink::Off)
+        .expect("bench config is valid");
     let secs = t0.elapsed().as_secs_f64();
-    (total_jobs as f64 / secs, m.events())
+    (
+        total_jobs as f64 / secs,
+        m.events() as f64 / secs,
+        m.events(),
+    )
+}
+
+fn sharded_jobs_per_sec(
+    shards: usize,
+    cache: AllocCachePolicy,
+    jobs_per_shard: u64,
+) -> (f64, u64) {
+    let (jps, _, events) = sharded_run(shards, cache, Backend::Sequential, jobs_per_shard);
+    (jps, events)
 }
 
 fn main() {
@@ -200,6 +230,51 @@ fn main() {
         &format!("Sharded engine ({jobs_per_shard} jobs/shard, JSQ, EDF)"),
         &["off j/s", "exact j/s", "quant j/s", "quant/off"],
         &e2e_rows,
+    );
+
+    // ---- parallel-backend scaling: events/s over C x threads ----
+    // The frontier runtime's whole value proposition: same bytes, more
+    // cores. The headline figures are the C = 16 thread ratios
+    // (`parallel_speedup_c16_t4/t16`); threads are clamped to C, so the
+    // C = 1 row doubles as the single-shard overhead check.
+    let mut scale_rows = Vec::new();
+    let mut c16_eps = Vec::new();
+    for shards in [1usize, 4, 16] {
+        for threads in [1usize, 4, 16] {
+            let (_, eps, events) = sharded_run(
+                shards,
+                AllocCachePolicy::default_exact(),
+                Backend::Parallel { threads },
+                jobs_per_shard,
+            );
+            println!(
+                "bench shard_parallel C={shards:<2} threads={threads:<2} {events:>9} events  \
+                 {eps:>12.0} events/s"
+            );
+            log.note(&format!("events_per_sec_c{shards}_t{threads}"), eps);
+            if shards == 16 {
+                c16_eps.push(eps);
+            }
+            scale_rows.push((
+                format!("C={shards} threads={threads}"),
+                vec![events as f64, eps],
+            ));
+        }
+    }
+    let t4_speedup = c16_eps[1] / c16_eps[0];
+    let t16_speedup = c16_eps[2] / c16_eps[0];
+    log.note("parallel_speedup_c16_t4", t4_speedup);
+    log.note("parallel_speedup_c16_t16", t16_speedup);
+    println!(
+        "bench shard parallel_speedup_c16 t4 {t4_speedup:.2}x  t16 {t16_speedup:.2}x (vs 1 thread)"
+    );
+    for s in [t4_speedup, t16_speedup] {
+        assert!(s.is_finite() && s > 0.0, "degenerate parallel speedup {s}");
+    }
+    table(
+        &format!("Parallel backend scaling ({jobs_per_shard} jobs/shard, JSQ, exact cache)"),
+        &["events", "events/s"],
+        &scale_rows,
     );
 
     for s in &speedups {

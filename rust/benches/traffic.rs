@@ -17,7 +17,7 @@ use timely_coded::scheduler::lea::Lea;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, run_traffic_traced, Policy, TrafficConfig};
+use timely_coded::traffic::{Backend, Policy, Runner, Topology, TrafficConfig};
 use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
 
 fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
@@ -32,7 +32,9 @@ fn engine_events_per_sec(policy: Policy, jobs: u64, rate: f64) -> (f64, u64) {
         policy,
     );
     let t0 = Instant::now();
-    let m = run_traffic(&mut lea, &mut cluster, &cfg, 7);
+    let m = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, 7, &mut TraceSink::Off)
+        .expect("bench config is valid");
     let secs = t0.elapsed().as_secs_f64();
     (m.events as f64 / secs, m.events)
 }
@@ -54,8 +56,11 @@ fn sink_events_per_sec(jobs: u64, reps: usize, make_sink: impl Fn() -> TraceSink
             fig3_geometry(),
             Policy::EdfFeasible,
         );
+        let mut sink = make_sink();
         let t0 = Instant::now();
-        let (m, _sink) = run_traffic_traced(&mut lea, &mut cluster, &cfg, 7, make_sink());
+        let m = Runner::new(Topology::Single, Backend::Sequential)
+            .run_one(&mut lea, &mut cluster, &cfg, 7, &mut sink)
+            .expect("bench config is valid");
         let secs = t0.elapsed().as_secs_f64();
         best = best.max(m.events as f64 / secs);
     }

@@ -21,7 +21,8 @@ use crate::sim::arrivals::Arrivals;
 use crate::sim::churn::ChurnModel;
 use crate::sim::cluster::SimCluster;
 use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
-use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::obs::trace::TraceSink;
+use crate::traffic::{Backend, Policy, Runner, Topology, TrafficConfig, TrafficMetrics};
 use crate::util::bench_kit;
 use crate::util::json::Json;
 
@@ -148,8 +149,13 @@ pub fn run_cell_with_churn(cell: &ChurnCell, spec: &ChurnGridSpec, churn: ChurnM
         geo,
         cell.policy,
     )
-    .with_churn(churn);
-    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x6368_6e21); // "chn!"
+    .into_builder()
+    .churn(churn)
+    .build()
+    .expect("churn grid cells build valid configs");
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, seed ^ 0x6368_6e21, &mut TraceSink::Off) // "chn!"
+        .expect("churn grid cells build valid configs");
     ChurnRow {
         cell: *cell,
         metrics,

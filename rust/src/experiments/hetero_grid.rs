@@ -21,7 +21,8 @@ use crate::scheduler::success::FleetLoadParams;
 use crate::sim::arrivals::Arrivals;
 use crate::sim::cluster::{SimCluster, Speeds};
 use crate::sim::scenarios::{fig3_geometry, fig3_scenarios};
-use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::obs::trace::TraceSink;
+use crate::traffic::{Backend, Policy, Runner, Topology, TrafficConfig, TrafficMetrics};
 use crate::util::bench_kit;
 use crate::util::json::Json;
 
@@ -217,7 +218,9 @@ pub fn run_cell(cell: &HeteroCell, spec: &HeteroGridSpec) -> HeteroRow {
         geo,
         cell.policy,
     );
-    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ 0x6865_7421); // "het!"
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, seed ^ 0x6865_7421, &mut TraceSink::Off) // "het!"
+        .expect("hetero grid cells build valid configs");
     HeteroRow {
         cell: *cell,
         metrics,

@@ -24,9 +24,9 @@ use crate::sim::arrivals::Arrivals;
 use crate::sim::churn::ChurnModel;
 use crate::sim::cluster::SimCluster;
 use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::obs::trace::TraceSink;
 use crate::traffic::{
-    run_sharded, run_traffic, FleetMetrics, Policy, RoutingPolicy, ShardConfig, TrafficConfig,
-    TrafficMetrics,
+    Backend, FleetMetrics, Policy, RoutingPolicy, Runner, Topology, TrafficConfig, TrafficMetrics,
 };
 use crate::util::bench_kit;
 use crate::util::json::Json;
@@ -171,8 +171,11 @@ fn cell_traffic(cell: &ShardCell, spec: &ShardGridSpec) -> TrafficConfig {
         fig3_geometry(),
         spec.policy,
     )
-    .with_churn(ChurnModel::spot(cell.churn_rate, spec.mean_downtime))
-    .with_alloc_cache(spec.alloc_cache)
+    .into_builder()
+    .churn(ChurnModel::spot(cell.churn_rate, spec.mean_downtime))
+    .alloc_cache(spec.alloc_cache)
+    .build()
+    .expect("shard grid cells build valid configs")
 }
 
 /// The cell's shared derived inputs: (cell seed, per-shard LEA geometry,
@@ -205,19 +208,37 @@ fn cell_cluster(seed: u64, shard: usize) -> SimCluster {
 }
 
 /// Run one cell: C fresh Fig.-3 scenario-1 clusters, one fresh LEA each,
-/// and the sharded front-end with the cell's routing policy.
+/// and the sharded front-end with the cell's routing policy, on the
+/// sequential reference backend.
 pub fn run_cell(cell: &ShardCell, spec: &ShardGridSpec) -> ShardRow {
+    run_cell_with(cell, spec, Backend::Sequential)
+}
+
+/// [`run_cell`] on an explicit [`Backend`] — the CLI's `--backend par`
+/// path. Both backends produce the same bytes (`tests/determinism.rs`), so
+/// the choice only moves wall-clock.
+pub fn run_cell_with(cell: &ShardCell, spec: &ShardGridSpec, backend: Backend) -> ShardRow {
     let (seed, params, traffic) = cell_setup(cell, spec);
     let mut strategies: Vec<Box<dyn Strategy>> = (0..cell.shards)
         .map(|_| Box::new(Lea::new(params)) as Box<dyn Strategy>)
         .collect();
     let mut clusters: Vec<SimCluster> = (0..cell.shards).map(|s| cell_cluster(seed, s)).collect();
-    let cfg = ShardConfig {
-        shards: cell.shards,
-        routing: cell.routing,
-        traffic,
-    };
-    let metrics = run_sharded(&mut strategies, &mut clusters, &cfg, seed ^ SHARD_ENGINE_SALT);
+    let runner = Runner::new(
+        Topology::Sharded {
+            shards: cell.shards,
+            routing: cell.routing,
+        },
+        backend,
+    );
+    let metrics = runner
+        .run(
+            &mut strategies,
+            &mut clusters,
+            &traffic,
+            seed ^ SHARD_ENGINE_SALT,
+            &mut TraceSink::Off,
+        )
+        .expect("shard grid cells build valid configs");
     ShardRow {
         cell: *cell,
         metrics,
@@ -227,8 +248,8 @@ pub fn run_cell(cell: &ShardCell, spec: &ShardGridSpec) -> ShardRow {
 /// The unsharded reference for a C = 1 cell: the SAME cluster seed, LEA,
 /// traffic config and engine seed (`cell_setup`/`cell_cluster` — the
 /// construction path [`run_cell`] itself uses), run through the
-/// single-cluster [`run_traffic`] instead of the router. `None` for
-/// multi-shard cells. `tests/determinism.rs` pins
+/// single-cluster engine ([`Topology::Single`]) instead of the router.
+/// `None` for multi-shard cells. `tests/determinism.rs` pins
 /// `run_cell(..).metrics.shards[0]` byte-identical to this for every
 /// C = 1 round-robin cell.
 pub fn run_cell_unsharded(cell: &ShardCell, spec: &ShardGridSpec) -> Option<TrafficMetrics> {
@@ -238,15 +259,35 @@ pub fn run_cell_unsharded(cell: &ShardCell, spec: &ShardGridSpec) -> Option<Traf
     let (seed, params, cfg) = cell_setup(cell, spec);
     let mut lea = Lea::new(params);
     let mut cluster = cell_cluster(seed, 0);
-    Some(run_traffic(&mut lea, &mut cluster, &cfg, seed ^ SHARD_ENGINE_SALT))
+    Some(
+        Runner::new(Topology::Single, Backend::Sequential)
+            .run_one(
+                &mut lea,
+                &mut cluster,
+                &cfg,
+                seed ^ SHARD_ENGINE_SALT,
+                &mut TraceSink::Off,
+            )
+            .expect("shard grid cells build valid configs"),
+    )
 }
 
 /// Run the whole grid across `threads` OS threads (work-stealing via the
-/// shared `super::fan_out` runner). Results come back in canonical cell
-/// order whatever the interleaving, so the output is deterministic.
+/// shared `super::fan_out` runner) on the sequential backend. Results come
+/// back in canonical cell order whatever the interleaving, so the output is
+/// deterministic.
 pub fn run_grid(spec: &ShardGridSpec, threads: usize) -> Vec<ShardRow> {
+    run_grid_with(spec, threads, Backend::Sequential)
+}
+
+/// [`run_grid`] on an explicit [`Backend`]. With `Backend::Parallel` the
+/// grid-level fan-out stays at `threads` cells in flight while each cell
+/// additionally spreads its shards over the backend's own threads.
+pub fn run_grid_with(spec: &ShardGridSpec, threads: usize, backend: Backend) -> Vec<ShardRow> {
     let cells = spec.cells();
-    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+    super::fan_out(cells.len(), threads, |i| {
+        run_cell_with(&cells[i], spec, backend)
+    })
 }
 
 /// Assemble the deterministic JSON dump (spec + one object per cell; each
@@ -378,6 +419,21 @@ mod tests {
             assert_eq!(r.metrics.arrivals(), spec.jobs * r.cell.shards as u64);
             assert_eq!(r.metrics.shards.len(), r.cell.shards);
             assert!(r.metrics.completed() > 0, "cell {i} completed nothing");
+        }
+    }
+
+    #[test]
+    fn parallel_backend_cells_match_sequential_bytes() {
+        let spec = tiny_spec();
+        for cell in spec.cells() {
+            let seq = run_cell_with(&cell, &spec, Backend::Sequential);
+            let par = run_cell_with(&cell, &spec, Backend::Parallel { threads: 4 });
+            assert_eq!(
+                seq.metrics.to_json().to_string(),
+                par.metrics.to_json().to_string(),
+                "cell {} diverged across backends",
+                cell.idx
+            );
         }
     }
 

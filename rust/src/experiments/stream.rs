@@ -20,7 +20,10 @@ use crate::scheduler::success::LoadParams;
 use crate::sim::arrivals::Arrivals;
 use crate::sim::cluster::SimCluster;
 use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
-use crate::traffic::{run_traffic, Policy, SlackPolicy, TrafficConfig, TrafficMetrics};
+use crate::obs::trace::TraceSink;
+use crate::traffic::{
+    Backend, Policy, Runner, SlackPolicy, Topology, TrafficConfig, TrafficMetrics,
+};
 use crate::util::bench_kit;
 use crate::util::json::Json;
 
@@ -160,8 +163,11 @@ fn cell_setup(cell: &StreamCell, spec: &StreamGridSpec) -> (u64, LoadParams, Tra
         geo,
         spec.policy,
     )
-    .with_rounds(cell.rounds)
-    .with_slack_policy(cell.slack);
+    .into_builder()
+    .rounds(cell.rounds)
+    .slack_policy(cell.slack)
+    .build()
+    .expect("stream grid cells build valid configs");
     (seed, params, cfg)
 }
 
@@ -181,7 +187,15 @@ pub fn run_cell(cell: &StreamCell, spec: &StreamGridSpec) -> StreamRow {
     let (seed, params, cfg) = cell_setup(cell, spec);
     let mut lea = Lea::new(params);
     let mut cluster = cell_cluster(seed);
-    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, seed ^ STREAM_ENGINE_SALT);
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(
+            &mut lea,
+            &mut cluster,
+            &cfg,
+            seed ^ STREAM_ENGINE_SALT,
+            &mut TraceSink::Off,
+        )
+        .expect("stream grid cells build valid configs");
     StreamRow {
         cell: *cell,
         metrics,
@@ -190,7 +204,7 @@ pub fn run_cell(cell: &StreamCell, spec: &StreamGridSpec) -> StreamRow {
 
 /// The atomic reference for a rounds = 1 cell: the SAME cluster seed, LEA,
 /// arrival stream and engine seed, but with a config that never mentions
-/// streaming (no `with_rounds`, no `with_slack_policy`). `None` for
+/// streaming (no `rounds(..)`, no `slack_policy(..)` builder calls). `None` for
 /// multi-round cells. `tests/determinism.rs` pins `run_cell(..)` byte-
 /// identical to this for every rounds = 1 cell of the small preset —
 /// whatever the cell's slack policy, since slack is only consulted for
@@ -218,7 +232,17 @@ pub fn run_cell_atomic(cell: &StreamCell, spec: &StreamGridSpec) -> Option<Traff
     );
     let mut lea = Lea::new(params);
     let mut cluster = cell_cluster(seed);
-    Some(run_traffic(&mut lea, &mut cluster, &cfg, seed ^ STREAM_ENGINE_SALT))
+    Some(
+        Runner::new(Topology::Single, Backend::Sequential)
+            .run_one(
+                &mut lea,
+                &mut cluster,
+                &cfg,
+                seed ^ STREAM_ENGINE_SALT,
+                &mut TraceSink::Off,
+            )
+            .expect("stream grid cells build valid configs"),
+    )
 }
 
 /// Run the whole grid across `threads` OS threads (work-stealing via the

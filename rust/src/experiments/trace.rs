@@ -13,7 +13,7 @@
 use super::traffic::{cell_setup, GridCell, GridSpec};
 use crate::obs::chrome::chrome_trace;
 use crate::obs::trace::{TraceRecord, TraceSink};
-use crate::traffic::{run_traffic_traced, TrafficMetrics};
+use crate::traffic::{Backend, Runner, Topology, TrafficMetrics};
 use crate::util::json::Json;
 
 /// One traced cell: the grid cell, its (unchanged) metrics, and the
@@ -83,9 +83,15 @@ pub fn run_cell_traced(
         )
     })?;
     let (mut cluster, mut lea, cfg, engine_seed) = cell_setup(&cell, spec.jobs, spec.seed);
-    let cfg = cfg.with_probe_every(probe_every);
-    let (metrics, sink) =
-        run_traffic_traced(&mut lea, &mut cluster, &cfg, engine_seed, TraceSink::ring(ring_cap));
+    let cfg = cfg
+        .into_builder()
+        .probe_every(probe_every)
+        .build()
+        .map_err(|e| e.to_string())?;
+    let mut sink = TraceSink::ring(ring_cap);
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, engine_seed, &mut sink)
+        .map_err(|e| e.to_string())?;
     let (records, dropped) = match sink {
         TraceSink::Ring(ring) => ring.into_parts(),
         _ => unreachable!("a ring sink goes in, a ring sink comes out"),

@@ -12,7 +12,8 @@ use crate::scheduler::success::LoadParams;
 use crate::sim::arrivals::Arrivals;
 use crate::sim::cluster::SimCluster;
 use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
-use crate::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use crate::obs::trace::TraceSink;
+use crate::traffic::{Backend, Policy, Runner, Topology, TrafficConfig, TrafficMetrics};
 use crate::util::bench_kit;
 use crate::util::json::Json;
 
@@ -131,7 +132,9 @@ pub(crate) fn cell_setup(
 /// event engine with arrival-relative deadlines.
 pub fn run_cell(cell: &GridCell, jobs: u64, base_seed: u64) -> GridRow {
     let (mut cluster, mut lea, cfg, engine_seed) = cell_setup(cell, jobs, base_seed);
-    let metrics = run_traffic(&mut lea, &mut cluster, &cfg, engine_seed);
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, engine_seed, &mut TraceSink::Off)
+        .expect("grid cells build valid configs");
     GridRow {
         cell: *cell,
         metrics,

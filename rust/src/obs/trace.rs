@@ -339,6 +339,11 @@ impl RingRecorder {
         self.records.is_empty()
     }
 
+    /// The bound this ring was created with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
     /// Oldest records evicted to respect the bound (0 = complete trace).
     pub fn dropped(&self) -> u64 {
         self.dropped
@@ -433,6 +438,45 @@ impl TraceSink {
             TraceSink::Stream(w) => w.push(&rec),
         }
     }
+
+    /// Derive the per-shard working sink the sharded engines hand to each
+    /// [`ClusterCore`](crate::traffic::engine). Shards record independently
+    /// and the caller's sink reabsorbs them ([`TraceSink::absorb`]) in fixed
+    /// shard order at the end of the run, so both backends produce the same
+    /// merged record stream. A `Stream` sink cannot be split across shards
+    /// (one file handle); its shards buffer into default-capacity rings and
+    /// the merged records hit the file at absorb time.
+    pub fn per_shard(&self) -> TraceSink {
+        match self {
+            TraceSink::Off => TraceSink::Off,
+            TraceSink::Ring(r) => TraceSink::ring(r.cap()),
+            TraceSink::Stream(_) => TraceSink::ring(DEFAULT_RING_CAP),
+        }
+    }
+
+    /// Drain a per-shard working sink into this one, oldest record first.
+    /// Ring evictions that happened in the shard sink carry over into this
+    /// sink's drop accounting (`Ring` target) or are counted as written
+    /// records lost before reaching the file (`Stream` target: they simply
+    /// never arrive — same observable behavior as the sequential engine,
+    /// whose shard rings evict identically).
+    pub fn absorb(&mut self, shard_sink: TraceSink) {
+        match shard_sink {
+            TraceSink::Off => {}
+            TraceSink::Ring(r) => {
+                let (records, dropped) = r.into_parts();
+                if let TraceSink::Ring(mine) = self {
+                    mine.dropped += dropped;
+                }
+                for rec in records {
+                    self.push(rec);
+                }
+            }
+            TraceSink::Stream(_) => {
+                unreachable!("per_shard never hands out a Stream sink");
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -520,6 +564,57 @@ mod tests {
         assert_eq!(j.get("kind").unwrap().as_str(), Some("round_span"));
         assert_eq!(j.get("part").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("load").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn per_shard_sinks_absorb_in_order_with_drop_accounting() {
+        // Off stays off.
+        assert!(!TraceSink::Off.per_shard().is_on());
+        // Ring splits into same-capacity rings; absorb concatenates in call
+        // order and carries shard-side evictions into the drop count.
+        let mut root = TraceSink::ring(8);
+        let mut a = root.per_shard();
+        let mut b = root.per_shard();
+        let TraceSink::Ring(r) = &a else {
+            panic!("ring expected")
+        };
+        assert_eq!(r.cap(), 8);
+        a.push(counter(0.0));
+        a.push(counter(1.0));
+        b.push(counter(10.0));
+        root.absorb(a);
+        root.absorb(b);
+        let TraceSink::Ring(r) = &root else {
+            panic!("ring expected")
+        };
+        let times: Vec<f64> = r.records().map(TraceRecord::time).collect();
+        assert_eq!(times, vec![0.0, 1.0, 10.0]);
+        assert_eq!(r.dropped(), 0);
+        // A shard ring that evicted reports its losses upstream.
+        let mut tiny_shard = TraceSink::ring(1);
+        tiny_shard.push(counter(2.0));
+        tiny_shard.push(counter(3.0)); // evicts 2.0
+        let mut root = TraceSink::ring(8);
+        root.absorb(tiny_shard);
+        let TraceSink::Ring(r) = &root else {
+            panic!("ring expected")
+        };
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.dropped(), 1);
+        // Stream callers buffer shards into default-capacity rings.
+        let path = std::env::temp_dir().join("timely_coded_obs_per_shard_test.jsonl");
+        let path = path.to_string_lossy().into_owned();
+        let mut stream = TraceSink::stream(&path).expect("create stream");
+        let mut shard = stream.per_shard();
+        assert!(matches!(&shard, TraceSink::Ring(r) if r.cap() == DEFAULT_RING_CAP));
+        shard.push(counter(5.0));
+        stream.absorb(shard);
+        let TraceSink::Stream(w) = stream else {
+            panic!("stream sink expected")
+        };
+        let (p, written, _) = w.finish().expect("flush");
+        assert_eq!(written, 1);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

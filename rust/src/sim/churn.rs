@@ -70,6 +70,22 @@ impl ChurnModel {
         );
     }
 
+    /// Non-panicking twin of [`Self::validate`] for typed-error paths
+    /// ([`crate::traffic::TrafficConfigBuilder`]): the same three field
+    /// checks, reported as a message instead of an assertion failure.
+    pub fn check(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("leave_rate", self.leave_rate),
+            ("mean_downtime", self.mean_downtime),
+            ("min_downtime", self.min_downtime),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("{name} must be finite and non-negative: {v}"));
+            }
+        }
+        Ok(())
+    }
+
     /// Whether any churn events should be scheduled at all.
     pub fn is_active(&self) -> bool {
         self.leave_rate > 0.0

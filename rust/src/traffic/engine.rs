@@ -215,31 +215,107 @@ impl TrafficConfig {
         }
     }
 
+    /// Open a validated builder seeded with [`Self::single_class`] defaults.
+    /// [`TrafficConfigBuilder::build`] runs the intrinsic validation exactly
+    /// once and returns a typed [`ConfigError`] instead of panicking deep in
+    /// a run.
+    pub fn builder(
+        jobs: u64,
+        arrivals: Arrivals,
+        deadline: f64,
+        geometry: crate::coding::threshold::Geometry,
+        policy: Policy,
+    ) -> TrafficConfigBuilder {
+        TrafficConfigBuilder {
+            cfg: TrafficConfig::single_class(jobs, arrivals, deadline, geometry, policy),
+        }
+    }
+
+    /// Re-open an existing config for modification through the validated
+    /// builder (the migration path off the deprecated `with_*` setters).
+    pub fn into_builder(self) -> TrafficConfigBuilder {
+        TrafficConfigBuilder { cfg: self }
+    }
+
+    /// Cluster-independent validation: the checks a [`TrafficConfigBuilder`]
+    /// can run without knowing the fleet it will face. The cluster-dependent
+    /// geometry check lives in [`Self::validate_for`], applied at run entry.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.classes.is_empty() {
+            return Err(ConfigError::NoClasses);
+        }
+        if self.probe_every < 1 {
+            return Err(ConfigError::ProbeEveryZero);
+        }
+        self.churn.check().map_err(ConfigError::Churn)?;
+        let mut weight_sum = 0.0;
+        for (i, c) in self.classes.iter().enumerate() {
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                return Err(ConfigError::BadWeight {
+                    class: i,
+                    weight: c.weight,
+                });
+            }
+            weight_sum += c.weight;
+            if c.rounds < 1 {
+                return Err(ConfigError::BadRounds { class: i });
+            }
+            if c.rounds > 1 && !c.scheme.is_counting() {
+                return Err(ConfigError::NonCountingRounds { class: i });
+            }
+        }
+        if !(weight_sum.is_finite() && weight_sum > 0.0) {
+            return Err(ConfigError::BadWeightSum(weight_sum));
+        }
+        Ok(())
+    }
+
+    /// Full validation against a concrete cluster: everything in
+    /// [`Self::validate`] plus the per-class geometry-vs-fleet check.
+    pub fn validate_for(&self, cluster: &SimCluster) -> Result<(), ConfigError> {
+        self.validate()?;
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.scheme.geometry.n != cluster.n() {
+                return Err(ConfigError::GeometryMismatch {
+                    class: i,
+                    class_n: c.scheme.geometry.n,
+                    cluster_n: cluster.n(),
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Builder: replace the churn process.
+    #[deprecated(note = "use TrafficConfig::builder()/into_builder() + .churn(..) + .build()")]
     pub fn with_churn(mut self, churn: ChurnModel) -> Self {
         self.churn = churn;
         self
     }
 
     /// Builder: replace the churn rejoin speed-sampling policy.
+    #[deprecated(note = "use the TrafficConfigBuilder method rejoin_speeds(..)")]
     pub fn with_rejoin_speeds(mut self, rejoin_speeds: RejoinSpeeds) -> Self {
         self.rejoin_speeds = rejoin_speeds;
         self
     }
 
     /// Builder: replace the dispatch-path allocation-cache policy.
+    #[deprecated(note = "use the TrafficConfigBuilder method alloc_cache(..)")]
     pub fn with_alloc_cache(mut self, alloc_cache: AllocCachePolicy) -> Self {
         self.alloc_cache = alloc_cache;
         self
     }
 
     /// Builder: replace the calibration-probe cadence (must be ≥ 1).
+    #[deprecated(note = "use the TrafficConfigBuilder method probe_every(..)")]
     pub fn with_probe_every(mut self, probe_every: usize) -> Self {
         self.probe_every = probe_every;
         self
     }
 
     /// Builder: replace the streaming slack policy.
+    #[deprecated(note = "use the TrafficConfigBuilder method slack_policy(..)")]
     pub fn with_slack_policy(mut self, slack: SlackPolicy) -> Self {
         self.slack = slack;
         self
@@ -247,11 +323,156 @@ impl TrafficConfig {
 
     /// Builder: stream every class's load through `rounds` coded
     /// sub-batches ([`JobClass::with_rounds`] per class; 1 = atomic).
+    #[deprecated(note = "use the TrafficConfigBuilder method rounds(..)")]
     pub fn with_rounds(mut self, rounds: usize) -> Self {
         for c in &mut self.classes {
             c.rounds = rounds;
         }
         self
+    }
+}
+
+/// A traffic config rejected by validation. Returned by
+/// [`TrafficConfigBuilder::build`] and [`TrafficConfig::validate_for`]
+/// (which [`super::Runner`] surfaces through `RunError`) — the typed
+/// replacement for the engine's historical assertion failures. Display
+/// messages deliberately contain the same key phrases as the old asserts so
+/// panic-message pins keep matching through the legacy wrappers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// The class mix is empty.
+    NoClasses,
+    /// `probe_every` is 0 (the cadence must be ≥ 1).
+    ProbeEveryZero,
+    /// The churn model has a non-finite or negative field.
+    Churn(String),
+    /// A class weight is non-finite or non-positive.
+    BadWeight { class: usize, weight: f64 },
+    /// The class weights sum to a non-finite or non-positive total.
+    BadWeightSum(f64),
+    /// A class declares zero streaming rounds.
+    BadRounds { class: usize },
+    /// Streaming rounds on a non-counting coding scheme.
+    NonCountingRounds { class: usize },
+    /// A class geometry's `n` disagrees with the cluster size.
+    GeometryMismatch {
+        class: usize,
+        class_n: usize,
+        cluster_n: usize,
+    },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoClasses => write!(f, "at least one job class required"),
+            ConfigError::ProbeEveryZero => write!(f, "probe_every must be ≥ 1"),
+            ConfigError::Churn(msg) => write!(f, "churn model: {msg}"),
+            ConfigError::BadWeight { class, weight } => write!(
+                f,
+                "class {class} weight must be finite and positive: {weight}"
+            ),
+            ConfigError::BadWeightSum(sum) => write!(
+                f,
+                "class weights must have a finite positive sum: {sum}"
+            ),
+            ConfigError::BadRounds { class } => {
+                write!(f, "class {class} rounds must be ≥ 1")
+            }
+            ConfigError::NonCountingRounds { class } => write!(
+                f,
+                "class {class}: streaming rounds require a counting scheme (Lagrange or an \
+                 explicit counting threshold): repetition chunks are not pairwise distinct, \
+                 so partial rounds cannot be credited toward K*"
+            ),
+            ConfigError::GeometryMismatch {
+                class,
+                class_n,
+                cluster_n,
+            } => write!(
+                f,
+                "class {class} geometry n must match the cluster: n = {class_n}, \
+                 cluster = {cluster_n}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Validated builder for [`TrafficConfig`]: the consolidation of the
+/// deprecated `with_*` setters. Setters only store; [`Self::build`] runs
+/// the intrinsic validation exactly once and returns a typed
+/// [`ConfigError`] — no more late panics from half-validated configs.
+#[derive(Clone, Debug)]
+pub struct TrafficConfigBuilder {
+    cfg: TrafficConfig,
+}
+
+impl TrafficConfigBuilder {
+    /// Replace the whole class mix (weights, deadlines, geometries).
+    pub fn classes(mut self, classes: Vec<JobClass>) -> Self {
+        self.cfg.classes = classes;
+        self
+    }
+
+    /// Cap on concurrently served jobs; 0 = unbounded (worker-limited).
+    pub fn max_in_flight(mut self, max_in_flight: usize) -> Self {
+        self.cfg.max_in_flight = max_in_flight;
+        self
+    }
+
+    /// Where each job's deadline window is anchored.
+    pub fn deadline_from(mut self, deadline_from: DeadlineFrom) -> Self {
+        self.cfg.deadline_from = deadline_from;
+        self
+    }
+
+    /// Replace the churn process.
+    pub fn churn(mut self, churn: ChurnModel) -> Self {
+        self.cfg.churn = churn;
+        self
+    }
+
+    /// Replace the churn rejoin speed-sampling policy.
+    pub fn rejoin_speeds(mut self, rejoin_speeds: RejoinSpeeds) -> Self {
+        self.cfg.rejoin_speeds = rejoin_speeds;
+        self
+    }
+
+    /// Replace the dispatch-path allocation-cache policy.
+    pub fn alloc_cache(mut self, alloc_cache: AllocCachePolicy) -> Self {
+        self.cfg.alloc_cache = alloc_cache;
+        self
+    }
+
+    /// Replace the calibration-probe cadence (must be ≥ 1).
+    pub fn probe_every(mut self, probe_every: usize) -> Self {
+        self.cfg.probe_every = probe_every;
+        self
+    }
+
+    /// Replace the streaming slack policy.
+    pub fn slack_policy(mut self, slack: SlackPolicy) -> Self {
+        self.cfg.slack = slack;
+        self
+    }
+
+    /// Stream every class's load through `rounds` coded sub-batches
+    /// ([`JobClass`]`::rounds` per class; 1 = atomic).
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        for c in &mut self.cfg.classes {
+            c.rounds = rounds;
+        }
+        self
+    }
+
+    /// Validate once and hand out the config ([`TrafficConfig::validate`];
+    /// the cluster-dependent geometry check runs at run entry, where a
+    /// concrete fleet exists).
+    pub fn build(self) -> Result<TrafficConfig, ConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -299,41 +520,17 @@ pub(crate) fn pick_class(rng: &mut Rng, classes: &[JobClass]) -> usize {
     classes.len() - 1
 }
 
-/// Validate a traffic config against a cluster (shared by the single- and
-/// multi-cluster entry points).
+/// Validate a traffic config against a cluster (shared by the legacy
+/// single- and multi-cluster entry points). The checks themselves live in
+/// [`TrafficConfig::validate_for`] — this is the assert-style shim the
+/// deprecated wrappers keep; [`super::Runner`] returns the same
+/// [`ConfigError`] as a typed error instead.
 pub(crate) fn validate_config(cfg: &TrafficConfig, cluster: &SimCluster) {
-    assert!(!cfg.classes.is_empty(), "at least one job class required");
-    assert!(cfg.probe_every >= 1, "probe_every must be ≥ 1");
-    cfg.churn.validate();
-    let mut weight_sum = 0.0;
-    for c in &cfg.classes {
-        assert_eq!(
-            c.scheme.geometry.n,
-            cluster.n(),
-            "class geometry n must match the cluster"
-        );
-        // A non-finite weight would poison `pick_class`: with a NaN total
-        // every `u <= 0.0` comparison is false and ALL arrivals silently
-        // route to the last class. Reject it here, where struct-literal
-        // configs (which bypass `JobClass::new`) also pass through.
-        assert!(
-            c.weight.is_finite() && c.weight > 0.0,
-            "class weight must be finite and positive: {}",
-            c.weight
-        );
-        weight_sum += c.weight;
-        assert!(c.rounds >= 1, "class rounds must be ≥ 1");
-        assert!(
-            c.rounds == 1 || c.scheme.is_counting(),
-            "streaming rounds require a counting scheme (Lagrange or an \
-             explicit counting threshold): repetition chunks are not pairwise \
-             distinct, so partial rounds cannot be credited toward K*"
-        );
+    if let Err(e) = cfg.validate_for(cluster) {
+        // lint:allow(R4): legacy assert-style entry point — the Runner path
+        // surfaces the identical ConfigError as a Result instead.
+        panic!("invalid traffic config: {e}");
     }
-    assert!(
-        weight_sum.is_finite() && weight_sum > 0.0,
-        "class weights must have a finite positive sum: {weight_sum}"
-    );
 }
 
 /// Run one traffic simulation to completion and return its metrics.
@@ -343,13 +540,15 @@ pub(crate) fn validate_config(cfg: &TrafficConfig, cluster: &SimCluster) {
 /// engine's own randomness (arrival gaps, class mix) — the cluster carries
 /// its own RNG, exactly as in `sim::runner::run`, and the churn process a
 /// third, so enabling churn never perturbs the other two streams.
+#[deprecated(note = "use traffic::Runner::new(Topology::Single, Backend::Sequential).run_one(..)")]
 pub fn run_traffic(
     strategy: &mut dyn Strategy,
     cluster: &mut SimCluster,
     cfg: &TrafficConfig,
     seed: u64,
 ) -> TrafficMetrics {
-    run_traffic_traced(strategy, cluster, cfg, seed, TraceSink::Off).0
+    validate_config(cfg, cluster);
+    run_single_traced(strategy, cluster, cfg, seed, TraceSink::Off).0
 }
 
 /// [`run_traffic`] with a [`TraceSink`] attached: the sink records the full
@@ -357,6 +556,7 @@ pub fn run_traffic(
 /// returned metrics are byte-identical to the untraced run with any sink
 /// (pinned in `tests/determinism.rs`). The sink comes back with whatever it
 /// captured.
+#[deprecated(note = "use traffic::Runner::new(Topology::Single, Backend::Sequential).run_one(..)")]
 pub fn run_traffic_traced(
     strategy: &mut dyn Strategy,
     cluster: &mut SimCluster,
@@ -365,6 +565,19 @@ pub fn run_traffic_traced(
     trace: TraceSink,
 ) -> (TrafficMetrics, TraceSink) {
     validate_config(cfg, cluster);
+    run_single_traced(strategy, cluster, cfg, seed, trace)
+}
+
+/// The shared single-cluster implementation behind the deprecated wrappers
+/// and [`super::Runner`]: assumes the config is already validated against
+/// the cluster (`validate_config` / [`TrafficConfig::validate_for`]).
+pub(crate) fn run_single_traced(
+    strategy: &mut dyn Strategy,
+    cluster: &mut SimCluster,
+    cfg: &TrafficConfig,
+    seed: u64,
+    trace: TraceSink,
+) -> (TrafficMetrics, TraceSink) {
     let engine = Engine {
         cfg,
         rng: Rng::new(seed),
@@ -1561,6 +1774,19 @@ mod tests {
         SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
     }
 
+    /// Local non-deprecated twin of the legacy entry point (shadows the
+    /// glob-imported deprecated wrapper, which stays pinned byte-identical
+    /// in tests/determinism.rs).
+    fn run_traffic(
+        strategy: &mut dyn Strategy,
+        cluster: &mut SimCluster,
+        cfg: &TrafficConfig,
+        seed: u64,
+    ) -> TrafficMetrics {
+        validate_config(cfg, cluster);
+        run_single_traced(strategy, cluster, cfg, seed, TraceSink::Off).0
+    }
+
     fn overload_cfg(policy: Policy, jobs: u64) -> TrafficConfig {
         // ~2 jobs/sec against a server that needs d = 1s of most of the
         // cluster per job: heavily overloaded.
@@ -1582,14 +1808,10 @@ mod tests {
     ) -> TrafficMetrics {
         let mut lea = Lea::with_rejoin(fig3_load_params(), rejoin);
         let mut cl = cluster(seed);
-        let cfg = TrafficConfig::single_class(
-            jobs,
-            Arrivals::poisson(0.6),
-            1.0,
-            fig3_geometry(),
-            policy,
-        )
-        .with_churn(churn);
+        let cfg = TrafficConfig::builder(jobs, Arrivals::poisson(0.6), 1.0, fig3_geometry(), policy)
+            .churn(churn)
+            .build()
+            .unwrap();
         run_traffic(&mut lea, &mut cl, &cfg, seed ^ 0xA5)
     }
 
@@ -1646,7 +1868,11 @@ mod tests {
         let run_with = |probe_every: usize| {
             let mut lea = Lea::new(fig3_load_params());
             let mut cl = cluster(21);
-            let cfg = overload_cfg(Policy::EdfFeasible, 400).with_probe_every(probe_every);
+            let cfg = overload_cfg(Policy::EdfFeasible, 400)
+                .into_builder()
+                .probe_every(probe_every)
+                .build()
+                .unwrap();
             run_traffic(&mut lea, &mut cl, &cfg, 21)
         };
         let dense = run_with(1);
@@ -1688,7 +1914,11 @@ mod tests {
         let run_with = |policy: AllocCachePolicy| {
             let mut lea = Lea::new(fig3_load_params());
             let mut cl = cluster(77);
-            let cfg = overload_cfg(Policy::EdfFeasible, 400).with_alloc_cache(policy);
+            let cfg = overload_cfg(Policy::EdfFeasible, 400)
+                .into_builder()
+                .alloc_cache(policy)
+                .build()
+                .unwrap();
             run_traffic(&mut lea, &mut cl, &cfg, 77)
         };
         let off = run_with(AllocCachePolicy::Off);
@@ -1936,14 +2166,16 @@ mod tests {
         // replaced) must not free the slot, and a QueueExpiry for a job
         // already in service must not settle it. Exercised directly on a
         // ClusterCore with a scratch event queue as the sink.
-        let cfg = TrafficConfig::single_class(
+        let cfg = TrafficConfig::builder(
             0,
             Arrivals::Fixed(0.0),
             1.0,
             fig3_geometry(),
             Policy::AdmitAll,
         )
-        .with_churn(ChurnModel::spot(0.1, 0.2));
+        .churn(ChurnModel::spot(0.1, 0.2))
+        .build()
+        .unwrap();
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(1);
         let mut sink = EventQueue::new();
@@ -2068,15 +2300,17 @@ mod tests {
         let run_with = |rejoin_speeds: RejoinSpeeds| {
             let mut lea = Lea::with_rejoin(fig3_load_params(), RejoinPolicy::Carryover);
             let mut cl = cluster(55);
-            let cfg = TrafficConfig::single_class(
+            let cfg = TrafficConfig::builder(
                 500,
                 Arrivals::poisson(0.6),
                 1.0,
                 fig3_geometry(),
                 Policy::AdmitAll,
             )
-            .with_churn(churn)
-            .with_rejoin_speeds(rejoin_speeds);
+            .churn(churn)
+            .rejoin_speeds(rejoin_speeds)
+            .build()
+            .unwrap();
             run_traffic(&mut lea, &mut cl, &cfg, 55).to_json().to_string()
         };
         let keep = run_with(RejoinSpeeds::Keep);
@@ -2108,15 +2342,17 @@ mod tests {
     }
 
     fn stream_cfg(rounds: usize, slack: SlackPolicy, rate: f64, jobs: u64) -> TrafficConfig {
-        TrafficConfig::single_class(
+        TrafficConfig::builder(
             jobs,
             Arrivals::poisson(rate),
             1.0,
             fig3_geometry(),
             Policy::EdfFeasible,
         )
-        .with_rounds(rounds)
-        .with_slack_policy(slack)
+        .rounds(rounds)
+        .slack_policy(slack)
+        .build()
+        .unwrap()
     }
 
     fn run_stream(cfg: &TrafficConfig, seed: u64) -> TrafficMetrics {
@@ -2133,8 +2369,11 @@ mod tests {
         let atomic = run_stream(&overload_cfg(Policy::EdfFeasible, 400), 19);
         let one = run_stream(
             &overload_cfg(Policy::EdfFeasible, 400)
-                .with_rounds(1)
-                .with_slack_policy(SlackPolicy::Squeeze),
+                .into_builder()
+                .rounds(1)
+                .slack_policy(SlackPolicy::Squeeze)
+                .build()
+                .unwrap(),
             19,
         );
         assert_eq!(atomic.to_json().to_string(), one.to_json().to_string());
@@ -2191,7 +2430,11 @@ mod tests {
         // rounds must be excluded, delivered prefixes must stay banked, and
         // only the undelivered remainder counts as lost work.
         for slack in SlackPolicy::all() {
-            let cfg = stream_cfg(4, slack, 0.6, 500).with_churn(ChurnModel::spot(0.4, 2.0));
+            let cfg = stream_cfg(4, slack, 0.6, 500)
+                .into_builder()
+                .churn(ChurnModel::spot(0.4, 2.0))
+                .build()
+                .unwrap();
             let m = run_stream(&cfg, 77);
             assert_eq!(m.arrivals, 500, "{}", slack.name());
             assert_eq!(
@@ -2359,14 +2602,14 @@ mod tests {
             k: 4,
             deg_f: 5,
         };
-        let cfg = TrafficConfig::single_class(
-            10,
-            Arrivals::poisson(1.0),
-            1.0,
-            geo,
-            Policy::AdmitAll,
-        )
-        .with_rounds(2);
+        // Field mutation instead of the builder: `build()` would reject this
+        // config up front (ConfigError::NonCountingRounds) — here the run
+        // entry's own validation is the thing under test.
+        let mut cfg =
+            TrafficConfig::single_class(10, Arrivals::poisson(1.0), 1.0, geo, Policy::AdmitAll);
+        for c in &mut cfg.classes {
+            c.rounds = 2;
+        }
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(3);
         run_traffic(&mut lea, &mut cl, &cfg, 3);

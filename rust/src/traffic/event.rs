@@ -117,6 +117,192 @@ impl EventQueue {
     }
 }
 
+/// Bucket count of the calendar wheel (days held concurrently).
+const WHEEL_DAYS: usize = 256;
+
+/// Default bucket width in virtual seconds. A poor fit costs only scan
+/// time, never correctness — far-future events overflow into a sorted
+/// list and migrate back as the cursor advances.
+const DEFAULT_DAY_WIDTH: f64 = 0.25;
+
+/// Calendar-queue / timer-wheel event queue for the parallel shard runtime
+/// ([`crate::traffic::runtime`]): the per-shard replacement for the global
+/// [`EventQueue`] heap.
+///
+/// Near-future events (within `WHEEL_DAYS` buckets of the cursor) go into
+/// the wheel bucket of their "day" (`floor(time / width)`); far-future
+/// events wait in an overflow list kept sorted descending by `(time, seq)`
+/// (pop-from-back = earliest) and migrate into the wheel as the cursor
+/// advances. Pop order is exactly the heap's: strictly increasing
+/// `(time, seq)`, with `seq` assigned per push — so a shard draining this
+/// queue replays the global event order restricted to that shard.
+///
+/// One bucket can temporarily hold several days (day `d` and `d + k·256`
+/// collide); the dequeue scan therefore filters by day before taking the
+/// bucket minimum, which keeps the earliest-day-first guarantee exact.
+#[derive(Debug)]
+pub(crate) struct CalendarQueue {
+    /// `buckets[d % WHEEL_DAYS]` holds events of day `d` for days in
+    /// `[cursor_day, cursor_day + WHEEL_DAYS)` (plus colliding later days).
+    buckets: Vec<Vec<Event>>,
+    width: f64,
+    /// Lowest day that may still hold events; never retreats.
+    cursor_day: u64,
+    /// Events currently in the wheel (vs the overflow list).
+    wheel_len: usize,
+    /// Far-future events, sorted descending by `(time, seq)`.
+    overflow: Vec<Event>,
+    seq: u64,
+    len: usize,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl CalendarQueue {
+    pub(crate) fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..WHEEL_DAYS).map(|_| Vec::new()).collect(),
+            width: DEFAULT_DAY_WIDTH,
+            cursor_day: 0,
+            wheel_len: 0,
+            overflow: Vec::new(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    /// The seq the NEXT push will get — the frontier watermark the parallel
+    /// runtime records before admitting an arrival.
+    pub(crate) fn next_seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    fn day(&self, time: f64) -> u64 {
+        // Saturating float→int cast; event times are finite and ≥ 0.
+        (time / self.width) as u64
+    }
+
+    /// Schedule `kind` at `time`; later pushes at the same time fire later
+    /// (identical contract to [`EventQueue::push`]).
+    pub(crate) fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "event time must be finite: {time}");
+        let e = Event {
+            time,
+            seq: self.seq,
+            kind,
+        };
+        self.seq += 1;
+        self.len += 1;
+        let d = self.day(time).max(self.cursor_day);
+        if d < self.cursor_day + WHEEL_DAYS as u64 {
+            self.buckets[(d % WHEEL_DAYS as u64) as usize].push(e);
+            self.wheel_len += 1;
+        } else {
+            let key = (time, e.seq);
+            let at = self
+                .overflow
+                .partition_point(|o| o.time.total_cmp(&key.0).then(o.seq.cmp(&key.1)).is_gt());
+            self.overflow.insert(at, e);
+        }
+    }
+
+    /// Move overflow events whose day entered the wheel window.
+    fn migrate(&mut self) {
+        let limit = self.cursor_day + WHEEL_DAYS as u64;
+        while let Some(e) = self.overflow.last() {
+            let d = self.day(e.time);
+            if d >= limit {
+                break;
+            }
+            let e = match self.overflow.pop() {
+                Some(e) => e,
+                None => break,
+            };
+            self.buckets[(d.max(self.cursor_day) % WHEEL_DAYS as u64) as usize].push(e);
+            self.wheel_len += 1;
+        }
+    }
+
+    /// Locate the minimum-key event: advance the cursor to its day and
+    /// return `(bucket, index)`.
+    fn find_min(&mut self) -> Option<(usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.wheel_len == 0 {
+            // Everything pending is far-future: jump the cursor straight to
+            // the earliest overflow day instead of sweeping empty buckets.
+            let d = self.day(self.overflow.last()?.time);
+            self.cursor_day = self.cursor_day.max(d);
+        }
+        self.migrate();
+        for step in 0..WHEEL_DAYS {
+            let d = self.cursor_day + step as u64;
+            let b = (d % WHEEL_DAYS as u64) as usize;
+            let mut best: Option<usize> = None;
+            for (i, e) in self.buckets[b].iter().enumerate() {
+                if self.day(e.time).max(self.cursor_day) != d {
+                    continue;
+                }
+                best = match best {
+                    Some(j)
+                        if self.buckets[b][j]
+                            .time
+                            .total_cmp(&e.time)
+                            .then(self.buckets[b][j].seq.cmp(&e.seq))
+                            .is_le() =>
+                    {
+                        Some(j)
+                    }
+                    _ => Some(i),
+                };
+            }
+            if let Some(i) = best {
+                self.cursor_day = d;
+                return Some((b, i));
+            }
+        }
+        unreachable!("calendar-queue invariant: wheel events live within the window");
+    }
+
+    /// Pop the earliest event, like [`EventQueue::pop`].
+    pub(crate) fn pop(&mut self) -> Option<Event> {
+        self.pop_before(None)
+    }
+
+    /// Pop the earliest event strictly below the `(time, seq)` bound, if
+    /// any — the frontier-bounded drain of the parallel shard runtime.
+    /// `None` bound = unbounded.
+    pub(crate) fn pop_before(&mut self, bound: Option<(f64, u64)>) -> Option<Event> {
+        let (b, i) = self.find_min()?;
+        let e = self.buckets[b][i];
+        if let Some((bt, bs)) = bound {
+            let below = e.time < bt || (e.time == bt && e.seq < bs);
+            if !below {
+                return None;
+            }
+        }
+        self.buckets[b].swap_remove(i);
+        self.wheel_len -= 1;
+        self.len -= 1;
+        Some(e)
+    }
+}
+
+impl super::engine::EventSink for CalendarQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        CalendarQueue::push(self, time, kind);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +357,103 @@ mod tests {
     fn rejects_non_finite_times() {
         let mut q = EventQueue::new();
         q.push(f64::INFINITY, EventKind::Arrival);
+    }
+
+    /// Deterministic pseudo-random times without depending on util::rng:
+    /// SplitMix64 mapped into [0, span).
+    fn scramble(i: u64, span: f64) -> f64 {
+        let mut z = i.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64 * span
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_a_scrambled_schedule() {
+        // Mix near-term and far-future times so the overflow list, cursor
+        // jumps, and bucket collisions (day and day + 256) all exercise.
+        let mut heap = EventQueue::new();
+        let mut cal = CalendarQueue::new();
+        let mut push = |t: f64, k: EventKind, h: &mut EventQueue, c: &mut CalendarQueue| {
+            h.push(t, k);
+            c.push(t, k);
+        };
+        for i in 0..200u64 {
+            let span = if i % 7 == 0 { 5_000.0 } else { 40.0 };
+            push(
+                scramble(i, span),
+                EventKind::Resolve { job: i },
+                &mut heap,
+                &mut cal,
+            );
+        }
+        // Tie cluster at one instant to check seq ordering across backends.
+        for j in 0..5u64 {
+            push(
+                13.25,
+                EventKind::Release {
+                    worker: j as usize,
+                    gen: j,
+                },
+                &mut heap,
+                &mut cal,
+            );
+        }
+        assert_eq!(cal.len(), 205);
+        // Interleave draining with fresh pushes (as the engine does).
+        let mut popped = 0usize;
+        while let Some(he) = heap.pop() {
+            let ce = cal.pop().expect("calendar ran dry before the heap");
+            assert_eq!((he.time, he.kind), (ce.time, ce.kind), "at pop {popped}");
+            popped += 1;
+            if popped % 17 == 0 {
+                // New events never precede the current instant.
+                let t = he.time + scramble(popped as u64, 600.0);
+                push(t, EventKind::Arrival, &mut heap, &mut cal);
+            }
+        }
+        assert_eq!(cal.pop(), None);
+        assert_eq!(cal.len(), 0);
+    }
+
+    #[test]
+    fn calendar_pop_before_respects_the_frontier_bound() {
+        let mut q = CalendarQueue::new();
+        q.push(1.0, EventKind::Arrival); // seq 0
+        q.push(2.0, EventKind::Arrival); // seq 1
+        q.push(2.0, EventKind::Resolve { job: 0 }); // seq 2
+        assert_eq!(q.next_seq(), 3);
+        // Strictly-before-time bound.
+        assert_eq!(q.pop_before(Some((2.0, 0))).unwrap().time, 1.0);
+        assert_eq!(q.pop_before(Some((2.0, 0))), None);
+        // Same-time events drain only below the seq watermark.
+        assert_eq!(q.pop_before(Some((2.0, 2))).unwrap().seq, 1);
+        assert_eq!(q.pop_before(Some((2.0, 2))), None);
+        assert_eq!(q.pop_before(None).unwrap().seq, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn calendar_handles_far_future_then_near_refill() {
+        // Drain a far-future event (cursor jumps ahead), then push at that
+        // later era and keep ordering.
+        let mut q = CalendarQueue::new();
+        q.push(10_000.0, EventKind::Arrival);
+        q.push(0.5, EventKind::Resolve { job: 1 });
+        assert_eq!(q.pop().unwrap().time, 0.5);
+        assert_eq!(q.pop().unwrap().time, 10_000.0);
+        q.push(10_000.25, EventKind::Resolve { job: 2 });
+        q.push(10_000.125, EventKind::Resolve { job: 3 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Resolve { job: 3 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Resolve { job: 2 });
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn calendar_rejects_non_finite_times() {
+        let mut q = CalendarQueue::new();
+        q.push(f64::NAN, EventKind::Arrival);
     }
 }

@@ -62,6 +62,92 @@ impl QueueOrder {
     }
 }
 
+/// Frontier discipline of the parallel shard runtime
+/// ([`crate::traffic::runtime`]): each router message carries a clearance
+/// `(time, seq-watermark)` up to which the shard may drain its local queue,
+/// and clearances must only ever advance. This guard asserts both halves —
+/// monotone clearances and no event processed at or past the current
+/// clearance — so a protocol bug fails loudly in debug builds instead of
+/// silently desynchronizing a shard from the sequential replay.
+///
+/// Zero-sized (and every call a no-op) in release builds.
+#[derive(Debug, Default)]
+pub struct FrontierGuard {
+    #[cfg(debug_assertions)]
+    clearance: Option<(f64, u64)>,
+    #[cfg(debug_assertions)]
+    released: bool,
+}
+
+impl FrontierGuard {
+    pub fn new() -> Self {
+        FrontierGuard::default()
+    }
+
+    /// Record a newly negotiated clearance. Panics (debug builds) if it
+    /// regresses: the router hands out frontiers in nondecreasing
+    /// `(time, watermark)` order, and a shard never travels back.
+    #[inline]
+    pub fn advance(&mut self, time: f64, watermark: u64) {
+        #[cfg(debug_assertions)]
+        {
+            debug_assert!(!self.released, "frontier advanced after final release");
+            if let Some((lt, lw)) = self.clearance {
+                let ordered = time > lt || (time == lt && watermark >= lw);
+                debug_assert!(
+                    ordered,
+                    "frontier regressed: clearance ({time}, {watermark}) after ({lt}, {lw})"
+                );
+            }
+            self.clearance = Some((time, watermark));
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = (time, watermark);
+        }
+    }
+
+    /// Lift the clearance for the final drain (after the router's `Finish`
+    /// message, when no further cross-shard event can arrive).
+    #[inline]
+    pub fn release(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            self.released = true;
+        }
+    }
+
+    /// Assert one locally processed event sits strictly below the current
+    /// clearance (or that the frontier was released).
+    #[inline]
+    pub fn check(&self, time: f64, seq: u64) {
+        #[cfg(debug_assertions)]
+        {
+            if self.released {
+                return;
+            }
+            match self.clearance {
+                Some((ct, cw)) => {
+                    let below = time < ct || (time == ct && seq < cw);
+                    debug_assert!(
+                        below,
+                        "shard processed event ({time}, {seq}) at or past the \
+                         frontier clearance ({ct}, {cw})"
+                    );
+                }
+                None => debug_assert!(
+                    false,
+                    "shard processed event ({time}, {seq}) before any frontier clearance"
+                ),
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = (time, seq);
+        }
+    }
+}
+
 /// A `Release` event's generation tag must not outrun its worker slot:
 /// tags are stamped from the slot at scheduling time and slot generations
 /// only ever grow, so `event_gen > slot_gen` means a corrupted tag or a
@@ -136,6 +222,44 @@ mod tests {
     #[should_panic(expected = "from the future")]
     fn release_gen_rejects_future_generations() {
         release_gen_fresh(2, 3);
+    }
+
+    #[test]
+    fn frontier_accepts_monotone_clearances_and_bounded_events() {
+        let mut f = FrontierGuard::new();
+        f.advance(1.0, 4);
+        f.check(0.5, 9); // earlier time: any seq is fine
+        f.check(1.0, 3); // same time, below the watermark
+        f.advance(1.0, 7); // same time, watermark grows: fine
+        f.advance(2.5, 2); // later time, watermark may reset
+        f.release();
+        f.check(99.0, 0); // unbounded after release
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "frontier regressed")]
+    fn frontier_rejects_time_regression() {
+        let mut f = FrontierGuard::new();
+        f.advance(2.0, 0);
+        f.advance(1.0, 5);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "at or past the")]
+    fn frontier_rejects_event_past_clearance() {
+        let mut f = FrontierGuard::new();
+        f.advance(1.0, 4);
+        f.check(1.0, 4);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "before any frontier")]
+    fn frontier_rejects_event_without_clearance() {
+        let f = FrontierGuard::new();
+        f.check(0.0, 0);
     }
 
     #[test]

@@ -41,6 +41,15 @@
 //!   power-of-two-choices routing and fleet-wide metrics. One shard with
 //!   round-robin routing is byte-identical to the unsharded engine.
 //!
+//! - [`runner`] — the validated front door: [`Runner`] executes any
+//!   `(`[`Topology`]`, `[`Backend`]`)` pair from one entry point, validating
+//!   exactly once and returning typed [`RunError`]s. The legacy free
+//!   functions (`run_traffic`, `run_traffic_traced`, `run_sharded`) survive
+//!   as deprecated byte-identical wrappers.
+//! - [`runtime`] — the `Backend::Parallel` engine: one OS thread per shard
+//!   group, per-shard calendar queues, frontier-synchronized arrivals, and
+//!   merge barriers that reproduce the sequential bytes exactly.
+//!
 //! The parallel scenario-grid harnesses live in
 //! [`crate::experiments::traffic`] (`lea traffic`),
 //! [`crate::experiments::churn`] (`lea churn`) and
@@ -52,13 +61,20 @@ pub mod event;
 pub mod invariants;
 pub mod job;
 pub mod metrics;
+pub mod runner;
+pub mod runtime;
 pub mod shard;
 
 pub use crate::sim::churn::ChurnModel;
 pub use admission::Policy;
+#[allow(deprecated)] // lint:allow(R7): the legacy wrappers stay importable until removal
+pub use engine::{run_traffic, run_traffic_traced};
 pub use engine::{
-    run_traffic, run_traffic_traced, DeadlineFrom, RejoinSpeeds, SlackPolicy, TrafficConfig,
+    ConfigError, DeadlineFrom, RejoinSpeeds, SlackPolicy, TrafficConfig, TrafficConfigBuilder,
 };
 pub use job::{JobClass, JobFate};
 pub use metrics::TrafficMetrics;
-pub use shard::{run_sharded, FleetMetrics, RoutingPolicy, ShardConfig};
+pub use runner::{Backend, RunError, Runner, Topology};
+#[allow(deprecated)] // lint:allow(R7): the legacy wrapper stays importable until removal
+pub use shard::run_sharded;
+pub use shard::{FleetMetrics, RoutingPolicy, ShardConfig};

@@ -1,0 +1,397 @@
+//! The validated front door of the traffic layer: one entry point for every
+//! `(topology, backend)` combination, replacing the legacy free-function
+//! trio `run_traffic` / `run_traffic_traced` / `run_sharded`.
+//!
+//! ```text
+//! Runner::new(Topology::Sharded { shards: 16, routing: RoutingPolicy::Jsq },
+//!             Backend::Parallel { threads: 8 })
+//!     .run(&mut strategies, &mut clusters, &cfg, seed, &mut trace)?
+//! ```
+//!
+//! The Runner validates EXACTLY ONCE per run — the builder-level checks
+//! ([`TrafficConfig::validate`]), the fleet shape ([`ShardConfig::validate`]),
+//! the seat count, and the per-cluster geometry fit
+//! ([`TrafficConfig::validate_for`]) — and returns a typed [`RunError`]
+//! instead of panicking. Past validation, every backend is byte-identical
+//! for the same `(topology, cfg, seed)`: `Backend::Parallel` is pinned
+//! bit-for-bit against `Backend::Sequential` in `tests/determinism.rs`, so
+//! backend choice is a pure wall-clock decision.
+
+use super::engine::{run_single_traced, ConfigError, TrafficConfig};
+use super::metrics::TrafficMetrics;
+use super::runtime::run_parallel;
+use super::shard::{run_sharded_traced, FleetMetrics, RoutingPolicy, ShardConfig};
+use crate::obs::trace::TraceSink;
+use crate::scheduler::strategy::Strategy;
+use crate::sim::cluster::SimCluster;
+
+/// How many clusters sit behind the router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// One cluster, no router — the unsharded engine.
+    Single,
+    /// C independent clusters behind a routing policy.
+    Sharded {
+        shards: usize,
+        routing: RoutingPolicy,
+    },
+}
+
+/// Which execution engine advances the simulation. Both produce the same
+/// bytes; `Parallel` trades threads for wall-clock on multi-shard runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-threaded reference engine (one global event heap).
+    Sequential,
+    /// The frontier runtime ([`crate::traffic::runtime`]): shards on
+    /// dedicated OS threads, `threads` clamped to `[1, shards]`.
+    Parallel { threads: usize },
+}
+
+/// Everything [`Runner::run`] can reject before touching the engines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunError {
+    /// The traffic config failed builder-level or per-cluster validation.
+    Config(ConfigError),
+    /// The fleet shape is invalid (e.g. zero shards).
+    Fleet(String),
+    /// `strategies` / `clusters` don't match the topology's shard count.
+    SeatCount {
+        expected: usize,
+        strategies: usize,
+        clusters: usize,
+    },
+    /// [`Runner::run_one`] was called on a sharded topology.
+    TopologyMismatch,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Config(e) => write!(f, "traffic config: {e}"),
+            RunError::Fleet(msg) => write!(f, "fleet shape: {msg}"),
+            RunError::SeatCount {
+                expected,
+                strategies,
+                clusters,
+            } => write!(
+                f,
+                "topology has {expected} shard(s) but got {strategies} strategy(ies) \
+                 and {clusters} cluster(s)"
+            ),
+            RunError::TopologyMismatch => {
+                write!(f, "run_one requires Topology::Single (use run for fleets)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+impl From<ConfigError> for RunError {
+    fn from(e: ConfigError) -> Self {
+        RunError::Config(e)
+    }
+}
+
+/// A `(topology, backend)` pair ready to execute traffic configs. Cheap to
+/// build and `Copy` — construct per call site, not per program.
+#[derive(Clone, Copy, Debug)]
+pub struct Runner {
+    topology: Topology,
+    backend: Backend,
+}
+
+impl Runner {
+    pub fn new(topology: Topology, backend: Backend) -> Runner {
+        Runner { topology, backend }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Shard count implied by the topology.
+    pub fn shards(&self) -> usize {
+        match self.topology {
+            Topology::Single => 1,
+            Topology::Sharded { shards, .. } => shards,
+        }
+    }
+
+    /// The equivalent [`ShardConfig`]: `Single` maps to one shard behind
+    /// round-robin, which is byte-identical to the unsharded engine.
+    fn shard_config(&self, cfg: &TrafficConfig) -> ShardConfig {
+        let (shards, routing) = match self.topology {
+            Topology::Single => (1, RoutingPolicy::RoundRobin),
+            Topology::Sharded { shards, routing } => (shards, routing),
+        };
+        ShardConfig {
+            shards,
+            routing,
+            traffic: cfg.clone(),
+        }
+    }
+
+    /// The single validation pass: typed config errors first, then fleet
+    /// shape, seat count, and per-cluster geometry fit.
+    fn validate(
+        &self,
+        strategies: usize,
+        clusters: &[SimCluster],
+        cfg: &TrafficConfig,
+    ) -> Result<ShardConfig, RunError> {
+        cfg.validate()?;
+        let scfg = self.shard_config(cfg);
+        scfg.validate().map_err(RunError::Fleet)?;
+        if strategies != scfg.shards || clusters.len() != scfg.shards {
+            return Err(RunError::SeatCount {
+                expected: scfg.shards,
+                strategies,
+                clusters: clusters.len(),
+            });
+        }
+        for cluster in clusters {
+            cfg.validate_for(cluster)?;
+        }
+        Ok(scfg)
+    }
+
+    /// Run the full fleet: `strategies[s]` / `clusters[s]` seat shard s.
+    /// Metrics and trace bytes depend on `(topology, cfg, seed)` only —
+    /// never on the backend.
+    pub fn run(
+        &self,
+        strategies: &mut [Box<dyn Strategy>],
+        clusters: &mut [SimCluster],
+        cfg: &TrafficConfig,
+        seed: u64,
+        trace: &mut TraceSink,
+    ) -> Result<FleetMetrics, RunError> {
+        let scfg = self.validate(strategies.len(), clusters, cfg)?;
+        match (self.topology, self.backend) {
+            (Topology::Single, Backend::Sequential) => {
+                // The single engine records into the caller's sink directly
+                // (streaming included); swap it through by value.
+                let sink = std::mem::take(trace);
+                let (m, sink) =
+                    run_single_traced(&mut *strategies[0], &mut clusters[0], cfg, seed, sink);
+                *trace = sink;
+                Ok(FleetMetrics::from_single(m))
+            }
+            (_, Backend::Sequential) => {
+                Ok(run_sharded_traced(strategies, clusters, &scfg, seed, trace))
+            }
+            (_, Backend::Parallel { threads }) => {
+                let seats: Vec<(&mut dyn Strategy, &mut SimCluster)> = strategies
+                    .iter_mut()
+                    .zip(clusters.iter_mut())
+                    .map(|(s, c)| (&mut **s as &mut dyn Strategy, c))
+                    .collect();
+                Ok(run_parallel(seats, &scfg, seed, threads, trace))
+            }
+        }
+    }
+
+    /// Single-cluster convenience without the boxed-slice ceremony: the
+    /// direct replacement for the legacy `run_traffic(_traced)` calls.
+    /// Errors with [`RunError::TopologyMismatch`] on sharded topologies.
+    pub fn run_one(
+        &self,
+        strategy: &mut dyn Strategy,
+        cluster: &mut SimCluster,
+        cfg: &TrafficConfig,
+        seed: u64,
+        trace: &mut TraceSink,
+    ) -> Result<TrafficMetrics, RunError> {
+        if !matches!(self.topology, Topology::Single) {
+            return Err(RunError::TopologyMismatch);
+        }
+        cfg.validate()?;
+        cfg.validate_for(cluster)?;
+        match self.backend {
+            Backend::Sequential => {
+                let sink = std::mem::take(trace);
+                let (m, sink) = run_single_traced(strategy, cluster, cfg, seed, sink);
+                *trace = sink;
+                Ok(m)
+            }
+            Backend::Parallel { threads } => {
+                let scfg = ShardConfig {
+                    shards: 1,
+                    routing: RoutingPolicy::RoundRobin,
+                    traffic: cfg.clone(),
+                };
+                let mut fleet =
+                    run_parallel(vec![(strategy, cluster)], &scfg, seed, threads, trace);
+                match fleet.shards.pop() {
+                    Some(m) => Ok(m),
+                    None => unreachable!("a one-shard fleet has one metrics entry"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::TwoState;
+    use crate::scheduler::lea::Lea;
+    use crate::sim::arrivals::Arrivals;
+    use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
+    use crate::traffic::Policy;
+
+    fn cluster(seed: u64) -> SimCluster {
+        SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
+    }
+
+    fn cfg(jobs: u64) -> TrafficConfig {
+        TrafficConfig::single_class(
+            jobs,
+            Arrivals::poisson(1.1),
+            1.0,
+            fig3_geometry(),
+            Policy::EdfFeasible,
+        )
+    }
+
+    fn seats(n: usize, seed: u64) -> (Vec<Box<dyn Strategy>>, Vec<SimCluster>) {
+        let strategies = (0..n)
+            .map(|_| Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>)
+            .collect();
+        let clusters = (0..n).map(|s| cluster(seed + s as u64)).collect();
+        (strategies, clusters)
+    }
+
+    #[test]
+    fn run_one_agrees_with_run_on_a_single_topology() {
+        for backend in [Backend::Sequential, Backend::Parallel { threads: 2 }] {
+            let runner = Runner::new(Topology::Single, backend);
+            let (mut strategies, mut clusters) = seats(1, 7);
+            let fleet = runner
+                .run(&mut strategies, &mut clusters, &cfg(200), 7, &mut TraceSink::Off)
+                .expect("valid config");
+            let mut lea = Lea::new(fig3_load_params());
+            let mut cl = cluster(7);
+            let one = runner
+                .run_one(&mut lea, &mut cl, &cfg(200), 7, &mut TraceSink::Off)
+                .expect("valid config");
+            assert_eq!(fleet.shards.len(), 1);
+            assert_eq!(
+                fleet.shards[0].to_json().to_string(),
+                one.to_json().to_string(),
+                "{backend:?}"
+            );
+            assert_eq!(fleet.routed, vec![one.arrivals]);
+        }
+    }
+
+    #[test]
+    fn parallel_backend_is_byte_identical_to_sequential() {
+        let topology = Topology::Sharded {
+            shards: 3,
+            routing: RoutingPolicy::PowerOfTwo,
+        };
+        let (mut s1, mut c1) = seats(3, 13);
+        let seq = Runner::new(topology, Backend::Sequential)
+            .run(&mut s1, &mut c1, &cfg(300), 13, &mut TraceSink::Off)
+            .expect("valid config");
+        let (mut s2, mut c2) = seats(3, 13);
+        let par = Runner::new(topology, Backend::Parallel { threads: 3 })
+            .run(&mut s2, &mut c2, &cfg(300), 13, &mut TraceSink::Off)
+            .expect("valid config");
+        assert_eq!(seq.to_json().to_string(), par.to_json().to_string());
+        assert_eq!(seq.imbalance_area.to_bits(), par.imbalance_area.to_bits());
+    }
+
+    #[test]
+    fn seat_count_mismatch_is_a_typed_error() {
+        let runner = Runner::new(
+            Topology::Sharded {
+                shards: 2,
+                routing: RoutingPolicy::RoundRobin,
+            },
+            Backend::Sequential,
+        );
+        let (mut strategies, mut clusters) = seats(3, 1);
+        let err = runner
+            .run(&mut strategies, &mut clusters, &cfg(10), 1, &mut TraceSink::Off)
+            .expect_err("wrong seat count must not run");
+        assert_eq!(
+            err,
+            RunError::SeatCount {
+                expected: 2,
+                strategies: 3,
+                clusters: 3
+            }
+        );
+        assert!(err.to_string().contains("2 shard(s)"));
+    }
+
+    #[test]
+    fn invalid_configs_surface_their_typed_error() {
+        let mut bad = cfg(10);
+        bad.classes.clear();
+        let runner = Runner::new(Topology::Single, Backend::Sequential);
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(3);
+        let err = runner
+            .run_one(&mut lea, &mut cl, &bad, 3, &mut TraceSink::Off)
+            .expect_err("empty class mix must not run");
+        assert_eq!(err, RunError::Config(ConfigError::NoClasses));
+        assert!(err.to_string().contains("job class"));
+    }
+
+    #[test]
+    fn zero_shards_is_a_fleet_error() {
+        let runner = Runner::new(
+            Topology::Sharded {
+                shards: 0,
+                routing: RoutingPolicy::Jsq,
+            },
+            Backend::Sequential,
+        );
+        let err = runner
+            .run(&mut [], &mut [], &cfg(10), 1, &mut TraceSink::Off)
+            .expect_err("zero shards must not run");
+        assert!(matches!(err, RunError::Fleet(_)));
+        assert!(err.to_string().contains("≥ 1"));
+    }
+
+    #[test]
+    fn run_one_rejects_sharded_topologies() {
+        let runner = Runner::new(
+            Topology::Sharded {
+                shards: 2,
+                routing: RoutingPolicy::Jsq,
+            },
+            Backend::Sequential,
+        );
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(5);
+        let err = runner
+            .run_one(&mut lea, &mut cl, &cfg(10), 5, &mut TraceSink::Off)
+            .expect_err("sharded run_one must not run");
+        assert_eq!(err, RunError::TopologyMismatch);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_caught_per_cluster() {
+        let runner = Runner::new(Topology::Single, Backend::Sequential);
+        let mut lea = Lea::new(fig3_load_params());
+        // 9 workers, but fig3 geometry wants n = 15.
+        let mut cl = SimCluster::markov(9, TwoState::new(0.8, 0.8), fig3_speeds(), 5);
+        let err = runner
+            .run_one(&mut lea, &mut cl, &cfg(10), 5, &mut TraceSink::Off)
+            .expect_err("geometry mismatch must not run");
+        assert!(matches!(
+            err,
+            RunError::Config(ConfigError::GeometryMismatch { .. })
+        ));
+    }
+}

@@ -1,0 +1,881 @@
+//! Parallel frontier-based shard runtime: the `Backend::Parallel` engine
+//! behind [`crate::traffic::Runner`].
+//!
+//! The sequential sharded engine ([`super::shard`]) multiplexes C clusters
+//! on ONE global `(time, seq)` heap, so per-round event volume gains
+//! nothing from multicore. This module runs each shard's [`ClusterCore`]
+//! on a dedicated OS thread (several shards per thread when C > threads)
+//! and keeps the output — every metric, every trace record — byte-identical
+//! to the sequential engine. The design follows the progress-tracking idea
+//! of timely dataflow: workers never share a queue; they exchange FRONTIER
+//! messages and advance independently up to the negotiated clearance.
+//!
+//! # The frontier protocol
+//!
+//! Arrivals are the only cross-shard coupling: shard-local events (releases,
+//! expiries, resolves, rounds, churn) are scheduled by a shard's own
+//! handlers onto its own queue and never cross shards. The router (caller
+//! thread) therefore owns the arrival stream — class mix and gap draws from
+//! the engine RNG, po2 candidate draws from the dedicated routing stream —
+//! and walks it arrival by arrival. For arrival k at time `T_k` it sends
+//! every shard one `Arrive` message carrying the NEXT arrival time
+//! `T_{k+1}` (the admitted job rides along on the routed shard only). On
+//! receipt, a shard records the clearance watermark `wm = next local seq`
+//! BEFORE admitting — the exact global position at which the sequential
+//! engine pushes arrival k+1 — then admits, then drains every local event
+//! strictly below `(T_{k+1}, wm)`. Same-time ties thereby break exactly as
+//! the global heap breaks them: events scheduled before the arrival's push
+//! fire before it, events scheduled after fire after. The last arrival
+//! travels as `Finish`, which lifts the clearance for the final drain.
+//!
+//! State-aware routing (jsq/po2) needs shard state at the arrival's
+//! position; since each shard has already drained to exactly that position,
+//! the router `Probe`s the candidates (all shards for jsq, the two drawn
+//! candidates for po2) and applies the SAME decision helpers
+//! ([`super::shard::jsq_pick`] / [`super::shard::po2_decide`]) to the
+//! replies that the sequential router applies to live cores.
+//!
+//! # Byte-identical merges
+//!
+//! Per-shard metrics are already independent (each core integrates its own
+//! time series). The two fleet-level quantities that sequentially observe
+//! ALL shards at every event — the routing-imbalance integral and the event
+//! horizon — are reconstructed from per-shard step logs of
+//! `(time, load-after)` entries, replayed in ascending time order with one
+//! area contribution per distinct instant. The replay performs the same
+//! float additions with the same operands in the same order as the
+//! sequential meter, so the sums are bit-for-bit equal, not just close.
+//! Trace records merge at the end in fixed shard order via
+//! [`TraceSink::absorb`] — the identical per-shard-sink semantics the
+//! sequential sharded engine uses.
+//!
+//! # Failure behavior
+//!
+//! A panicking shard (e.g. a strategy assertion) unwinds its worker thread;
+//! the router notices the dead channel, stops dispatching, drops the
+//! channel endpoints so no surviving worker can block, joins every worker
+//! in fixed order, and re-raises the FIRST panic payload via
+//! [`std::panic::resume_unwind`] — the run fails loudly with the original
+//! payload instead of deadlocking at a barrier (`tests/runner.rs` pins
+//! this).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread;
+
+use super::engine::{pick_class, ClusterCore, TrafficConfig};
+use super::event::{CalendarQueue, EventKind};
+use super::invariants::{self, FrontierGuard, QueueOrder};
+use super::job::Job;
+use super::metrics::TrafficMetrics;
+use super::shard::{
+    jsq_pick, po2_decide, po2_draw, shard_stream_seed, FleetMetrics, RoutingPolicy, ShardConfig,
+};
+use crate::obs::profile::{HotPath, ScopedTimer};
+use crate::obs::trace::TraceSink;
+use crate::scheduler::strategy::Strategy;
+use crate::sim::cluster::SimCluster;
+use crate::util::rng::Rng;
+
+/// Router → shard control messages. One `Arrive`/`Finish` per arrival is
+/// broadcast to EVERY shard (the clearance must advance fleet-wide);
+/// `Probe` goes only to routing candidates.
+enum Msg {
+    /// Arrival k happened at `now`; the next one comes at `t_next`.
+    /// `admit` carries the job on the routed shard, `None` elsewhere.
+    Arrive {
+        now: f64,
+        t_next: f64,
+        admit: Option<Job>,
+    },
+    /// Routing probe for the arrival about to happen at `now`: reply with
+    /// `(load, score)` on the shard's reply channel. `want_score` is true
+    /// only for po2 (jsq never calls `route_score` sequentially, so the
+    /// parallel path must not either).
+    Probe {
+        now: f64,
+        class: usize,
+        want_score: bool,
+    },
+    /// The last arrival (or, with zero jobs, the bare end-of-stream):
+    /// admit if routed, then drain unbounded and finalize.
+    Finish { now: f64, admit: Option<Job> },
+}
+
+/// Per-shard step log: `(time, load AFTER the event)` for every processed
+/// event, consecutive same-time entries collapsed to the last. This is the
+/// minimal record from which the fleet-level imbalance integral and
+/// horizon replay bit-exactly (see [`replay_imbalance`]).
+#[derive(Debug, Default)]
+struct StepLog {
+    entries: Vec<(f64, usize)>,
+}
+
+impl StepLog {
+    fn record(&mut self, time: f64, load: usize) {
+        if let Some(last) = self.entries.last_mut() {
+            if last.0 == time {
+                // Same instant: only the final load matters to later
+                // spreads (intermediate ones multiply dt = 0 sequentially).
+                last.1 = load;
+                return;
+            }
+        }
+        self.entries.push((time, load));
+    }
+}
+
+/// What a shard hands back when its stream finishes.
+struct ShardOutcome {
+    metrics: TrafficMetrics,
+    trace: TraceSink,
+    log: StepLog,
+}
+
+/// One shard's worth of parallel-engine state: the core plus the local
+/// calendar queue, frontier bookkeeping, and the step log.
+struct ShardTask<'a> {
+    core: ClusterCore<'a>,
+    queue: CalendarQueue,
+    tcfg: &'a TrafficConfig,
+    jobs_total: u64,
+    /// Arrivals announced so far (`Arrive` + final `Finish` messages) —
+    /// the shard's view of the sequential engine's global `spawned`.
+    arrive_count: u64,
+    started: bool,
+    order: QueueOrder,
+    frontier: FrontierGuard,
+    log: StepLog,
+    reply: SyncSender<(usize, f64)>,
+}
+
+impl<'a> ShardTask<'a> {
+    /// First-arrival setup, idempotent: schedule the initial churn leaves
+    /// (exactly as the sequential engine does once the first arrival is
+    /// pushed) and drain everything strictly before the first arrival —
+    /// the events the global heap pops before it. The `(now, 0)` bound is
+    /// exact: the arrival holds the earliest global seq, so any local event
+    /// at the same instant fires after it.
+    fn begin(&mut self, now: f64) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        if self.tcfg.churn.is_active() {
+            self.core.schedule_initial_churn(&mut self.queue);
+        }
+        self.frontier.advance(now, 0);
+        self.drain(Some((now, 0)), 0);
+    }
+
+    /// Handle one router message; `true` once the shard is finished.
+    fn on_msg(&mut self, msg: Msg) -> bool {
+        match msg {
+            Msg::Probe {
+                now,
+                class,
+                want_score,
+            } => {
+                // The shard has drained to the arrival's exact position
+                // (previous clearance), except before the very first
+                // arrival — catch that up so probes see post-initial-churn
+                // state, as the sequential router does.
+                self.begin(now);
+                let load = self.core.load();
+                let score = if want_score {
+                    self.core.route_score(&self.tcfg.classes[class])
+                } else {
+                    0.0
+                };
+                // A dead router is handled at the next recv; drop the reply.
+                let _ = self.reply.send((load, score));
+                false
+            }
+            Msg::Arrive { now, t_next, admit } => {
+                self.begin(now);
+                // The clearance watermark is the local position at which
+                // the sequential engine pushes the NEXT arrival: after
+                // everything below this arrival, before its admission.
+                let wm = self.queue.next_seq();
+                self.arrive_count += 1;
+                if let Some(job) = admit {
+                    self.core.tick(now);
+                    self.core.admit(job, now, &mut self.queue);
+                    self.log.record(now, self.core.load());
+                }
+                self.frontier.advance(t_next, wm);
+                self.drain(Some((t_next, wm)), self.arrive_count);
+                false
+            }
+            Msg::Finish { now, admit } => {
+                if self.jobs_total > 0 {
+                    self.begin(now);
+                    self.arrive_count += 1;
+                    if let Some(job) = admit {
+                        self.core.tick(now);
+                        self.core.admit(job, now, &mut self.queue);
+                        self.log.record(now, self.core.load());
+                    }
+                }
+                // No further arrival can land: lift the clearance and run
+                // the queue dry.
+                self.frontier.release();
+                self.drain(None, self.jobs_total);
+                true
+            }
+        }
+    }
+
+    /// Drain local events strictly below `bound` (`None` = all), mirroring
+    /// the sequential event loop body: order check, post-traffic churn
+    /// drop, pre-event metrics tick, handler dispatch, step-log record.
+    fn drain(&mut self, bound: Option<(f64, u64)>, spawned: u64) {
+        while let Some(ev) = self.queue.pop_before(bound) {
+            self.order.observe(ev.time, ev.seq);
+            self.frontier.check(ev.time, ev.seq);
+            // Same rule as the sequential engines: once every arrival is
+            // settled fleet-wide and this shard is idle, remaining churn
+            // lifecycle events are post-traffic dead air.
+            if matches!(
+                ev.kind,
+                EventKind::WorkerLeave { .. } | EventKind::WorkerJoin { .. }
+            ) && spawned >= self.jobs_total
+                && self.core.jobs.is_empty()
+            {
+                continue;
+            }
+            self.core.tick(ev.time);
+            match ev.kind {
+                EventKind::Release { worker, gen } => {
+                    self.core.handle_release(worker, gen, ev.time, &mut self.queue)
+                }
+                EventKind::QueueExpiry { job } => {
+                    self.core.handle_queue_expiry(job, ev.time, &mut self.queue)
+                }
+                EventKind::Resolve { job } => {
+                    self.core.handle_resolve(job, ev.time, &mut self.queue)
+                }
+                EventKind::RoundComplete { job, part } => {
+                    self.core.handle_round(job, part, ev.time, &mut self.queue)
+                }
+                EventKind::WorkerLeave { worker } => {
+                    self.core.handle_leave(worker, ev.time, &mut self.queue)
+                }
+                EventKind::WorkerJoin { worker } => {
+                    self.core.handle_join(worker, ev.time, &mut self.queue)
+                }
+                EventKind::Arrival => unreachable!("the router owns the arrival stream"),
+            }
+            self.log.record(ev.time, self.core.load());
+        }
+    }
+
+    fn finalize(self) -> ShardOutcome {
+        debug_assert_eq!(self.queue.len(), 0, "events left after the final drain");
+        let (metrics, trace) = self.core.finish_with_trace();
+        ShardOutcome {
+            metrics,
+            trace,
+            log: self.log,
+        }
+    }
+}
+
+/// Replay the per-shard step logs into the fleet quantities the sequential
+/// [`super::shard`] engine integrates inline: the routing-imbalance area
+/// ∫ (max_s load_s − min_s load_s) dt and the event horizon.
+///
+/// The sequential meter ticks BEFORE each event's effects with `dt` since
+/// the previous event, so per distinct instant it performs exactly one
+/// nonzero accumulation, using the loads after all strictly-earlier events.
+/// The replay walks distinct instants in ascending order doing the same
+/// addition with the same operands — bit-identical, not approximately so.
+fn replay_imbalance(logs: &[StepLog]) -> (f64, f64) {
+    let shards = logs.len();
+    let mut idx = vec![0usize; shards];
+    let mut loads = vec![0usize; shards];
+    let mut last_time = 0.0f64;
+    let mut horizon = 0.0f64;
+    let mut area = 0.0f64;
+    loop {
+        // Earliest unapplied instant across every shard's log.
+        let mut next: Option<f64> = None;
+        for (s, log) in logs.iter().enumerate() {
+            if let Some(&(t, _)) = log.entries.get(idx[s]) {
+                next = Some(match next {
+                    Some(n) if n <= t => n,
+                    _ => t,
+                });
+            }
+        }
+        let Some(t) = next else { break };
+        let dt = (t - last_time).max(0.0);
+        if shards > 1 && dt > 0.0 {
+            let mut mn = usize::MAX;
+            let mut mx = 0usize;
+            for &l in &loads {
+                mn = mn.min(l);
+                mx = mx.max(l);
+            }
+            area += (mx - mn) as f64 * dt;
+        }
+        for (s, log) in logs.iter().enumerate() {
+            if let Some(&(et, load)) = log.entries.get(idx[s]) {
+                if et == t {
+                    loads[s] = load;
+                    idx[s] += 1;
+                }
+            }
+        }
+        last_time = t;
+        horizon = horizon.max(t);
+    }
+    (horizon, area)
+}
+
+/// Run the sharded traffic simulation on `threads` OS threads (clamped to
+/// `[1, shards]`), byte-identical to the sequential engine behind the same
+/// [`ShardConfig`]. Assumes the config was already validated
+/// ([`TrafficConfig::validate_for`] per cluster) — [`crate::traffic::Runner`]
+/// is the validating front door.
+pub(crate) fn run_parallel(
+    seats: Vec<(&mut dyn Strategy, &mut SimCluster)>,
+    cfg: &ShardConfig,
+    seed: u64,
+    threads: usize,
+    trace: &mut TraceSink,
+) -> FleetMetrics {
+    let shards = cfg.shards;
+    debug_assert!(shards >= 1, "shard count must be ≥ 1");
+    debug_assert_eq!(seats.len(), shards, "one (strategy, cluster) per shard");
+    let _loop_timer = ScopedTimer::start(HotPath::EventLoop);
+    let tcfg = &cfg.traffic;
+    let workers = threads.clamp(1, shards);
+
+    // Per-worker mailboxes (bounded: the router outruns shards only until
+    // the buffer fills, then pipelines against the slowest member) and
+    // per-shard probe-reply channels (capacity 1: at most one outstanding
+    // probe per shard by construction).
+    let mut mail_tx: Vec<SyncSender<(usize, Msg)>> = Vec::with_capacity(workers);
+    let mut mail_rx: Vec<Receiver<(usize, Msg)>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let (tx, rx) = sync_channel(8 * shards.div_ceil(workers) + 4);
+        mail_tx.push(tx);
+        mail_rx.push(rx);
+    }
+    let mut probe_tx: Vec<SyncSender<(usize, f64)>> = Vec::with_capacity(shards);
+    let mut probe_rx: Vec<Receiver<(usize, f64)>> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = sync_channel(1);
+        probe_tx.push(tx);
+        probe_rx.push(rx);
+    }
+
+    // Distribute seats round-robin over workers: worker w owns shards
+    // { s : s % workers == w }, each with its probe-reply sender and its
+    // derived trace sink.
+    let mut per_worker: Vec<Vec<Seat<'_>>> = (0..workers).map(|_| Vec::new()).collect();
+    for ((s, (strategy, cluster)), reply) in seats.into_iter().enumerate().zip(probe_tx) {
+        per_worker[s % workers].push((s, strategy, cluster, reply, trace.per_shard()));
+    }
+
+    let (routed, outcomes) = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for (rx, worker_seats) in mail_rx.into_iter().zip(per_worker) {
+            handles.push(scope.spawn(move || worker_loop(rx, worker_seats, tcfg, seed)));
+        }
+
+        // ---- the router, on the caller's thread ----
+        let mut rng = Rng::new(seed);
+        let mut route_rng = Rng::new(seed ^ 0x726f_7574_6532); // "route2"
+        let mut arrivals = tcfg.arrivals.clone();
+        let mut rr_next = 0usize;
+        let mut routed = vec![0u64; shards];
+        let jobs = tcfg.jobs;
+        // A failed send/recv means a worker unwound: stop dispatching and
+        // fall through to the join loop, which re-raises the panic.
+        'router: {
+            let send = |s: usize, msg: Msg| mail_tx[s % workers].send((s, msg)).is_ok();
+            if jobs == 0 {
+                for s in 0..shards {
+                    if !send(s, Msg::Finish { now: 0.0, admit: None }) {
+                        break 'router;
+                    }
+                }
+                break 'router;
+            }
+            let mut t = arrivals.sample(&mut rng).max(0.0);
+            let mut spawned = 0u64;
+            while spawned < jobs {
+                spawned += 1;
+                let class = pick_class(&mut rng, &tcfg.classes);
+                let job = Job {
+                    id: spawned,
+                    class,
+                    arrival: t,
+                    absolute_deadline: t + tcfg.classes[class].deadline,
+                };
+                // Draw the next gap BEFORE routing — the sequential engines
+                // push the next arrival before admission, and the engine
+                // RNG stream must advance in the same order.
+                let t_next = if spawned < jobs {
+                    Some(t + arrivals.sample(&mut rng).max(0.0))
+                } else {
+                    None
+                };
+                let s = match cfg.routing {
+                    RoutingPolicy::RoundRobin => {
+                        let s = rr_next;
+                        rr_next = (rr_next + 1) % shards;
+                        s
+                    }
+                    RoutingPolicy::Jsq if shards == 1 => 0,
+                    RoutingPolicy::Jsq => {
+                        let mut ok = true;
+                        for d in 0..shards {
+                            ok &= send(
+                                d,
+                                Msg::Probe {
+                                    now: t,
+                                    class,
+                                    want_score: false,
+                                },
+                            );
+                        }
+                        if !ok {
+                            break 'router;
+                        }
+                        let mut loads = Vec::with_capacity(shards);
+                        for rx in &probe_rx {
+                            let Ok((load, _)) = rx.recv() else {
+                                break 'router;
+                            };
+                            loads.push(load);
+                        }
+                        jsq_pick(&loads)
+                    }
+                    RoutingPolicy::PowerOfTwo if shards == 1 => 0,
+                    RoutingPolicy::PowerOfTwo => {
+                        let (lo, hi) = po2_draw(&mut route_rng, shards);
+                        let probe = |d: usize| {
+                            send(
+                                d,
+                                Msg::Probe {
+                                    now: t,
+                                    class,
+                                    want_score: true,
+                                },
+                            )
+                        };
+                        if !(probe(lo) && probe(hi)) {
+                            break 'router;
+                        }
+                        let (Ok((load_lo, score_lo)), Ok((load_hi, score_hi))) =
+                            (probe_rx[lo].recv(), probe_rx[hi].recv())
+                        else {
+                            break 'router;
+                        };
+                        po2_decide((lo, score_lo, load_lo), (hi, score_hi, load_hi))
+                    }
+                };
+                routed[s] += 1;
+                let mut ok = true;
+                for d in 0..shards {
+                    let admit = if d == s { Some(job.clone()) } else { None };
+                    let msg = match t_next {
+                        Some(t_next) => Msg::Arrive {
+                            now: t,
+                            t_next,
+                            admit,
+                        },
+                        None => Msg::Finish { now: t, admit },
+                    };
+                    ok &= send(d, msg);
+                }
+                if !ok {
+                    break 'router;
+                }
+                if let Some(t_next) = t_next {
+                    t = t_next;
+                }
+            }
+        }
+        // Frontier point, identical to the sequential router: the routing
+        // stream belongs to po2 alone.
+        invariants::stream_quiet(
+            "route2",
+            &route_rng,
+            matches!(cfg.routing, RoutingPolicy::PowerOfTwo) && shards > 1,
+        );
+
+        // Unblock every worker before joining: a dead mailbox ends its recv
+        // loop, a dead reply receiver unblocks a worker mid-probe.
+        drop(mail_tx);
+        drop(probe_rx);
+
+        let mut outcomes: Vec<Option<ShardOutcome>> = (0..shards).map(|_| None).collect();
+        let mut payload: Option<Box<dyn std::any::Any + Send>> = None;
+        for handle in handles {
+            match handle.join() {
+                Ok(list) => {
+                    for (s, outcome) in list {
+                        outcomes[s] = Some(outcome);
+                    }
+                }
+                // Keep the FIRST panicking worker's payload (fixed worker
+                // order → deterministic attribution).
+                Err(p) => {
+                    if payload.is_none() {
+                        payload = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+        (routed, outcomes)
+    });
+
+    let mut shard_metrics = Vec::with_capacity(shards);
+    let mut logs = Vec::with_capacity(shards);
+    for (s, slot) in outcomes.into_iter().enumerate() {
+        let Some(outcome) = slot else {
+            unreachable!("worker abandoned shard {s} without a panic to propagate");
+        };
+        trace.absorb(outcome.trace);
+        shard_metrics.push(outcome.metrics);
+        logs.push(outcome.log);
+    }
+    let (horizon, imbalance_area) = replay_imbalance(&logs);
+    FleetMetrics {
+        shards: shard_metrics,
+        routed,
+        horizon,
+        imbalance_area,
+    }
+}
+
+/// One worker's seat: shard id, its strategy/cluster borrows, probe-reply
+/// sender, and derived trace sink.
+type Seat<'a> = (
+    usize,
+    &'a mut dyn Strategy,
+    &'a mut SimCluster,
+    SyncSender<(usize, f64)>,
+    TraceSink,
+);
+
+/// Body of one worker thread: multiplex the owned shards' tasks over the
+/// mailbox until every one finished (or the router vanished — then abandon
+/// the rest; the router only vanishes when some thread is already
+/// unwinding, and its payload wins the join loop).
+fn worker_loop<'a>(
+    rx: Receiver<(usize, Msg)>,
+    seats: Vec<Seat<'a>>,
+    tcfg: &'a TrafficConfig,
+    seed: u64,
+) -> Vec<(usize, ShardOutcome)> {
+    let ids: Vec<usize> = seats.iter().map(|seat| seat.0).collect();
+    let mut tasks: Vec<Option<ShardTask<'a>>> = seats
+        .into_iter()
+        .map(|(s, strategy, cluster, reply, sink)| {
+            Some(ShardTask {
+                core: ClusterCore::new(tcfg, strategy, cluster, shard_stream_seed(seed, s))
+                    .with_shard(s)
+                    .with_trace(sink),
+                queue: CalendarQueue::new(),
+                tcfg,
+                jobs_total: tcfg.jobs,
+                arrive_count: 0,
+                started: false,
+                order: QueueOrder::new(),
+                frontier: FrontierGuard::new(),
+                log: StepLog::default(),
+                reply,
+            })
+        })
+        .collect();
+    let mut finished: Vec<(usize, ShardOutcome)> = Vec::with_capacity(tasks.len());
+    while finished.len() < tasks.len() {
+        let Ok((s, msg)) = rx.recv() else {
+            break;
+        };
+        match ids.iter().position(|&id| id == s) {
+            Some(i) => match tasks[i].as_mut() {
+                Some(task) => {
+                    if task.on_msg(msg) {
+                        if let Some(task) = tasks[i].take() {
+                            finished.push((s, task.finalize()));
+                        }
+                    }
+                }
+                None => unreachable!("router message for finished shard {s}"),
+            },
+            None => unreachable!("router message for foreign shard {s}"),
+        }
+    }
+    finished
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::markov::chain::TwoState;
+    use crate::obs::trace::TraceRecord;
+    use crate::scheduler::allocation::Allocation;
+    use crate::scheduler::lea::Lea;
+    use crate::sim::arrivals::Arrivals;
+    use crate::sim::churn::ChurnModel;
+    use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
+    use crate::traffic::shard::run_sharded_traced;
+    use crate::traffic::Policy;
+
+    fn cluster(seed: u64) -> SimCluster {
+        SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
+    }
+
+    fn fleet(shards: usize, routing: RoutingPolicy, jobs: u64, rate: f64) -> ShardConfig {
+        ShardConfig {
+            shards,
+            routing,
+            traffic: TrafficConfig::single_class(
+                jobs,
+                Arrivals::poisson(rate),
+                1.0,
+                fig3_geometry(),
+                Policy::EdfFeasible,
+            ),
+        }
+    }
+
+    fn seats_for(cfg: &ShardConfig, seed: u64) -> (Vec<Box<dyn Strategy>>, Vec<SimCluster>) {
+        let strategies: Vec<Box<dyn Strategy>> = (0..cfg.shards)
+            .map(|_| Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>)
+            .collect();
+        let clusters: Vec<SimCluster> = (0..cfg.shards)
+            .map(|s| cluster(shard_stream_seed(seed, s)))
+            .collect();
+        (strategies, clusters)
+    }
+
+    fn run_seq(cfg: &ShardConfig, seed: u64, trace: &mut TraceSink) -> FleetMetrics {
+        let (mut strategies, mut clusters) = seats_for(cfg, seed);
+        run_sharded_traced(&mut strategies, &mut clusters, cfg, seed, trace)
+    }
+
+    fn run_par(
+        cfg: &ShardConfig,
+        seed: u64,
+        threads: usize,
+        trace: &mut TraceSink,
+    ) -> FleetMetrics {
+        let (mut strategies, mut clusters) = seats_for(cfg, seed);
+        let seats: Vec<(&mut dyn Strategy, &mut SimCluster)> = strategies
+            .iter_mut()
+            .zip(clusters.iter_mut())
+            .map(|(s, c)| (&mut **s as &mut dyn Strategy, c))
+            .collect();
+        run_parallel(seats, cfg, seed, threads, trace)
+    }
+
+    fn assert_bit_identical(seq: &FleetMetrics, par: &FleetMetrics, what: &str) {
+        assert_eq!(
+            seq.to_json().to_string(),
+            par.to_json().to_string(),
+            "{what}: fleet JSON diverged"
+        );
+        assert_eq!(seq.routed, par.routed, "{what}: routing diverged");
+        assert_eq!(
+            seq.horizon.to_bits(),
+            par.horizon.to_bits(),
+            "{what}: horizon not bit-identical"
+        );
+        assert_eq!(
+            seq.imbalance_area.to_bits(),
+            par.imbalance_area.to_bits(),
+            "{what}: imbalance area not bit-identical"
+        );
+        for (s, (a, b)) in seq.shards.iter().zip(par.shards.iter()).enumerate() {
+            assert_eq!(
+                a.to_json().to_string(),
+                b.to_json().to_string(),
+                "{what}: shard {s} metrics diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn step_log_collapses_same_instant_entries() {
+        let mut log = StepLog::default();
+        log.record(1.0, 3);
+        log.record(1.0, 5); // same instant: only the final load survives
+        log.record(2.0, 4);
+        assert_eq!(log.entries, vec![(1.0, 5), (2.0, 4)]);
+    }
+
+    #[test]
+    fn replay_integrates_the_load_spread_between_instants() {
+        // Shard 0: load 2 from t=1, 0 from t=3. Shard 1: load 1 from t=2.
+        let logs = [
+            StepLog {
+                entries: vec![(1.0, 2), (3.0, 0)],
+            },
+            StepLog {
+                entries: vec![(2.0, 1)],
+            },
+        ];
+        let (horizon, area) = replay_imbalance(&logs);
+        assert_eq!(horizon, 3.0);
+        // [0,1): loads (0,0) → 0. [1,2): (2,0) → 2. [2,3): (2,1) → 1.
+        assert_eq!(area, 2.0 + 1.0);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_for_every_routing_policy() {
+        for routing in RoutingPolicy::all() {
+            let cfg = fleet(4, routing, 400, 3.0);
+            let seq = run_seq(&cfg, 11, &mut TraceSink::Off);
+            for threads in [1, 2, 4, 9] {
+                let par = run_par(&cfg, 11, threads, &mut TraceSink::Off);
+                assert_bit_identical(
+                    &seq,
+                    &par,
+                    &format!("{} @ {threads} thread(s)", routing.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_single_shard_matches_sequential() {
+        let cfg = fleet(1, RoutingPolicy::PowerOfTwo, 300, 1.2);
+        let seq = run_seq(&cfg, 23, &mut TraceSink::Off);
+        let par = run_par(&cfg, 23, 8, &mut TraceSink::Off);
+        assert_bit_identical(&seq, &par, "single shard");
+    }
+
+    #[test]
+    fn parallel_byte_identity_survives_churn() {
+        let traffic = TrafficConfig::single_class(
+            250,
+            Arrivals::poisson(2.0),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        )
+        .into_builder()
+        .churn(ChurnModel::spot(0.3, 2.0))
+        .build()
+        .unwrap();
+        let cfg = ShardConfig {
+            shards: 3,
+            routing: RoutingPolicy::Jsq,
+            traffic,
+        };
+        let seq = run_seq(&cfg, 41, &mut TraceSink::Off);
+        let par = run_par(&cfg, 41, 2, &mut TraceSink::Off);
+        assert_bit_identical(&seq, &par, "churn fleet");
+        assert!(
+            seq.shards.iter().any(|m| m.leaves > 0),
+            "churn must actually run"
+        );
+    }
+
+    #[test]
+    fn parallel_zero_jobs_is_an_empty_run() {
+        let cfg = fleet(2, RoutingPolicy::RoundRobin, 0, 1.0);
+        let seq = run_seq(&cfg, 5, &mut TraceSink::Off);
+        let par = run_par(&cfg, 5, 2, &mut TraceSink::Off);
+        assert_bit_identical(&seq, &par, "zero jobs");
+        assert_eq!(par.horizon, 0.0);
+        assert_eq!(par.routed, vec![0, 0]);
+    }
+
+    #[test]
+    fn parallel_trace_merge_matches_sequential() {
+        fn ring_records(sink: TraceSink) -> (Vec<TraceRecord>, u64) {
+            match sink {
+                TraceSink::Ring(r) => r.into_parts(),
+                _ => unreachable!("test built a ring sink"),
+            }
+        }
+        let cfg = fleet(3, RoutingPolicy::RoundRobin, 200, 2.0);
+        let mut seq_sink = TraceSink::ring(1 << 14);
+        let seq = run_seq(&cfg, 17, &mut seq_sink);
+        let mut par_sink = TraceSink::ring(1 << 14);
+        let par = run_par(&cfg, 17, 3, &mut par_sink);
+        assert_bit_identical(&seq, &par, "traced fleet");
+        let (seq_recs, seq_dropped) = ring_records(seq_sink);
+        let (par_recs, par_dropped) = ring_records(par_sink);
+        assert!(!seq_recs.is_empty(), "trace must record something");
+        assert_eq!(seq_dropped, par_dropped);
+        assert_eq!(seq_recs, par_recs, "merged trace records diverged");
+    }
+
+    /// A strategy that panics on its Nth allocation — stands in for any bug
+    /// inside a shard thread.
+    struct Grenade {
+        inner: Lea,
+        fuse: u32,
+    }
+
+    impl Strategy for Grenade {
+        fn name(&self) -> &'static str {
+            "grenade"
+        }
+        fn allocate(&mut self, rng: &mut Rng) -> Allocation {
+            if self.fuse == 0 {
+                panic!("grenade went off");
+            }
+            self.fuse -= 1;
+            self.inner.allocate(rng)
+        }
+        fn observe(&mut self, states: &[Option<crate::markov::WState>]) {
+            self.inner.observe(states);
+        }
+        fn p_good_profile(&self) -> Option<Vec<f64>> {
+            self.inner.p_good_profile()
+        }
+    }
+
+    #[test]
+    fn shard_panic_propagates_with_its_original_payload() {
+        let cfg = fleet(3, RoutingPolicy::RoundRobin, 200, 2.0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut strategies: Vec<Box<dyn Strategy>> = (0..3)
+                .map(|s| {
+                    if s == 1 {
+                        Box::new(Grenade {
+                            inner: Lea::new(fig3_load_params()),
+                            fuse: 5,
+                        }) as Box<dyn Strategy>
+                    } else {
+                        Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>
+                    }
+                })
+                .collect();
+            let mut clusters: Vec<SimCluster> =
+                (0..3).map(|s| cluster(shard_stream_seed(31, s))).collect();
+            let seats: Vec<(&mut dyn Strategy, &mut SimCluster)> = strategies
+                .iter_mut()
+                .zip(clusters.iter_mut())
+                .map(|(s, c)| (&mut **s as &mut dyn Strategy, c))
+                .collect();
+            run_parallel(seats, &cfg, 31, 3, &mut TraceSink::Off)
+        }));
+        let payload = match result {
+            Ok(_) => panic!("the shard panic was swallowed"),
+            Err(p) => p,
+        };
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("grenade went off"),
+            "panic payload was replaced: {msg:?}"
+        );
+    }
+}

@@ -43,6 +43,7 @@ use super::invariants;
 use super::job::{Job, JobClass};
 use super::metrics::{ratio, TrafficMetrics};
 use crate::obs::profile::{HotPath, ScopedTimer};
+use crate::obs::trace::TraceSink;
 use crate::scheduler::strategy::Strategy;
 use crate::sim::cluster::SimCluster;
 use crate::util::json::Json;
@@ -118,7 +119,7 @@ impl ShardConfig {
 /// grid runners' `cell_seed`). Shard 0 gets the base seed UNCHANGED — that
 /// is what makes the one-shard configuration consume the exact RNG streams
 /// of the unsharded engine; shards 1.. get decorrelated derivations.
-fn shard_stream_seed(base: u64, shard: usize) -> u64 {
+pub(crate) fn shard_stream_seed(base: u64, shard: usize) -> u64 {
     if shard == 0 {
         return base;
     }
@@ -261,6 +262,18 @@ pub struct FleetMetrics {
 }
 
 impl FleetMetrics {
+    /// Lift an unsharded run's metrics into the fleet shape (shard count 1,
+    /// everything routed to shard 0, no imbalance by definition) — what
+    /// [`crate::traffic::Runner`] returns for `Topology::Single`.
+    pub fn from_single(m: TrafficMetrics) -> FleetMetrics {
+        FleetMetrics {
+            routed: vec![m.arrivals],
+            horizon: m.horizon,
+            imbalance_area: 0.0,
+            shards: vec![m],
+        }
+    }
+
     fn sum(&self, f: impl Fn(&TrafficMetrics) -> u64) -> u64 {
         self.shards.iter().map(f).sum()
     }
@@ -354,6 +367,57 @@ impl FleetMetrics {
     }
 }
 
+/// JSQ decision over a load snapshot: minimum load, ties → lowest shard id.
+/// Shared verbatim by the sequential router (over live cores) and the
+/// parallel router (over probe replies) — byte-identity requires ONE
+/// comparison sequence, so neither path reimplements it.
+pub(crate) fn jsq_pick(loads: &[usize]) -> usize {
+    let mut best = 0usize;
+    let mut best_load = usize::MAX;
+    for (s, &l) in loads.iter().enumerate() {
+        if l < best_load {
+            best = s;
+            best_load = l;
+        }
+    }
+    best
+}
+
+/// Draw the po2 candidate pair: two distinct shards, uniform, returned in
+/// ascending id order. Consumes exactly two `route_rng` draws (the stream
+/// contract `stream_quiet("route2")` pins).
+pub(crate) fn po2_draw(route_rng: &mut Rng, c: usize) -> (usize, usize) {
+    let a = route_rng.below(c as u64) as usize;
+    let mut b = route_rng.below(c as u64 - 1) as usize;
+    if b >= a {
+        b += 1;
+    }
+    if a < b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// The po2 decision over `(score, load)` snapshots of the candidate pair.
+/// Higher estimated success capacity wins; ties → lighter load, then the
+/// lower shard id — a deterministic total order. Shared by both routers
+/// (see [`jsq_pick`]).
+pub(crate) fn po2_decide(
+    (lo, score_lo, load_lo): (usize, f64, usize),
+    (hi, score_hi, load_hi): (usize, f64, usize),
+) -> usize {
+    if score_hi > score_lo + 1e-12 {
+        hi
+    } else if score_lo > score_hi + 1e-12 {
+        lo
+    } else if load_hi < load_lo {
+        hi
+    } else {
+        lo
+    }
+}
+
 /// Pick the shard for one arriving job. Only [`RoutingPolicy::PowerOfTwo`]
 /// consumes the routing RNG (and only at C ≥ 2), so round-robin and JSQ
 /// runs are byte-stable against its presence.
@@ -371,59 +435,59 @@ fn route(
             s
         }
         RoutingPolicy::Jsq => {
-            let mut best = 0usize;
-            let mut best_load = usize::MAX;
-            for (s, c) in cores.iter().enumerate() {
-                let l = c.load();
-                if l < best_load {
-                    best = s;
-                    best_load = l;
-                }
-            }
-            best
+            let loads: Vec<usize> = cores.iter().map(|c| c.load()).collect();
+            jsq_pick(&loads)
         }
         RoutingPolicy::PowerOfTwo => {
             let c = cores.len();
             if c == 1 {
                 return 0;
             }
-            // Two distinct shards, uniformly.
-            let a = route_rng.below(c as u64) as usize;
-            let mut b = route_rng.below(c as u64 - 1) as usize;
-            if b >= a {
-                b += 1;
-            }
-            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            let (lo, hi) = po2_draw(route_rng, c);
             let score_lo = cores[lo].route_score(class);
             let score_hi = cores[hi].route_score(class);
-            // Higher estimated success capacity wins; ties → lighter load,
-            // then the lower shard id — a deterministic total order.
-            if score_hi > score_lo + 1e-12 {
-                hi
-            } else if score_lo > score_hi + 1e-12 {
-                lo
-            } else if cores[hi].load() < cores[lo].load() {
-                hi
-            } else {
-                lo
-            }
+            po2_decide(
+                (lo, score_lo, cores[lo].load()),
+                (hi, score_hi, cores[hi].load()),
+            )
         }
     }
 }
 
-/// Run one sharded traffic simulation to completion.
-///
-/// `strategies[s]`/`clusters[s]` belong to shard s (one learning strategy
-/// per cluster — shards do NOT share estimators, matching a fleet of
-/// independent masters). `seed` drives the global arrival stream exactly as
-/// in [`super::engine::run_traffic`]; po2 routing draws from a dedicated
-/// stream, and each shard's churn/retype streams derive from
-/// `shard_stream_seed` (shard 0 = the unsharded streams).
+/// Run one sharded traffic simulation to completion — the legacy free
+/// function. [`crate::traffic::Runner`] with `Topology::Sharded` +
+/// `Backend::Sequential` is the same engine behind a validated front door.
+#[deprecated(
+    note = "use traffic::Runner::new(Topology::Sharded{..}, Backend::Sequential).run(..)"
+)]
 pub fn run_sharded(
     strategies: &mut [Box<dyn Strategy>],
     clusters: &mut [SimCluster],
     cfg: &ShardConfig,
     seed: u64,
+) -> FleetMetrics {
+    let mut sink = TraceSink::Off;
+    run_sharded_traced(strategies, clusters, cfg, seed, &mut sink)
+}
+
+/// The sequential sharded engine proper.
+///
+/// `strategies[s]`/`clusters[s]` belong to shard s (one learning strategy
+/// per cluster — shards do NOT share estimators, matching a fleet of
+/// independent masters). `seed` drives the global arrival stream exactly as
+/// in the single-cluster engine; po2 routing draws from a dedicated
+/// stream, and each shard's churn/retype streams derive from
+/// `shard_stream_seed` (shard 0 = the unsharded streams). Tracing follows
+/// the per-shard-sink protocol of [`TraceSink::per_shard`]: every shard
+/// records into its own derived sink and `trace` reabsorbs them in shard
+/// order at the end — the exact semantics `traffic::runtime` reproduces in
+/// parallel.
+pub(crate) fn run_sharded_traced(
+    strategies: &mut [Box<dyn Strategy>],
+    clusters: &mut [SimCluster],
+    cfg: &ShardConfig,
+    seed: u64,
+    trace: &mut TraceSink,
 ) -> FleetMetrics {
     cfg.validate().expect("invalid shard config");
     assert_eq!(clusters.len(), cfg.shards, "one cluster per shard required");
@@ -440,6 +504,7 @@ pub fn run_sharded(
         .map(|(s, (strategy, cluster))| {
             ClusterCore::new(tcfg, &mut **strategy, cluster, shard_stream_seed(seed, s))
                 .with_shard(s)
+                .with_trace(trace.per_shard())
         })
         .collect();
 
@@ -555,8 +620,14 @@ pub fn run_sharded(
         &route_rng,
         matches!(cfg.routing, RoutingPolicy::PowerOfTwo) && cfg.shards > 1,
     );
+    let mut shards = Vec::with_capacity(cores.len());
+    for core in cores {
+        let (m, shard_trace) = core.finish_with_trace();
+        trace.absorb(shard_trace);
+        shards.push(m);
+    }
     FleetMetrics {
-        shards: cores.into_iter().map(ClusterCore::finish).collect(),
+        shards,
         routed,
         horizon: imbalance.horizon,
         imbalance_area: imbalance.area,
@@ -571,11 +642,35 @@ mod tests {
     use crate::sim::arrivals::Arrivals;
     use crate::sim::churn::ChurnModel;
     use crate::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_speeds};
-    use crate::traffic::engine::run_traffic;
+    use crate::traffic::engine::run_single_traced;
     use crate::traffic::Policy;
 
     fn cluster(seed: u64) -> SimCluster {
         SimCluster::markov(15, TwoState::new(0.8, 0.8), fig3_speeds(), seed)
+    }
+
+    /// Non-deprecated twin of the legacy `run_traffic` free function
+    /// (shadows the would-be import; the wrapper itself is pinned in
+    /// `tests/determinism.rs`).
+    fn run_traffic(
+        strategy: &mut dyn Strategy,
+        cluster: &mut SimCluster,
+        cfg: &TrafficConfig,
+        seed: u64,
+    ) -> TrafficMetrics {
+        validate_config(cfg, cluster);
+        run_single_traced(strategy, cluster, cfg, seed, TraceSink::Off).0
+    }
+
+    /// Same for `run_sharded`.
+    fn run_sharded(
+        strategies: &mut [Box<dyn Strategy>],
+        clusters: &mut [SimCluster],
+        cfg: &ShardConfig,
+        seed: u64,
+    ) -> FleetMetrics {
+        let mut sink = TraceSink::Off;
+        run_sharded_traced(strategies, clusters, cfg, seed, &mut sink)
     }
 
     fn fleet(shards: usize, routing: RoutingPolicy, jobs: u64, rate: f64) -> ShardConfig {
@@ -649,7 +744,10 @@ mod tests {
             fig3_geometry(),
             Policy::AdmitAll,
         )
-        .with_churn(ChurnModel::spot(0.3, 2.0));
+        .into_builder()
+        .churn(ChurnModel::spot(0.3, 2.0))
+        .build()
+        .unwrap();
         let cfg = ShardConfig {
             shards: 1,
             routing: RoutingPolicy::RoundRobin,

@@ -9,7 +9,7 @@
 //!   regression in itself), and every fresh figure must be finite (and
 //!   positive for timings).
 //! - **Numeric**: per-case `mean_ns` and per-note values must stay within a
-//!   relative factor (`--tolerance`, default 4x) of the baseline. Smoke
+//!   relative factor (`--tolerance`, default 2.5x) of the baseline. Smoke
 //!   timings on shared CI runners are noisy, so the tolerance is a wide
 //!   order-of-magnitude tripwire, not a microbenchmark judgment.
 //! - **Provisional bootstrap**: a baseline carrying `"provisional": true`

@@ -9,7 +9,8 @@ use timely_coded::sim::runner::{run, RunConfig};
 use timely_coded::sim::scenarios::{
     fig3_geometry, fig3_load_params, fig3_scenarios, fig3_scheme, fig3_speeds,
 };
-use timely_coded::traffic::{run_traffic, DeadlineFrom, Policy, TrafficConfig};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::traffic::{Backend, DeadlineFrom, Policy, Runner, Topology, TrafficConfig};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
 
 /// With one job in flight, back-to-back fixed arrivals and service-relative
@@ -48,8 +49,11 @@ fn single_flight_engine_reproduces_round_runner() {
         rejoin_speeds: timely_coded::traffic::RejoinSpeeds::Keep,
         alloc_cache: timely_coded::scheduler::alloc_cache::AllocCachePolicy::default_exact(),
         probe_every: 1,
+        slack: timely_coded::traffic::SlackPolicy::Release,
     };
-    let m = run_traffic(&mut lea_engine, &mut cl_engine, &cfg, 17);
+    let m = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea_engine, &mut cl_engine, &cfg, 17, &mut TraceSink::Off)
+        .expect("valid config");
 
     assert_eq!(m.arrivals, rounds);
     assert_eq!(m.served, rounds);

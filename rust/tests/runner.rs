@@ -1,0 +1,212 @@
+//! Public-API acceptance suite for [`timely_coded::traffic::Runner`], the
+//! validated front door of the traffic layer:
+//!
+//! 1. a panic inside a parallel shard thread re-raises on the caller with
+//!    its ORIGINAL payload — no deadlock at a frontier barrier, no
+//!    swallowed error (the `traffic::runtime` teardown contract);
+//! 2. invalid inputs come back as typed [`RunError`]s before any engine
+//!    state is touched — seat-count mismatches, `run_one` on a fleet
+//!    topology, config validation failures;
+//! 3. the parallel backend's frontier-ordered trace merge reproduces the
+//!    sequential record stream exactly, not just the metrics bytes.
+//!
+//! The grid-level Parallel == Sequential byte-identity pins live in
+//! `tests/determinism.rs`.
+
+use timely_coded::markov::WState;
+use timely_coded::obs::trace::{TraceRecord, TraceSink};
+use timely_coded::scheduler::allocation::Allocation;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::scheduler::strategy::Strategy;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::churn::ChurnModel;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{
+    Backend, ConfigError, Policy, RoutingPolicy, RunError, Runner, Topology, TrafficConfig,
+};
+use timely_coded::util::rng::Rng;
+
+fn fig3_cfg(jobs: u64, rate: f64) -> TrafficConfig {
+    TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(rate),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+}
+
+fn fleet_seats(shards: usize, base_seed: u64) -> (Vec<Box<dyn Strategy>>, Vec<SimCluster>) {
+    let scenario = fig3_scenarios()[0];
+    let strategies = (0..shards)
+        .map(|_| Box::new(Lea::new(fig3_load_params())) as Box<dyn Strategy>)
+        .collect();
+    let clusters = (0..shards as u64)
+        .map(|s| {
+            SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), base_seed + s)
+        })
+        .collect();
+    (strategies, clusters)
+}
+
+/// A strategy that panics on its Nth allocation — stands in for any bug
+/// inside a shard thread.
+struct Grenade {
+    inner: Lea,
+    fuse: u32,
+}
+
+impl Strategy for Grenade {
+    fn name(&self) -> &'static str {
+        "grenade"
+    }
+    fn allocate(&mut self, rng: &mut Rng) -> Allocation {
+        if self.fuse == 0 {
+            panic!("grenade went off");
+        }
+        self.fuse -= 1;
+        self.inner.allocate(rng)
+    }
+    fn observe(&mut self, states: &[Option<WState>]) {
+        self.inner.observe(states);
+    }
+    fn p_good_profile(&self) -> Option<Vec<f64>> {
+        self.inner.p_good_profile()
+    }
+}
+
+/// Contract 1: a shard-thread panic crosses [`Runner::run`] with its
+/// original payload instead of deadlocking the frontier negotiation.
+#[test]
+fn parallel_shard_panic_resurfaces_with_its_original_payload() {
+    let cfg = fig3_cfg(600, 2.4);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let (mut strategies, mut clusters) = fleet_seats(3, 47);
+        strategies[1] = Box::new(Grenade {
+            inner: Lea::new(fig3_load_params()),
+            fuse: 5,
+        });
+        Runner::new(
+            Topology::Sharded {
+                shards: 3,
+                routing: RoutingPolicy::RoundRobin,
+            },
+            Backend::Parallel { threads: 3 },
+        )
+        .run(&mut strategies, &mut clusters, &cfg, 47, &mut TraceSink::Off)
+    }));
+    let payload = match result {
+        Ok(_) => panic!("the shard panic was swallowed"),
+        Err(p) => p,
+    };
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .map(String::from)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("grenade went off"), "unexpected payload: {msg:?}");
+}
+
+/// Contract 2a: seat counts that don't match the topology are rejected
+/// up front with the exact counts in the error.
+#[test]
+fn seat_count_mismatch_is_rejected_before_running() {
+    let cfg = fig3_cfg(100, 1.0);
+    let (mut strategies, mut clusters) = fleet_seats(2, 48);
+    let err = Runner::new(
+        Topology::Sharded {
+            shards: 3,
+            routing: RoutingPolicy::Jsq,
+        },
+        Backend::Sequential,
+    )
+    .run(&mut strategies, &mut clusters, &cfg, 48, &mut TraceSink::Off)
+    .expect_err("2 seats for 3 shards must be rejected");
+    assert_eq!(
+        err,
+        RunError::SeatCount {
+            expected: 3,
+            strategies: 2,
+            clusters: 2,
+        }
+    );
+    assert!(err.to_string().contains("3 shard(s)"), "display: {err}");
+}
+
+/// Contract 2b: `run_one` only serves `Topology::Single`.
+#[test]
+fn run_one_on_a_sharded_topology_is_a_topology_mismatch() {
+    let cfg = fig3_cfg(100, 1.0);
+    let scenario = fig3_scenarios()[0];
+    let mut cluster =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 49);
+    let mut lea = Lea::new(fig3_load_params());
+    let err = Runner::new(
+        Topology::Sharded {
+            shards: 2,
+            routing: RoutingPolicy::Jsq,
+        },
+        Backend::Sequential,
+    )
+    .run_one(&mut lea, &mut cluster, &cfg, 49, &mut TraceSink::Off)
+    .expect_err("run_one on a fleet topology must be rejected");
+    assert_eq!(err, RunError::TopologyMismatch);
+}
+
+/// Contract 2c: config validation failures surface as typed
+/// [`RunError::Config`] values, not panics deep in a run.
+#[test]
+fn invalid_config_surfaces_as_a_typed_config_error() {
+    let mut cfg = fig3_cfg(100, 1.0);
+    cfg.classes.clear();
+    let scenario = fig3_scenarios()[0];
+    let mut cluster =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 50);
+    let mut lea = Lea::new(fig3_load_params());
+    let err = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, 50, &mut TraceSink::Off)
+        .expect_err("a class-less config must be rejected");
+    assert_eq!(err, RunError::Config(ConfigError::NoClasses));
+}
+
+/// Contract 3: the frontier runtime merges per-shard trace buffers in
+/// frontier order — the RECORD STREAM, not just the metrics, matches the
+/// sequential engine at every thread count.
+#[test]
+fn parallel_trace_merge_matches_the_sequential_record_stream() {
+    let cfg = fig3_cfg(400, 1.8)
+        .into_builder()
+        .churn(ChurnModel::spot(0.2, 2.0))
+        .build()
+        .expect("valid config");
+    let run = |backend: Backend| -> (String, Vec<TraceRecord>) {
+        let (mut strategies, mut clusters) = fleet_seats(3, 51);
+        let mut sink = TraceSink::ring(1 << 20);
+        let m = Runner::new(
+            Topology::Sharded {
+                shards: 3,
+                routing: RoutingPolicy::Jsq,
+            },
+            backend,
+        )
+        .run(&mut strategies, &mut clusters, &cfg, 51, &mut sink)
+        .expect("valid config");
+        let TraceSink::Ring(ring) = sink else {
+            panic!("ring sink must come back as a ring");
+        };
+        assert_eq!(ring.dropped(), 0, "1M ring must hold the whole run");
+        (m.to_json().to_string(), ring.records().cloned().collect())
+    };
+    let (seq_metrics, seq_records) = run(Backend::Sequential);
+    assert!(!seq_records.is_empty(), "a 400-job fleet run must leave records");
+    for threads in [1usize, 2, 3] {
+        let (par_metrics, par_records) = run(Backend::Parallel { threads });
+        assert_eq!(seq_metrics, par_metrics, "metrics diverged at {threads} threads");
+        assert_eq!(
+            seq_records, par_records,
+            "trace records diverged at {threads} threads"
+        );
+    }
+}

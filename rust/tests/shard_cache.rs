@@ -18,7 +18,8 @@ use timely_coded::scheduler::success::FleetLoadParams;
 use timely_coded::sim::arrivals::Arrivals;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
-use timely_coded::traffic::{run_traffic, Policy, TrafficConfig, TrafficMetrics};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::traffic::{Backend, Policy, Runner, Topology, TrafficConfig, TrafficMetrics};
 use timely_coded::util::json::Json;
 use timely_coded::util::rng::Rng;
 
@@ -52,8 +53,13 @@ fn run_fig3(
         fig3_geometry(),
         policy,
     )
-    .with_alloc_cache(cache);
-    run_traffic(&mut lea, &mut cluster, &cfg, seed)
+    .into_builder()
+    .alloc_cache(cache)
+    .build()
+    .expect("valid config");
+    Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, seed, &mut TraceSink::Off)
+        .expect("valid config")
 }
 
 /// Property: exact-mode cache lookups are bit-identical to the uncached

@@ -25,7 +25,7 @@ use timely_coded::sim::churn::ChurnModel;
 use timely_coded::sim::cluster::SimCluster;
 use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
 use timely_coded::traffic::{
-    run_traffic, run_traffic_traced, Policy, SlackPolicy, TrafficConfig, TrafficMetrics,
+    Backend, Policy, Runner, SlackPolicy, Topology, TrafficConfig, TrafficMetrics,
 };
 
 const SEEDS: [u64; 3] = [101, 202, 303];
@@ -42,8 +42,11 @@ fn stream_cfg(rounds: usize, slack: SlackPolicy) -> TrafficConfig {
         fig3_geometry(),
         Policy::EdfFeasible,
     )
-    .with_rounds(rounds)
-    .with_slack_policy(slack)
+    .into_builder()
+    .rounds(rounds)
+    .slack_policy(slack)
+    .build()
+    .expect("stream test configs are valid")
 }
 
 /// One paired run: the SAME cluster seed and engine seed as every other
@@ -53,7 +56,9 @@ fn run_with(cfg: &TrafficConfig, seed: u64) -> TrafficMetrics {
     let mut cluster =
         SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
     let mut lea = Lea::new(fig3_load_params());
-    run_traffic(&mut lea, &mut cluster, cfg, seed ^ 0x73)
+    Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, cfg, seed ^ 0x73, &mut TraceSink::Off)
+        .expect("stream test configs are valid")
 }
 
 #[test]
@@ -104,8 +109,10 @@ fn early_resolves_never_land_after_the_window_end() {
         let mut cluster =
             SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 41);
         let mut lea = Lea::new(fig3_load_params());
-        let (m, sink) =
-            run_traffic_traced(&mut lea, &mut cluster, &cfg, 41 ^ 0x73, TraceSink::ring(1 << 20));
+        let mut sink = TraceSink::ring(1 << 20);
+        let m = Runner::new(Topology::Single, Backend::Sequential)
+            .run_one(&mut lea, &mut cluster, &cfg, 41 ^ 0x73, &mut sink)
+            .expect("stream test configs are valid");
         let TraceSink::Ring(ring) = sink else {
             panic!("ring sink must come back as a ring");
         };
@@ -147,9 +154,12 @@ fn both_slack_policies_conserve_jobs_under_churn() {
                 fig3_geometry(),
                 Policy::EdfFeasible,
             )
-            .with_rounds(4)
-            .with_slack_policy(slack)
-            .with_churn(ChurnModel::spot(0.4, 2.0));
+            .into_builder()
+            .rounds(4)
+            .slack_policy(slack)
+            .churn(ChurnModel::spot(0.4, 2.0))
+            .build()
+            .expect("stream test configs are valid");
             let m = run_with(&cfg, seed);
             assert_eq!(
                 m.arrivals,

@@ -6,7 +6,7 @@
 //! allocation cache, the statistical suites' seeded gaps. This crate makes
 //! that a *checkable invariant* instead of a convention: a comment/string
 //! stripping lexer ([`lexer`]) feeds a line-oriented rule engine ([`rules`])
-//! that enforces the five determinism rules R1–R5 with per-module scoping,
+//! that enforces the determinism rules R1–R7 with per-module scoping,
 //! and [`scan`] walks the tree and aggregates the report for the CI `lint`
 //! job (`cargo run -p xtask -- lint`).
 //!
@@ -23,6 +23,8 @@
 //! | R3 | error | no ambient randomness — all RNG through `util::rng` seeded streams |
 //! | R4 | warn  | no `unwrap`/`expect`/`panic!` in library code (ratchet) |
 //! | R5 | error | no float reduction over hash-map iterators |
+//! | R6 | error | no `std::thread`/channel use outside `traffic::runtime`, `experiments`, `exec`, `main` |
+//! | R7 | error | no `allow(deprecated)` in library code (tree-wide site count ratcheted) |
 //!
 //! Violations are suppressible only via an inline
 //! `// lint:allow(<rule>): <reason>` (same line or the line above) or a

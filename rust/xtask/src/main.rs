@@ -21,6 +21,7 @@ const USAGE: &str = "usage: cargo run -p xtask -- <command>
 
 commands:
   lint [--root <dir>] [--deny-warnings] [--max-warnings <n>]
+       [--max-deprecated-allows <n>]
         run the determinism lint pass (exit 1 on errors)
   rules list the lint rules and their scoping
   help  print this message
@@ -35,6 +36,7 @@ struct LintOpts {
     root: PathBuf,
     deny_warnings: bool,
     max_warnings: Option<usize>,
+    max_deprecated_allows: Option<usize>,
 }
 
 fn parse_lint_opts(args: &[String]) -> Result<LintOpts, String> {
@@ -42,6 +44,7 @@ fn parse_lint_opts(args: &[String]) -> Result<LintOpts, String> {
         root: default_root(),
         deny_warnings: false,
         max_warnings: None,
+        max_deprecated_allows: None,
     };
     let mut it = args.iter();
     while let Some(arg) = it.next() {
@@ -57,6 +60,13 @@ fn parse_lint_opts(args: &[String]) -> Result<LintOpts, String> {
                     .parse::<usize>()
                     .map_err(|_| format!("--max-warnings: not a number: {v}"))?;
                 opts.max_warnings = Some(n);
+            }
+            "--max-deprecated-allows" => {
+                let v = it.next().ok_or("--max-deprecated-allows needs a number")?;
+                let n = v
+                    .parse::<usize>()
+                    .map_err(|_| format!("--max-deprecated-allows: not a number: {v}"))?;
+                opts.max_deprecated_allows = Some(n);
             }
             other => return Err(format!("unknown lint option: {other}")),
         }
@@ -91,6 +101,16 @@ fn run_lint(args: &[String]) -> ExitCode {
             eprintln!(
                 "xtask lint: {} warning(s) exceed the ratchet budget of {max}",
                 report.warnings()
+            );
+            failed = true;
+        }
+    }
+    if let Some(max) = opts.max_deprecated_allows {
+        if report.deprecated_allows > max {
+            eprintln!(
+                "xtask lint: {} allow(deprecated) site(s) exceed the ratchet budget of {max} — \
+                 migrate to traffic::Runner instead of widening the allow",
+                report.deprecated_allows
             );
             failed = true;
         }

@@ -69,6 +69,18 @@ pub const RULES: &[RuleInfo] = &[
         summary: "no float reduction over hash iterators — accumulation order varies",
         scope: "everywhere",
     },
+    RuleInfo {
+        id: "R6",
+        severity: Severity::Error,
+        summary: "no std::thread/channel use outside the sanctioned concurrency modules",
+        scope: "rust/src/ minus traffic/runtime.rs, experiments/, exec/, main.rs",
+    },
+    RuleInfo {
+        id: "R7",
+        severity: Severity::Error,
+        summary: "no allow(deprecated) in library code — migrate or keep the warning visible",
+        scope: "rust/src/",
+    },
 ];
 
 /// Meta-rule id for annotation problems (missing reason, unknown rule id,
@@ -99,6 +111,10 @@ pub struct FileOutcome {
     pub findings: Vec<Finding>,
     pub suppressed: Vec<Suppressed>,
     pub lines: usize,
+    /// `allow(deprecated)` sites in the file — legal outside `rust/src/`
+    /// (and suppressible inside), but each one parks migration debt, so the
+    /// total is ratcheted via `xtask lint --max-deprecated-allows`.
+    pub deprecated_allows: usize,
 }
 
 // ---------------------------------------------------------------- scoping
@@ -127,6 +143,25 @@ const R4_EXEMPT_FILES: &[&str] = &[
 ];
 const R4_EXEMPT_DIRS: &[&str] = &["rust/src/experiments/", "rust/src/testkit/"];
 
+/// R6: the modules allowed to spawn threads or pass channels around. The
+/// deterministic core must stay single-threaded-by-construction so the
+/// parallel runtime's byte-identity argument stays local to `runtime.rs`.
+const R6_SCOPE_DIR: &str = "rust/src/";
+const R6_EXEMPT_FILES: &[&str] = &["rust/src/traffic/runtime.rs", "rust/src/main.rs"];
+const R6_EXEMPT_DIRS: &[&str] = &["rust/src/experiments/", "rust/src/exec/"];
+
+/// Thread/channel tokens (R6). `mpsc` covers both imports and qualified
+/// paths; the `thread::` forms catch call sites under `use std::thread`.
+const R6_TOKENS: &[&str] = &[
+    "std::thread",
+    "thread::spawn",
+    "thread::scope",
+    "mpsc",
+    "sync_channel",
+];
+
+const R7_SCOPE_DIR: &str = "rust/src/";
+
 fn in_any_dir(rel: &str, dirs: &[&str]) -> bool {
     dirs.iter().any(|d| rel.starts_with(d))
 }
@@ -143,6 +178,16 @@ fn r4_applies(rel: &str) -> bool {
     rel.starts_with(R4_SCOPE_DIR)
         && !R4_EXEMPT_FILES.contains(&rel)
         && !in_any_dir(rel, R4_EXEMPT_DIRS)
+}
+
+fn r6_applies(rel: &str) -> bool {
+    rel.starts_with(R6_SCOPE_DIR)
+        && !R6_EXEMPT_FILES.contains(&rel)
+        && !in_any_dir(rel, R6_EXEMPT_DIRS)
+}
+
+fn r7_applies(rel: &str) -> bool {
+    rel.starts_with(R7_SCOPE_DIR)
 }
 
 // ----------------------------------------------------------- token helpers
@@ -311,6 +356,7 @@ pub fn lint_file(rel: &str, source: &str) -> FileOutcome {
     let tests = test_mask(lines);
     let names = hash_bound_names(lines);
     let mut raw: Vec<Finding> = Vec::new();
+    let mut deprecated_allows = 0usize;
 
     // Struct-field tracking for R2: depth of the enclosing struct block.
     let mut struct_depth = 0usize;
@@ -421,6 +467,44 @@ pub fn lint_file(rel: &str, source: &str) -> FileOutcome {
             });
         }
 
+        // R6 — thread/channel primitives outside the sanctioned modules.
+        if r6_applies(rel) {
+            for t in R6_TOKENS {
+                if has_word(line, t) {
+                    raw.push(Finding {
+                        rule: "R6",
+                        severity: Severity::Error,
+                        file: rel.to_string(),
+                        line: lineno,
+                        message: format!(
+                            "`{t}` outside the sanctioned concurrency modules — threads and \
+                             channels live in traffic::runtime, experiments::*, exec::*, main.rs"
+                        ),
+                    });
+                    break; // one finding per line, even if several tokens hit
+                }
+            }
+        }
+
+        // R7 — silenced deprecation warnings hide the migration debt the
+        // ratchet exists to drain. Every site (in or out of scope,
+        // suppressed or not) also counts toward the fleet-wide
+        // `--max-deprecated-allows` budget.
+        if has_word(line, "allow(deprecated)") {
+            deprecated_allows += 1;
+            if r7_applies(rel) {
+                raw.push(Finding {
+                    rule: "R7",
+                    severity: Severity::Error,
+                    file: rel.to_string(),
+                    line: lineno,
+                    message: "`allow(deprecated)` in library code — migrate the call site (the \
+                              deprecation ratchet in CI tracks what remains)"
+                        .to_string(),
+                });
+            }
+        }
+
         // Maintain the struct-region tracker (after the checks so a field
         // on the `struct Foo {` line itself still counts).
         if has_word(line, "struct") && !line.contains(';') {
@@ -445,7 +529,9 @@ pub fn lint_file(rel: &str, source: &str) -> FileOutcome {
         }
     }
 
-    apply_allows(rel, raw, &stripped.allows)
+    let mut out = apply_allows(rel, raw, &stripped.allows);
+    out.deprecated_allows = deprecated_allows;
+    out
 }
 
 /// Resolve `lint:allow` annotations against the raw findings: suppress
@@ -610,6 +696,69 @@ mod tests {
         let r5: Vec<_> = o.findings.iter().filter(|f| f.rule == "R5").collect();
         assert_eq!(r5.len(), 1, "{:?}", o.findings);
         assert_eq!(r5[0].line, 2);
+    }
+
+    #[test]
+    fn r6_confines_threads_and_channels() {
+        let src = "use std::sync::mpsc::channel;\n\
+                   fn f() { std::thread::spawn(|| {}); }\n";
+        let o = lint_file("rust/src/traffic/engine.rs", src);
+        assert_eq!(errors(&o), 2, "{:?}", o.findings);
+        assert!(o.findings.iter().all(|f| f.rule == "R6"));
+        // The sanctioned homes are exempt.
+        for home in [
+            "rust/src/traffic/runtime.rs",
+            "rust/src/experiments/shard.rs",
+            "rust/src/exec/master.rs",
+            "rust/src/main.rs",
+        ] {
+            let o = lint_file(home, src);
+            assert!(o.findings.iter().all(|f| f.rule != "R6"), "{home}");
+        }
+        // Outside rust/src/ (tests, benches) R6 does not apply.
+        let o = lint_file("rust/tests/runner.rs", src);
+        assert!(o.findings.iter().all(|f| f.rule != "R6"));
+    }
+
+    #[test]
+    fn r6_flags_one_finding_per_line() {
+        let src = "use std::sync::mpsc::{sync_channel, Receiver};\n";
+        let o = lint_file("rust/src/obs/trace.rs", src);
+        let r6: Vec<_> = o.findings.iter().filter(|f| f.rule == "R6").collect();
+        assert_eq!(r6.len(), 1, "{:?}", o.findings);
+    }
+
+    #[test]
+    fn r7_bans_silenced_deprecations_in_src_only() {
+        let src = "#[allow(deprecated)]\nfn f() {}\n";
+        let o = lint_file("rust/src/experiments/traffic.rs", src);
+        assert_eq!(errors(&o), 1, "{:?}", o.findings);
+        assert_eq!(o.findings[0].rule, "R7");
+        // Integration tests may pin deprecated wrappers.
+        let o = lint_file("rust/tests/determinism.rs", src);
+        assert!(o.findings.iter().all(|f| f.rule != "R7"));
+    }
+
+    #[test]
+    fn deprecated_allows_are_counted_everywhere() {
+        let src = "#[allow(deprecated)]\nmod legacy {}\n";
+        let o = lint_file("rust/tests/determinism.rs", src);
+        assert_eq!(o.deprecated_allows, 1);
+        assert!(o.findings.is_empty(), "{:?}", o.findings);
+        // In scope it is counted AND an R7 error.
+        let o = lint_file("rust/src/traffic/mod.rs", src);
+        assert_eq!(o.deprecated_allows, 1);
+        assert_eq!(errors(&o), 1);
+    }
+
+    #[test]
+    fn r7_respects_the_allow_protocol() {
+        let src = "#[allow(deprecated)] // lint:allow(R7): re-export keeps the legacy name alive\n\
+                   pub use engine::run_traffic;\n";
+        let o = lint_file("rust/src/traffic/mod.rs", src);
+        assert_eq!(errors(&o), 0, "{:?}", o.findings);
+        assert_eq!(o.suppressed.len(), 1);
+        assert_eq!(o.suppressed[0].rule, "R7");
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct Report {
     pub suppressed: Vec<Suppressed>,
     pub files: usize,
     pub lines: usize,
+    /// Tree-wide `allow(deprecated)` sites (see
+    /// [`crate::rules::FileOutcome::deprecated_allows`]); ratcheted via
+    /// `xtask lint --max-deprecated-allows`.
+    pub deprecated_allows: usize,
 }
 
 impl Report {
@@ -80,6 +84,7 @@ pub fn scan_tree(repo_root: &Path) -> io::Result<Report> {
             report.lines += source.lines().count();
             report.findings.extend(outcome.findings);
             report.suppressed.extend(outcome.suppressed);
+            report.deprecated_allows += outcome.deprecated_allows;
         }
     }
     // Deterministic ordering regardless of walk interleaving.
@@ -140,10 +145,12 @@ pub fn render(report: &Report) -> String {
         }
     }
     out.push_str(&format!(
-        "  total: {} error(s), {} warning(s), {} suppressed\n",
+        "  total: {} error(s), {} warning(s), {} suppressed, \
+         {} allow(deprecated) site(s)\n",
         report.errors(),
         report.warnings(),
-        report.suppressed.len()
+        report.suppressed.len(),
+        report.deprecated_allows
     ));
     out
 }
@@ -182,7 +189,7 @@ mod tests {
     #[test]
     fn rules_table_lists_all_ids() {
         let text = render_rules();
-        for id in ["R1", "R2", "R3", "R4", "R5"] {
+        for id in ["R1", "R2", "R3", "R4", "R5", "R6", "R7"] {
             assert!(text.contains(id), "missing {id} in rules table");
         }
     }
