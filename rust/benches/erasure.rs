@@ -1,0 +1,122 @@
+//! Lossy-network benchmarks: events/s of the traffic engine with every
+//! result crossing a packet-erasure link, against the lossless path — the
+//! network-overhead figure (`erasure_slowdown_*` notes) — at the Fig.-3
+//! operating point under both mitigations. Figures land in
+//! `BENCH_erasure.json` (uploaded by the CI bench-smoke job and gated by
+//! `lea bench-check`); set `BENCH_SMOKE=1` for a fast validity run.
+
+// Benches are wall-clock by definition (R1 exempts rust/benches/);
+// the clippy disallowed-methods layer needs the same carve-out.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+use timely_coded::net::{ErasureProcess, LatencyModel, Mitigation, NetworkModel};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{Backend, Policy, Runner, Topology, TrafficConfig};
+use timely_coded::util::bench_kit::{smoke_mode, table, BenchLog};
+
+/// One engine run at the Fig.-3 scenario-1 operating point: events/s plus
+/// the run's event count and timely throughput for the table. `loss = 0`
+/// attaches no network — the lossless reference every overhead ratio is
+/// measured against.
+fn erasure_events_per_sec(loss: f64, mitigation: Mitigation, jobs: u64) -> (f64, u64, f64) {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster = SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), 99);
+    let mut lea = Lea::new(fig3_load_params());
+    let builder = TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(1.2),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+    .into_builder()
+    .mitigation(mitigation);
+    let cfg = if loss > 0.0 {
+        builder.network(NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss },
+            latency: LatencyModel::Fixed { delay: 0.05 },
+        })
+    } else {
+        builder
+    }
+    .build()
+    .expect("bench config is valid");
+    let t0 = Instant::now();
+    let m = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, &cfg, 7, &mut TraceSink::Off)
+        .expect("bench config is valid");
+    let secs = t0.elapsed().as_secs_f64();
+    (m.events as f64 / secs, m.events, m.timely_throughput())
+}
+
+fn mitigation_label(m: &Mitigation) -> &'static str {
+    match m {
+        Mitigation::Retransmit { .. } => "retransmit",
+        Mitigation::Redundancy { .. } => "redundancy",
+    }
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+    let jobs: u64 = if smoke_mode() { 2_000 } else { 20_000 };
+
+    // ---- engine throughput per loss rate and mitigation ----
+    // loss = 0 is the lossless reference; lossy runs add one Delivery (and
+    // possibly several send attempts) per result, so events/s is the fair
+    // axis. The same mitigation pair as the `lea erasure` presets.
+    let mitigations = [
+        Mitigation::Retransmit {
+            max_attempts: 4,
+            timeout: 0.02,
+        },
+        Mitigation::Redundancy { extra_margin: 0.3 },
+    ];
+    let mut rows = Vec::new();
+    let mut retransmit_eps = Vec::new();
+    for loss in [0.0, 0.01, 0.1] {
+        for mitigation in mitigations {
+            let (eps, events, timely) = erasure_events_per_sec(loss, mitigation, jobs);
+            let name = mitigation_label(&mitigation);
+            println!(
+                "bench erasure_engine loss={loss} {name:<10} {events:>8} events  \
+                 {eps:>12.0} events/s  timely {timely:.3}",
+            );
+            log.note(
+                &format!("events_per_sec_loss{}_{name}", (loss * 100.0) as u64),
+                eps,
+            );
+            if matches!(mitigation, Mitigation::Retransmit { .. }) {
+                retransmit_eps.push(eps);
+            }
+            rows.push((
+                format!("loss={loss} {name}"),
+                vec![events as f64, eps, timely],
+            ));
+        }
+    }
+    table(
+        &format!("Lossy traffic engine ({}k jobs, Fig.-3 scenario 1, EDF)", jobs / 1000),
+        &["events", "events/s", "timely"],
+        &rows,
+    );
+
+    // The headline overhead ratios: how much event-loop throughput the
+    // network layer costs relative to the lossless engine (retransmit —
+    // redundancy adds allocation inflation on top of the send path).
+    let slowdown_l1 = retransmit_eps[0] / retransmit_eps[1];
+    let slowdown_l10 = retransmit_eps[0] / retransmit_eps[2];
+    println!("bench erasure slowdown loss1% {slowdown_l1:.2}x  loss10% {slowdown_l10:.2}x (vs lossless)");
+    log.note("erasure_slowdown_loss1", slowdown_l1);
+    log.note("erasure_slowdown_loss10", slowdown_l10);
+    for s in [slowdown_l1, slowdown_l10] {
+        assert!(s.is_finite() && s > 0.0, "degenerate slowdown {s}");
+    }
+
+    log.write("BENCH_erasure.json");
+}

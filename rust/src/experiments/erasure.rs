@@ -1,0 +1,509 @@
+//! Packet-erasure scenario grid (`lea erasure`): link loss rate ×
+//! mitigation policy × deadline over the single-cluster traffic engine.
+//!
+//! Every cell runs the Fig.-3 scenario-1 cluster with a fresh LEA and a
+//! single-class Poisson stream whose results cross a lossy master↔worker
+//! network ([`crate::net::NetworkModel`], Bernoulli erasures + fixed
+//! delivery latency). The mitigation axis opposes the two answers to loss
+//! from arxiv 1901.03610: timeout-driven retransmission and extra coded
+//! redundancy provisioned at allocation time — the grid is where their
+//! crossover (retransmit wins at low loss, redundancy at high loss) shows
+//! up as data (`tests/erasure.rs` pins it on dedicated configs).
+//!
+//! The `loss = 0` column is the regression anchor: those cells attach NO
+//! [`crate::net::NetworkModel`] at all — even a zero-loss channel adds
+//! latency and consumes the net RNG streams — so they are byte-identical to
+//! the lossless engine on the same derived seeds ([`run_cell_lossless`],
+//! pinned in `tests/erasure.rs`). Every erasure effect in the dump is
+//! attributable to the network, never to seed drift.
+//!
+//! Like the other grids, cells fan out across OS threads with per-cell
+//! seeds derived from `(base seed, cell index)`, so the assembled JSON is
+//! byte-identical for a given seed whatever the thread count.
+
+use super::traffic::cell_seed;
+use crate::net::{ErasureProcess, LatencyModel, Mitigation, NetworkModel};
+use crate::obs::trace::TraceSink;
+use crate::scheduler::lea::Lea;
+use crate::scheduler::success::LoadParams;
+use crate::sim::arrivals::Arrivals;
+use crate::sim::cluster::SimCluster;
+use crate::sim::scenarios::{fig3_geometry, fig3_scenarios, fig3_speeds};
+use crate::traffic::{Backend, Policy, Runner, Topology, TrafficConfig, TrafficMetrics};
+use crate::util::bench_kit;
+use crate::util::json::Json;
+
+/// Offset applied to the base seed so erasure cells never share a stream
+/// with the other grids' cells at the same index.
+const ERASURE_SEED_SALT: u64 = 0x65_7261_7375_7265; // "erasure"
+
+/// Engine-seed salt within one cell (the analog of the traffic grid's
+/// `"raff"` constant).
+const ERASURE_ENGINE_SALT: u64 = 0x6c6f_7373; // "loss"
+
+/// Stable axis label for a mitigation policy (JSON dumps and tables).
+pub fn mitigation_name(m: &Mitigation) -> &'static str {
+    match m {
+        Mitigation::Retransmit { .. } => "retransmit",
+        Mitigation::Redundancy { .. } => "redundancy",
+    }
+}
+
+/// The grid to sweep. `losses` are single-attempt Bernoulli erasure
+/// probabilities (0 = the lossless anchor column); every lossy cell uses a
+/// fixed delivery latency of `latency` seconds.
+#[derive(Clone, Debug)]
+pub struct ErasureGridSpec {
+    pub losses: Vec<f64>,
+    pub mitigations: Vec<Mitigation>,
+    /// Per-job relative deadlines.
+    pub deadlines: Vec<f64>,
+    /// One-way delivery latency (seconds) of every lossy cell.
+    pub latency: f64,
+    /// Offered load (jobs/s) in every cell.
+    pub rate: f64,
+    /// Admission policy in every cell.
+    pub policy: Policy,
+    /// Arrivals simulated per cell.
+    pub jobs: u64,
+    pub seed: u64,
+}
+
+impl ErasureGridSpec {
+    /// Named presets for the CLI: `small` is the 6-cell acceptance grid
+    /// (loss ∈ {0, 0.02, 0.3} × both mitigations × 1 deadline), `wide`
+    /// broadens to 20 cells with a finer loss axis and a second deadline.
+    pub fn preset(name: &str, jobs: u64, seed: u64) -> Result<ErasureGridSpec, String> {
+        let (losses, deadlines) = match name {
+            "small" => (vec![0.0, 0.02, 0.3], vec![1.0]),
+            "wide" => (vec![0.0, 0.01, 0.05, 0.1, 0.3], vec![1.0, 1.4]),
+            other => return Err(format!("unknown grid preset '{other}' (small | wide)")),
+        };
+        Ok(ErasureGridSpec {
+            losses,
+            mitigations: vec![
+                Mitigation::Retransmit {
+                    max_attempts: 4,
+                    timeout: 0.02,
+                },
+                Mitigation::Redundancy { extra_margin: 0.3 },
+            ],
+            deadlines,
+            latency: 0.05,
+            rate: 0.9,
+            policy: Policy::EdfFeasible,
+            jobs,
+            seed,
+        })
+    }
+
+    /// Reject degenerate grids with a message instead of a panic deep in
+    /// the runner (the CLI calls this after applying overrides).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.losses.is_empty() {
+            return Err("loss axis is empty".into());
+        }
+        if let Some(&l) = self
+            .losses
+            .iter()
+            .find(|&&l| l.is_nan() || !(0.0..1.0).contains(&l))
+        {
+            return Err(format!("loss probability must lie in [0, 1) (got {l})"));
+        }
+        if self.mitigations.is_empty() {
+            return Err("mitigation axis is empty".into());
+        }
+        for m in &self.mitigations {
+            match *m {
+                Mitigation::Retransmit {
+                    max_attempts,
+                    timeout,
+                } => {
+                    if max_attempts == 0 {
+                        return Err("retransmit mitigation needs max_attempts ≥ 1".into());
+                    }
+                    if !timeout.is_finite() || timeout <= 0.0 {
+                        return Err(format!(
+                            "retransmit timeout must be finite and positive (got {timeout})"
+                        ));
+                    }
+                }
+                Mitigation::Redundancy { extra_margin } => {
+                    if !extra_margin.is_finite() || extra_margin < 0.0 {
+                        return Err(format!(
+                            "redundancy margin must be finite and non-negative (got {extra_margin})"
+                        ));
+                    }
+                }
+            }
+        }
+        if self.deadlines.is_empty() {
+            return Err("deadline axis is empty".into());
+        }
+        if let Some(&d) = self
+            .deadlines
+            .iter()
+            .find(|&&d| d.is_nan() || d.is_infinite() || d <= 0.0)
+        {
+            return Err(format!("deadline must be finite and positive (got {d})"));
+        }
+        if !self.latency.is_finite() || self.latency <= 0.0 {
+            return Err(format!(
+                "latency must be finite and positive (got {})",
+                self.latency
+            ));
+        }
+        if !self.rate.is_finite() || self.rate <= 0.0 {
+            return Err(format!("rate must be finite and positive (got {})", self.rate));
+        }
+        Ok(())
+    }
+
+    /// Cells in canonical order (loss-major, then mitigation, then
+    /// deadline) — the order of the JSON dump.
+    pub fn cells(&self) -> Vec<ErasureCell> {
+        let mut out = Vec::new();
+        for &loss in &self.losses {
+            for &mitigation in &self.mitigations {
+                for &deadline in &self.deadlines {
+                    out.push(ErasureCell {
+                        idx: out.len(),
+                        loss,
+                        mitigation,
+                        deadline,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One (loss rate, mitigation, deadline) grid point.
+#[derive(Clone, Copy, Debug)]
+pub struct ErasureCell {
+    pub idx: usize,
+    /// Single-attempt Bernoulli erasure probability (0 = lossless anchor).
+    pub loss: f64,
+    pub mitigation: Mitigation,
+    /// Relative deadline (seconds).
+    pub deadline: f64,
+}
+
+/// A cell plus its measured traffic metrics.
+#[derive(Clone, Debug)]
+pub struct ErasureRow {
+    pub cell: ErasureCell,
+    pub metrics: TrafficMetrics,
+}
+
+/// The cell's shared derived inputs: (cell seed, LEA geometry, engine
+/// config). ONE construction path for both [`run_cell`] and its lossless
+/// reference — the byte-identity anchor compares configurations built
+/// here, never a copy.
+fn cell_setup(cell: &ErasureCell, spec: &ErasureGridSpec) -> (u64, LoadParams, TrafficConfig) {
+    let seed = cell_seed(spec.seed ^ ERASURE_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        cell.deadline,
+    );
+    let builder = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(spec.rate),
+        cell.deadline,
+        geo,
+        spec.policy,
+    )
+    .into_builder()
+    .mitigation(cell.mitigation);
+    let builder = if cell.loss > 0.0 {
+        builder.network(NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss: cell.loss },
+            latency: LatencyModel::Fixed {
+                delay: spec.latency,
+            },
+        })
+    } else {
+        // The loss = 0 anchor column attaches NO network: even a zero-loss
+        // channel shifts every delivery by its latency and consumes the net
+        // RNG streams, so "no loss" must mean "no network" to stay
+        // byte-identical to the lossless engine. The (inert) mitigation is
+        // still set — pinning that an unused mitigation never leaks into
+        // engine behavior.
+        builder
+    };
+    let cfg = builder
+        .build()
+        .expect("erasure grid cells build valid configs");
+    (seed, params, cfg)
+}
+
+/// The cell's Fig.-3 scenario-1 cluster.
+fn cell_cluster(seed: u64) -> SimCluster {
+    SimCluster::markov(
+        fig3_geometry().n,
+        fig3_scenarios()[0].chain(),
+        fig3_speeds(),
+        seed,
+    )
+}
+
+/// Run one cell: a fresh Fig.-3 scenario-1 cluster, a fresh LEA, and the
+/// traffic engine behind the cell's network model and mitigation.
+pub fn run_cell(cell: &ErasureCell, spec: &ErasureGridSpec) -> ErasureRow {
+    let (seed, params, cfg) = cell_setup(cell, spec);
+    let mut lea = Lea::new(params);
+    let mut cluster = cell_cluster(seed);
+    let metrics = Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(
+            &mut lea,
+            &mut cluster,
+            &cfg,
+            seed ^ ERASURE_ENGINE_SALT,
+            &mut TraceSink::Off,
+        )
+        .expect("erasure grid cells build valid configs");
+    ErasureRow {
+        cell: *cell,
+        metrics,
+    }
+}
+
+/// The lossless reference for a loss = 0 cell: the SAME cluster seed, LEA,
+/// arrival stream and engine seed, but with a config that never mentions
+/// the network layer (no `mitigation(..)`, no builder round-trip). `None`
+/// for lossy cells. `tests/erasure.rs` pins `run_cell(..)` byte-identical
+/// to this for every loss = 0 cell of the small preset — whatever the
+/// cell's mitigation, since mitigations are inert without a network.
+pub fn run_cell_lossless(cell: &ErasureCell, spec: &ErasureGridSpec) -> Option<TrafficMetrics> {
+    if cell.loss > 0.0 {
+        return None;
+    }
+    let seed = cell_seed(spec.seed ^ ERASURE_SEED_SALT, cell.idx);
+    let geo = fig3_geometry();
+    let params = LoadParams::from_rates(
+        geo.n,
+        geo.r,
+        geo.kstar(),
+        fig3_speeds().mu_g,
+        fig3_speeds().mu_b,
+        cell.deadline,
+    );
+    let cfg = TrafficConfig::single_class(
+        spec.jobs,
+        Arrivals::poisson(spec.rate),
+        cell.deadline,
+        geo,
+        spec.policy,
+    );
+    let mut lea = Lea::new(params);
+    let mut cluster = cell_cluster(seed);
+    Some(
+        Runner::new(Topology::Single, Backend::Sequential)
+            .run_one(
+                &mut lea,
+                &mut cluster,
+                &cfg,
+                seed ^ ERASURE_ENGINE_SALT,
+                &mut TraceSink::Off,
+            )
+            .expect("erasure grid cells build valid configs"),
+    )
+}
+
+/// Run the whole grid across `threads` OS threads (work-stealing via the
+/// shared `super::fan_out` runner). Results come back in canonical cell
+/// order whatever the interleaving, so the output is deterministic.
+pub fn run_grid(spec: &ErasureGridSpec, threads: usize) -> Vec<ErasureRow> {
+    let cells = spec.cells();
+    super::fan_out(cells.len(), threads, |i| run_cell(&cells[i], spec))
+}
+
+/// Assemble the deterministic JSON dump (spec + one object per cell; each
+/// cell carries the full [`TrafficMetrics`] serialization, the network
+/// counters included).
+pub fn to_json(spec: &ErasureGridSpec, rows: &[ErasureRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            let mut obj = match r.metrics.to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("traffic metrics serialize to an object"),
+            };
+            obj.insert("loss".into(), Json::num(r.cell.loss));
+            obj.insert(
+                "mitigation".into(),
+                Json::str(mitigation_name(&r.cell.mitigation)),
+            );
+            obj.insert("deadline".into(), Json::num(r.cell.deadline));
+            Json::Obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", Json::str("erasure-grid")),
+        ("seed", Json::num(spec.seed as f64)),
+        ("jobs", Json::num(spec.jobs as f64)),
+        ("rate", Json::num(spec.rate)),
+        ("latency", Json::num(spec.latency)),
+        ("policy", Json::str(spec.policy.name())),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+/// Paper-style table of the headline columns: timely throughput and
+/// goodput per loss rate and mitigation, with the network-only counters
+/// (lost packets, retransmissions, late deliveries, in-flight misses) that
+/// stay zero on the lossless column.
+pub fn print(rows: &[ErasureRow]) {
+    bench_kit::table(
+        "Erasure grid — Fig.-3 scenario-1 cluster, LEA, lossy result links",
+        &[
+            "loss", "d", "timely", "goodput", "lost", "retx", "late", "inflight",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                (
+                    format!("{:<10} #{:02}", mitigation_name(&r.cell.mitigation), r.cell.idx),
+                    vec![
+                        r.cell.loss,
+                        r.cell.deadline,
+                        m.timely_throughput(),
+                        m.goodput(),
+                        m.lost_packets as f64,
+                        m.retransmits as f64,
+                        m.late_deliveries as f64,
+                        m.in_flight_misses as f64,
+                    ],
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ErasureGridSpec {
+        ErasureGridSpec {
+            losses: vec![0.0, 0.3],
+            mitigations: vec![
+                Mitigation::Retransmit {
+                    max_attempts: 3,
+                    timeout: 0.02,
+                },
+                Mitigation::Redundancy { extra_margin: 0.3 },
+            ],
+            deadlines: vec![1.0],
+            latency: 0.05,
+            rate: 0.9,
+            policy: Policy::EdfFeasible,
+            jobs: 150,
+            seed: 29,
+        }
+    }
+
+    #[test]
+    fn presets_have_expected_cell_counts() {
+        let small = ErasureGridSpec::preset("small", 100, 1).unwrap();
+        assert_eq!(small.cells().len(), 6);
+        assert!(small.validate().is_ok());
+        let wide = ErasureGridSpec::preset("wide", 100, 1).unwrap();
+        assert_eq!(wide.cells().len(), 20);
+        assert!(wide.losses.contains(&0.0), "wide keeps the anchor column");
+        assert!(ErasureGridSpec::preset("nope", 100, 1).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_axes() {
+        let mut s = tiny_spec();
+        s.losses = vec![];
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.losses = vec![0.1, 1.0];
+        assert!(s.validate().unwrap_err().contains("[0, 1)"));
+        let mut s = tiny_spec();
+        s.mitigations.clear();
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.mitigations = vec![Mitigation::Retransmit {
+            max_attempts: 0,
+            timeout: 0.1,
+        }];
+        assert!(s.validate().unwrap_err().contains("max_attempts"));
+        let mut s = tiny_spec();
+        s.mitigations = vec![Mitigation::Redundancy { extra_margin: -0.1 }];
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.latency = 0.0;
+        assert!(s.validate().is_err());
+        let mut s = tiny_spec();
+        s.deadlines = vec![0.0];
+        assert!(s.validate().is_err());
+        assert!(tiny_spec().validate().is_ok());
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bytes() {
+        let spec = tiny_spec();
+        let serial = to_json(&spec, &run_grid(&spec, 1)).to_string();
+        let parallel = to_json(&spec, &run_grid(&spec, 4)).to_string();
+        assert_eq!(serial, parallel);
+        assert!(serial.contains("\"experiment\":\"erasure-grid\""));
+        assert!(serial.contains("\"mitigation\":\"redundancy\""));
+        assert!(serial.contains("\"lost_packets\""));
+    }
+
+    #[test]
+    fn rows_come_back_in_canonical_order_and_lossy_cells_lose() {
+        let spec = tiny_spec();
+        let rows = run_grid(&spec, 3);
+        assert_eq!(rows.len(), 4);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.cell.idx, i);
+            assert_eq!(r.metrics.arrivals, spec.jobs);
+            if r.cell.loss == 0.0 {
+                assert_eq!(
+                    (r.metrics.lost_packets, r.metrics.retransmits),
+                    (0, 0),
+                    "lossless cell {i} touched the network"
+                );
+            } else {
+                assert!(r.metrics.lost_packets > 0, "cell {i} never lost a packet");
+                if matches!(r.cell.mitigation, Mitigation::Retransmit { .. }) {
+                    assert!(r.metrics.retransmits > 0, "cell {i} never retried");
+                } else {
+                    assert_eq!(r.metrics.retransmits, 0, "redundancy cell {i} retried");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_loss_cells_match_the_lossless_engine() {
+        // The grid-level byte-identity anchor (also pinned, over the full
+        // small preset, in tests/erasure.rs).
+        let spec = tiny_spec();
+        for cell in spec.cells() {
+            match run_cell_lossless(&cell, &spec) {
+                None => assert!(cell.loss > 0.0),
+                Some(lossless) => {
+                    let netted = run_cell(&cell, &spec);
+                    assert_eq!(
+                        netted.metrics.to_json().to_string(),
+                        lossless.to_json().to_string(),
+                        "cell {} diverged from the lossless engine",
+                        cell.idx
+                    );
+                }
+            }
+        }
+    }
+}

@@ -18,12 +18,15 @@
 //!   per-shard load × churn over the multi-cluster front-end (`lea shard`).
 //! - [`stream`] — the streaming-rounds grid: rounds per participant ×
 //!   slack policy × load × deadline over the traffic engine (`lea stream`).
+//! - [`erasure`] — the lossy-network grid: link loss rate × mitigation
+//!   policy × deadline over the traffic engine (`lea erasure`).
 //! - [`trace`] — re-run one traffic-grid cell with the trace recorder on
 //!   and export a Perfetto-compatible `.trace.json` (`lea trace`).
 //! - [`report`] — headline-claim aggregation and JSON report output.
 
 pub mod churn;
 pub mod convergence;
+pub mod erasure;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;

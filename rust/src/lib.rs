@@ -22,6 +22,10 @@
 //!   AOT-compiled JAX/Pallas artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the threaded master/worker cluster that runs real PJRT
 //!   computations under simulated worker states (Fig. 4 analog).
+//! - [`net`] — the lossy network layer: per-link Bernoulli / Gilbert-Elliott
+//!   packet-erasure channels with delivery latency, retransmission-vs-
+//!   redundancy mitigation, and the typed `Delivery` unit every result
+//!   crosses before the traffic engine sees it.
 //! - [`obs`] — deterministic observability: virtual-time trace records and
 //!   sinks (`lea trace` → Perfetto-compatible `.trace.json`), plus
 //!   wall-clock hot-path profiling for `BENCH_*.json` artifacts.
@@ -33,6 +37,7 @@ pub mod coding;
 pub mod markov;
 pub mod scheduler;
 pub mod sim;
+pub mod net;
 pub mod obs;
 pub mod traffic;
 pub mod runtime;

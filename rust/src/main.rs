@@ -27,6 +27,9 @@
 //! lea stream      [--grid small|wide] [--threads T]        streaming-rounds grid
 //!                 [--jobs N] [--seed S] [--dump stream.json]
 //!                 [--round-counts 1,2,4] [--slack release,squeeze]
+//! lea erasure     [--grid small|wide] [--threads T]        lossy-network grid
+//!                 [--jobs N] [--seed S] [--dump erasure.json]
+//!                 [--losses 0,0.02,0.3] [--latency S] [--rate R]
 //! lea bench-check [--baseline DIR] [--fresh DIR]           bench-regression gate
 //!                 [--tolerance X] [--names a,b,...]
 //! lea report      [--out report.json] [--fast]             everything + JSON
@@ -39,13 +42,14 @@
 use timely_coded::exec::driver::{run_e2e, E2eConfig};
 use timely_coded::exec::master::Engine;
 use timely_coded::experiments::churn::ChurnGridSpec;
+use timely_coded::experiments::erasure::ErasureGridSpec;
 use timely_coded::experiments::hetero_grid::{FleetMix, HeteroGridSpec};
 use timely_coded::experiments::shard::ShardGridSpec;
 use timely_coded::experiments::stream::StreamGridSpec;
 use timely_coded::experiments::traffic::{run_grid, GridSpec};
 use timely_coded::experiments::{
-    churn, convergence, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard, stream, sweep,
-    trace, traffic,
+    churn, convergence, erasure, fig1, fig3, fig4, hetero_grid, heterogeneous, report, shard,
+    stream, sweep, trace, traffic,
 };
 use timely_coded::obs::trace::DEFAULT_RING_CAP;
 use timely_coded::obs::write_chrome_trace;
@@ -345,11 +349,50 @@ fn dispatch(sub: &str, args: &Args) -> Result<(), String> {
                 println!("wrote {path}");
             }
         }
+        "erasure" => {
+            let mut spec = ErasureGridSpec::preset(
+                args.get_or("grid", "small"),
+                args.u64("jobs", 2000)?,
+                args.u64("seed", 2024)?,
+            )?;
+            // Axis overrides; validated below so `--losses 1.0` or a
+            // negative latency fails loudly instead of panicking mid-grid.
+            if let Some(items) = args.csv("losses")? {
+                spec.losses = items
+                    .iter()
+                    .map(|s| {
+                        s.parse::<f64>()
+                            .map_err(|_| format!("--losses: expected numbers, got '{s}'"))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            spec.latency = args.f64_positive("latency", spec.latency)?;
+            spec.rate = args.f64_positive("rate", spec.rate)?;
+            spec.validate()?;
+            let threads = threads_arg(args)?;
+            let cells = spec.cells().len();
+            let t0 = std::time::Instant::now();
+            let rows = erasure::run_grid(&spec, threads);
+            erasure::print(&rows);
+            let events: u64 = rows.iter().map(|r| r.metrics.events).sum();
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "\n{cells} cells x {} jobs on {threads} threads: {events} events in {secs:.2}s \
+                 ({:.0} events/s)",
+                spec.jobs,
+                events as f64 / secs.max(1e-9)
+            );
+            if let Some(path) = args.get("dump") {
+                let j = erasure::to_json(&spec, &rows);
+                std::fs::write(path, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+        }
         "bench-check" => {
             let baseline_dir = args.get_or("baseline", "ci/bench-baselines");
             let fresh_dir = args.get_or("fresh", ".");
             let tolerance = args.f64("tolerance", 2.5)?;
-            let names_raw = args.get_or("names", "coding,traffic,churn,hetero,shard,stream");
+            let names_raw = args.get_or("names", "coding,traffic,churn,hetero,shard,stream,erasure");
             let names: Vec<&str> = names_raw.split(',').filter(|s| !s.is_empty()).collect();
             let checks = bench_check::check_dirs(baseline_dir, fresh_dir, &names, tolerance)?;
             bench_check::print_report(&checks);
@@ -488,6 +531,18 @@ SUBCOMMANDS
                 --seed S, --round-counts 1,2,4, --slack release,squeeze,
                 --dump stream.json; same seed => byte-identical; rounds=1 ==
                 atomic `lea traffic` engine byte-for-byte)
+  erasure      lossy-network grid: every worker->master result crosses a
+               packet-erasure link (Bernoulli loss + fixed delivery
+               latency) — loss-rate x mitigation (timeout retransmission
+               vs extra coded redundancy) x deadline cells, reporting
+               lost packets, retransmissions, late deliveries, and
+               in-flight deadline misses next to the usual throughput
+               columns
+               (--grid small|wide [6|20 cells], --threads T, --jobs N,
+                --seed S, --losses 0,0.02,0.3, --latency S, --rate R,
+                --dump erasure.json; same seed => byte-identical; the
+                loss=0 column == lossless `lea traffic` engine
+                byte-for-byte)
   bench-check  compare fresh BENCH_*.json smoke artifacts against the
                committed baselines in ci/bench-baselines — the CI
                bench-regression gate (--baseline DIR, --fresh DIR,

@@ -1,0 +1,303 @@
+//! Lossy network layer: per-link packet-erasure channels with delivery latency.
+//!
+//! Every result the engine "sees" crossed a master↔worker link. The pre-net
+//! engine treats that hop as perfect and free; this module models it, following
+//! *Coded Distributed Computing over Packet Erasure Channels* (arxiv
+//! 1901.03610): each packet (one coded round's chunks, or a whole atomic
+//! result) is erased independently per attempt by an [`ErasureProcess`] —
+//! memoryless Bernoulli or the bursty two-state Gilbert-Elliott channel with
+//! per-link state — and, if it survives, arrives after a sampled
+//! [`LatencyModel`] delay. Loss is handled by a [`Mitigation`] policy:
+//! timeout-driven retransmission, or extra coded redundancy provisioned at
+//! allocation time.
+//!
+//! Everything here is deterministic: all randomness flows through dedicated
+//! `util::rng::Rng` streams owned by the engine core (one for erasure, one for
+//! latency), and a config with no [`NetworkModel`] draws zero values from
+//! either stream — the lossless engine is byte-identical to the pre-net one.
+
+use crate::util::rng::Rng;
+
+/// Per-packet erasure process on a master↔worker link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ErasureProcess {
+    /// Memoryless: every attempt is erased independently with probability
+    /// `loss` ∈ [0, 1).
+    Bernoulli { loss: f64 },
+    /// Two-state Gilbert-Elliott burst channel. Each link holds a good/bad
+    /// state; per attempt the state first flips with probability `p_gb`
+    /// (good→bad) or `p_bg` (bad→good), then the packet is erased with the
+    /// state's loss rate. `p_gb`/`p_bg` ∈ (0, 1], losses ∈ [0, 1).
+    GilbertElliott {
+        p_gb: f64,
+        p_bg: f64,
+        loss_good: f64,
+        loss_bad: f64,
+    },
+}
+
+impl ErasureProcess {
+    /// Sample one transmission attempt over a link whose Gilbert-Elliott
+    /// state lives in `good` (ignored and untouched for Bernoulli). Returns
+    /// `true` when the packet is erased. The GE transition fires BEFORE the
+    /// loss draw, so back-to-back attempts see an evolving channel.
+    pub fn erase(&self, good: &mut bool, rng: &mut Rng) -> bool {
+        match *self {
+            ErasureProcess::Bernoulli { loss } => rng.bernoulli(loss),
+            ErasureProcess::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                let flip = if *good { p_gb } else { p_bg };
+                if rng.bernoulli(flip) {
+                    *good = !*good;
+                }
+                rng.bernoulli(if *good { loss_good } else { loss_bad })
+            }
+        }
+    }
+
+    /// Steady-state single-attempt delivery probability. For Gilbert-Elliott
+    /// this weights the two loss rates by the stationary state distribution
+    /// π_good = p_bg / (p_gb + p_bg).
+    pub fn p_delivered(&self) -> f64 {
+        match *self {
+            ErasureProcess::Bernoulli { loss } => 1.0 - loss,
+            ErasureProcess::GilbertElliott { p_gb, p_bg, loss_good, loss_bad } => {
+                let denom = p_gb + p_bg;
+                let pi_good = if denom > 0.0 { p_bg / denom } else { 1.0 };
+                1.0 - (pi_good * loss_good + (1.0 - pi_good) * loss_bad)
+            }
+        }
+    }
+}
+
+/// Delivery-latency distribution for a surviving packet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// Every packet takes exactly `delay` (> 0). Consumes no RNG.
+    Fixed { delay: f64 },
+    /// Exponential with the given positive mean; one draw per delivered
+    /// packet from the dedicated latency stream.
+    Exp { mean: f64 },
+}
+
+impl LatencyModel {
+    /// Sample one delivery delay.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Fixed { delay } => delay,
+            LatencyModel::Exp { mean } => rng.exp(mean),
+        }
+    }
+
+    /// Mean delay — the latency term of the allocator's network budget.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::Fixed { delay } => delay,
+            LatencyModel::Exp { mean } => mean,
+        }
+    }
+}
+
+/// The per-link network model: an erasure process plus a latency
+/// distribution. Enters the engine only through
+/// `TrafficConfigBuilder::network(...)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    pub erasure: ErasureProcess,
+    pub latency: LatencyModel,
+}
+
+impl NetworkModel {
+    /// Expected time from "result computed" to "result on the master",
+    /// including the mitigation's expected retransmission delay. The
+    /// loss-aware allocator shrinks the compute window by this budget so a
+    /// load sized to finish inside the window also *arrives* inside it
+    /// (EXPERIMENTS.md §Erasure has the derivation).
+    pub fn latency_budget(&self, mitigation: &Mitigation) -> f64 {
+        let p_loss = 1.0 - self.erasure.p_delivered();
+        self.latency.mean() + mitigation.expected_retry_delay(p_loss)
+    }
+
+    /// Effective per-packet delivery probability under `mitigation` — the
+    /// `p_delivered` factor folded into the EA allocator's p̂ vector.
+    pub fn p_delivered(&self, mitigation: &Mitigation) -> f64 {
+        mitigation.p_delivered(self.erasure.p_delivered())
+    }
+}
+
+/// What the engine does about a lost packet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mitigation {
+    /// Resend after `timeout` (> 0), up to `max_attempts` (≥ 1) total
+    /// attempts; a packet whose last attempt is erased is dropped for good.
+    Retransmit { max_attempts: u32, timeout: f64 },
+    /// No resends: provision `extra_margin` (≥ 0) more coded chunks at
+    /// allocation time so the target survives first-attempt losses.
+    Redundancy { extra_margin: f64 },
+}
+
+impl Default for Mitigation {
+    /// One attempt, no redundancy: losses are simply dropped. The timeout is
+    /// inert at `max_attempts == 1` but must still be positive to validate.
+    fn default() -> Self {
+        Mitigation::Retransmit { max_attempts: 1, timeout: 1.0 }
+    }
+}
+
+impl Mitigation {
+    /// Effective delivery probability given a single-attempt probability:
+    /// retransmission with m attempts delivers unless all m are erased;
+    /// redundancy never resends.
+    pub fn p_delivered(&self, single: f64) -> f64 {
+        match *self {
+            Mitigation::Retransmit { max_attempts, .. } => {
+                let p_loss = (1.0 - single).clamp(0.0, 1.0);
+                1.0 - p_loss.powi(max_attempts.min(i32::MAX as u32) as i32)
+            }
+            Mitigation::Redundancy { .. } => single,
+        }
+    }
+
+    /// Expected extra delay from timeout-driven resends at single-attempt
+    /// loss rate `p_loss`: `timeout · Σ_{j=1}^{m−1} p_loss^j` — each term is
+    /// the probability the packet is still undelivered after attempt j, i.e.
+    /// the expected number of timeouts actually paid (truncated geometric).
+    pub fn expected_retry_delay(&self, p_loss: f64) -> f64 {
+        match *self {
+            Mitigation::Retransmit { max_attempts, timeout } => {
+                let p = p_loss.clamp(0.0, 1.0);
+                let mut undelivered = p;
+                let mut expect = 0.0;
+                for _ in 1..max_attempts {
+                    expect += undelivered;
+                    undelivered *= p;
+                }
+                timeout * expect
+            }
+            Mitigation::Redundancy { .. } => 0.0,
+        }
+    }
+
+    /// The allocation target under this policy: redundancy inflates K* by
+    /// `extra_margin` (ceiling), retransmission leaves it alone. The engine
+    /// caps the inflated target at the idle fleet's good-state capacity.
+    pub fn alloc_target(&self, kstar: usize) -> usize {
+        match *self {
+            Mitigation::Retransmit { .. } => kstar,
+            Mitigation::Redundancy { extra_margin } => {
+                kstar + (kstar as f64 * extra_margin).ceil() as usize
+            }
+        }
+    }
+}
+
+/// One confirmed result arrival, the single typed unit `ClusterCore`
+/// ingests: `chunks` coded chunks of job `job` from participant slot `part`.
+/// Streamed rounds, squeeze chunks, and atomic completions all cross this
+/// struct — with a network configured it is produced by `Delivery` events,
+/// without one it is synthesized at the legacy call sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Delivery {
+    pub job: u64,
+    pub part: usize,
+    pub chunks: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bernoulli_steady_state_is_one_minus_loss() {
+        let e = ErasureProcess::Bernoulli { loss: 0.2 };
+        assert!((e.p_delivered() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gilbert_elliott_steady_state_weights_by_stationary_distribution() {
+        let e = ErasureProcess::GilbertElliott {
+            p_gb: 0.1,
+            p_bg: 0.3,
+            loss_good: 0.0,
+            loss_bad: 0.8,
+        };
+        // pi_good = 0.3 / 0.4 = 0.75; loss = 0.25 * 0.8 = 0.2.
+        assert!((e.p_delivered() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erase_is_deterministic_per_stream() {
+        let e = ErasureProcess::GilbertElliott {
+            p_gb: 0.4,
+            p_bg: 0.4,
+            loss_good: 0.05,
+            loss_bad: 0.7,
+        };
+        let run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut good = true;
+            (0..64).map(|_| e.erase(&mut good, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn bernoulli_ignores_link_state() {
+        let e = ErasureProcess::Bernoulli { loss: 0.5 };
+        let mut rng = Rng::new(3);
+        let mut good = false;
+        for _ in 0..32 {
+            e.erase(&mut good, &mut rng);
+        }
+        assert!(!good, "Bernoulli must never touch the GE link state");
+    }
+
+    #[test]
+    fn retransmit_mitigation_compounds_attempts() {
+        let m = Mitigation::Retransmit { max_attempts: 3, timeout: 0.1 };
+        // 1 - 0.5^3 = 0.875.
+        assert!((m.p_delivered(0.5) - 0.875).abs() < 1e-12);
+        let r = Mitigation::Redundancy { extra_margin: 0.5 };
+        assert!((r.p_delivered(0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_retry_delay_is_truncated_geometric() {
+        let m = Mitigation::Retransmit { max_attempts: 3, timeout: 0.1 };
+        // 0.1 * (0.5 + 0.25) = 0.075.
+        assert!((m.expected_retry_delay(0.5) - 0.075).abs() < 1e-12);
+        assert_eq!(m.expected_retry_delay(0.0), 0.0);
+        let one = Mitigation::Retransmit { max_attempts: 1, timeout: 0.1 };
+        assert_eq!(one.expected_retry_delay(0.9), 0.0);
+        let red = Mitigation::Redundancy { extra_margin: 0.2 };
+        assert_eq!(red.expected_retry_delay(0.9), 0.0);
+    }
+
+    #[test]
+    fn alloc_target_inflates_only_under_redundancy() {
+        assert_eq!(Mitigation::Retransmit { max_attempts: 4, timeout: 0.1 }.alloc_target(99), 99);
+        assert_eq!(Mitigation::Redundancy { extra_margin: 0.35 }.alloc_target(99), 134);
+        assert_eq!(Mitigation::Redundancy { extra_margin: 0.0 }.alloc_target(99), 99);
+    }
+
+    #[test]
+    fn latency_budget_adds_expected_retries() {
+        let net = NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss: 0.5 },
+            latency: LatencyModel::Fixed { delay: 0.02 },
+        };
+        let m = Mitigation::Retransmit { max_attempts: 3, timeout: 0.1 };
+        assert!((net.latency_budget(&m) - (0.02 + 0.075)).abs() < 1e-12);
+        let r = Mitigation::Redundancy { extra_margin: 0.5 };
+        assert!((net.latency_budget(&r) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_latency_consumes_no_rng() {
+        let lat = LatencyModel::Fixed { delay: 0.25 };
+        let mut rng = Rng::new(11);
+        assert_eq!(lat.sample(&mut rng), 0.25);
+        let mut twin = Rng::new(11);
+        assert_eq!(rng.next_u64(), twin.next_u64());
+    }
+}

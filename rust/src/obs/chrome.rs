@@ -60,7 +60,9 @@ fn tracks(records: &[TraceRecord]) -> BTreeSet<(usize, usize)> {
             TraceRecord::WorkerSpan { worker, .. }
             | TraceRecord::RoundSpan { worker, .. }
             | TraceRecord::WorkerLeave { worker, .. }
-            | TraceRecord::WorkerJoin { worker, .. } => worker + 1,
+            | TraceRecord::WorkerJoin { worker, .. }
+            | TraceRecord::PacketSend { worker, .. }
+            | TraceRecord::PacketLost { worker, .. } => worker + 1,
             _ => JOB_TID,
         };
         tracks.insert((r.shard(), tid));
@@ -317,6 +319,62 @@ fn emit(r: &TraceRecord, events: &mut Vec<(f64, Json)>) {
                 ],
             ),
         )),
+        TraceRecord::PacketSend {
+            t,
+            shard,
+            job,
+            worker,
+            chunks,
+            attempt,
+        } => events.push((
+            t,
+            event(
+                "i",
+                "pkt_send",
+                shard,
+                worker + 1,
+                t * US_PER_SEC,
+                vec![
+                    ("s", Json::str("t")),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("job", Json::num(job as f64)),
+                            ("chunks", Json::num(chunks as f64)),
+                            ("attempt", Json::num(attempt as f64)),
+                        ]),
+                    ),
+                ],
+            ),
+        )),
+        TraceRecord::PacketLost {
+            t,
+            shard,
+            job,
+            worker,
+            chunks,
+            attempt,
+        } => events.push((
+            t,
+            event(
+                "i",
+                "pkt_lost",
+                shard,
+                worker + 1,
+                t * US_PER_SEC,
+                vec![
+                    ("s", Json::str("t")),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("job", Json::num(job as f64)),
+                            ("chunks", Json::num(chunks as f64)),
+                            ("attempt", Json::num(attempt as f64)),
+                        ]),
+                    ),
+                ],
+            ),
+        )),
         TraceRecord::Counter {
             t,
             shard,
@@ -401,6 +459,22 @@ mod tests {
                 part: 0,
                 load: 2,
             },
+            TraceRecord::PacketSend {
+                t: 0.4,
+                shard: 0,
+                job: 1,
+                worker: 3,
+                chunks: 2,
+                attempt: 1,
+            },
+            TraceRecord::PacketLost {
+                t: 0.4,
+                shard: 0,
+                job: 1,
+                worker: 3,
+                chunks: 2,
+                attempt: 1,
+            },
             TraceRecord::WorkerLeave {
                 t: 0.4,
                 shard: 0,
@@ -472,6 +546,17 @@ mod tests {
         assert_eq!(r.get("tid").unwrap().as_usize(), Some(4));
         let rdur = r.get("dur").unwrap().as_f64().unwrap();
         assert!((rdur - 0.3 * US_PER_SEC).abs() < 1e-6);
+        // Packet events land as instants on the worker's track.
+        for name in ["pkt_send", "pkt_lost"] {
+            let p = events
+                .iter()
+                .find(|e| e.get("name").unwrap().as_str() == Some(name))
+                .unwrap_or_else(|| panic!("no '{name}' event"));
+            assert_eq!(p.get("ph").unwrap().as_str(), Some("i"));
+            assert_eq!(p.get("tid").unwrap().as_usize(), Some(4));
+            let args = p.get("args").unwrap();
+            assert_eq!(args.get("attempt").unwrap().as_f64(), Some(1.0));
+        }
     }
 
     #[test]

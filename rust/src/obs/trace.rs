@@ -131,6 +131,28 @@ pub enum TraceRecord {
         queue: usize,
         live: usize,
     },
+    /// One result packet put on the wire (`TrafficConfig::network` runs
+    /// only). Emitted per transmission attempt, successful or not;
+    /// `attempt` is 1-based so retransmissions are visibly numbered.
+    PacketSend {
+        t: f64,
+        shard: usize,
+        job: u64,
+        worker: usize,
+        /// Chunks the packet carries (atomic services: the full load).
+        chunks: usize,
+        attempt: usize,
+    },
+    /// The matching attempt was erased by the link. A packet whose final
+    /// attempt is lost counts toward `TrafficMetrics::lost_packets`.
+    PacketLost {
+        t: f64,
+        shard: usize,
+        job: u64,
+        worker: usize,
+        chunks: usize,
+        attempt: usize,
+    },
 }
 
 impl TraceRecord {
@@ -143,7 +165,9 @@ impl TraceRecord {
             | TraceRecord::JobLost { t, .. }
             | TraceRecord::WorkerLeave { t, .. }
             | TraceRecord::WorkerJoin { t, .. }
-            | TraceRecord::Counter { t, .. } => t,
+            | TraceRecord::Counter { t, .. }
+            | TraceRecord::PacketSend { t, .. }
+            | TraceRecord::PacketLost { t, .. } => t,
             TraceRecord::WorkerSpan { start, .. } | TraceRecord::RoundSpan { start, .. } => start,
         }
     }
@@ -159,7 +183,9 @@ impl TraceRecord {
             | TraceRecord::WorkerJoin { shard, .. }
             | TraceRecord::Counter { shard, .. }
             | TraceRecord::WorkerSpan { shard, .. }
-            | TraceRecord::RoundSpan { shard, .. } => shard,
+            | TraceRecord::RoundSpan { shard, .. }
+            | TraceRecord::PacketSend { shard, .. }
+            | TraceRecord::PacketLost { shard, .. } => shard,
         }
     }
 
@@ -299,6 +325,38 @@ impl TraceRecord {
                 ("shard", Json::num(shard as f64)),
                 ("queue", Json::num(queue as f64)),
                 ("live", Json::num(live as f64)),
+            ]),
+            TraceRecord::PacketSend {
+                t,
+                shard,
+                job,
+                worker,
+                chunks,
+                attempt,
+            } => Json::obj(vec![
+                ("kind", Json::str("packet_send")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("chunks", Json::num(chunks as f64)),
+                ("attempt", Json::num(attempt as f64)),
+            ]),
+            TraceRecord::PacketLost {
+                t,
+                shard,
+                job,
+                worker,
+                chunks,
+                attempt,
+            } => Json::obj(vec![
+                ("kind", Json::str("packet_lost")),
+                ("t", Json::num(t)),
+                ("shard", Json::num(shard as f64)),
+                ("job", Json::num(job as f64)),
+                ("worker", Json::num(worker as f64)),
+                ("chunks", Json::num(chunks as f64)),
+                ("attempt", Json::num(attempt as f64)),
             ]),
         }
     }
@@ -564,6 +622,32 @@ mod tests {
         assert_eq!(j.get("kind").unwrap().as_str(), Some("round_span"));
         assert_eq!(j.get("part").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("load").unwrap().as_f64(), Some(3.0));
+        // Packet records stamp the attempt number (1-based).
+        let send = TraceRecord::PacketSend {
+            t: 0.7,
+            shard: 3,
+            job: 11,
+            worker: 6,
+            chunks: 4,
+            attempt: 2,
+        };
+        assert_eq!(send.time(), 0.7);
+        assert_eq!(send.shard(), 3);
+        let j = send.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("packet_send"));
+        assert_eq!(j.get("attempt").unwrap().as_f64(), Some(2.0));
+        let lost = TraceRecord::PacketLost {
+            t: 0.7,
+            shard: 3,
+            job: 11,
+            worker: 6,
+            chunks: 4,
+            attempt: 2,
+        };
+        assert_eq!(
+            lost.to_json().get("kind").unwrap().as_str(),
+            Some("packet_lost")
+        );
     }
 
     #[test]

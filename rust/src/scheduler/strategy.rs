@@ -49,6 +49,33 @@ pub trait Strategy: Send {
         }
     }
 
+    /// Per-worker result-delivery probabilities, when the strategy tracks
+    /// link quality (none of the built-ins do — the traffic engine derives a
+    /// fleet-wide constant from its `NetworkModel` + `Mitigation` instead).
+    /// The engine folds the profile into the EA allocator's p̂ vector
+    /// (effective p_good = p_good · p_delivered) and into the po2 router's
+    /// shard-health score. `None` means every link delivers with probability
+    /// 1.0, which keeps the lossless engine byte-identical — pinned in
+    /// `tests/determinism.rs` and `tests/erasure.rs`.
+    fn p_delivered_profile(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Allocation-free variant of [`Strategy::p_delivered_profile`],
+    /// mirroring [`Strategy::p_good_profile_into`]: refill `out` and return
+    /// `true`, or return `false` (leaving `out` cleared) when the strategy
+    /// has no per-link beliefs.
+    fn p_delivered_profile_into(&self, out: &mut Vec<f64>) -> bool {
+        out.clear();
+        match self.p_delivered_profile() {
+            Some(ps) => {
+                out.extend(ps);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Worker `worker` left the fleet (spot preemption). The elastic-fleet
     /// engine calls this when a `WorkerLeave` event fires; the slot index
     /// stays valid — a replacement will rejoin under the same id. Default:

@@ -76,6 +76,7 @@ use crate::coding::kernel::{PlanCache, DEFAULT_PLAN_CACHE_CAP};
 use crate::coding::scheme::CodingScheme;
 use crate::coding::threshold::Design;
 use crate::markov::WState;
+use crate::net::{Delivery, ErasureProcess, LatencyModel, Mitigation, NetworkModel};
 use crate::obs::profile::{HotPath, ScopedTimer};
 use crate::obs::trace::{TraceRecord, TraceSink};
 use crate::scheduler::alloc_cache::{AllocCachePolicy, AllocPlanCache};
@@ -189,6 +190,17 @@ pub struct TrafficConfig {
     /// ([`SlackPolicy::Release`] by default; only consulted for classes
     /// with `rounds > 1`).
     pub slack: SlackPolicy,
+    /// Per-link result-delivery network: an erasure process plus a latency
+    /// distribution that every completion crosses before the master sees it
+    /// ([`EventKind::Delivery`]). `None` (the default) is the lossless
+    /// engine — no Delivery events, no network RNG draws, byte-identical to
+    /// the pre-network engine (pinned in `tests/erasure.rs`). Set it through
+    /// [`TrafficConfigBuilder::network`], which validates the model.
+    pub network: Option<NetworkModel>,
+    /// What the engine does about lost result packets — timeout-driven
+    /// retransmission or up-front coded redundancy. Only consulted when
+    /// [`Self::network`] is set.
+    pub mitigation: Mitigation,
 }
 
 impl TrafficConfig {
@@ -212,6 +224,8 @@ impl TrafficConfig {
             alloc_cache: AllocCachePolicy::default_exact(),
             probe_every: 1,
             slack: SlackPolicy::Release,
+            network: None,
+            mitigation: Mitigation::default(),
         }
     }
 
@@ -266,6 +280,59 @@ impl TrafficConfig {
         }
         if !(weight_sum.is_finite() && weight_sum > 0.0) {
             return Err(ConfigError::BadWeightSum(weight_sum));
+        }
+        if let Some(net) = &self.network {
+            match net.erasure {
+                ErasureProcess::Bernoulli { loss } => {
+                    if !(loss.is_finite() && (0.0..1.0).contains(&loss)) {
+                        return Err(ConfigError::NetLossProb { prob: loss });
+                    }
+                }
+                ErasureProcess::GilbertElliott {
+                    p_gb,
+                    p_bg,
+                    loss_good,
+                    loss_bad,
+                } => {
+                    for prob in [loss_good, loss_bad] {
+                        if !(prob.is_finite() && (0.0..1.0).contains(&prob)) {
+                            return Err(ConfigError::NetLossProb { prob });
+                        }
+                    }
+                    for value in [p_gb, p_bg] {
+                        if !(value.is_finite() && value > 0.0 && value <= 1.0) {
+                            return Err(ConfigError::NetTransition { value });
+                        }
+                    }
+                }
+            }
+            let value = match net.latency {
+                LatencyModel::Fixed { delay } => delay,
+                LatencyModel::Exp { mean } => mean,
+            };
+            if !(value.is_finite() && value > 0.0) {
+                return Err(ConfigError::NetLatency { value });
+            }
+            match self.mitigation {
+                Mitigation::Retransmit {
+                    max_attempts,
+                    timeout,
+                } => {
+                    if max_attempts == 0 {
+                        return Err(ConfigError::NetZeroAttempts);
+                    }
+                    if !(timeout.is_finite() && timeout > 0.0) {
+                        return Err(ConfigError::NetLatency { value: timeout });
+                    }
+                }
+                Mitigation::Redundancy { extra_margin } => {
+                    if !(extra_margin.is_finite() && extra_margin >= 0.0) {
+                        return Err(ConfigError::NetMargin {
+                            margin: extra_margin,
+                        });
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -360,6 +427,20 @@ pub enum ConfigError {
         class_n: usize,
         cluster_n: usize,
     },
+    /// A network erasure probability outside [0, 1) (a loss rate of 1 would
+    /// never deliver anything; the allocator's effective p̂ would be 0).
+    NetLossProb { prob: f64 },
+    /// A network delivery latency or retransmit timeout that is not finite
+    /// and positive.
+    NetLatency { value: f64 },
+    /// A Gilbert-Elliott transition probability outside (0, 1] (a frozen
+    /// chain would never leave its initial state).
+    NetTransition { value: f64 },
+    /// [`Mitigation::Retransmit`] with `max_attempts == 0`: nothing would
+    /// ever be sent.
+    NetZeroAttempts,
+    /// [`Mitigation::Redundancy`] with a non-finite or negative margin.
+    NetMargin { margin: f64 },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -393,6 +474,24 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "class {class} geometry n must match the cluster: n = {class_n}, \
                  cluster = {cluster_n}"
+            ),
+            ConfigError::NetLossProb { prob } => {
+                write!(f, "network loss probability must lie in [0, 1): {prob}")
+            }
+            ConfigError::NetLatency { value } => write!(
+                f,
+                "network latency / retransmit timeout must be finite and positive: {value}"
+            ),
+            ConfigError::NetTransition { value } => write!(
+                f,
+                "Gilbert-Elliott transition probability must lie in (0, 1]: {value}"
+            ),
+            ConfigError::NetZeroAttempts => {
+                write!(f, "retransmit mitigation needs max_attempts ≥ 1")
+            }
+            ConfigError::NetMargin { margin } => write!(
+                f,
+                "redundancy margin must be finite and non-negative: {margin}"
             ),
         }
     }
@@ -458,6 +557,23 @@ impl TrafficConfigBuilder {
         self
     }
 
+    /// Attach a per-link result-delivery network model (erasure process +
+    /// latency distribution). This is the ONLY way a network enters the
+    /// engine; [`Self::build`] rejects loss probabilities outside [0, 1),
+    /// non-positive latencies, and frozen Gilbert-Elliott chains with typed
+    /// [`ConfigError`] variants. Leaving it unset keeps the lossless engine.
+    pub fn network(mut self, network: NetworkModel) -> Self {
+        self.cfg.network = Some(network);
+        self
+    }
+
+    /// Replace the lost-packet [`Mitigation`] policy (consulted only when a
+    /// network model is attached; validated at [`Self::build`]).
+    pub fn mitigation(mut self, mitigation: Mitigation) -> Self {
+        self.cfg.mitigation = mitigation;
+        self
+    }
+
     /// Stream every class's load through `rounds` coded sub-batches
     /// ([`JobClass`]`::rounds` per class; 1 = atomic).
     pub fn rounds(mut self, rounds: usize) -> Self {
@@ -502,6 +618,20 @@ struct WorkerSlot {
     gen: u64,
     /// When this worker last went idle (for the per-worker idle gap).
     last_release: f64,
+}
+
+/// What [`ClusterCore::ingest_delivery`] did with a [`Delivery`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum IngestOutcome {
+    /// Credited (or a harmless duplicate — the `acked ≤ done` cap absorbed
+    /// it without over-counting).
+    Credited,
+    /// The credit pushed a streamed job to K*: the caller must resolve it
+    /// early once the service borrow is released.
+    EarlyResolve,
+    /// The job already resolved — there is nothing left to credit, and a
+    /// network delivery landing here is late.
+    Stale,
 }
 
 /// Sample the class index for one arrival from the weighted mix.
@@ -608,6 +738,30 @@ pub(crate) struct ClusterCore<'a> {
     /// when a replacement actually retypes, so `Keep` runs (and all runs
     /// without churn) are byte-identical to the pre-fleet engine.
     speed_rng: Rng,
+    /// Dedicated stream for erasure draws on the result links: untouched
+    /// (and untouching) when [`TrafficConfig::network`] is `None`, so
+    /// lossless runs are byte-identical to the pre-network engine.
+    net_rng: Rng,
+    /// Dedicated stream for delivery-latency draws, separate from the
+    /// erasure stream so changing the mitigation (which changes how many
+    /// erasure draws a packet takes) never shifts the latency samples.
+    net_lat_rng: Rng,
+    /// Per-slot Gilbert-Elliott link state (true = good). Bernoulli erasure
+    /// never reads or writes it; a churn replacement resets its slot to
+    /// good — a new instance is a new link.
+    net_links: Vec<bool>,
+    /// Fleet-wide per-result delivery probability under the configured
+    /// mitigation (1.0 without a network). Folded into the EA allocator's
+    /// p̂ vector and the po2 route score unless the strategy supplies its
+    /// own per-link profile ([`Strategy::p_delivered_profile_into`]).
+    net_p_del: f64,
+    /// Expected network time per result — mean latency plus expected
+    /// retransmission delay (0.0 without a network). Subtracted from the
+    /// load-sizing window at dispatch so allocations leave room for
+    /// delivery (EXPERIMENTS.md §Erasure).
+    net_budget: f64,
+    /// Scratch for [`Strategy::p_delivered_profile_into`].
+    del_buf: Vec<f64>,
     queue: AdmissionQueue,
     /// Jobs alive in this core (queued or in service), by id.
     pub(crate) jobs: BTreeMap<u64, Job>,
@@ -703,6 +857,10 @@ impl<'a> Engine<'a> {
                 EventKind::RoundComplete { job, part } => {
                     self.core.handle_round(job, part, ev.time, &mut self.events)
                 }
+                EventKind::Delivery { job, part, chunks } => {
+                    self.core
+                        .handle_delivery(job, part, chunks, ev.time, &mut self.events)
+                }
                 EventKind::WorkerLeave { worker } => {
                     self.core.handle_leave(worker, ev.time, &mut self.events)
                 }
@@ -752,6 +910,18 @@ impl<'a> ClusterCore<'a> {
             cluster,
             churn_rng: Rng::new(streams_seed ^ 0x6368_7572_6e21), // "churn!"
             speed_rng: Rng::new(streams_seed ^ 0x7265_7479_7065), // "retype"
+            net_rng: Rng::new(streams_seed ^ 0x6e65_7421), // "net!"
+            net_lat_rng: Rng::new(streams_seed ^ 0x6e65_746c_6174), // "netlat"
+            net_links: vec![true; n],
+            net_p_del: cfg
+                .network
+                .as_ref()
+                .map_or(1.0, |net| net.p_delivered(&cfg.mitigation)),
+            net_budget: cfg
+                .network
+                .as_ref()
+                .map_or(0.0, |net| net.latency_budget(&cfg.mitigation)),
+            del_buf: Vec::new(),
             queue: AdmissionQueue::new(cfg.policy),
             jobs: BTreeMap::new(),
             services: BTreeMap::new(),
@@ -826,8 +996,14 @@ impl<'a> ClusterCore<'a> {
         self.queue.len() + self.in_flight
     }
 
-    /// Expected idle capacity Σ_idle ℓ_g(i)·p̂_i for a prospective job of
-    /// `class` arriving now — the po2 routing score (higher = better).
+    /// Expected idle capacity Σ_idle ℓ_g(i)·p̂_i·p_del(i) for a prospective
+    /// job of `class` arriving now — the po2 routing score (higher =
+    /// better). The delivery factor makes the router loss-aware: a chunk
+    /// only helps decode if its result survives the link, so a shard whose
+    /// links drop results is scored (and routed to) proportionally less —
+    /// `shard.rs` has the unit test. Without a network and without a
+    /// strategy-supplied link profile the factor is exactly 1.0, keeping
+    /// lossless routing byte-identical.
     pub(crate) fn route_score(&mut self, class: &JobClass) -> f64 {
         let d = class.deadline;
         let r = class.scheme.geometry.r;
@@ -843,13 +1019,23 @@ impl<'a> ClusterCore<'a> {
                 "p̂ profile length must match the fleet"
             );
         }
+        let has_del = self.strategy.p_delivered_profile_into(&mut self.del_buf);
+        if has_del {
+            debug_assert_eq!(
+                self.del_buf.len(),
+                self.workers.len(),
+                "p_delivered profile length must match the fleet"
+            );
+        }
         let mut score = 0.0;
         for (w, slot) in self.workers.iter().enumerate() {
             if slot.live && slot.job.is_none() {
                 let lg = load_from_rate(self.cluster.speeds_of(w).mu_g, r, d);
                 let p = if has { self.profile_buf[w] } else { 0.5 };
                 let p = if p.is_nan() { 0.0 } else { p };
-                score += lg as f64 * p;
+                let pd = if has_del { self.del_buf[w] } else { self.net_p_del };
+                let pd = if pd.is_nan() { 0.0 } else { pd };
+                score += lg as f64 * p * pd;
             }
         }
         score
@@ -1009,6 +1195,10 @@ impl<'a> ClusterCore<'a> {
         self.live += 1;
         self.metrics.on_join();
         self.cluster.reset_worker(worker);
+        // A replacement instance is a new machine on a new link: its
+        // Gilbert-Elliott channel starts good (no RNG; inert without a
+        // network, where the vector is never read).
+        self.net_links[worker] = true;
         if let RejoinSpeeds::Sample(menu) = &self.cfg.rejoin_speeds {
             if !menu.is_empty() {
                 let pick = self.speed_rng.below(menu.len() as u64) as usize;
@@ -1030,6 +1220,28 @@ impl<'a> ClusterCore<'a> {
     }
 
     pub(crate) fn handle_resolve<S: EventSink>(&mut self, id: u64, now: f64, sink: &mut S) {
+        // Lossless atomic shim for the unified ingestion path: without a
+        // network every completed participant's result "arrives" exactly at
+        // resolve, so run each through the same [`Self::ingest_delivery`]
+        // choke point the network path uses — arrival bookkeeping has one
+        // owner, and the success rule below can gate on `completed &&
+        // arrived` in both modes.
+        if self.cfg.network.is_none() {
+            if let Some(svc) = self.services.get_mut(&id) {
+                if svc.stream.is_none() {
+                    for i in 0..svc.workers.len() {
+                        if svc.completed[i] {
+                            let del = Delivery {
+                                job: id,
+                                part: i,
+                                chunks: svc.loads[i],
+                            };
+                            let _ = Self::ingest_into(svc, &mut self.metrics, del);
+                        }
+                    }
+                }
+            }
+        }
         // A streaming job may have resolved early — K* chunks in hand before
         // the window closed — leaving this window-end Resolve stale.
         let Some(svc) = self.services.remove(&id) else {
@@ -1051,12 +1263,33 @@ impl<'a> ClusterCore<'a> {
             // (same instant, later seq), so credit it from `pending` here.
             // A preempted participant's in-flight round died with its
             // instance and is excluded.
-            let delivered: usize = st.delivered
-                + (0..svc.workers.len())
-                    .filter(|&i| !svc.lost[i])
-                    .map(|i| st.pending[i])
-                    .sum::<usize>();
+            let lossy = self.cfg.network.is_some();
+            let delivered: usize = if lossy {
+                // Only chunks that actually crossed the network count. A
+                // round still in flight at the window's end — and a round
+                // completing exactly AT it — delivers too late by
+                // definition: its packet lands after this Resolve.
+                st.delivered
+            } else {
+                st.delivered
+                    + (0..svc.workers.len())
+                        .filter(|&i| !svc.lost[i])
+                        .map(|i| st.pending[i])
+                        .sum::<usize>()
+            };
             let success = delivered >= st.kstar;
+            if lossy && !success {
+                // Compute-side success (every produced chunk plus surviving
+                // in-flight rounds, exactly what the lossless engine would
+                // credit) against actual failure: the workers did their
+                // part, the network killed the job — an in-flight miss.
+                let produced: usize = (0..svc.workers.len())
+                    .map(|i| st.done[i] + if svc.lost[i] { 0 } else { st.pending[i] })
+                    .sum();
+                if produced >= st.kstar {
+                    self.metrics.on_in_flight_miss();
+                }
+            }
             // Had K* arrived strictly inside the window the job would have
             // resolved early; reaching this handler means the decode completes
             // at the window's end (or not at all).
@@ -1095,17 +1328,37 @@ impl<'a> ClusterCore<'a> {
         self.loads_full.resize(n, 0);
         self.completed_full.clear();
         self.completed_full.resize(n, true);
+        // The decode gate: a participant counts iff it finished computing
+        // inside the window AND its result packet reached the master. The
+        // lossless shim above marked every completed participant arrived, so
+        // without a network this conjunction is exactly the old
+        // `completed[i]`.
         for i in 0..svc.workers.len() {
             self.loads_full[svc.workers[i]] = svc.loads[i];
-            self.completed_full[svc.workers[i]] = svc.completed[i];
+            self.completed_full[svc.workers[i]] = svc.completed[i] && svc.arrived[i];
         }
+        let lossy = self.cfg.network.is_some();
         let success = class.scheme.round_success(&self.loads_full, &self.completed_full);
+        if lossy && !success {
+            // Would the decode have gone through on compute alone? Lift the
+            // arrival gate and re-evaluate: a yes means the network, not the
+            // workers, killed this job — an in-flight miss.
+            for i in 0..svc.workers.len() {
+                self.completed_full[svc.workers[i]] = svc.completed[i];
+            }
+            if class.scheme.round_success(&self.loads_full, &self.completed_full) {
+                self.metrics.on_in_flight_miss();
+            }
+        }
         if success && class.scheme.design() == Design::Lagrange {
             self.probe_plan_recurrence(&svc, &class.scheme);
         }
-        let latency = if success {
+        let latency = if success && !lossy {
             decode_time(&svc, &class.scheme).unwrap_or(svc.window_end) - job.arrival
         } else {
+            // Failure, or a network run: per-participant arrival instants
+            // are not tracked (only the boolean), so a lossy success is
+            // conservatively timed at the window's end.
             svc.window_end - job.arrival
         };
 
@@ -1183,11 +1436,147 @@ impl<'a> ClusterCore<'a> {
         true
     }
 
-    /// A streaming participant's in-flight round lands at the master: credit
-    /// its chunks, resolve the job early if they reach K*, otherwise keep
-    /// the participant streaming — or, when it just delivered its last
-    /// round, hand its remaining window slack to the configured
-    /// [`SlackPolicy`].
+    /// One confirmed arrival lands at the master — the single result-
+    /// ingestion choke point. Every credit path crosses it: streamed rounds
+    /// and squeeze chunks (synthesized inline without a network, carried by
+    /// [`EventKind::Delivery`] with one), and atomic completions (the
+    /// lossless resolve shim, or per-packet Delivery events). Duplicate- and
+    /// replay-safe by construction: stream credits are capped by the
+    /// `acked[i] ≤ done[i]` invariant — a participant can never be credited
+    /// more chunks than it has actually produced — and an atomic arrival
+    /// flag is idempotent. Out-of-order deliveries are likewise harmless:
+    /// credits are counts against that cap, not sequence numbers.
+    pub(crate) fn ingest_delivery(&mut self, del: Delivery) -> IngestOutcome {
+        let Some(svc) = self.services.get_mut(&del.job) else {
+            return IngestOutcome::Stale;
+        };
+        Self::ingest_into(svc, &mut self.metrics, del)
+    }
+
+    /// [`Self::ingest_delivery`] on an already-borrowed service (the resolve
+    /// shim iterates participants while holding the service).
+    fn ingest_into(
+        svc: &mut Service,
+        metrics: &mut TrafficMetrics,
+        del: Delivery,
+    ) -> IngestOutcome {
+        match svc.stream.as_deref_mut() {
+            None => {
+                svc.arrived[del.part] = true;
+                IngestOutcome::Credited
+            }
+            Some(st) => {
+                let credit = del.chunks.min(st.done[del.part] - st.acked[del.part]);
+                if credit == 0 {
+                    // A duplicate (or a replay beyond what the participant
+                    // produced): nothing new to credit.
+                    return IngestOutcome::Credited;
+                }
+                st.acked[del.part] += credit;
+                st.delivered += credit;
+                st.revealed[del.part] = true;
+                metrics.on_round(credit);
+                if st.delivered >= st.kstar {
+                    IngestOutcome::EarlyResolve
+                } else {
+                    IngestOutcome::Credited
+                }
+            }
+        }
+    }
+
+    /// Send `chunks` result chunks of job `job` from participant `part`
+    /// (worker slot `worker`) across its erasure link: erasure is sampled
+    /// per attempt on the dedicated net stream, retransmits re-send after
+    /// the mitigation timeout, and the first surviving attempt schedules an
+    /// [`EventKind::Delivery`] at its send time plus a sampled latency. All
+    /// attempts erased ⇒ the packet is lost for good — the window-end
+    /// Resolve settles the job over whatever else arrived.
+    fn transmit<S: EventSink>(
+        &mut self,
+        job: u64,
+        part: usize,
+        worker: usize,
+        chunks: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        let cfg = self.cfg;
+        let Some(net) = cfg.network.as_ref() else {
+            debug_assert!(false, "transmit without a network model");
+            return;
+        };
+        let (attempts, retry_gap) = match cfg.mitigation {
+            Mitigation::Retransmit {
+                max_attempts,
+                timeout,
+            } => (max_attempts.max(1), timeout),
+            Mitigation::Redundancy { .. } => (1, 0.0),
+        };
+        for attempt in 1..=attempts {
+            let send_at = now + f64::from(attempt - 1) * retry_gap;
+            if attempt > 1 {
+                self.metrics.on_retransmit();
+            }
+            let erased = net
+                .erasure
+                .erase(&mut self.net_links[worker], &mut self.net_rng);
+            if self.trace.is_on() {
+                self.trace.push(TraceRecord::PacketSend {
+                    t: send_at,
+                    shard: self.shard,
+                    job,
+                    worker,
+                    chunks,
+                    attempt: attempt as usize,
+                });
+            }
+            if !erased {
+                let arrive = send_at + net.latency.sample(&mut self.net_lat_rng);
+                sink.push(arrive, EventKind::Delivery { job, part, chunks });
+                return;
+            }
+            if self.trace.is_on() {
+                self.trace.push(TraceRecord::PacketLost {
+                    t: send_at,
+                    shard: self.shard,
+                    job,
+                    worker,
+                    chunks,
+                    attempt: attempt as usize,
+                });
+            }
+        }
+        self.metrics.on_lost_packet();
+    }
+
+    /// A result packet survives its link and lands on the master
+    /// ([`TrafficConfig::network`] runs only): credit it through the
+    /// ingestion choke point. A delivery for an already-resolved job — the
+    /// window closed first, or K* arrived without it — is a late delivery:
+    /// counted, never credited.
+    pub(crate) fn handle_delivery<S: EventSink>(
+        &mut self,
+        job: u64,
+        part: usize,
+        chunks: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        match self.ingest_delivery(Delivery { job, part, chunks }) {
+            IngestOutcome::Stale => self.metrics.on_late_delivery(),
+            IngestOutcome::Credited => {}
+            IngestOutcome::EarlyResolve => self.resolve_early(job, now, sink),
+        }
+    }
+
+    /// A streaming participant's in-flight round completes at the worker:
+    /// count it produced, hand the chunks to the master (directly through
+    /// [`Self::ingest_delivery`] without a network, via [`Self::transmit`]
+    /// with one — credit then waits for the Delivery event), resolve the job
+    /// early if the credit reaches K*, otherwise keep the participant
+    /// streaming — or, when it just finished its last round, hand its
+    /// remaining window slack to the configured [`SlackPolicy`].
     pub(crate) fn handle_round<S: EventSink>(
         &mut self,
         id: u64,
@@ -1201,7 +1590,8 @@ impl<'a> ClusterCore<'a> {
             EarlyResolve,
             Redispatch,
         }
-        let after = {
+        // Worker side: move the round out of flight and count it produced.
+        let (w, load, rate, start, gen) = {
             let Some(svc) = self.services.get_mut(&id) else {
                 // The job resolved early while this round was in flight.
                 return;
@@ -1218,30 +1608,57 @@ impl<'a> ClusterCore<'a> {
             let load = st.pending[part];
             st.pending[part] = 0;
             st.done[part] += load;
-            st.delivered += load;
-            st.revealed[part] = true;
-            self.metrics.on_round(load);
-            let rate = self.cluster.rate(w, svc.states[part]);
-            if self.trace.is_on() {
-                let span_start = if rate > 0.0 {
-                    (now - load as f64 / rate).max(st.start)
-                } else {
-                    st.start
-                };
-                self.trace.push(TraceRecord::RoundSpan {
-                    start: span_start,
-                    end: now,
-                    shard: self.shard,
-                    worker: w,
-                    gen: svc.gens[part],
-                    job: id,
-                    part,
-                    load,
-                });
-            }
-            if st.delivered >= st.kstar {
-                After::EarlyResolve
-            } else if Self::schedule_next_round(st, part, id, rate, svc.window_end, sink) {
+            (
+                w,
+                load,
+                self.cluster.rate(w, svc.states[part]),
+                st.start,
+                svc.gens[part],
+            )
+        };
+        // Master side: without a network the chunks are credited on the
+        // spot (same metric/trace order as the pre-net engine); with one
+        // they enter the participant's link and are credited when — if —
+        // their Delivery event lands.
+        let outcome = if self.cfg.network.is_some() {
+            self.transmit(id, part, w, load, now, sink);
+            IngestOutcome::Credited
+        } else {
+            self.ingest_delivery(Delivery {
+                job: id,
+                part,
+                chunks: load,
+            })
+        };
+        if self.trace.is_on() {
+            let span_start = if rate > 0.0 {
+                (now - load as f64 / rate).max(start)
+            } else {
+                start
+            };
+            self.trace.push(TraceRecord::RoundSpan {
+                start: span_start,
+                end: now,
+                shard: self.shard,
+                worker: w,
+                gen,
+                job: id,
+                part,
+                load,
+            });
+        }
+        let after = if outcome == IngestOutcome::EarlyResolve {
+            After::EarlyResolve
+        } else {
+            let Some(svc) = self.services.get_mut(&id) else {
+                debug_assert!(false, "service vanished mid-round");
+                return;
+            };
+            let Some(st) = svc.stream.as_deref_mut() else {
+                debug_assert!(false, "stream vanished mid-round");
+                return;
+            };
+            if Self::schedule_next_round(st, part, id, rate, svc.window_end, sink) {
                 After::Nothing
             } else if st.sched_left[part] > 0 {
                 // Stalled: the next round cannot fit the window. The slot
@@ -1416,19 +1833,46 @@ impl<'a> ClusterCore<'a> {
                 continue;
             }
             let geo = class.scheme.geometry;
+            // Loss-aware load sizing: a result computed at t must still
+            // CROSS the network by the window's end, so loads are sized to
+            // the window minus the expected per-result network time
+            // (mean latency + expected retransmission delay). Without a
+            // network the budget is exactly 0.0 and `d_load == d_eff`
+            // bit-for-bit (EXPERIMENTS.md §Erasure has the derivation).
+            let d_load = (d_eff - self.net_budget).max(0.0);
+            let kstar = class.scheme.kstar();
+            // Redundancy mitigation inflates the allocation target so extra
+            // coded chunks absorb expected first-attempt losses — capped at
+            // the idle fleet's all-good capacity (inflation must not turn a
+            // feasible job infeasible) and never below the true K*, which
+            // is what the job still decodes against at resolve.
+            let kstar_alloc = if self.cfg.network.is_some() {
+                let target = self.cfg.mitigation.alloc_target(kstar);
+                if target > kstar {
+                    let cap: usize = idle
+                        .iter()
+                        .map(|&w| load_from_rate(self.cluster.speeds_of(w).mu_g, geo.r, d_load))
+                        .sum();
+                    target.min(cap).max(kstar)
+                } else {
+                    target
+                }
+            } else {
+                kstar
+            };
             // Per-worker load geometry over the idle subset: each worker's
-            // own speeds and the remaining window give its ℓ_g/ℓ_b (the
-            // fleet-params scratch is refilled in place, no fresh Vecs).
+            // own speeds and the (network-shrunk) window give its ℓ_g/ℓ_b
+            // (the fleet-params scratch is refilled in place, no fresh Vecs).
             {
                 let cluster = &*self.cluster;
                 params.refill_from_rates(
                     geo.r,
-                    class.scheme.kstar(),
+                    kstar_alloc,
                     idle.iter().map(|&w| {
                         let s = cluster.speeds_of(w);
                         (s.mu_g, s.mu_b)
                     }),
-                    d_eff,
+                    d_load,
                 );
             }
             let feasible_idle = params.feasible_all();
@@ -1436,7 +1880,9 @@ impl<'a> ClusterCore<'a> {
             // churn a departed worker cannot save a waiting job, so holding
             // for it would park the job until expiry. Only EDF consults it,
             // and only when the idle subset falls short — keep the second
-            // pass off the hot path otherwise.
+            // pass off the hot path otherwise. Judged at the true K*: the
+            // redundancy margin is an optimization target, not a feasibility
+            // requirement.
             let feasible_live = !feasible_idle
                 && self.cfg.policy == Policy::EdfFeasible
                 && self
@@ -1444,9 +1890,9 @@ impl<'a> ClusterCore<'a> {
                     .iter()
                     .enumerate()
                     .filter(|(_, slot)| slot.live)
-                    .map(|(w, _)| load_from_rate(self.cluster.speeds_of(w).mu_g, geo.r, d_eff))
+                    .map(|(w, _)| load_from_rate(self.cluster.speeds_of(w).mu_g, geo.r, d_load))
                     .sum::<usize>()
-                    >= class.scheme.kstar();
+                    >= kstar;
             match dispatch_verdict(self.cfg.policy, feasible_idle, feasible_live) {
                 DispatchVerdict::Serve => {}
                 DispatchVerdict::Hold => break,
@@ -1487,9 +1933,24 @@ impl<'a> ClusterCore<'a> {
             self.profile_buf.clear();
             self.profile_buf.resize(n, 0.5);
         }
+        // Effective p̂ = p_good · p_delivered: a chunk only helps decode if
+        // its result survives the link. The per-link profile wins when the
+        // strategy tracks one; otherwise the engine-wide constant derived
+        // from the network model applies. Without either the p̂ vector is
+        // untouched — the lossless byte-identity anchor.
+        let has_del = self.strategy.p_delivered_profile_into(&mut self.del_buf);
+        if has_del {
+            debug_assert_eq!(self.del_buf.len(), n);
+        }
+        let lossy = self.cfg.network.is_some();
         self.ps_buf.clear();
         for &i in idle {
-            let p = self.profile_buf[i];
+            let mut p = self.profile_buf[i];
+            if has_del {
+                p *= self.del_buf[i];
+            } else if lossy {
+                p *= self.net_p_del;
+            }
             self.ps_buf.push(p);
         }
         // EA allocation: memoized when the cache is on (exact mode returns
@@ -1602,6 +2063,21 @@ impl<'a> ClusterCore<'a> {
             );
         }
         sink.push(window_end, EventKind::Resolve { job: job.id });
+        // Network runs, atomic services: each completed participant's result
+        // enters its erasure link the moment it finishes computing — the
+        // whole retransmit schedule and (surviving) Delivery event are
+        // determined here, at dispatch. Pushed AFTER the Resolve so a
+        // delivery landing exactly at the window's end loses the tie (same
+        // instant, later seq) and counts as late. A participant preempted
+        // after this point has `completed` cleared by `handle_leave`, so a
+        // pre-scheduled delivery can set `arrived` but never un-fail it.
+        if !streaming && lossy {
+            for i in 0..workers_v.len() {
+                if completed[i] {
+                    self.transmit(job.id, i, workers_v[i], loads_v[i], finish[i], sink);
+                }
+            }
+        }
         // Streaming: split each participant's load into coded sub-batches
         // and schedule the first. Pushed AFTER the window-end Resolve so a
         // round landing exactly at the window's end fires after it (same
@@ -1612,6 +2088,7 @@ impl<'a> ClusterCore<'a> {
                 kstar,
                 delivered: 0,
                 done: vec![0; workers_v.len()],
+                acked: vec![0; workers_v.len()],
                 pending: vec![0; workers_v.len()],
                 sched_left: loads_v.clone(),
                 rounds_left: vec![rounds; workers_v.len()],
@@ -1656,6 +2133,7 @@ impl<'a> ClusterCore<'a> {
         self.metrics.on_serve((now - job.arrival).max(0.0), est_success);
         self.in_flight += 1;
         let lost = vec![false; workers_v.len()];
+        let arrived = vec![false; workers_v.len()];
         self.services.insert(
             job.id,
             Service {
@@ -1666,6 +2144,7 @@ impl<'a> ClusterCore<'a> {
                 completed,
                 lost,
                 gens,
+                arrived,
                 window_end,
                 stream,
             },
@@ -1725,6 +2204,8 @@ impl<'a> ClusterCore<'a> {
             self.cfg.churn.is_active()
                 && matches!(&self.cfg.rejoin_speeds, RejoinSpeeds::Sample(m) if !m.is_empty()),
         );
+        invariants::stream_quiet("net", &self.net_rng, self.cfg.network.is_some());
+        invariants::stream_quiet("netlat", &self.net_lat_rng, self.cfg.network.is_some());
         if let Some(cache) = &self.alloc_cache {
             self.metrics.alloc_cache_hits = cache.hits();
             self.metrics.alloc_cache_misses = cache.misses();
@@ -2015,6 +2496,8 @@ mod tests {
             alloc_cache: AllocCachePolicy::default_exact(),
             probe_every: 1,
             slack: SlackPolicy::Release,
+            network: None,
+            mitigation: Mitigation::default(),
         };
         let mut lea = Lea::new(fig3_load_params());
         let mut cl = cluster(9);
@@ -2202,6 +2685,7 @@ mod tests {
                 completed: vec![true],
                 lost: vec![false],
                 gens: vec![0],
+                arrived: vec![false],
                 window_end: 1.0,
                 stream: None,
             },
@@ -2461,6 +2945,7 @@ mod tests {
             kstar: 99,
             delivered: 0,
             done: vec![0],
+            acked: vec![0],
             pending: vec![0],
             sched_left: vec![10],
             rounds_left: vec![4],
@@ -2621,5 +3106,261 @@ mod tests {
             assert_eq!(SlackPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(SlackPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn builder_rejects_invalid_network_models() {
+        let build = |net: NetworkModel, mit: Mitigation| {
+            TrafficConfig::builder(
+                10,
+                Arrivals::poisson(1.0),
+                1.0,
+                fig3_geometry(),
+                Policy::AdmitAll,
+            )
+            .network(net)
+            .mitigation(mit)
+            .build()
+        };
+        let ok_net = NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss: 0.1 },
+            latency: LatencyModel::Fixed { delay: 0.05 },
+        };
+        assert!(build(ok_net, Mitigation::default()).is_ok());
+        let certain_loss = NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss: 1.0 },
+            ..ok_net
+        };
+        assert!(matches!(
+            build(certain_loss, Mitigation::default()),
+            Err(ConfigError::NetLossProb { .. })
+        ));
+        let zero_latency = NetworkModel {
+            latency: LatencyModel::Exp { mean: 0.0 },
+            ..ok_net
+        };
+        assert!(matches!(
+            build(zero_latency, Mitigation::default()),
+            Err(ConfigError::NetLatency { .. })
+        ));
+        let frozen_chain = NetworkModel {
+            erasure: ErasureProcess::GilbertElliott {
+                p_gb: 0.0,
+                p_bg: 0.5,
+                loss_good: 0.01,
+                loss_bad: 0.6,
+            },
+            ..ok_net
+        };
+        assert!(matches!(
+            build(frozen_chain, Mitigation::default()),
+            Err(ConfigError::NetTransition { .. })
+        ));
+        assert!(matches!(
+            build(
+                ok_net,
+                Mitigation::Retransmit {
+                    max_attempts: 0,
+                    timeout: 0.1
+                }
+            ),
+            Err(ConfigError::NetZeroAttempts)
+        ));
+        assert!(matches!(
+            build(
+                ok_net,
+                Mitigation::Retransmit {
+                    max_attempts: 2,
+                    timeout: 0.0
+                }
+            ),
+            Err(ConfigError::NetLatency { .. })
+        ));
+        assert!(matches!(
+            build(ok_net, Mitigation::Redundancy { extra_margin: -0.1 }),
+            Err(ConfigError::NetMargin { .. })
+        ));
+        // Without a network the mitigation is inert and NOT validated: the
+        // lossless default config keeps building exactly as before.
+        assert!(TrafficConfig::builder(
+            10,
+            Arrivals::poisson(1.0),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll
+        )
+        .mitigation(Mitigation::Retransmit {
+            max_attempts: 0,
+            timeout: 0.0
+        })
+        .build()
+        .is_ok());
+    }
+
+    #[test]
+    fn network_survives_the_into_builder_round_trip() {
+        let net = NetworkModel {
+            erasure: ErasureProcess::GilbertElliott {
+                p_gb: 0.2,
+                p_bg: 0.4,
+                loss_good: 0.02,
+                loss_bad: 0.5,
+            },
+            latency: LatencyModel::Exp { mean: 0.03 },
+        };
+        let mit = Mitigation::Redundancy { extra_margin: 0.25 };
+        let cfg = TrafficConfig::builder(
+            10,
+            Arrivals::poisson(1.0),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        )
+        .network(net)
+        .mitigation(mit)
+        .build()
+        .unwrap();
+        let again = cfg.clone().into_builder().probe_every(2).build().unwrap();
+        assert_eq!(again.network, Some(net));
+        assert_eq!(again.mitigation, mit);
+        assert_eq!(again.probe_every, 2);
+    }
+
+    fn run_net(loss: f64, mitigation: Mitigation, jobs: u64, seed: u64) -> TrafficMetrics {
+        let cfg = TrafficConfig::builder(
+            jobs,
+            Arrivals::poisson(0.6),
+            1.0,
+            fig3_geometry(),
+            Policy::AdmitAll,
+        )
+        .network(NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss },
+            latency: LatencyModel::Fixed { delay: 0.05 },
+        })
+        .mitigation(mitigation)
+        .build()
+        .unwrap();
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(seed);
+        run_traffic(&mut lea, &mut cl, &cfg, seed ^ 0xA5)
+    }
+
+    #[test]
+    fn zero_loss_network_drops_nothing_and_still_completes() {
+        let m = run_net(0.0, Mitigation::default(), 300, 61);
+        assert_eq!(m.arrivals, 300);
+        assert_eq!(
+            m.arrivals,
+            m.completed
+                + m.missed_service
+                + m.dropped_at_arrival
+                + m.dropped_infeasible
+                + m.expired_in_queue,
+            "conservation failed with a network attached"
+        );
+        assert_eq!((m.lost_packets, m.retransmits), (0, 0));
+        assert!(m.completed > 0, "zero-loss network must still complete jobs");
+    }
+
+    #[test]
+    fn lossy_links_drop_packets_and_cause_in_flight_misses() {
+        let clean = run_net(0.0, Mitigation::default(), 300, 61);
+        let lossy = run_net(0.3, Mitigation::default(), 300, 61);
+        assert!(lossy.lost_packets > 0, "30% loss must drop packets");
+        assert!(
+            lossy.in_flight_misses > 0,
+            "compute-side successes must die on the wire"
+        );
+        assert!(lossy.timely_throughput() < clean.timely_throughput());
+        assert_eq!(
+            lossy.arrivals,
+            lossy.completed
+                + lossy.missed_service
+                + lossy.dropped_at_arrival
+                + lossy.dropped_infeasible
+                + lossy.expired_in_queue,
+            "conservation failed under loss"
+        );
+    }
+
+    #[test]
+    fn retransmissions_recover_most_losses() {
+        let single = run_net(0.3, Mitigation::default(), 300, 61);
+        let retry = run_net(
+            0.3,
+            Mitigation::Retransmit {
+                max_attempts: 4,
+                timeout: 0.01,
+            },
+            300,
+            61,
+        );
+        assert!(retry.retransmits > 0, "30% loss must trigger resends");
+        assert!(
+            retry.lost_packets < single.lost_packets,
+            "4 attempts at 30% loss lose ~0.8% of packets vs 30%"
+        );
+        assert!(retry.completed > single.completed);
+    }
+
+    #[test]
+    fn ingest_caps_credits_and_ignores_duplicates() {
+        // White-box: the acked ≤ done invariant makes duplicated and
+        // replayed deliveries harmless — credits are counts against what
+        // the participant actually produced, never sequence numbers.
+        let cfg = stream_cfg(2, SlackPolicy::Release, 0.5, 0);
+        let mut lea = Lea::new(fig3_load_params());
+        let mut cl = cluster(4);
+        let mut core = ClusterCore::new(&cfg, &mut lea, &mut cl, 4);
+        core.services.insert(
+            7,
+            Service {
+                workers: vec![2],
+                loads: vec![10],
+                states: vec![WState::Good],
+                finish: vec![0.8],
+                completed: vec![false],
+                lost: vec![false],
+                gens: vec![0],
+                arrived: vec![false],
+                window_end: 1.0,
+                stream: Some(Box::new(StreamState {
+                    start: 0.0,
+                    kstar: 99,
+                    delivered: 0,
+                    done: vec![5],
+                    acked: vec![0],
+                    pending: vec![0],
+                    sched_left: vec![5],
+                    rounds_left: vec![1],
+                    revealed: vec![false],
+                    released: vec![false],
+                })),
+            },
+        );
+        let del = |chunks: usize| Delivery {
+            job: 7,
+            part: 0,
+            chunks,
+        };
+        assert_eq!(core.ingest_delivery(del(3)), IngestOutcome::Credited);
+        // A replay of 5 chunks can only credit the 2 still unacked.
+        assert_eq!(core.ingest_delivery(del(5)), IngestOutcome::Credited);
+        // Further duplicates are absorbed without over-counting.
+        assert_eq!(core.ingest_delivery(del(4)), IngestOutcome::Credited);
+        let st = core.services[&7].stream.as_deref().unwrap();
+        assert_eq!((st.delivered, st.acked[0]), (5, 5));
+        assert_eq!(core.metrics.round_chunks, 5);
+        assert_eq!(core.ingest_delivery(del(1)), IngestOutcome::Credited);
+        // A delivery for a job with no live service is stale (late).
+        assert_eq!(
+            core.ingest_delivery(Delivery {
+                job: 99,
+                part: 0,
+                chunks: 1
+            }),
+            IngestOutcome::Stale
+        );
     }
 }

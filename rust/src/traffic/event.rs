@@ -37,6 +37,12 @@ pub enum EventKind {
     /// resolved (early or at the window's end) or the participant was
     /// preempted — the handler validates against the live service table.
     RoundComplete { job: u64, part: usize },
+    /// A result packet survives its erasure channel and lands on the master
+    /// (`TrafficConfig::network` only): `chunks` coded chunks of job `job`
+    /// from participant slot `part`. Scheduled at send time + sampled
+    /// latency by the transmit path; stale once the job resolved — the
+    /// handler counts it as a late delivery instead of crediting it.
+    Delivery { job: u64, part: usize, chunks: usize },
     /// The worker is preempted: it leaves the fleet, abandoning any
     /// in-flight assignment (the job continues on the survivors).
     WorkerLeave { worker: usize },

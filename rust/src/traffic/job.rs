@@ -109,6 +109,12 @@ pub(crate) struct Service {
     /// (its instance departed, possibly replaced) is censored — the master
     /// has no completion time for a machine that is gone.
     pub gens: Vec<u64>,
+    /// Whether each participant's atomic result packet reached the master
+    /// (`TrafficConfig::network` runs only; the lossless engine sets it at
+    /// resolve via the same `ingest_delivery` choke point, where it is
+    /// always true for completed participants). Streaming services track
+    /// arrivals in `StreamState::acked` instead.
+    pub arrived: Vec<bool>,
     /// `service start + d_eff` — when the round is evaluated.
     pub window_end: f64,
     /// Per-round streaming state, present iff the job's class has
@@ -128,10 +134,18 @@ pub(crate) struct StreamState {
     /// Recovery threshold: the job resolves early once `delivered` reaches
     /// this many distinct chunks.
     pub kstar: usize,
-    /// Distinct chunks delivered so far across all participants.
+    /// Distinct chunks delivered so far across all participants. Without a
+    /// network this is credited the instant a round completes; with one it
+    /// grows only as `Delivery` events land.
     pub delivered: usize,
-    /// Chunks delivered per participant.
+    /// Chunks each participant has finished computing (its completed rounds'
+    /// sizes; network runs count them at send time, before delivery).
     pub done: Vec<usize>,
+    /// Chunks per participant actually credited to the master. Invariant
+    /// `acked[i] ≤ done[i]`: `ingest_delivery` caps every credit at the
+    /// chunks the participant has really produced, so a duplicated or
+    /// replayed delivery can never over-count toward K*.
+    pub acked: Vec<usize>,
     /// Load of each participant's in-flight round (0 = none in flight).
     pub pending: Vec<usize>,
     /// Scheduled load not yet dispatched as a round, per participant.

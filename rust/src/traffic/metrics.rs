@@ -85,6 +85,20 @@ pub struct TrafficMetrics {
     pub squeezes: u64,
     /// Extra chunks those squeezes re-executed.
     pub squeeze_chunks: u64,
+    /// Result packets permanently lost to the erasure channel — every
+    /// attempt the mitigation allowed was erased (`TrafficConfig::network`
+    /// runs only; all four network counters stay 0 without one, which is
+    /// part of the lossless byte-identity guarantee).
+    pub lost_packets: u64,
+    /// Retransmission attempts after a first-attempt erasure
+    /// ([`crate::net::Mitigation::Retransmit`]).
+    pub retransmits: u64,
+    /// Packets that arrived after their job had already resolved (early or
+    /// at the window's end) — the data crossed the network for nothing.
+    pub late_deliveries: u64,
+    /// Served jobs whose computation reached K* inside the window but whose
+    /// delivered chunks did not — the job missed its deadline *in flight*.
+    pub in_flight_misses: u64,
     /// Σ |p̂ − 𝟙{good}| over probe samples (the Brier-style L1 error).
     calib_abs_err: f64,
     latency_mean: Welford,
@@ -133,6 +147,10 @@ impl Default for TrafficMetrics {
             slack_releases: 0,
             squeezes: 0,
             squeeze_chunks: 0,
+            lost_packets: 0,
+            retransmits: 0,
+            late_deliveries: 0,
+            in_flight_misses: 0,
             calib_abs_err: 0.0,
             latency_mean: Welford::default(),
             latency_p50: P2Quantile::new(0.50),
@@ -253,6 +271,28 @@ impl TrafficMetrics {
     pub(crate) fn on_squeeze(&mut self, extra: usize) {
         self.squeezes += 1;
         self.squeeze_chunks += extra as u64;
+    }
+
+    /// A result packet exhausted its attempts — its chunks never reach the
+    /// master.
+    pub(crate) fn on_lost_packet(&mut self) {
+        self.lost_packets += 1;
+    }
+
+    /// One retransmission attempt after an erasure.
+    pub(crate) fn on_retransmit(&mut self) {
+        self.retransmits += 1;
+    }
+
+    /// A packet arrived after its job had already resolved.
+    pub(crate) fn on_late_delivery(&mut self) {
+        self.late_deliveries += 1;
+    }
+
+    /// A job whose computation made the deadline but whose deliveries did
+    /// not.
+    pub(crate) fn on_in_flight_miss(&mut self) {
+        self.in_flight_misses += 1;
     }
 
     pub(crate) fn on_plan_probe(&mut self, hit: bool) {
@@ -504,6 +544,13 @@ impl TrafficMetrics {
             ("slack_releases", Json::num(self.slack_releases as f64)),
             ("squeezes", Json::num(self.squeezes as f64)),
             ("squeeze_chunks", Json::num(self.squeeze_chunks as f64)),
+            ("lost_packets", Json::num(self.lost_packets as f64)),
+            ("retransmits", Json::num(self.retransmits as f64)),
+            ("late_deliveries", Json::num(self.late_deliveries as f64)),
+            (
+                "in_flight_misses",
+                Json::num(self.in_flight_misses as f64),
+            ),
         ])
     }
 }
@@ -655,6 +702,29 @@ mod tests {
         assert_eq!(j.get("round_chunks").unwrap().as_f64(), Some(8.0));
         assert_eq!(j.get("early_resolve_rate").unwrap().as_f64(), Some(0.5));
         assert_eq!(j.get("squeeze_chunks").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn network_counters_accumulate_and_serialize() {
+        let mut m = TrafficMetrics::new();
+        // Lossless runs never touch the network handlers: all zeros, and the
+        // keys sit at the END of the JSON object so lossless dumps keep
+        // their bytes up to the appended keys.
+        let j = m.to_json();
+        assert_eq!(j.get("lost_packets").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("in_flight_misses").unwrap().as_f64(), Some(0.0));
+        m.on_lost_packet();
+        m.on_retransmit();
+        m.on_retransmit();
+        m.on_late_delivery();
+        m.on_in_flight_miss();
+        assert_eq!(m.lost_packets, 1);
+        assert_eq!(m.retransmits, 2);
+        assert_eq!(m.late_deliveries, 1);
+        assert_eq!(m.in_flight_misses, 1);
+        let j = m.to_json();
+        assert_eq!(j.get("retransmits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("late_deliveries").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

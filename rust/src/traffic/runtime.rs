@@ -257,6 +257,12 @@ impl<'a> ShardTask<'a> {
                 EventKind::RoundComplete { job, part } => {
                     self.core.handle_round(job, part, ev.time, &mut self.queue)
                 }
+                EventKind::Delivery { job, part, chunks } => {
+                    // Not in the post-traffic drop set: in-flight packets
+                    // must land (and count as late) after the last arrival.
+                    self.core
+                        .handle_delivery(job, part, chunks, ev.time, &mut self.queue)
+                }
                 EventKind::WorkerLeave { worker } => {
                     self.core.handle_leave(worker, ev.time, &mut self.queue)
                 }

@@ -600,6 +600,12 @@ pub(crate) fn run_sharded_traced(
                     EventKind::RoundComplete { job, part } => {
                         cores[s].handle_round(job, part, ev.time, &mut sink)
                     }
+                    EventKind::Delivery { job, part, chunks } => {
+                        // Deliveries are NOT in the post-traffic drop set:
+                        // packets still in flight after the last arrival
+                        // must land (and count as late) like anywhere else.
+                        cores[s].handle_delivery(job, part, chunks, ev.time, &mut sink)
+                    }
                     EventKind::WorkerLeave { worker } => {
                         cores[s].handle_leave(worker, ev.time, &mut sink)
                     }
@@ -638,6 +644,8 @@ pub(crate) fn run_sharded_traced(
 mod tests {
     use super::*;
     use crate::markov::chain::TwoState;
+    use crate::markov::WState;
+    use crate::scheduler::allocation::Allocation;
     use crate::scheduler::lea::Lea;
     use crate::sim::arrivals::Arrivals;
     use crate::sim::churn::ChurnModel;
@@ -844,6 +852,83 @@ mod tests {
         // Two-choices keeps every shard in play.
         assert!(po2.routed.iter().all(|&r| r > 0), "po2 routed {:?}", po2.routed);
         assert!(po2.max_routed_share() < 0.6);
+    }
+
+    /// Lea wrapper that reports a fixed per-link delivery probability — the
+    /// hook a link-quality-aware strategy implements. Everything else
+    /// delegates, so the allocation RNG stream is untouched.
+    struct LossyLinks {
+        inner: Lea,
+        pd: f64,
+        n: usize,
+    }
+
+    impl Strategy for LossyLinks {
+        fn name(&self) -> &'static str {
+            "lea-lossy-links"
+        }
+
+        fn allocate(&mut self, rng: &mut Rng) -> Allocation {
+            self.inner.allocate(rng)
+        }
+
+        fn observe(&mut self, states: &[Option<WState>]) {
+            self.inner.observe(states);
+        }
+
+        fn p_good_profile(&self) -> Option<Vec<f64>> {
+            self.inner.p_good_profile()
+        }
+
+        fn p_good_profile_into(&self, out: &mut Vec<f64>) -> bool {
+            self.inner.p_good_profile_into(out)
+        }
+
+        fn p_delivered_profile(&self) -> Option<Vec<f64>> {
+            Some(vec![self.pd; self.n])
+        }
+
+        fn on_worker_leave(&mut self, worker: usize) {
+            self.inner.on_worker_leave(worker);
+        }
+
+        fn on_worker_join(&mut self, worker: usize) {
+            self.inner.on_worker_join(worker);
+        }
+    }
+
+    #[test]
+    fn po2_shifts_traffic_away_from_a_lossy_shard() {
+        // Satellite: `route_score` folds p_delivered into shard health.
+        // Give shard 1's strategy a 5% link-delivery belief; po2 at C = 2
+        // compares both shards on every arrival, so it should starve the
+        // lossy shard relative to the same run with clean links everywhere.
+        let cfg = fleet(2, RoutingPolicy::PowerOfTwo, 600, 3.0);
+        let clean = run(&cfg, 33);
+        let mut strategies: Vec<Box<dyn Strategy>> = vec![
+            Box::new(Lea::new(fig3_load_params())),
+            Box::new(LossyLinks {
+                inner: Lea::new(fig3_load_params()),
+                pd: 0.05,
+                n: 15,
+            }),
+        ];
+        let mut clusters: Vec<SimCluster> = (0..2)
+            .map(|s| cluster(shard_stream_seed(33, s)))
+            .collect();
+        let lossy = run_sharded(&mut strategies, &mut clusters, &cfg, 33);
+        assert_eq!(lossy.routed.iter().sum::<u64>(), 600);
+        assert!(
+            lossy.routed[1] < clean.routed[1],
+            "lossy shard kept its share: {:?} vs clean {:?}",
+            lossy.routed,
+            clean.routed
+        );
+        assert!(
+            (lossy.routed[1] as f64) < 0.4 * 600.0,
+            "lossy shard should fall well under half: {:?}",
+            lossy.routed
+        );
     }
 
     #[test]

@@ -23,6 +23,7 @@ use timely_coded::experiments::hetero_grid::{self, HeteroGridSpec};
 use timely_coded::experiments::shard::{self, ShardGridSpec};
 use timely_coded::experiments::stream::{self, StreamGridSpec};
 use timely_coded::experiments::traffic::{run_grid, to_json, GridSpec};
+use timely_coded::net::{ErasureProcess, LatencyModel, Mitigation, NetworkModel};
 use timely_coded::obs::trace::TraceSink;
 use timely_coded::scheduler::lea::{Lea, RejoinPolicy};
 use timely_coded::scheduler::strategy::Strategy;
@@ -454,7 +455,33 @@ fn parallel_backend_matches_sequential_on_every_single_cluster_config_family() {
     .slack_policy(SlackPolicy::Squeeze)
     .build()
     .expect("valid config");
-    for (label, cfg) in [("traffic", &traffic), ("churn", &churned), ("stream", &streamed)] {
+    // The lossy-network family (`lea erasure`): Delivery events, the net
+    // RNG streams and retransmission scheduling must all be frontier-safe.
+    let lossy = TrafficConfig::single_class(
+        300,
+        Arrivals::poisson(1.0),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+    .into_builder()
+    .rounds(2)
+    .network(NetworkModel {
+        erasure: ErasureProcess::Bernoulli { loss: 0.2 },
+        latency: LatencyModel::Exp { mean: 0.05 },
+    })
+    .mitigation(Mitigation::Retransmit {
+        max_attempts: 3,
+        timeout: 0.05,
+    })
+    .build()
+    .expect("valid config");
+    for (label, cfg) in [
+        ("traffic", &traffic),
+        ("churn", &churned),
+        ("stream", &streamed),
+        ("erasure", &lossy),
+    ] {
         let seq = backend_bytes_single(cfg, Backend::Sequential, 93);
         for threads in [1usize, 2, 4] {
             assert_eq!(

@@ -1,0 +1,282 @@
+//! Packet-erasure acceptance suite: the claims the lossy network layer
+//! advertises, pinned as tests.
+//!
+//! Three claims, each load-bearing:
+//! 1. loss 0 means untouched — a config that never attaches a
+//!    [`NetworkModel`] is byte-identical to the pre-network engine across
+//!    every grid family (atomic, streamed rounds, churn), whatever
+//!    (inert) mitigation the builder carries, and every loss = 0 cell of
+//!    the erasure grid's small preset matches its lossless reference run;
+//! 2. the mitigations cross over — on paired cluster/engine seeds with ONE
+//!    fixed (retransmit, redundancy) pair, timeout-driven retransmission
+//!    wins the 3-seed timely-throughput mean at low loss (its retries are
+//!    nearly free while redundancy burns fleet capacity on extra coded
+//!    chunks) and loses it at high loss (second attempts land after the
+//!    window while redundancy's single-shot delivery model stays honest);
+//! 3. lossy delivery never corrupts decode — duplicate and out-of-order
+//!    deliveries (exponential latency + retransmission under streaming
+//!    rounds) leave the job-conservation law and the per-round chunk
+//!    accounting intact.
+//!
+//! The thread-count invariance of the erasure grid itself is pinned in the
+//! `experiments::erasure` unit tests; cross-backend byte-identity of lossy
+//! configs lives in `tests/determinism.rs`.
+
+use timely_coded::experiments::erasure::{run_cell, run_cell_lossless, ErasureGridSpec};
+use timely_coded::net::{ErasureProcess, LatencyModel, Mitigation, NetworkModel};
+use timely_coded::obs::trace::TraceSink;
+use timely_coded::scheduler::lea::Lea;
+use timely_coded::sim::arrivals::Arrivals;
+use timely_coded::sim::churn::ChurnModel;
+use timely_coded::sim::cluster::SimCluster;
+use timely_coded::sim::scenarios::{fig3_geometry, fig3_load_params, fig3_scenarios, fig3_speeds};
+use timely_coded::traffic::{
+    Backend, Policy, Runner, SlackPolicy, Topology, TrafficConfig, TrafficMetrics,
+};
+
+const SEEDS: [u64; 3] = [11, 222, 3033];
+
+/// One paired run: the SAME cluster seed and engine seed for every config
+/// at this seed, so the only difference between two runs is the config.
+fn run_with(cfg: &TrafficConfig, seed: u64) -> TrafficMetrics {
+    let scenario = fig3_scenarios()[0];
+    let mut cluster =
+        SimCluster::markov(fig3_geometry().n, scenario.chain(), fig3_speeds(), seed);
+    let mut lea = Lea::new(fig3_load_params());
+    Runner::new(Topology::Single, Backend::Sequential)
+        .run_one(&mut lea, &mut cluster, cfg, seed ^ 0x6e65, &mut TraceSink::Off)
+        .expect("erasure test configs are valid")
+}
+
+fn base_cfg(jobs: u64, rate: f64) -> TrafficConfig {
+    TrafficConfig::single_class(
+        jobs,
+        Arrivals::poisson(rate),
+        1.0,
+        fig3_geometry(),
+        Policy::EdfFeasible,
+    )
+}
+
+fn with_network(cfg: TrafficConfig, loss: f64, mitigation: Mitigation) -> TrafficConfig {
+    cfg.into_builder()
+        .mitigation(mitigation)
+        .network(NetworkModel {
+            erasure: ErasureProcess::Bernoulli { loss },
+            latency: LatencyModel::Fixed { delay: 0.05 },
+        })
+        .build()
+        .expect("erasure test configs are valid")
+}
+
+// ---------------------------------------------------------------------------
+// Claim 1: loss 0 is byte-identical to the pre-network engine.
+// ---------------------------------------------------------------------------
+
+/// A mitigation with no network attached must be completely inert: the
+/// config builds fine, and every grid family (atomic, streamed rounds,
+/// churn) produces byte-identical metrics with and without it.
+#[test]
+fn mitigation_without_network_is_byte_inert_across_grid_families() {
+    let families: Vec<(&str, TrafficConfig)> = vec![
+        ("atomic", base_cfg(800, 0.9)),
+        (
+            "streamed",
+            base_cfg(800, 0.9)
+                .into_builder()
+                .rounds(4)
+                .slack_policy(SlackPolicy::Squeeze)
+                .build()
+                .expect("erasure test configs are valid"),
+        ),
+        (
+            "churn",
+            base_cfg(600, 0.8)
+                .into_builder()
+                .churn(ChurnModel::spot(0.4, 2.0))
+                .build()
+                .expect("erasure test configs are valid"),
+        ),
+    ];
+    let mitigations = [
+        Mitigation::Retransmit {
+            max_attempts: 7,
+            timeout: 0.2,
+        },
+        Mitigation::Redundancy { extra_margin: 0.9 },
+    ];
+    for (name, cfg) in families {
+        for mitigation in mitigations {
+            let with_mit = cfg
+                .clone()
+                .into_builder()
+                .mitigation(mitigation)
+                .build()
+                .expect("erasure test configs are valid");
+            for seed in SEEDS {
+                let bare = run_with(&cfg, seed).to_json().to_string();
+                let inert = run_with(&with_mit, seed).to_json().to_string();
+                assert_eq!(
+                    bare, inert,
+                    "family {name}, seed {seed}: an unused {mitigation:?} changed the bytes"
+                );
+            }
+        }
+    }
+}
+
+/// Every loss = 0 cell of the CLI's small preset matches its lossless
+/// reference run byte-for-byte — the regression anchor that pins "zero
+/// loss" to "the engine this layer was grafted onto".
+#[test]
+fn small_preset_anchor_cells_match_the_lossless_engine() {
+    let spec = ErasureGridSpec::preset("small", 400, 2024).expect("small preset exists");
+    let mut anchors = 0;
+    for cell in spec.cells() {
+        let Some(lossless) = run_cell_lossless(&cell, &spec) else {
+            assert!(cell.loss > 0.0, "lossy reference refused a lossless cell");
+            continue;
+        };
+        anchors += 1;
+        let netted = run_cell(&cell, &spec);
+        assert_eq!(
+            netted.metrics.to_json().to_string(),
+            lossless.to_json().to_string(),
+            "cell {} (mitigation {:?}) diverged from the lossless engine",
+            cell.idx,
+            cell.mitigation
+        );
+    }
+    // One anchor per mitigation — the loss-0 column exists in the preset.
+    assert_eq!(anchors, 2, "small preset lost its loss = 0 anchor column");
+}
+
+// ---------------------------------------------------------------------------
+// Claim 2: the retransmit/redundancy crossover.
+// ---------------------------------------------------------------------------
+
+/// The fixed mitigation pair the crossover is measured on. The retransmit
+/// timeout is a third of the window: cheap insurance when retries are rare,
+/// but at high loss the second attempt of a near-deadline packet lands
+/// after the window closes. The redundancy margin is capacity the fleet
+/// pays at EVERY loss rate.
+const PAIR_RETRANSMIT: Mitigation = Mitigation::Retransmit {
+    max_attempts: 2,
+    timeout: 0.35,
+};
+const PAIR_REDUNDANCY: Mitigation = Mitigation::Redundancy { extra_margin: 0.5 };
+
+/// 3-seed mean timely throughput of one (loss, mitigation) point, under an
+/// overloaded arrival stream (capacity is the contended resource, so
+/// redundancy's extra chunks have a price).
+fn crossover_mean(loss: f64, mitigation: Mitigation) -> (f64, TrafficMetrics) {
+    let cfg = with_network(base_cfg(1_200, 1.8), loss, mitigation);
+    let mut sum = 0.0;
+    let mut last = None;
+    for seed in SEEDS {
+        let m = run_with(&cfg, seed);
+        assert_eq!(
+            m.arrivals,
+            m.completed
+                + m.missed_service
+                + m.dropped_at_arrival
+                + m.dropped_infeasible
+                + m.expired_in_queue,
+            "seed {seed}, loss {loss}: jobs leaked"
+        );
+        sum += m.timely_throughput();
+        last = Some(m);
+    }
+    (sum / SEEDS.len() as f64, last.expect("SEEDS is non-empty"))
+}
+
+#[test]
+fn retransmission_wins_at_low_loss() {
+    let (retx_mean, retx_m) = crossover_mean(0.02, PAIR_RETRANSMIT);
+    let (redu_mean, _) = crossover_mean(0.02, PAIR_REDUNDANCY);
+    assert!(
+        retx_mean > redu_mean,
+        "low loss: retransmit mean {retx_mean} should beat redundancy mean {redu_mean}"
+    );
+    // The channel was actually lossy and the mitigation actually fired.
+    assert!(retx_m.lost_packets + retx_m.retransmits > 0, "no loss at 2%");
+}
+
+#[test]
+fn redundancy_wins_at_high_loss() {
+    let (retx_mean, retx_m) = crossover_mean(0.45, PAIR_RETRANSMIT);
+    let (redu_mean, redu_m) = crossover_mean(0.45, PAIR_REDUNDANCY);
+    assert!(
+        redu_mean > retx_mean,
+        "high loss: redundancy mean {redu_mean} should beat retransmit mean {retx_mean}"
+    );
+    // The acceptance criterion's smoking gun: at heavy loss jobs die with
+    // their decode threshold still in flight, on both mitigations.
+    assert!(
+        retx_m.in_flight_misses > 0,
+        "retransmit at 45% loss never missed in flight"
+    );
+    assert!(retx_m.retransmits > 0, "retransmit never retried");
+    assert!(
+        redu_m.lost_packets > 0 && redu_m.retransmits == 0,
+        "redundancy must lose packets without retrying"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Claim 3: duplicates and reordering never corrupt decode.
+// ---------------------------------------------------------------------------
+
+/// Streamed rounds + retransmission + exponential delivery latency is the
+/// adversarial delivery order: round completions from one worker overtake
+/// each other, retries interleave with fresh sends, and stragglers land
+/// after their job resolved. The engine must credit each chunk at most
+/// once and settle every job exactly once.
+#[test]
+fn reordered_and_late_deliveries_never_corrupt_accounting() {
+    for seed in SEEDS {
+        let cfg = base_cfg(800, 1.2)
+            .into_builder()
+            .rounds(4)
+            .slack_policy(SlackPolicy::Release)
+            .mitigation(Mitigation::Retransmit {
+                max_attempts: 3,
+                timeout: 0.1,
+            })
+            .network(NetworkModel {
+                erasure: ErasureProcess::Bernoulli { loss: 0.25 },
+                latency: LatencyModel::Exp { mean: 0.08 },
+            })
+            .build()
+            .expect("erasure test configs are valid");
+        let m = run_with(&cfg, seed);
+        // Exactly-once settlement: every arrival is accounted for exactly
+        // once whatever order its chunks (or their duplicates) landed in.
+        assert_eq!(
+            m.arrivals,
+            m.completed
+                + m.missed_service
+                + m.dropped_at_arrival
+                + m.dropped_infeasible
+                + m.expired_in_queue,
+            "seed {seed}: jobs leaked under reordered delivery"
+        );
+        assert!(m.completed > 0, "seed {seed}: nothing completed");
+        // The adversarial order actually happened: packets were lost,
+        // retried, and some landed after their job was settled.
+        assert!(m.lost_packets > 0, "seed {seed}: no losses at 25%");
+        assert!(m.retransmits > 0, "seed {seed}: no retries");
+        assert!(
+            m.late_deliveries > 0,
+            "seed {seed}: no straggler ever landed late"
+        );
+        // The streamed credit path stayed live under that order (the cap
+        // that keeps duplicates from inflating it is pinned white-box in
+        // the engine's `ingest_caps_credits_and_ignores_duplicates`).
+        assert!(m.rounds_completed > 0, "seed {seed}: no rounds credited");
+        assert!(
+            m.early_resolves <= m.completed,
+            "seed {seed}: more early resolves than completions"
+        );
+    }
+}

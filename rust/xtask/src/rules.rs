@@ -49,7 +49,7 @@ pub const RULES: &[RuleInfo] = &[
         id: "R2",
         severity: Severity::Error,
         summary: "no HashMap/HashSet iteration or struct fields — use BTreeMap or a sorted Vec",
-        scope: "rust/src/{sim, traffic, scheduler, coding, markov}/",
+        scope: "rust/src/{sim, traffic, scheduler, coding, markov, net}/",
     },
     RuleInfo {
         id: "R3",
@@ -125,6 +125,7 @@ const DETERMINISTIC_DIRS: &[&str] = &[
     "rust/src/scheduler/",
     "rust/src/coding/",
     "rust/src/markov/",
+    "rust/src/net/",
 ];
 
 const R1_EXEMPT_FILES: &[&str] = &[
@@ -646,6 +647,9 @@ mod tests {
             "iteration finding missing: {:?}",
             o.findings
         );
+        // The network layer is a deterministic module too.
+        let o = lint_file("rust/src/net/mod.rs", src);
+        assert!(o.findings.iter().any(|f| f.rule == "R2"), "{:?}", o.findings);
         // Same source in a non-deterministic module: R2 out of scope.
         let o = lint_file("rust/src/util/json.rs", src);
         assert!(o.findings.iter().all(|f| f.rule != "R2"));
